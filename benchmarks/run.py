@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+  params   Tables 1/5/7 parameter accounting vs the paper's totals
+  flops    Table 1 forward-FLOPs + the 23%-saving claim
+  proxy    Figures 2/3 + Table 4 quality ordering at tiny scale
+  tput     Table 11 relative training throughput
+  roofline dry-run roofline summary (if dry-run records exist)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-based proxy benchmark")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: params,flops,proxy,tput,"
+                         "roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    print("== benchmarks ==", flush=True)
+
+    if want("params"):
+        print("\n-- params (paper Tables 1/5/7) --", flush=True)
+        from benchmarks import params_tables
+        params_tables.run()
+
+    if want("flops"):
+        print("\n-- flops (paper Table 1) --", flush=True)
+        from benchmarks import flops
+        flops.table1()
+
+    if want("tput"):
+        print("\n-- throughput (paper Table 11) --", flush=True)
+        from benchmarks import throughput
+        throughput.run()
+
+    if want("proxy") and not args.fast:
+        print("\n-- quality proxy (paper Figs 2/3, Table 4) --", flush=True)
+        from benchmarks import scaling_proxy
+        scaling_proxy.run()
+
+    if want("roofline"):
+        print("\n-- roofline (dry-run records) --", flush=True)
+        try:
+            from repro.launch.report import print_summary
+            print_summary("single")
+        except Exception as e:  # records may not exist yet
+            print(f"(no dry-run records: {e})")
+
+    print(f"\n== done in {time.time() - t0:.0f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Training-throughput comparison (paper Table 11, CPU-relative form).
+
+The paper reports RoM at ~80% of the matched-active dense model's tokens/s
+on 8xA100 *without optimization*.  Hardware differs, but the *relative*
+cost of routing + dispatch vs dense compute is measurable here: we time
+samba-421m vs samba-421m-rom vs samba-511m at reduced width on CPU and
+report tokens/s plus the RoM/dense ratio, alongside an analytic v5e
+projection from the dry-run roofline terms (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import train as tr
+from repro.configs.all_configs import reduce_for_smoke
+from repro.configs.base import get_config
+from repro.data.pipeline import TokenCorpus
+
+
+def tokens_per_s(cfg, steps=8, batch=8, seq=256, warmup=2):
+    corpus = TokenCorpus(vocab_size=cfg.vocab_size, seq_len=seq, batch=batch)
+    step = jax.jit(tr.make_train_fn(cfg))
+    state = tr.init_train_state(cfg)
+    b = {k: jnp.asarray(v) for k, v in corpus.batch_at(0).items()}
+    for i in range(warmup):
+        state, m = step(state, b)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in corpus.batch_at(i + 1).items()}
+        state, m = step(state, b)
+    jax.block_until_ready(m["loss"])
+    return steps * batch * seq / (time.perf_counter() - t0)
+
+
+def run(out=print):
+    rows = [("samba-421m", "dense expand=2"),
+            ("samba-421m-rom", "+RoM (2.1x total params)"),
+            ("samba-511m", "dense expand=4")]
+    res = {}
+    for name, label in rows:
+        cfg = reduce_for_smoke(get_config(name))
+        tps = tokens_per_s(cfg)
+        res[name] = tps
+        out(f"{name},{label},{tps:.0f} tok/s (CPU, reduced width)")
+    rel = res["samba-421m-rom"] / res["samba-421m"]
+    out(f"# RoM relative throughput vs matched-active dense: "
+        f"{100 * rel:.0f}% (paper Table 11: ~80% on 8xA100)")
+    return res

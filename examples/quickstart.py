@@ -1,0 +1,62 @@
+"""Quickstart: build a small RoM-Samba hybrid, train it, generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs in ~2 minutes on CPU.  Shows the three public API layers:
+configs -> train-step factory -> decode-step factory.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import train as tr
+from repro.configs.base import (AttentionConfig, MambaConfig, ModelConfig,
+                                RoMConfig)
+from repro.data.pipeline import MarkovCorpus
+from repro.models import lm
+
+
+def main():
+    # 1. A model is a block-pattern config.  This is a 4-deep Samba-style
+    #    hybrid whose Mamba layers carry RoM projection experts (the paper's
+    #    method): one shared router per layer routes Conv/Gate/Out experts.
+    cfg = ModelConfig(
+        name="quickstart-rom-samba", d_model=128, vocab_size=256,
+        segments=((("rom_mamba", "mlp", "attn", "mlp"), 2),), d_ff=256,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=32,
+                                  window=64),
+        mamba=MambaConfig(d_state=8, chunk=32),
+        rom=RoMConfig(num_experts=8, top_k=1, jitter_eps=0.01,
+                      capacity_factor=2.0),
+        dtype="float32")
+
+    # 2. Train on the regime-mixture corpus (experts specialize per regime).
+    corpus = MarkovCorpus(vocab_size=256, seq_len=128, batch=16, seed=0)
+    hp = tr.TrainHParams(base_lr=3e-3, warmup_steps=10, total_steps=150)
+    step = jax.jit(tr.make_train_fn(cfg, hp=hp))
+    state = tr.init_train_state(cfg)
+    for i in range(150):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch_at(i).items()}
+        state, m = step(state, batch)
+        if i % 25 == 0 or i == 149:
+            print(f"step {i:4d}  loss={float(m['loss']):.3f}  "
+                  f"load_max={float(m['load_max']):.2f}  "
+                  f"drop={float(m['drop_frac']):.3f}")
+
+    # 3. Generate: single-token decode steps against SSM + windowed-KV state.
+    serve = jax.jit(tr.make_serve_fn(cfg))
+    B, prompt_len, gen_len = 2, 16, 24
+    prompt = jnp.asarray(corpus.batch_at(999)["tokens"])[:B, :prompt_len]
+    dstate = lm.init_state(cfg, B, prompt_len + gen_len, jnp.float32)
+    for pos in range(prompt_len):
+        nxt, _, dstate = serve(state["params"], dstate,
+                               prompt[:, pos:pos + 1], jnp.int32(pos))
+    toks = [nxt]
+    for pos in range(prompt_len, prompt_len + gen_len - 1):
+        nxt, _, dstate = serve(state["params"], dstate, toks[-1][:, None],
+                               jnp.int32(pos))
+        toks.append(nxt)
+    print("generated:", jnp.stack(toks, 1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

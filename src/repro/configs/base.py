@@ -1,0 +1,255 @@
+"""Config system: frozen dataclasses + registry.
+
+A model is a stack of *segments*; each segment is a block ``pattern`` (a tuple
+of sub-layer kind strings) repeated ``repeats`` times.  Segments with
+``repeats > 1`` are executed with ``lax.scan`` over stacked parameters so the
+compiled HLO stays small at 60-layer scale.
+
+Sub-layer kinds (token mixers and channel mixers):
+  attn          full / sliding-window GQA attention (cfg.attention)
+  mlp           dense SwiGLU / GELU MLP (cfg.d_ff)
+  moe           FFN mixture-of-experts (cfg.moe)
+  mamba         dense Mamba (selective SSM) (cfg.mamba)
+  rom_mamba     Mamba with RoM projection experts (cfg.mamba + cfg.rom)
+  moemamba      naive MoE-Mamba baseline: independent routers per projection
+  mamba2        Mamba-2 (SSD) (cfg.mamba2)
+  rom_mamba2    Mamba-2 with comprehensive RoM expertization
+  gdn           Gated DeltaNet (cfg.gdn)
+  rom_gdn       Gated DeltaNet with RoM
+  rglru         RG-LRU recurrent block (RecurrentGemma/Griffin) (cfg.rglru)
+  rom_rglru     RG-LRU with RoM projection experts
+  mlstm, slstm  xLSTM blocks (cfg.xlstm)
+  rom_mlstm     mLSTM with RoM projection experts
+  moa, switchhead   attention-MoE baselines (cfg.attention + cfg.attn_moe)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    window: Optional[int] = None        # sliding-window size; None = full
+    causal: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    q_block: int = 512                  # blockwise-attention query tile
+    kv_block: int = 1024                # blockwise-attention kv tile
+    impl: str = "blockwise"             # blockwise | full
+    # TP layout when heads don't divide the model axis:
+    #   head_dim  - shard head_dim (psum per attention tile — measured
+    #               pathological in §Perf; kept as the recorded baseline)
+    #   replicate - replicate attention internals; TP stays in projections
+    tp_fallback: str = "head_dim"
+    # decode cache update: "dus" (GSPMD dynamic_update_slice, baseline) or
+    # "flash" (shard_map seq-sharded cache + flash-decoding combine, §Perf)
+    decode: str = "dus"
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    expand: int = 2
+    d_state: int = 16
+    dt_rank: int = 0                    # 0 -> ceil(d_model / 16)
+    conv_kernel: int = 4
+    chunk: int = 128                    # ref-path scan chunk
+    scan_dtype: str = "float32"         # scan accumulation dtype (perf knob)
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    expand: int = 2
+    d_state: int = 64
+    head_dim: int = 64
+    chunk: int = 64
+    conv_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class GDNConfig:
+    num_heads: int = 4
+    head_dim: int = 128                 # key dim per head
+    expand_v: int = 2
+    conv_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0                      # 0 -> d_model
+    conv_kernel: int = 4
+    num_heads: int = 1                  # gate heads (block-diag input/forget gates)
+    c: float = 8.0                      # RG-LRU time-constant scale
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    num_heads: int = 4
+    expand: int = 2                     # mLSTM inner = expand * d_model
+    qk_ratio: float = 0.5               # qk dim = qk_ratio * inner
+    slstm_ff: float = 4.0 / 3.0         # sLSTM post-FFN expansion
+    conv_kernel: int = 4
+    chunk: int = 64
+
+
+@dataclass(frozen=True)
+class RoMConfig:
+    """Routing Mamba: shared-router projection experts (the paper's core)."""
+    num_experts: int = 8
+    top_k: int = 1
+    # which projections are expertized ('conv','gate','out' (+'dt','x') for
+    # mamba; 'in','out' = comprehensive for mamba2/gdn/rglru/mlstm)
+    targets: Tuple[str, ...] = ("conv", "gate", "out")
+    jitter_eps: float = 0.01            # multiplicative router-logit noise
+    aux_loss_weight: float = 0.0        # paper default: no balance loss
+    capacity_factor: float = 2.0        # capacity dispatch path only
+    impl: str = "capacity"              # dense | capacity | grouped
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """FFN mixture-of-experts (baseline + assigned MoE archs)."""
+    num_experts: int = 8
+    top_k: int = 1
+    d_ff: int = 0                       # per-expert hidden
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    impl: str = "capacity"              # dense | capacity | ep
+    aux_loss_weight: float = 0.0
+    jitter_eps: float = 0.0
+    share_rom_router: bool = False      # Eq. 14-15: reuse preceding RoM decisions
+
+
+@dataclass(frozen=True)
+class AttnMoEConfig:
+    """MoA / SwitchHead baselines."""
+    num_experts: int = 8
+    top_k: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab_size: int
+    segments: Tuple[Tuple[Tuple[str, ...], int], ...]
+    d_ff: int = 0
+    mlp_act: str = "swiglu"             # swiglu | geglu | gelu
+    attention: Optional[AttentionConfig] = None
+    mamba: Optional[MambaConfig] = None
+    mamba2: Optional[Mamba2Config] = None
+    gdn: Optional[GDNConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    rom: Optional[RoMConfig] = None
+    moe: Optional[MoEConfig] = None
+    attn_moe: Optional[AttnMoEConfig] = None
+    kind: str = "decoder"               # decoder | encoder | vlm
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"             # activation dtype
+    param_dtype: str = "float32"
+    max_seq_len: int = 4096
+    # modality frontends (stubbed per spec: input_specs provides embeddings)
+    frontend: Optional[str] = None      # patch | frame
+    frontend_dim: int = 0               # incoming embedding dim
+    num_prefix_embeds: int = 0          # e.g. image patches prepended (vlm)
+    # training-system knobs
+    optimizer: str = "adamw"            # adamw | adafactor
+    remat: str = "none"                 # none | full | dots
+    scan_layers: bool = True
+    logit_softcap: float = 0.0
+
+    # ---- derived helpers -------------------------------------------------
+    def num_sublayers(self) -> int:
+        return sum(len(p) * r for p, r in self.segments)
+
+    def mixer_layers(self, kinds=("attn", "mamba", "rom_mamba", "moemamba",
+                                  "mamba2", "rom_mamba2", "gdn", "rom_gdn",
+                                  "rglru", "rom_rglru", "mlstm", "slstm",
+                                  "moa", "switchhead")) -> int:
+        return sum(sum(1 for k in p if k in kinds) * r for p, r in self.segments)
+
+    def is_subquadratic(self) -> bool:
+        """True if no full (unwindowed) attention layer exists."""
+        has_full_attn = any(
+            any(k in ("attn", "moa", "switchhead") for k in p)
+            for p, _ in self.segments
+        ) and (self.attention is None or self.attention.window is None)
+        return not has_full_attn
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to every architecture (spec: 4 shapes / arch).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                           # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """Per-spec skip rules: encoder-only archs skip decode shapes; pure
+    full-attention archs skip long_500k (needs sub-quadratic attention)."""
+    out = {}
+    for name, s in SHAPES.items():
+        if cfg.kind == "encoder" and s.mode == "decode":
+            out[name] = (None, "encoder-only: no decode step")
+        elif name == "long_500k" and not cfg.is_subquadratic():
+            out[name] = (None, "pure full-attention arch: 512K decode skipped")
+        else:
+            out[name] = (s, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {}
+
+
+def register(fn):
+    """Decorator: register ``fn() -> ModelConfig`` under the config's name."""
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs.all_configs  # noqa: F401  (populate registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown config {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_configs():
+    import repro.configs.all_configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = (
+    "qwen1.5-4b", "yi-34b", "qwen2.5-14b", "qwen1.5-0.5b", "pixtral-12b",
+    "xlstm-350m", "moonshot-v1-16b-a3b", "llama4-maverick-400b-a17b",
+    "hubert-xlarge", "recurrentgemma-2b",
+)

@@ -1,0 +1,244 @@
+"""MoE dispatch engines — MegaBlocks rethought for TPU + GSPMD.
+
+The paper trains *without* expert parallelism (experts replicated, FSDP
+outside), using MegaBlocks' grouped GEMM for dropless compute.  The TPU-native
+formulation used here:
+
+``capacity`` (default, pjit/GSPMD path, scatter-free)
+    Tokens are viewed as (G groups, g tokens); the group dim is laid out so it
+    shards over the DP mesh axes, keeping *all* dispatch compute local to a
+    device (zero MoE collectives — exactly the paper's no-EP design).  Within
+    a group, assignments are sorted by expert with a single fused integer key
+    (stable), expert run offsets come from ``searchsorted``, and the capacity
+    buffer (E, C, ·) is built by *gathers only* — no scatters, which GSPMD
+    partitions poorly.  The inverse permutation (another argsort) drives the
+    combine gather.  Assignments beyond capacity are dropped (cf=2 default
+    ≈ never in practice; drop fraction is a tracked metric).
+
+``dense``
+    Every expert computes every token; mask+sum.  O(E×) FLOPs — the oracle
+    for tests and the honest baseline for tiny models.
+
+``grouped``
+    Same sort as ``capacity`` but the expert matmul runs the Pallas ragged
+    GEMM (kernels/grouped_matmul.py), skipping all-padding tiles — the
+    MegaBlocks dropless-sparsity saving on TPU.  Validated in interpret mode.
+
+``ragged``
+    True dropless via ``jax.lax.ragged_dot`` on sorted tokens (G=1 only);
+    reference path for single-host training examples.
+
+Expert parallelism (beyond the paper — needed for the assigned 400B-class
+MoE archs) lives in ``ep_shard_map`` in ``core/rom_ffn.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import Routing
+
+
+def capacity_for(g: int, top_k: int, num_experts: int, cf: float,
+                 multiple: int = 8) -> int:
+    c = int(-(-g * top_k * cf // num_experts))
+    c = -(-c // multiple) * multiple
+    return max(multiple, min(c, g * top_k))
+
+
+@dataclasses.dataclass
+class Dispatch:
+    """Sorted-assignment dispatch plan shared by every projection of a layer.
+
+    Building this once and reusing it for Conv/Gate/Out is where the shared
+    router pays off computationally: one sort, one inverse, one set of
+    offsets for three expert projections.
+    """
+    routing: Routing
+    capacity: int
+    token_for_slot: jnp.ndarray   # (G, E*C) int32  token index feeding a slot
+    asn_for_slot: jnp.ndarray     # (G, E*C) int32  assignment index per slot
+    slot_valid: jnp.ndarray       # (G, E*C) bool   slot holds a live token
+    slot_for_asn: jnp.ndarray     # (G, g*K) int32  slot of each assignment
+    asn_valid: jnp.ndarray        # (G, g*K) bool   assignment not dropped
+    group_sizes: jnp.ndarray      # (G, E) int32
+
+    @property
+    def drop_frac(self):
+        return 1.0 - jnp.mean(self.asn_valid.astype(jnp.float32))
+
+
+def make_dispatch(routing: Routing, capacity_factor: float,
+                  capacity_multiple: int = 8) -> Dispatch:
+    G, g, K = routing.expert_idx.shape
+    E = routing.num_experts
+    C = capacity_for(g, K, E, capacity_factor, capacity_multiple)
+    a = routing.expert_idx.reshape(G, g * K).astype(jnp.int32)  # assignments
+    n = g * K
+    # stable sort by expert via fused key (expert-major, token-order minor)
+    key = a * n + jnp.arange(n, dtype=jnp.int32)[None, :]
+    sort_idx = jnp.argsort(key, axis=1).astype(jnp.int32)       # (G, n)
+    a_sorted = jnp.take_along_axis(a, sort_idx, axis=1)
+    offsets = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(E, dtype=jnp.int32),
+                                   side="left"))(a_sorted).astype(jnp.int32)
+    ends = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(E, dtype=jnp.int32),
+                                   side="right"))(a_sorted).astype(jnp.int32)
+    group_sizes = ends - offsets                                 # (G, E)
+
+    # slot (e, c) <- sorted position offsets[e] + c   (gather, no scatter)
+    c_idx = jnp.arange(C, dtype=jnp.int32)
+    src = offsets[:, :, None] + c_idx[None, None, :]             # (G, E, C)
+    slot_valid = c_idx[None, None, :] < group_sizes[:, :, None]
+    src = jnp.minimum(src, n - 1).reshape(G, E * C)
+    asn_for_slot = jnp.take_along_axis(sort_idx, src, axis=1)    # (G, E*C)
+    token_for_slot = asn_for_slot // K
+
+    # assignment j -> its slot (for combine)
+    inv_sort = jnp.argsort(sort_idx, axis=1).astype(jnp.int32)   # (G, n)
+    rank = inv_sort - jnp.take_along_axis(offsets, a, axis=1)    # (G, n)
+    asn_valid = rank < C
+    slot_for_asn = a * C + jnp.minimum(rank, C - 1)
+
+    return Dispatch(routing=routing, capacity=C,
+                    token_for_slot=token_for_slot,
+                    asn_for_slot=asn_for_slot,
+                    slot_valid=slot_valid.reshape(G, E * C),
+                    slot_for_asn=slot_for_asn, asn_valid=asn_valid,
+                    group_sizes=group_sizes)
+
+
+def dispatch_tokens(dsp: Dispatch, x: jnp.ndarray) -> jnp.ndarray:
+    """x (G, g, D) -> capacity buffer (G, E, C, D); padding slots are zero."""
+    G, g, D = x.shape
+    E, C = dsp.routing.num_experts, dsp.capacity
+    buf = jnp.take_along_axis(x, dsp.token_for_slot[:, :, None], axis=1)
+    buf = jnp.where(dsp.slot_valid[:, :, None], buf, 0)
+    return buf.reshape(G, E, C, D)
+
+
+def dispatch_assignments(dsp: Dispatch, v: jnp.ndarray) -> jnp.ndarray:
+    """Per-*assignment* payload v (G, g*K, ...) -> (G, E, C, ...).
+
+    Unlike ``dispatch_tokens`` (which maps slots to tokens), this keeps the
+    (token, k)-assignment identity — needed to ship per-assignment metadata
+    (e.g. target-expert ids) through an all_to_all in the EP path.
+    """
+    G, n = v.shape[:2]
+    E, C = dsp.routing.num_experts, dsp.capacity
+    idx = dsp.asn_for_slot.reshape(G, E * C, *([1] * (v.ndim - 2)))
+    buf = jnp.take_along_axis(v, jnp.broadcast_to(
+        idx, (G, E * C, *v.shape[2:])), axis=1)
+    mask = dsp.slot_valid.reshape(G, E * C, *([1] * (v.ndim - 2)))
+    buf = jnp.where(mask, buf, 0)
+    return buf.reshape(G, E, C, *v.shape[2:])
+
+
+def combine_tokens(dsp: Dispatch, y_buf: jnp.ndarray,
+                   weighted: bool) -> jnp.ndarray:
+    """y_buf (G, E, C, F) -> (G, g, F).
+
+    ``weighted=False`` sums selected experts' outputs (Conv/Gate projections,
+    Eq. 10-11); ``weighted=True`` applies the router combine weights
+    (Out projection, Eq. 12).
+    """
+    G, E, C, F = y_buf.shape
+    K = dsp.routing.top_k
+    g = dsp.slot_for_asn.shape[1] // K
+    yf = y_buf.reshape(G, E * C, F)
+    y = jnp.take_along_axis(yf, dsp.slot_for_asn[:, :, None], axis=1)
+    scale = dsp.asn_valid.astype(y.dtype)
+    if weighted:
+        scale = scale * dsp.routing.weights.reshape(G, g * K).astype(y.dtype)
+    y = y * scale[:, :, None]
+    return y.reshape(G, g, K, F).sum(axis=2)
+
+
+# ---------------------------------------------------------------------------
+# expert matmuls
+# ---------------------------------------------------------------------------
+
+def expert_matmul(buf: jnp.ndarray, w: jnp.ndarray, group_sizes=None,
+                  impl: str = "capacity") -> jnp.ndarray:
+    """buf (G, E, C, D) @ w (E, D, F) -> (G, E, C, F)."""
+    if impl == "grouped":
+        from repro.kernels import ops
+        G, E, C, D = buf.shape
+        y = ops.grouped_matmul(
+            buf.reshape(G * E, C, D),
+            jnp.broadcast_to(w, (G, *w.shape)).reshape(G * E, *w.shape[1:]),
+            group_sizes.reshape(G * E),
+            impl="interpret" if jax.default_backend() != "tpu" else None)
+        return y.reshape(G, E, C, -1)
+    cd = buf.dtype
+    return jnp.einsum("gecd,edf->gecf", buf, w.astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# a MoE linear layer under a shared routing decision
+# ---------------------------------------------------------------------------
+
+class SharedMoELinear:
+    """Applies expertized linear projections that all reuse one Dispatch.
+
+    ``__call__(x_or_none, w, weighted)``: if ``x`` is the same tensor already
+    dispatched (``reuse=True`` path) the cached capacity buffer is reused —
+    Conv Proj and Gate Proj both project the layer input X, so RoM pays for a
+    single dispatch gather serving both (see DESIGN.md §Perf).
+    """
+
+    def __init__(self, dsp: Dispatch, impl: str = "capacity"):
+        self.dsp = dsp
+        self.impl = impl
+        self._cache = {}
+
+    def dispatch(self, x: jnp.ndarray, tag: str = "x") -> jnp.ndarray:
+        if tag not in self._cache:
+            self._cache[tag] = dispatch_tokens(self.dsp, x)
+        return self._cache[tag]
+
+    def __call__(self, x: jnp.ndarray, w: jnp.ndarray, *, weighted: bool,
+                 tag: str = "x") -> jnp.ndarray:
+        buf = self.dispatch(x, tag)
+        y = expert_matmul(buf, w, self.dsp.group_sizes, self.impl)
+        return combine_tokens(self.dsp, y, weighted)
+
+
+def dense_moe_linear(routing: Routing, x: jnp.ndarray, w: jnp.ndarray, *,
+                     weighted: bool) -> jnp.ndarray:
+    """O(E×) oracle: every expert computes every token. x (G,g,D), w (E,D,F)."""
+    G, g, D = x.shape
+    E, K = routing.num_experts, routing.top_k
+    y_all = jnp.einsum("gtd,edf->gtef", x, w.astype(x.dtype),
+                       preferred_element_type=jnp.float32)     # (G,g,E,F)
+    sel = jax.nn.one_hot(routing.expert_idx, E, dtype=jnp.float32)  # (G,g,K,E)
+    if weighted:
+        sel = sel * routing.weights[..., None]
+    mix = sel.sum(axis=2)                                      # (G,g,E)
+    return jnp.einsum("gtef,gte->gtf", y_all, mix).astype(x.dtype)
+
+
+def ragged_moe_linear(dsp: Dispatch, x: jnp.ndarray, w: jnp.ndarray, *,
+                      weighted: bool) -> jnp.ndarray:
+    """True dropless via jax.lax.ragged_dot (G=1 only). x (1,g,D), w (E,D,F)."""
+    G, g, D = x.shape
+    assert G == 1, "ragged impl supports a single dispatch group"
+    K = dsp.routing.top_k
+    n = g * K
+    a = dsp.routing.expert_idx.reshape(n)
+    key = a * n + jnp.arange(n, dtype=jnp.int32)
+    sort_idx = jnp.argsort(key)
+    tok = jnp.take(x[0], sort_idx // K, axis=0)               # (n, D) sorted
+    sizes = dsp.group_sizes[0]
+    y_sorted = jax.lax.ragged_dot(tok, w.astype(tok.dtype), sizes)
+    y = jnp.take(y_sorted, jnp.argsort(sort_idx), axis=0)     # back to asn order
+    scale = jnp.ones((n,), y.dtype)
+    if weighted:
+        scale = dsp.routing.weights.reshape(n).astype(y.dtype)
+    y = y * scale[:, None]
+    return y.reshape(1, g, K, -1).sum(axis=2)

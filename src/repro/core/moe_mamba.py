@@ -1,0 +1,121 @@
+"""Naive MoE-Mamba baseline [37]: *independent* routers per projection.
+
+This is the strategy the paper shows to degrade quality (Fig. 2, Table 4):
+each targeted projection (Conv / Gate / Out) gets its own router and its own
+dispatch, so routing decisions are uncoordinated across the functionally
+interdependent projections, and all outputs are combined with each router's
+own weights.  Implemented with the same dispatch engine as RoM so that the
+comparison isolates exactly the paper's variable: shared vs independent
+routing.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import router as rtr
+from repro.core.rom import SharedRouting, _expert_init, _fold_rng
+from repro.nn import ssm
+from repro.nn.layers import Runtime, dense, dense_init, silu
+
+
+def moemamba_init(key, cfg):
+    rom = cfg.rom
+    de, dt_rank, n = ssm.mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    p = ssm.mamba_init_shared(ks[0], cfg)
+    E, pd = rom.num_experts, cfg.param_dtype
+    t = rom.targets
+    if "conv" in t:
+        p["conv_router"] = {
+            "w_router": rtr.router_init(ks[1], cfg.d_model, E)}
+        p["e_w_in"] = _expert_init(ks[2], E, cfg.d_model, de, pd)
+    else:
+        p["w_in"] = dense_init(ks[2], cfg.d_model, de, dtype=pd)
+    if "gate" in t:
+        p["gate_router"] = {
+            "w_router": rtr.router_init(ks[3], cfg.d_model, E)}
+        p["e_w_gate"] = _expert_init(ks[4], E, cfg.d_model, de, pd)
+    else:
+        p["w_gate"] = dense_init(ks[4], cfg.d_model, de, dtype=pd)
+    if "out" in t:
+        p["out_router"] = {
+            "w_router": rtr.router_init(ks[5], cfg.d_model, E)}
+        p["e_w_out"] = _expert_init(ks[6], E, de, cfg.d_model, pd)
+    else:
+        p["w_out"] = dense_init(ks[6], de, cfg.d_model, dtype=pd)
+    return p
+
+
+def _sum_metrics(ms):
+    out = {}
+    for m in ms:
+        for k, v in m.items():
+            out[k] = out.get(k, 0.0) + v
+    n = max(len(ms), 1)
+    return {k: v / n for k, v in out.items()}
+
+
+def moemamba_apply(params, x, cfg, rt: Runtime, ctx=None):
+    rom = cfg.rom
+    t = rom.targets
+    rng = _fold_rng(rt)
+    rngs = jax.random.split(rng, 3) if rng is not None else (None,) * 3
+    metrics = []
+
+    if "conv" in t:
+        sr_c = SharedRouting(params["conv_router"]["w_router"], x, rom, rt,
+                             rng=rngs[0])
+        h = sr_c.proj(x, params["e_w_in"], weighted=False, tag="x")
+        metrics.append(sr_c.metrics())
+    else:
+        h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    y = ssm.mamba_core(params, h, cfg, rt)
+    if "gate" in t:
+        sr_g = SharedRouting(params["gate_router"]["w_router"], x, rom, rt,
+                             rng=rngs[1])
+        g = silu(sr_g.proj(x, params["e_w_gate"], weighted=False, tag="x"))
+        metrics.append(sr_g.metrics())
+    else:
+        g = silu(dense(x, params["w_gate"]))
+    z = y * g
+    if "out" in t:
+        sr_o = SharedRouting(params["out_router"]["w_router"], x, rom, rt,
+                             rng=rngs[2])
+        out = sr_o.proj(z, params["e_w_out"], weighted=True, tag="z")
+        metrics.append(sr_o.metrics())
+    else:
+        out = dense(z, params["w_out"])
+    return out, _sum_metrics(metrics)
+
+
+def moemamba_init_state(cfg, batch, dtype):
+    return ssm.mamba_init_state(cfg, batch, dtype)
+
+
+def moemamba_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    rom = cfg.rom
+    t = rom.targets
+    metrics = []
+    if "conv" in t:
+        sr_c = SharedRouting(params["conv_router"]["w_router"], x_t, rom, rt)
+        h = sr_c.proj(x_t, params["e_w_in"], weighted=False, tag="x")[:, 0]
+        metrics.append(sr_c.metrics())
+    else:
+        h = dense(x_t[:, 0], params["w_in"])
+    y, state = ssm.mamba_core_step(params, h, state, cfg, rt)
+    if "gate" in t:
+        sr_g = SharedRouting(params["gate_router"]["w_router"], x_t, rom, rt)
+        g = silu(sr_g.proj(x_t, params["e_w_gate"], weighted=False,
+                           tag="x")[:, 0])
+        metrics.append(sr_g.metrics())
+    else:
+        g = silu(dense(x_t[:, 0], params["w_gate"]))
+    z = (y * g)[:, None]
+    if "out" in t:
+        sr_o = SharedRouting(params["out_router"]["w_router"], x_t, rom, rt)
+        out = sr_o.proj(z, params["e_w_out"], weighted=True, tag="z")
+        metrics.append(sr_o.metrics())
+    else:
+        out = dense(z, params["w_out"])
+    return out, state, _sum_metrics(metrics)

@@ -1,0 +1,411 @@
+"""Routing Mamba (RoM): shared-router projection experts — the paper's core.
+
+One router per layer (Eq. 9).  Its top-K decision is reused by every
+expertized projection:
+
+  Mamba (selective expertization, §4.3):
+      Conv Proj  H = sum_{i in TopK} X W_in,i          (Eq. 11, unweighted)
+      Gate Proj  G = SiLU(sum_{i in TopK} X W_g,i)     (Eq. 10, unweighted)
+      Out  Proj  O = sum_i R_i(X) (Y*G) W_out,i        (Eq. 12-13, weighted)
+      x Proj / dt Proj / Conv1D / A / D shared across experts (MQA analogy);
+      optionally expertized via targets ('x', 'dt') for the Table-1 ablation.
+
+  Mamba-2 / GDN / RG-LRU / mLSTM (comprehensive expertization, §5.4):
+      the fused input projection(s) and the output projection are all
+      experts under the same routing decision.
+
+The *shared* decision is also what makes this cheap: one sort + one inverse
+permutation + one dispatched input buffer serve all input-side projections
+(see moe_dispatch.SharedMoELinear).  A naive per-projection MoE (MoE-Mamba
+baseline, core/moe_mamba.py) pays routing + dispatch per projection and —
+per the paper — loses quality too.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moe_dispatch as md
+from repro.core import router as rtr
+from repro.nn import rglru as rgl
+from repro.nn import ssm
+from repro.nn import xlstm as xl
+from repro.nn.layers import Runtime, dense, dense_init, silu
+
+
+# ---------------------------------------------------------------------------
+# token grouping: groups shard exactly over the DP mesh axes so all MoE
+# dispatch compute stays device-local (the paper's no-EP design).
+# ---------------------------------------------------------------------------
+
+def dp_size(rt: Runtime) -> int:
+    mesh = rt.shard.mesh
+    if mesh is None:
+        return 1
+    s = 1
+    for ax in ("pod", "data"):
+        s *= mesh.shape.get(ax, 1)
+    return s
+
+
+def num_groups(batch: int, rt: Runtime) -> int:
+    return math.gcd(batch, dp_size(rt))
+
+
+class SharedRouting:
+    """Route once; project many.  Binds (routing, dispatch, impl) and exposes
+    ``proj(t, w, weighted, tag)`` for any (B,S,·) tensor under the *same*
+    decision — Conv/Gate share the dispatched X buffer via the tag."""
+
+    def __init__(self, w_router, x, rom, rt: Runtime, rng=None):
+        B, S, D = x.shape
+        self.B, self.S = B, S
+        self.G = num_groups(B, rt)
+        self.g = B * S // self.G
+        self.rom = rom
+        xt = x.reshape(self.G, self.g, D)
+        self.routing = rtr.route(
+            w_router, xt, num_experts=rom.num_experts, top_k=rom.top_k,
+            jitter_eps=rom.jitter_eps, aux_loss_weight=rom.aux_loss_weight,
+            rng=rng, train=rt.train)
+        self.impl = rom.impl
+        if self.impl == "dense":
+            self.lin = None
+        else:
+            dsp = md.make_dispatch(self.routing, rom.capacity_factor)
+            self.lin = md.SharedMoELinear(dsp, impl=self.impl)
+
+    def proj(self, t, w, *, weighted: bool, tag: str):
+        """t (B,S,Din) -> (B,S,Dout) through the routed experts w (E,Din,Dout)."""
+        B, S, Din = t.shape
+        tt = t.reshape(self.G, self.g, Din)
+        if self.impl == "dense":
+            y = md.dense_moe_linear(self.routing, tt, w, weighted=weighted)
+        elif self.impl == "ragged":
+            y = md.ragged_moe_linear(self.lin.dsp, tt, w, weighted=weighted)
+        else:
+            y = self.lin(tt, w, weighted=weighted, tag=tag)
+        return y.reshape(B, S, -1)
+
+    def metrics(self) -> dict:
+        m = dict(self.routing.metrics)
+        if self.lin is not None:
+            m["drop_frac"] = self.lin.dsp.drop_frac
+        return m
+
+
+def _expert_init(key, E, d_in, d_out, dtype):
+    ks = jax.random.split(key, E)
+    return jax.vmap(lambda k: dense_init(k, d_in, d_out, dtype=dtype))(ks)
+
+
+def _fold_rng(rt: Runtime):
+    return rt.rng
+
+
+# ---------------------------------------------------------------------------
+# RoM-Mamba (the paper's main configuration)
+# ---------------------------------------------------------------------------
+
+def rom_mamba_init(key, cfg):
+    rom = cfg.rom
+    de, dt_rank, n = ssm.mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    p = ssm.mamba_init_shared(ks[0], cfg)
+    E, pd = rom.num_experts, cfg.param_dtype
+    t = rom.targets
+    p["w_router"] = rtr.router_init(ks[1], cfg.d_model, E, rom.router_dtype)
+    if "conv" in t:
+        p["e_w_in"] = _expert_init(ks[2], E, cfg.d_model, de, pd)
+    else:
+        p["w_in"] = dense_init(ks[2], cfg.d_model, de, dtype=pd)
+    if "gate" in t:
+        p["e_w_gate"] = _expert_init(ks[3], E, cfg.d_model, de, pd)
+    else:
+        p["w_gate"] = dense_init(ks[3], cfg.d_model, de, dtype=pd)
+    if "out" in t:
+        p["e_w_out"] = _expert_init(ks[4], E, de, cfg.d_model, pd)
+    else:
+        p["w_out"] = dense_init(ks[4], de, cfg.d_model, dtype=pd)
+    if "x" in t:
+        p["e_w_x"] = _expert_init(ks[5], E, de, dt_rank + 2 * n, pd)
+        del p["w_x"]
+    if "dt" in t:
+        p["e_w_dt"] = jax.vmap(
+            lambda k: dense_init(k, dt_rank, de, dtype=pd,
+                                 scale=dt_rank ** -0.5))(
+            jax.random.split(ks[6], E))
+        del p["w_dt"]
+    return p
+
+
+def _rom_proj_fns(sr: SharedRouting, params, targets):
+    """Optionally expertized x/dt projections for the Table-1 ablation."""
+    x_fn = (lambda u: sr.proj(u, params["e_w_x"], weighted=False, tag="u")) \
+        if "x" in targets else None
+    dt_fn = (lambda v: sr.proj(v, params["e_w_dt"], weighted=False, tag="dt")) \
+        if "dt" in targets else None
+    return x_fn, dt_fn
+
+
+def rom_mamba_apply(params, x, cfg, rt: Runtime, ctx=None):
+    rom = cfg.rom
+    t = rom.targets
+    sr = SharedRouting(params["w_router"], x, rom, rt, rng=_fold_rng(rt))
+    if ctx is not None:
+        ctx["rom_routing"] = sr                     # Eq. 14-15 reuse
+    if "conv" in t:
+        h = sr.proj(x, params["e_w_in"], weighted=False, tag="x")
+    else:
+        h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    x_fn, dt_fn = _rom_proj_fns(sr, params, t)
+    y = ssm.mamba_core(params, h, cfg, rt, x_proj_fn=x_fn, dt_proj_fn=dt_fn)
+    if "gate" in t:
+        g = silu(sr.proj(x, params["e_w_gate"], weighted=False, tag="x"))
+    else:
+        g = silu(dense(x, params["w_gate"]))
+    z = y * g
+    if "out" in t:
+        out = sr.proj(z, params["e_w_out"], weighted=True, tag="z")
+    else:
+        out = dense(z, params["w_out"])
+    return out, sr.metrics()
+
+
+def rom_mamba_init_state(cfg, batch, dtype):
+    return ssm.mamba_init_state(cfg, batch, dtype)
+
+
+def rom_mamba_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    rom = cfg.rom
+    t = rom.targets
+    sr = SharedRouting(params["w_router"], x_t, rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    if "conv" in t:
+        h = sr.proj(x_t, params["e_w_in"], weighted=False, tag="x")[:, 0]
+    else:
+        h = dense(x_t[:, 0], params["w_in"])
+    x_fn = (lambda u: sr.proj(u[:, None], params["e_w_x"], weighted=False,
+                              tag="u")[:, 0]) if "x" in t else None
+    dt_fn = (lambda v: sr.proj(v[:, None], params["e_w_dt"], weighted=False,
+                               tag="dt")[:, 0]) if "dt" in t else None
+    y, state = ssm.mamba_core_step(params, h, state, cfg, rt,
+                                   x_proj_fn=x_fn, dt_proj_fn=dt_fn)
+    if "gate" in t:
+        g = silu(sr.proj(x_t, params["e_w_gate"], weighted=False,
+                         tag="x")[:, 0])
+    else:
+        g = silu(dense(x_t[:, 0], params["w_gate"]))
+    z = (y * g)[:, None]
+    if "out" in t:
+        out = sr.proj(z, params["e_w_out"], weighted=True, tag="z")
+    else:
+        out = dense(z, params["w_out"])
+    return out, state, sr.metrics()
+
+
+# ---------------------------------------------------------------------------
+# Comprehensive expertization (§5.4): Mamba-2, Gated DeltaNet, RG-LRU, mLSTM.
+# All large projections become experts under one shared routing decision.
+# ---------------------------------------------------------------------------
+
+def rom_mamba2_init(key, cfg):
+    rom = cfg.rom
+    de, nh, hd, n = ssm.mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = ssm.mamba2_init(ks[0], cfg)
+    d_in = p["w_zxbcdt"].shape[1]
+    E, pd = rom.num_experts, cfg.param_dtype
+    p["e_w_zxbcdt"] = _expert_init(ks[1], E, cfg.d_model, d_in, pd)
+    p["e_w_out"] = _expert_init(ks[2], E, de, cfg.d_model, pd)
+    del p["w_zxbcdt"], p["w_out"]
+    p["w_router"] = rtr.router_init(ks[3], cfg.d_model, E, rom.router_dtype)
+    return p
+
+
+def rom_mamba2_apply(params, x, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=_fold_rng(rt))
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    zxbcdt = sr.proj(x, params["e_w_zxbcdt"], weighted=False, tag="x")
+    y = ssm.mamba2_core(params, zxbcdt, cfg, rt)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
+    return out, sr.metrics()
+
+
+def rom_mamba2_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    de, nh, hd, n = ssm.mamba2_dims(cfg)
+    zxbcdt = sr.proj(x_t, params["e_w_zxbcdt"], weighted=False, tag="x")[:, 0]
+    # replicate mamba2_step's core on the routed projection
+    z, xbc, dt_in = jnp.split(zxbcdt, [de, 2 * de + 2 * n], axis=-1)
+    xbc, conv_buf = ssm.causal_conv1d_step(xbc, state["conv"],
+                                           params["conv_w"], params["conv_b"])
+    xbc = silu(xbc)
+    x_, B_t, C_t = jnp.split(xbc, [de, de + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(dt * -jnp.exp(params["A_log_h"]))
+    xh = x_.reshape(-1, nh, hd).astype(jnp.float32)
+    h = (state["h"] * a[..., None, None] +
+         jnp.einsum("bhp,bn,bh->bhpn", xh, B_t.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+    y = y + xh * params["D_h"][:, None]
+    y = y.reshape(-1, de).astype(x_t.dtype)
+    from repro.nn.layers import rmsnorm
+    y = rmsnorm({"scale": params["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
+    return out, {"h": h, "conv": conv_buf}, sr.metrics()
+
+
+def rom_gdn_init(key, cfg):
+    rom = cfg.rom
+    nh, dk_h, dv_h, dk, dv = ssm.gdn_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = ssm.gdn_init(ks[0], cfg)
+    E, pd = rom.num_experts, cfg.param_dtype
+    p["e_w_qkvz"] = _expert_init(ks[1], E, cfg.d_model, 2 * dk + 2 * dv, pd)
+    p["e_w_out"] = _expert_init(ks[2], E, dv, cfg.d_model, pd)
+    del p["w_qkvz"], p["w_out"]
+    p["w_router"] = rtr.router_init(ks[3], cfg.d_model, E, rom.router_dtype)
+    return p
+
+
+def rom_gdn_apply(params, x, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=_fold_rng(rt))
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    qkvz = sr.proj(x, params["e_w_qkvz"], weighted=False, tag="x")
+    ab = dense(x, params["w_ab"])                   # small proj stays shared
+    y = ssm.gdn_core(params, qkvz, ab, cfg, rt)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
+    return out, sr.metrics()
+
+
+def rom_gdn_init_state(cfg, batch, dtype):
+    return ssm.gdn_init_state(cfg, batch, dtype)
+
+
+def rom_gdn_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    nh, dk_h, dv_h, dk, dv = ssm.gdn_dims(cfg)
+    xt = x_t[:, 0]
+    qkvz = sr.proj(x_t, params["e_w_qkvz"], weighted=False, tag="x")[:, 0]
+    ab = dense(xt, params["w_ab"])
+    qkv, z = jnp.split(qkvz, [2 * dk + dv], axis=-1)
+    qkv, conv_buf = ssm.causal_conv1d_step(qkv, state["conv"],
+                                           params["conv_w"], params["conv_b"])
+    qkv = silu(qkv)
+    q, k, v = jnp.split(qkv, [dk, 2 * dk], axis=-1)
+    B_ = xt.shape[0]
+    q = q.reshape(B_, nh, dk_h)
+    k = k.reshape(B_, nh, dk_h)
+    v = v.reshape(B_, nh, dv_h)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True).clip(1e-6)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True).clip(1e-6)
+    a_in, b_in = jnp.split(ab, 2, axis=-1)
+    a = jnp.exp(-jnp.exp(jnp.clip(a_in.astype(jnp.float32), -8, 3)))
+    b = jax.nn.sigmoid(b_in.astype(jnp.float32))
+    S = state["S"]
+    f32 = jnp.float32
+    Sk = jnp.einsum("bhkv,bhk->bhv", S, k.astype(f32))
+    S = (S * a[..., None, None]
+         - jnp.einsum("bhk,bhv->bhkv", (k * (a * b)[..., None]).astype(f32), Sk)
+         + jnp.einsum("bhk,bhv->bhkv", (k * b[..., None]).astype(f32),
+                      v.astype(f32)))
+    y = jnp.einsum("bhkv,bhk->bhv", S, q.astype(f32)).reshape(B_, dv)
+    from repro.nn.layers import rmsnorm
+    y = rmsnorm({"scale": params["scale_inner"]},
+                y.astype(xt.dtype) * silu(z), cfg.norm_eps)
+    out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
+    return out, {"S": S, "conv": conv_buf}, sr.metrics()
+
+
+def rom_rglru_init(key, cfg):
+    rom = cfg.rom
+    d_rnn, _, _ = rgl.rglru_dims(cfg)
+    ks = jax.random.split(key, 5)
+    p = rgl.rglru_init_shared(ks[0], cfg)
+    E, pd = rom.num_experts, cfg.param_dtype
+    p["e_w_rec_in"] = _expert_init(ks[1], E, cfg.d_model, d_rnn, pd)
+    p["e_w_rec_gate"] = _expert_init(ks[2], E, cfg.d_model, d_rnn, pd)
+    p["e_w_out"] = _expert_init(ks[3], E, d_rnn, cfg.d_model, pd)
+    p["w_router"] = rtr.router_init(ks[4], cfg.d_model, E, rom.router_dtype)
+    return p
+
+
+def rom_rglru_apply(params, x, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=_fold_rng(rt))
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    u = sr.proj(x, params["e_w_rec_in"], weighted=False, tag="x")
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    h = rgl.rglru_core(params, u, cfg, rt)
+    gate = jax.nn.gelu(sr.proj(x, params["e_w_rec_gate"], weighted=False,
+                               tag="x"))
+    out = sr.proj(h * gate, params["e_w_out"], weighted=True, tag="z")
+    return out, sr.metrics()
+
+
+def rom_rglru_init_state(cfg, batch, dtype):
+    return rgl.rglru_init_state(cfg, batch, dtype)
+
+
+def rom_rglru_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    u_t = sr.proj(x_t, params["e_w_rec_in"], weighted=False, tag="x")[:, 0]
+    h, state = rgl.rglru_core_step(params, u_t, state, cfg, rt)
+    gate = jax.nn.gelu(sr.proj(x_t, params["e_w_rec_gate"], weighted=False,
+                               tag="x")[:, 0])
+    out = sr.proj((h * gate)[:, None], params["e_w_out"], weighted=True,
+                  tag="z")
+    return out, state, sr.metrics()
+
+
+def rom_mlstm_init(key, cfg):
+    rom = cfg.rom
+    inner, *_ = xl.mlstm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    p = xl.mlstm_init_shared(ks[0], cfg)
+    E, pd = rom.num_experts, cfg.param_dtype
+    p["e_w_in"] = _expert_init(ks[1], E, cfg.d_model, inner, pd)
+    p["e_w_gate"] = _expert_init(ks[2], E, cfg.d_model, inner, pd)
+    p["e_w_out"] = _expert_init(ks[3], E, inner, cfg.d_model, pd)
+    p["w_router"] = rtr.router_init(ks[4], cfg.d_model, E, rom.router_dtype)
+    return p
+
+
+def rom_mlstm_apply(params, x, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=_fold_rng(rt))
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    h = sr.proj(x, params["e_w_in"], weighted=False, tag="x")
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    z = sr.proj(x, params["e_w_gate"], weighted=False, tag="x")
+    y = xl.mlstm_core(params, h, z, cfg, rt, chunked=cfg.xlstm.chunk > 0)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
+    return out, sr.metrics()
+
+
+def rom_mlstm_init_state(cfg, batch, dtype):
+    return xl.mlstm_init_state(cfg, batch, dtype)
+
+
+def rom_mlstm_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    h_t = sr.proj(x_t, params["e_w_in"], weighted=False, tag="x")[:, 0]
+    z_t = sr.proj(x_t, params["e_w_gate"], weighted=False, tag="x")[:, 0]
+    y, state = xl.mlstm_core_step(params, h_t, z_t, state, cfg, rt)
+    out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
+    return out, state, sr.metrics()

@@ -1,0 +1,213 @@
+"""FFN mixture-of-experts (SwiGLU experts) + the paper's hybrid coupling.
+
+Three dispatch implementations:
+
+``dense`` / ``capacity`` / ``grouped`` / ``ragged``
+    Experts replicated (the paper's no-EP setting), dispatch via
+    core/moe_dispatch (one sort reused for up/gate projections).
+
+``ep``
+    Explicit expert parallelism via ``jax.shard_map`` + two ``all_to_all``
+    hops over the ``data`` mesh axis, with tensor parallelism (``model``
+    axis psum) inside each expert — a GShard-style capacity-bounded path.
+    This is a *beyond-paper* extension required by the assigned 400B-class
+    MoE architectures (llama4-maverick), where replicating 128 experts per
+    device cannot fit.
+
+Hybrid RoM + FFN-MoE (paper Eq. 14-15): when ``cfg.moe.share_rom_router`` is
+set and the block context carries a RoM routing decision, the FFN experts
+reuse that decision (indicator *and* weights) instead of learning their own
+router — "shared routing decisions strategy from the Gate projection layer
+in the previous RoM layer".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import moe_dispatch as md
+from repro.core import router as rtr
+from repro.core.rom import SharedRouting, _expert_init, _fold_rng, num_groups
+from repro.nn.layers import Runtime, dense, dense_init, silu
+from repro.nn.mlp import mlp_apply, mlp_init
+
+
+def moe_ffn_init(key, cfg):
+    moe = cfg.moe
+    if moe.share_rom_router and cfg.rom is not None:
+        assert moe.num_experts == cfg.rom.num_experts, \
+            "Eq. 14-15 shared routing requires matching expert counts"
+    E, pd, d = moe.num_experts, cfg.param_dtype, cfg.d_model
+    ff = moe.d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    prefix = "ep_" if moe.impl == "ep" else "e_"
+    p = {
+        prefix + "w_up": _expert_init(ks[0], E, d, ff, pd),
+        prefix + "w_gate_ffn": _expert_init(ks[1], E, d, ff, pd),
+        prefix + "w_down": _expert_init(ks[2], E, ff, d, pd),
+    }
+    if not moe.share_rom_router:
+        p["w_router"] = rtr.router_init(ks[3], d, E)
+    if moe.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=ff * moe.num_shared_experts)
+    return p
+
+
+def _swiglu_buffers(lin: md.SharedMoELinear, xt, wu, wg, wd):
+    """Expert SwiGLU on dispatched buffers; up/gate reuse the same buffer."""
+    buf = lin.dispatch(xt, "x")
+    up = md.expert_matmul(buf, wu, lin.dsp.group_sizes, lin.impl)
+    gate = md.expert_matmul(buf, wg, lin.dsp.group_sizes, lin.impl)
+    hidden = up * silu(gate)
+    y = md.expert_matmul(hidden, wd, lin.dsp.group_sizes, lin.impl)
+    return md.combine_tokens(lin.dsp, y, weighted=True)
+
+
+def moe_ffn_apply(params, x, cfg, rt: Runtime, ctx=None):
+    moe = cfg.moe
+    if moe.impl == "ep":
+        return moe_ffn_ep_apply(params, x, cfg, rt, ctx)
+    B, S, D = x.shape
+
+    if moe.share_rom_router and ctx is not None and "rom_routing" in ctx:
+        sr: SharedRouting = ctx["rom_routing"]        # Eq. 14-15
+        routing = sr.routing
+        metrics = {}
+    else:
+        G = num_groups(B, rt)
+        xt = x.reshape(G, B * S // G, D)
+        routing = rtr.route(
+            params["w_router"], xt, num_experts=moe.num_experts,
+            top_k=moe.top_k, jitter_eps=moe.jitter_eps,
+            aux_loss_weight=moe.aux_loss_weight, rng=_fold_rng(rt),
+            train=rt.train)
+        metrics = dict(routing.metrics)
+
+    G = routing.expert_idx.shape[0]
+    xt = x.reshape(G, B * S // G, D)
+    wu = params["e_w_up"]
+    wg = params["e_w_gate_ffn"]
+    wd = params["e_w_down"]
+    if moe.impl == "dense":
+        up = md.dense_moe_linear(routing, xt, wu, weighted=False)
+        gate = md.dense_moe_linear(routing, xt, wg, weighted=False)
+        # dense oracle computes hidden per expert; recompute exactly:
+        y_all = jnp.einsum("gtd,edf->gtef", xt, wu.astype(xt.dtype))
+        g_all = jnp.einsum("gtd,edf->gtef", xt, wg.astype(xt.dtype))
+        h_all = y_all * silu(g_all)
+        o_all = jnp.einsum("gtef,efd->gted", h_all, wd.astype(xt.dtype))
+        sel = jax.nn.one_hot(routing.expert_idx, moe.num_experts,
+                             dtype=jnp.float32)
+        mix = (sel * routing.weights[..., None]).sum(2)
+        y = jnp.einsum("gted,gte->gtd", o_all.astype(jnp.float32),
+                       mix).astype(x.dtype)
+    else:
+        dsp = md.make_dispatch(routing, moe.capacity_factor)
+        lin = md.SharedMoELinear(dsp, impl=moe.impl)
+        y = _swiglu_buffers(lin, xt, wu, wg, wd)
+        metrics["drop_frac"] = dsp.drop_frac
+    out = y.reshape(B, S, D)
+    if moe.num_shared_experts:
+        shared, _ = mlp_apply(params["shared"], x, cfg, rt)
+        out = out + shared
+    return out, metrics
+
+
+# ---------------------------------------------------------------------------
+# Expert parallelism: shard_map + all_to_all over 'data', TP psum over 'model'
+# ---------------------------------------------------------------------------
+
+def _ep_local(x_l, wr, wu, wg, wd, *, cfg, ep_axis, reduce_axes):
+    """Per-device body. x_l (B_l, S, D); wu (E_l, D, F_l)."""
+    moe = cfg.moe
+    B_l, S, D = x_l.shape
+    T = B_l * S
+    E = moe.num_experts
+    ep = jax.lax.axis_size(ep_axis)
+    E_l = E // ep
+    xt = x_l.reshape(1, T, D)
+
+    routing = rtr.route(wr, xt, num_experts=E, top_k=moe.top_k,
+                        jitter_eps=0.0, aux_loss_weight=moe.aux_loss_weight,
+                        rng=None, train=False)
+    dest = routing.expert_idx // E_l              # (1, T, K) target device
+    local_e = routing.expert_idx % E_l
+
+    # hop 1: group assignments by destination device (capacity-bounded)
+    r1 = rtr.Routing(num_experts=ep, top_k=moe.top_k,
+                     weights=routing.weights, expert_idx=dest,
+                     probs=routing.probs, metrics={})
+    dsp1 = md.make_dispatch(r1, moe.capacity_factor)
+    send_x = md.dispatch_tokens(dsp1, xt)[0]                       # (ep,C,D)
+    send_e = md.dispatch_assignments(
+        dsp1, local_e.reshape(1, -1, 1).astype(jnp.int32))[0, ..., 0]
+    send_valid = md.dispatch_assignments(
+        dsp1, jnp.ones((1, dest.size, 1), jnp.int32))[0, ..., 0]
+    recv_x = jax.lax.all_to_all(send_x, ep_axis, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, ep_axis, 0, 0, tiled=False)
+    recv_valid = jax.lax.all_to_all(send_valid, ep_axis, 0, 0, tiled=False)
+
+    # hop 2: local dispatch among my E_l experts; invalid slots -> id E_l
+    C1 = recv_x.shape[1]
+    T2 = ep * C1
+    e2 = jnp.where(recv_valid.reshape(T2) > 0, recv_e.reshape(T2), E_l)
+    r2 = rtr.Routing(num_experts=E_l, top_k=1,
+                     weights=jnp.ones((1, T2, 1), jnp.float32),
+                     expert_idx=e2.reshape(1, T2, 1),
+                     probs=jnp.ones((1, T2, E_l), jnp.float32) / E_l,
+                     metrics={})
+    dsp2 = md.make_dispatch(r2, moe.capacity_factor)
+    buf = md.dispatch_tokens(dsp2, recv_x.reshape(1, T2, D))       # (1,El,C2,D)
+    up = md.expert_matmul(buf, wu)
+    gate = md.expert_matmul(buf, wg)
+    y = md.expert_matmul(up * silu(gate), wd)                      # (1,El,C2,D)
+    if "model" in reduce_axes:
+        y = jax.lax.psum(y, "model")          # contract sharded F dim
+    back = md.combine_tokens(dsp2, y, weighted=False)              # (1,T2,D)
+
+    # hop 1 return trip + weighted combine with the *original* weights
+    ret = jax.lax.all_to_all(back.reshape(ep, C1, D), ep_axis, 0, 0)
+    out = md.combine_tokens(dsp1, ret[None], weighted=True)        # (1,T,D)
+    drop = 1.0 - jnp.mean(dsp1.asn_valid.astype(jnp.float32))
+    metrics = jnp.stack([routing.metrics["aux_loss"], drop])
+    for ax in reduce_axes:
+        metrics = jax.lax.pmean(metrics, ax)
+    return out.reshape(B_l, S, D), metrics
+
+
+def moe_ffn_ep_apply(params, x, cfg, rt: Runtime, ctx=None):
+    import dataclasses
+    import functools
+    mesh = rt.shard.mesh
+    moe = cfg.moe
+    if (mesh is None or "data" not in mesh.shape
+            or moe.num_experts % mesh.shape["data"] != 0):
+        # single-device / indivisible fallback: capacity path, aliased names
+        alias = {k.replace("ep_w", "e_w"): v for k, v in params.items()}
+        cfg2 = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="capacity"))
+        return moe_ffn_apply(alias, x, cfg2, rt, ctx)
+
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    has_tp = "model" in mesh.shape
+    reduce_axes = dp_axes + (("model",) if has_tp else ())
+    in_specs = (
+        P(dp_axes, None, None),                        # x
+        P(),                                           # router
+        P("data", None, "model" if has_tp else None),  # wu
+        P("data", None, "model" if has_tp else None),  # wg
+        P("data", "model" if has_tp else None, None),  # wd
+    )
+    out_specs = (P(dp_axes, None, None), P())
+
+    body = functools.partial(_ep_local, cfg=cfg, ep_axis="data",
+                             reduce_axes=reduce_axes)
+    out, metrics = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)(
+        x, params["w_router"], params["ep_w_up"], params["ep_w_gate_ffn"],
+        params["ep_w_down"])
+    m = {"aux_loss": metrics[0], "drop_frac": metrics[1]}
+    if moe.num_shared_experts:
+        shared, _ = mlp_apply(params["shared"], x, cfg, rt)
+        out = out + shared
+    return out, m

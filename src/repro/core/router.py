@@ -1,0 +1,98 @@
+"""Shared router — the heart of RoM (paper Eq. 9).
+
+One router per RoM layer produces a single top-K decision that is *reused*
+by every expertized projection in the layer (Conv/Gate/Out for Mamba; the
+fused in/out projections for Mamba-2 / GDN / RG-LRU / mLSTM; and optionally
+by a following FFN-MoE, Eq. 14-15).  Routing math runs in float32.
+
+Combine weights follow Eq. 9 exactly by default (raw softmax probability,
+masked to the top-K set): for top-1 this keeps d(loss)/d(router) alive, the
+same choice Switch Transformer makes.  ``normalize_weights=True`` gives the
+"normalize over the selected K" variant described in the paper's prose.
+
+Router-gradient estimation: the paper uses SparseMixer [28,29]; we provide a
+straight-through multiplier (``grad_est='ste'``) that scales each expert
+output by ``p_i / stop_grad(p_i)`` so the router receives a first-order
+gradient even when combine weights are normalized — the same role SparseMixer
+plays, in its simplest consistent form (documented deviation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+METRIC_KEYS = ("aux_loss", "router_z", "drop_frac", "load_max", "entropy")
+
+
+def pack_metrics(d: dict) -> jnp.ndarray:
+    return jnp.stack([jnp.asarray(d.get(k, 0.0), jnp.float32)
+                      for k in METRIC_KEYS])
+
+
+def unpack_metrics(v) -> dict:
+    return {k: v[i] for i, k in enumerate(METRIC_KEYS)}
+
+
+@dataclasses.dataclass
+class Routing:
+    """A routing decision over (G groups, g tokens/group, K choices)."""
+    num_experts: int
+    top_k: int
+    weights: jnp.ndarray        # (G, g, K) float32 combine weights
+    expert_idx: jnp.ndarray     # (G, g, K) int32
+    probs: jnp.ndarray          # (G, g, E) float32 softmax probabilities
+    metrics: dict               # python dict of scalar jnp metrics
+
+
+def router_init(key, d_model, num_experts, dtype="float32"):
+    w = jax.random.normal(key, (d_model, num_experts)) * (d_model ** -0.5)
+    return w.astype(jnp.dtype(dtype))
+
+
+def route(w_router, x, *, num_experts, top_k, jitter_eps=0.0,
+          aux_loss_weight=0.0, normalize_weights=False, grad_est="plain",
+          rng: Optional[jax.Array] = None, train: bool = False) -> Routing:
+    """x (G, g, D) tokens -> Routing.
+
+    Jitter (Switch-style multiplicative input noise) is applied only when
+    ``train`` and an rng is supplied — it implicitly samples experts [25].
+    """
+    G, g, D = x.shape
+    xr = x.astype(jnp.float32)
+    if train and jitter_eps and rng is not None:
+        noise = jax.random.uniform(rng, xr.shape, jnp.float32,
+                                   1.0 - jitter_eps, 1.0 + jitter_eps)
+        xr = xr * noise
+    logits = xr @ w_router.astype(jnp.float32)              # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)              # (G, g, K)
+
+    if normalize_weights:
+        weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    else:
+        weights = top_p                                     # Eq. 9
+
+    if grad_est == "ste":
+        # straight-through: value unchanged, gradient flows through top_p.
+        weights = weights * (top_p / jax.lax.stop_gradient(top_p))
+
+    # ---- metrics + (optional) load-balance auxiliary loss (Eq. 16) -------
+    onehot = jax.nn.one_hot(top_i, num_experts, dtype=jnp.float32)
+    load = onehot.sum((1, 2)) / (g * top_k)                 # (G, E) fraction
+    mean_prob = probs.mean(1)                               # (G, E)
+    aux = num_experts * jnp.mean(jnp.sum(load * mean_prob, -1))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    router_z = jnp.mean(lse ** 2)
+    entropy = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))
+    metrics = {
+        "aux_loss": aux_loss_weight * aux,
+        "router_z": router_z,
+        "load_max": jnp.max(load.mean(0)),
+        "entropy": entropy,
+    }
+    return Routing(num_experts=num_experts, top_k=top_k, weights=weights,
+                   expert_idx=top_i, probs=probs, metrics=metrics)

@@ -1,0 +1,143 @@
+"""Deterministic synthetic data pipeline (restart-safe by construction).
+
+Every batch is a pure function of ``(seed, step)`` — the pipeline carries no
+state, so checkpoint/restart resumes *exactly* (a property the fault-
+tolerance tests rely on), and elastic re-runs produce identical token
+streams regardless of host count.
+
+Two corpora:
+
+``TokenCorpus``   packed LM documents: geometric doc lengths, EOS=1
+                  separators — shape-realistic but unlearnable noise
+                  (used for throughput/step benchmarks).
+
+``MarkovCorpus``  R latent regimes, each a distinct random transition
+                  matrix; documents sample a regime then a Markov chain.
+                  Mixture structure is learnable and *specializable* — the
+                  PPL-proxy benchmark uses it to reproduce the paper's
+                  dense < MoE-Mamba < RoM quality ordering at tiny scale.
+
+Encoder/VLM variants emit frame/patch embeddings per the spec's stubbed
+modality frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _rng(seed: int, step: int, salt: int = 0):
+    return np.random.default_rng(
+        np.random.SeedSequence([seed & 0x7FFFFFFF, step, salt]))
+
+
+@dataclasses.dataclass
+class TokenCorpus:
+    vocab_size: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    eos: int = 1
+    mean_doc: int = 512
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step)
+        toks = r.integers(2, self.vocab_size, size=(self.batch,
+                                                    self.seq_len + 1),
+                          dtype=np.int32)
+        # packed documents: EOS at geometric boundaries
+        p = 1.0 / self.mean_doc
+        seps = r.random((self.batch, self.seq_len + 1)) < p
+        toks = np.where(seps, self.eos, toks)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class MarkovCorpus:
+    vocab_size: int = 256
+    seq_len: int = 256
+    batch: int = 16
+    seed: int = 0
+    num_regimes: int = 8
+    branching: int = 4          # out-degree per state (low entropy -> learnable)
+
+    def __post_init__(self):
+        r = _rng(self.seed, 0, salt=1)
+        V, R, B = self.vocab_size, self.num_regimes, self.branching
+        # per-regime sparse transition targets + logits
+        self.targets = r.integers(0, V, size=(R, V, B), dtype=np.int32)
+        self.logits = r.normal(size=(R, V, B)).astype(np.float32) * 2.0
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step)
+        B, S, V = self.batch, self.seq_len, self.vocab_size
+        regimes = r.integers(0, self.num_regimes, size=(B,))
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = r.integers(0, V, size=(B,))
+        probs = np.exp(self.logits)
+        probs /= probs.sum(-1, keepdims=True)
+        u = r.random((B, S))
+        for t in range(S):
+            pr = probs[regimes, toks[:, t]]             # (B, branching)
+            c = (u[:, t, None] < np.cumsum(pr, -1)).argmax(-1)
+            toks[:, t + 1] = self.targets[regimes, toks[:, t], c]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class EncoderCorpus:
+    """HuBERT-style masked-unit-prediction batches (frame frontend stub)."""
+    vocab_size: int
+    seq_len: int
+    batch: int
+    frontend_dim: int
+    seed: int = 0
+    mask_prob: float = 0.08
+    mask_span: int = 10
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step)
+        B, S = self.batch, self.seq_len
+        frames = r.normal(size=(B, S, self.frontend_dim)).astype(np.float32)
+        labels = r.integers(0, self.vocab_size, size=(B, S), dtype=np.int32)
+        starts = r.random((B, S)) < self.mask_prob / self.mask_span
+        # HuBERT-style guarantee: every utterance has >= 1 masked span
+        forced = r.integers(0, max(S - self.mask_span, 1), size=(B,))
+        starts[np.arange(B), forced] |= ~starts.any(axis=1)
+        mask = np.zeros((B, S), bool)
+        for off in range(self.mask_span):
+            mask[:, off:] |= starts[:, :S - off] if off else starts
+        return {"frames": frames, "labels": labels, "mask": mask}
+
+
+@dataclasses.dataclass
+class VLMCorpus:
+    """Text + patch-embedding batches (patch frontend stub)."""
+    vocab_size: int
+    seq_len: int               # text length (excl. patches)
+    batch: int
+    num_patches: int
+    frontend_dim: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        r = _rng(self.seed, step)
+        B = self.batch
+        toks = r.integers(2, self.vocab_size, size=(B, self.seq_len + 1),
+                          dtype=np.int32)
+        patches = r.normal(size=(B, self.num_patches,
+                                 self.frontend_dim)).astype(np.float32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                "patches": patches}
+
+
+def corpus_for(cfg, seq_len: int, batch: int, seed: int = 0):
+    """Pick the right corpus for a model kind (shapes per input_specs)."""
+    if cfg.kind == "encoder":
+        return EncoderCorpus(cfg.vocab_size, seq_len, batch,
+                             cfg.frontend_dim, seed)
+    if cfg.kind == "vlm":
+        return VLMCorpus(cfg.vocab_size, seq_len - cfg.num_prefix_embeds,
+                         batch, cfg.num_prefix_embeds, cfg.frontend_dim, seed)
+    return TokenCorpus(cfg.vocab_size, seq_len, batch, seed)

@@ -1,0 +1,134 @@
+"""Fault-tolerant run manager: checkpoint/restart, stragglers, elasticity.
+
+``RunManager.run`` drives a training loop with:
+
+* periodic atomic checkpoints (async writer off the critical path),
+* automatic restart-from-latest on *any* step exception, up to
+  ``max_failures`` (on a real fleet the same path handles preemptions and
+  node loss — the job scheduler relaunches, `run` resumes from the last
+  committed step; the data pipeline is stateless in (seed, step) so the
+  token stream is bit-identical across restarts),
+* straggler detection: per-step wall time vs. a running median; slow steps
+  are logged with their lag factor (on a fleet: feeds the hot-spare swap /
+  re-scheduling policy; here: surfaced in metrics so tests can assert it),
+* elasticity: ``restore`` re-resolves shardings against the *current* mesh,
+  so a restart may bring up a different device count (tested by re-meshing
+  between failures in tests/test_fault_tolerance.py).
+
+Single-process container note: multi-host heartbeating is represented by a
+heartbeat file the manager touches each step; a fleet supervisor would watch
+it (documented, not simulated).
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro import checkpoint as ckpt
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 2.5, window: int = 32):
+        self.factor = factor
+        self.window = window
+        self.times = []
+        self.flags = []
+
+    def record(self, dt: float, step: int):
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+        med = statistics.median(self.times)
+        if len(self.times) >= 8 and dt > self.factor * med:
+            self.flags.append((step, dt / med))
+            return dt / med
+        return None
+
+
+class RunManager:
+    def __init__(self, ckpt_dir: str, save_every: int = 50,
+                 max_failures: int = 3, async_save: bool = True,
+                 heartbeat_path: Optional[str] = None):
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.max_failures = max_failures
+        self.async_save = async_save
+        self.heartbeat_path = heartbeat_path or os.path.join(
+            ckpt_dir, "heartbeat")
+        self.straggler = StragglerMonitor()
+        self.failures = 0
+        self.restarts = 0
+        self._pending_save = None
+
+    def _heartbeat(self, step: int):
+        os.makedirs(os.path.dirname(self.heartbeat_path), exist_ok=True)
+        with open(self.heartbeat_path, "w") as f:
+            f.write(f"{step} {time.time()}\n")
+
+    def _save(self, state, step: int, force=False):
+        if step % self.save_every == 0 or force:
+            if self._pending_save is not None:
+                self._pending_save.join()
+            self._pending_save = ckpt.save(self.ckpt_dir, step, state,
+                                           async_=self.async_save)
+
+    def run(self, *, init_fn: Callable[[], object],
+            step_fn: Callable[[object, dict], tuple],
+            data_fn: Callable[[int], dict],
+            num_steps: int,
+            state_shardings=None,
+            log_every: int = 0):
+        """Returns (final_state, history of metrics dicts)."""
+        state = None
+        start = 0
+        last = ckpt.latest_step(self.ckpt_dir)
+        if last is not None:
+            target = jax.eval_shape(init_fn)
+            state, start = ckpt.restore(self.ckpt_dir, target,
+                                        shardings=state_shardings)
+            self.restarts += 1
+        if state is None:
+            state = init_fn()
+            ckpt.save(self.ckpt_dir, 0, state, async_=False)
+
+        history = []
+        step = start
+        while step < num_steps:
+            try:
+                batch = data_fn(step)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(metrics)[0])
+                dt = time.perf_counter() - t0
+                lag = self.straggler.record(dt, step)
+                if lag is not None:
+                    metrics = dict(metrics)
+                    metrics["straggler_lag"] = lag
+                history.append(jax.device_get(metrics))
+                step += 1
+                self._heartbeat(step)
+                self._save(state, step)
+                if log_every and step % log_every == 0:
+                    m = history[-1]
+                    print(f"step {step}: " + " ".join(
+                        f"{k}={float(v):.4g}" for k, v in sorted(m.items())
+                        if hasattr(v, "__float__") or isinstance(v, float)))
+            except Exception as e:  # noqa: BLE001 — any step failure
+                self.failures += 1
+                if self.failures > self.max_failures:
+                    raise
+                print(f"[fault-tolerance] step {step} failed ({e!r}); "
+                      f"restoring from latest checkpoint "
+                      f"({self.failures}/{self.max_failures})")
+                target = jax.eval_shape(init_fn)
+                state, step = ckpt.restore(self.ckpt_dir, target,
+                                           shardings=state_shardings)
+                self.restarts += 1
+        if self._pending_save is not None:
+            self._pending_save.join()
+        ckpt.save(self.ckpt_dir, step, state, async_=False)
+        return state, history

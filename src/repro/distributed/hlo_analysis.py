@@ -1,0 +1,159 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms (v5e model).
+
+``cost_analysis()`` gives per-partition FLOPs and bytes but is blind to
+communication, so collective volume is parsed from the partitioned HLO text:
+every ``all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute`` (and their ``-start`` async forms) contributes its
+result bytes under a ring model:
+
+    all-gather       bytes * (g-1)/g            (result = gathered, per dev)
+    reduce-scatter   bytes * (g-1)              (result = shard)
+    all-reduce       2 * bytes * (g-1)/g        (reduce-scatter + all-gather)
+    all-to-all       bytes * (g-1)/g
+    collective-permute  bytes                   (one hop)
+
+Link speed: ICI ~50 GB/s per link within a pod; collectives whose replica
+groups span pods (group size > 256 on the production meshes) are charged at
+the 25 GB/s DCN figure.  One link per collective (conservative: a 2D torus
+has more; recorded as a modeling assumption in EXPERIMENTS.md).
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+POD_SIZE = 256
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\][^\s]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))               # [num_groups, group_size]<=[...]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    if "source_target_pairs" in line:
+        return 2
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]            # raw result bytes (per device)
+    wire_bytes_by_kind: Dict[str, float]     # ring-model bytes on the wire
+    seconds: float                           # modeled collective seconds
+    seconds_by_kind: Dict[str, float]
+    ops: list                                # (kind, bytes, group, seconds)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    secs: Dict[str, float] = {}
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        b = _shape_bytes(type_str)
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            w = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            w = b * (g - 1)
+        elif kind == "all-reduce":
+            w = 2 * b * (g - 1) / g
+        elif kind == "all-to-all":
+            w = b * (g - 1) / g
+        else:                                 # collective-permute
+            w = float(b)
+        bw = DCN_BW if g > POD_SIZE else ICI_BW
+        t = w / bw
+        counts[kind] = counts.get(kind, 0) + 1
+        raw[kind] = raw.get(kind, 0) + b
+        wire[kind] = wire.get(kind, 0.0) + w
+        secs[kind] = secs.get(kind, 0.0) + t
+        ops.append({"kind": kind, "bytes": b, "group": g, "seconds": t})
+    return CollectiveStats(counts=counts, bytes_by_kind=raw,
+                           wire_bytes_by_kind=wire,
+                           seconds=sum(secs.values()), seconds_by_kind=secs,
+                           ops=ops)
+
+
+def roofline_terms(cost: dict, colls: CollectiveStats) -> dict:
+    """cost: compiled.cost_analysis() dict (per-partition on this jax)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = colls.seconds
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s,
+             "hlo_flops_per_device": flops,
+             "hlo_bytes_per_device": bytes_acc,
+             "collective_wire_bytes": sum(
+                 colls.wire_bytes_by_kind.values())}
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["bottleneck"] = {"compute_s": "compute", "memory_s": "memory",
+                           "collective_s": "collective"}[dominant]
+    terms["step_s_model"] = max(compute_s, memory_s, coll_s)
+    return terms
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS convention: 6*N_active*tokens (train), 2*N_active*tokens
+    (prefill/decode forward), per device."""
+    from repro.configs.all_configs import param_stats
+    stats = param_stats(cfg)
+    n_active = stats["active"]
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:                                     # decode: one token per seq
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices

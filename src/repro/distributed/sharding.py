@@ -1,0 +1,275 @@
+"""Logical-axis sharding (MaxText-style) with divisibility-checked resolution.
+
+Every parameter leaf has a globally meaningful name; ``AXES_BY_NAME`` maps a
+leaf name to the *logical* axis of each of its dims.  ``ShardingRules`` maps
+logical axes to mesh axes (with ordered fallbacks).  The resolver drops a
+mesh-axis assignment whenever the dim size is not divisible by the mesh axis
+size (jax requires divisibility for jit argument shardings) and whenever the
+mesh axis was already consumed by an earlier dim of the same tensor.
+
+A leaf whose ndim is one larger than its table entry is assumed to be stacked
+over layers by the scan-over-layers machinery ('layers' logical axis, never
+sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical axes per parameter-leaf name (base, unstacked ndim)
+# ---------------------------------------------------------------------------
+
+AXES_BY_NAME: Dict[str, Tuple[str, ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "frontend_proj": ("frontend", "embed"),
+    "frontend_bias": ("embed",),
+    "mask_embed": ("embed",),
+    # norms
+    "scale": ("embed",),
+    "scale_inner": ("inner",),
+    # attention
+    "w_q": ("embed", "qkv"),
+    "w_k": ("embed", "qkv"),
+    "w_v": ("embed", "qkv"),
+    "w_o": ("qkv", "embed"),
+    "b_q": ("qkv",),
+    "b_k": ("qkv",),
+    "b_v": ("qkv",),
+    # attention-MoE baselines (experts of heads / output projections)
+    "e_w_q": ("experts", "embed", "qkv"),
+    "e_w_v": ("experts", "embed", "qkv"),
+    "e_w_o": ("experts", "qkv", "embed"),
+    # mlp
+    "w_up": ("embed", "mlp"),
+    "w_gate_ffn": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    # FFN-MoE experts (replicated — paper's no-EP design)
+    "e_w_up": ("experts", "embed", "mlp"),
+    "e_w_gate_ffn": ("experts", "embed", "mlp"),
+    "e_w_down": ("experts", "mlp", "embed"),
+    # FFN-MoE experts under explicit expert parallelism (sharded over data)
+    "ep_w_up": ("experts_ep", "embed", "mlp"),
+    "ep_w_gate_ffn": ("experts_ep", "embed", "mlp"),
+    "ep_w_down": ("experts_ep", "mlp", "embed"),
+    # routers
+    "w_router": ("embed", "experts_router"),
+    # mamba / ssm family
+    "w_in": ("embed", "inner"),
+    "w_gate": ("embed", "inner"),
+    "w_out": ("inner", "embed"),
+    "e_w_in": ("experts", "embed", "inner"),
+    "e_w_gate": ("experts", "embed", "inner"),
+    "e_w_out": ("experts", "inner", "embed"),
+    "w_x": ("inner", "xproj"),
+    "w_dt": ("dt_rank", "inner"),
+    "b_dt": ("inner",),
+    "e_w_x": ("experts", "inner", "xproj"),
+    "e_w_dt": ("experts", "dt_rank", "inner"),
+    "e_b_dt": ("experts", "inner"),
+    "conv_w": ("conv", "inner"),
+    "conv_b": ("inner",),
+    "A_log": ("inner", "state"),
+    "A_log_h": ("heads_inner",),
+    "D": ("inner",),
+    "D_h": ("heads_inner",),
+    "dt_bias": ("heads_inner",),
+    # mamba2 (heads_inner = De/head_dim heads)
+    "w_zxbcdt": ("embed", "inner"),
+    "e_w_zxbcdt": ("experts", "embed", "inner"),
+    # gated deltanet
+    "w_qkvz": ("embed", "inner"),
+    "e_w_qkvz": ("experts", "embed", "inner"),
+    "w_ab": ("embed", "heads_inner"),
+    # rg-lru
+    "w_rec_in": ("embed", "inner"),
+    "w_rec_gate": ("embed", "inner"),
+    "e_w_rec_in": ("experts", "embed", "inner"),
+    "e_w_rec_gate": ("experts", "embed", "inner"),
+    "w_a_gate": ("rnn_block", "inner_head", "gate2"),
+    "w_x_gate": ("rnn_block", "inner_head", "gate2"),
+    "b_a_gate": ("inner",),
+    "b_x_gate": ("inner",),
+    "a_param": ("inner",),
+    # xlstm
+    "w_if": ("inner", "gates"),
+    "b_if": ("gates",),
+    "w_qk": ("inner", "qk"),
+    "w_v2": ("inner", "inner"),
+    "gn_scale": ("inner",),
+    "w_slstm": ("embed", "gates"),
+    "r_slstm": ("heads_inner", "head_dim", "gates_head"),
+    "b_slstm": ("gates",),
+}
+
+# logical axis -> ordered mesh-axis preferences (first divisible wins).
+# None = replicate.
+DEFAULT_RULES: Dict[str, Tuple[Optional[object], ...]] = {
+    "batch": (("pod", "data"), ("data",), None),
+    "vocab": ("model", None),
+    "embed": ("data", None),        # ZeRO-3-style weight shard over data
+    "mlp": ("model", None),
+    "qkv": ("model", None),         # merged head*head_dim projection dim
+    "heads": ("model", None),
+    "head_dim": ("model", None),
+    "inner": ("model", None),       # mamba D_e / rnn width
+    "experts": (None,),             # paper: no expert parallelism for RoM
+    "experts_ep": ("data", None),   # EP path (llama4/moonshot)
+    "experts_router": (None,),
+    "xproj": (None,),
+    "dt_rank": (None,),
+    "state": (None,),
+    "conv": (None,),
+    "heads_inner": ("model", None),
+    "gates": (None,),
+    "gates_head": (None,),
+    "qk": ("model", None),
+    "frontend": (None,),
+    "rnn_block": (None,),
+    "inner_head": (None,),
+    "gate2": (None,),
+    "layers": (None,),
+    # activations
+    "act_batch": (("pod", "data"), ("data",), None),
+    "act_seq": (None,),
+    "act_seq_shard": ("model", None),   # SP for B=1 long-context cells
+    "act_embed": (None,),
+    "act_inner": ("model", None),
+    "act_mlp": ("model", None),
+    "act_qkv": ("model", None),
+    "act_vocab": ("model", None),
+    "act_kv_seq": ("model", None),      # decode KV-cache sequence sharding
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, Tuple[Optional[object], ...]], ...] = tuple(
+        sorted(DEFAULT_RULES.items())
+    )
+
+    def as_dict(self):
+        return dict(self.rules)
+
+    def override(self, **kw) -> "ShardingRules":
+        d = self.as_dict()
+        for k, v in kw.items():
+            d[k] = v
+        return ShardingRules(tuple(sorted(d.items())))
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Mesh, rules: ShardingRules) -> P:
+    """Pick a PartitionSpec for ``shape`` given logical dim names."""
+    rd = rules.as_dict()
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        choice = None
+        for cand in rd.get(name, (None,)):
+            if cand is None:
+                break
+            axes = cand if isinstance(cand, (tuple, list)) else (cand,)
+            if any(a not in mesh.shape for a in axes):
+                continue
+            if any(a in used for a in axes):
+                continue
+            if dim % _mesh_axis_size(mesh, cand) != 0:
+                continue
+            choice = tuple(axes) if len(axes) > 1 else axes[0]
+            used.update(axes)
+            break
+        out.append(choice)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical_axes_of(path, leaf_shape) -> Tuple[str, ...]:
+    """Look up the logical axes for a param leaf by its key name + ndim."""
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key is not None:
+            name = str(key)
+            break
+    if name is None:
+        raise KeyError(f"param path {path} has no string key")
+    if name not in AXES_BY_NAME:
+        raise KeyError(f"param leaf {name!r} (path {jax.tree_util.keystr(path)}) "
+                       f"missing from AXES_BY_NAME")
+    base = AXES_BY_NAME[name]
+    nd = len(leaf_shape)
+    if nd == len(base):
+        return base
+    if nd == len(base) + 1:
+        return ("layers",) + base
+    raise ValueError(f"leaf {name!r} ndim {nd} incompatible with logical axes "
+                     f"{base}")
+
+
+def param_specs(params_shapes, mesh: Mesh, rules: ShardingRules,
+                lenient: bool = False):
+    """Pytree of PartitionSpec matching a pytree of ShapeDtypeStructs.
+
+    ``lenient`` replicates leaves whose name/ndim is unknown — used for
+    optimizer-state trees (e.g. adafactor's factored row/col stats, whose
+    paths end in the param name but with reduced rank).
+    """
+    def one(path, leaf):
+        try:
+            la = logical_axes_of(path, leaf.shape)
+        except (KeyError, ValueError):
+            if lenient:
+                return P()
+            raise
+        return resolve_spec(leaf.shape, la, mesh, rules)
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def param_shardings(params_shapes, mesh: Mesh, rules: ShardingRules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_shapes, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, rules: ShardingRules, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class ShardCtx:
+    """Carries (mesh, rules) through model code; inert when mesh is None."""
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None):
+        self.mesh = mesh
+        self.rules = rules or ShardingRules()
+
+    def cons(self, x, *logical):
+        if self.mesh is None:
+            return x
+        return constrain(x, self.mesh, self.rules, logical)
+
+    def spec(self, shape, logical) -> P:
+        if self.mesh is None:
+            return P()
+        return resolve_spec(shape, logical, self.mesh, self.rules)

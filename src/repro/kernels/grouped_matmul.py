@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: grouped (ragged) GEMM — MegaBlocks adapted for TPU.
+
+MegaBlocks builds block-sparse CUDA GEMMs from a CSR topology.  The TPU-native
+formulation: tokens arrive capacity-padded per expert, ``x (E, C, D)`` with
+``group_sizes (E,)`` live rows per expert; the grid tiles (token tiles x F
+tiles x K tiles) with MXU-aligned blocks, each token tile statically mapping
+to its expert's weight block (C is a multiple of the token tile, so a tile
+never spans experts).  Tiles whose rows are entirely padding skip their MXU
+work (`pl.when`), which recovers MegaBlocks' dropless-sparsity compute saving;
+group_sizes ride in scalar-prefetch SMEM.
+
+Accumulation over K runs in a VMEM f32 scratch; the masked result is written
+on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *, tc, cap, nk):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+    e = (i * tc) // cap
+    row0 = (i * tc) % cap
+    size = gs_ref[e]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(row0 < size)          # tile has >= 1 live row: do the MXU work
+    def _compute():
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                w_ref[0].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _write():
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        o_ref[...] = jnp.where(rows < size, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_c", "tile_f", "tile_k", "interpret"))
+def grouped_matmul_pallas(x, w, group_sizes, *, tile_c=128, tile_f=128,
+                          tile_k=128, interpret=False):
+    """x (E,C,D) @ w (E,D,F) ragged by group_sizes -> (E,C,F)."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    tile_c = min(tile_c, C)
+    tile_f = min(tile_f, F)
+    tile_k = min(tile_k, D)
+
+    def pad_to(a, axis, mult):
+        r = (-a.shape[axis]) % mult
+        if r == 0:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[axis] = (0, r)
+        return jnp.pad(a, pads)
+
+    xp = pad_to(pad_to(x, 1, tile_c), 2, tile_k)
+    wp = pad_to(pad_to(w, 1, tile_k), 2, tile_f)
+    Ep, Cp, Dp = xp.shape
+    Fp = wp.shape[2]
+    xf = xp.reshape(E * Cp, Dp)
+    nk = Dp // tile_k
+    grid = (E * Cp // tile_c, Fp // tile_f, nk)
+
+    kern = functools.partial(_kernel, tc=tile_c, cap=Cp, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile_c, tile_k), lambda i, j, k, gs: (i, k)),
+                pl.BlockSpec((1, tile_k, tile_f),
+                             lambda i, j, k, gs: ((i * tile_c) // Cp, k, j)),
+            ],
+            out_specs=pl.BlockSpec((tile_c, tile_f),
+                                   lambda i, j, k, gs: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tile_c, tile_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((E * Cp, Fp), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), xf, wp)
+    return out.reshape(E, Cp, Fp)[:, :C, :F]

@@ -1,0 +1,46 @@
+"""Jit'd kernel wrappers with platform dispatch.
+
+``impl`` resolution:
+  None      -> 'pallas' on TPU, 'ref' elsewhere (the dry-run therefore
+               compiles the mathematically identical jnp graphs, keeping XLA
+               cost_analysis meaningful; see DESIGN.md §3).
+  'ref'     -> pure-jnp oracle
+  'pallas'  -> compiled Pallas TPU kernel
+  'interpret' -> Pallas kernel body executed in interpret mode (CPU tests)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+
+
+def _resolve(impl):
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def selective_scan(u, dt, A, Bm, Cm, D=None, *, chunk=128, impl=None,
+                   acc_dtype="float32"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=chunk,
+                                       acc_dtype=acc_dtype)
+    y = selective_scan_pallas(u, dt, A, Bm, Cm, chunk=chunk,
+                              interpret=(impl == "interpret"))
+    if D is not None:
+        y = (y.astype(jnp.float32)
+             + u.astype(jnp.float32) * D.astype(jnp.float32)).astype(y.dtype)
+    return y
+
+
+def grouped_matmul(x, w, group_sizes, *, impl=None, **tiles):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.grouped_matmul_ref(x, w, group_sizes)
+    return grouped_matmul_pallas(x, w, group_sizes,
+                                 interpret=(impl == "interpret"), **tiles)

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are also the paths the multi-pod dry-run compiles (XLA cost_analysis is
+blind inside Pallas custom-calls, so roofline FLOPs/bytes come from these
+mathematically identical graphs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+#   h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) * B_t      (outer over N)
+#   y_t = <C_t, h_t> + D * u_t
+# shapes: u,dt (B,S,De); A (De,N); Bm,Cm (B,S,N); D (De,)
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(u, dt, A, Bm, Cm, D=None, *, chunk=128, h0=None,
+                       return_state=False, acc_dtype=jnp.float32):
+    Bsz, S, De = u.shape
+    N = A.shape[-1]
+    dtype = u.dtype
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = u.shape[1]
+    nc = Sp // chunk
+
+    f32 = jnp.dtype(acc_dtype)
+    uc = u.reshape(Bsz, nc, chunk, De).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, De).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+    A = A.astype(f32)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, De, N), f32)
+
+    def per_chunk(h, xs):
+        ucx, dtx, bx, cx = xs                      # (B, chunk, ...)
+        a = jnp.exp(dtx[..., None] * A)            # (B,c,De,N), entries in (0,1]
+        b = (dtx * ucx)[..., None] * bx[:, :, None, :]   # (B,c,De,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = A_cum * h[:, None] + B_cum            # (B,c,De,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cx)
+        return hs[:, -1], y
+
+    from repro.nn.layers import cost_scan
+    h_last, ys = cost_scan(
+        per_chunk, h0,
+        (uc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, Sp, De)[:, :S]
+    if D is not None:
+        y = y + u[:, :S].astype(f32) * D.astype(f32)
+    y = y.astype(dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def selective_scan_step(h, u_t, dt_t, A, B_t, C_t, D=None):
+    """Single decode step. h (B,De,N); u_t,dt_t (B,De); B_t,C_t (B,N)."""
+    f32 = jnp.float32
+    a = jnp.exp(dt_t.astype(f32)[..., None] * A.astype(f32))
+    h = a * h + (dt_t * u_t).astype(f32)[..., None] * B_t.astype(f32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(f32))
+    if D is not None:
+        y = y + u_t.astype(f32) * D.astype(f32)
+    return h, y.astype(u_t.dtype)
+
+
+def selective_scan_naive(u, dt, A, Bm, Cm, D=None):
+    """Step-by-step lax.scan oracle (slowest, most obviously correct)."""
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        h, y = selective_scan_step(h, u_t, dt_t, A, b_t, c_t, D)
+        return h, y
+    Bsz, S, De = u.shape
+    h0 = jnp.zeros((Bsz, De, A.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+                                    Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal linear recurrence  h_t = a_t * h_{t-1} + b_t   (RG-LRU, decays)
+# a, b (B, S, D); log_a given for stability. Chunked like selective_scan_ref.
+# ---------------------------------------------------------------------------
+
+def diag_recurrence(log_a, b, *, chunk=256, h0=None, return_state=False):
+    Bsz, S, D = b.shape
+    dtype = b.dtype
+    f32 = jnp.float32
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    ac = log_a.reshape(Bsz, nc, chunk, D).astype(f32)
+    bc = b.reshape(Bsz, nc, chunk, D).astype(f32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, D), f32)
+
+    def per_chunk(h, xs):
+        ax, bx = xs
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al + ar, jnp.exp(ar) * bl + br
+
+        A_cum, B_cum = jax.lax.associative_scan(combine, (ax, bx), axis=1)
+        hs = jnp.exp(A_cum) * h[:, None] + B_cum
+        return hs[:, -1], hs
+
+    from repro.nn.layers import cost_scan
+    h_last, ys = cost_scan(per_chunk, h0,
+                           (ac.transpose(1, 0, 2, 3),
+                            bc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, Sp, D)[:, :S].astype(dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Grouped (ragged) matmul — MegaBlocks-for-TPU oracle.
+# x (E,C,D) capacity-padded tokens per expert; w (E,D,F); group_sizes (E,)
+# rows c >= group_sizes[e] are padding and produce zeros.
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(x, w, group_sizes):
+    E, C, D = x.shape
+    mask = (jnp.arange(C)[None, :] < group_sizes[:, None])  # (E,C)
+    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    y = jnp.where(mask[..., None], y, 0.0)
+    return y.astype(x.dtype)

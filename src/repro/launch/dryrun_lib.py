@@ -1,0 +1,341 @@
+"""Dry-run machinery (import-safe: never touches device-count env).
+
+``run_cell`` lowers + compiles one (arch x input-shape x mesh) cell with
+``.lower().compile()`` on abstract ShapeDtypeStructs — no allocation — and
+extracts memory analysis, cost analysis, and the parsed collective schedule
+into a JSON record for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ASSIGNED_ARCHS, applicable_shapes,
+                                get_config, SHAPES)
+from repro.distributed import hlo_analysis as hlo
+from repro.distributed.sharding import ShardingRules
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro import train as tr
+
+PAPER_ARCHS = ("mamba-1.3b", "rom-mamba-1.3b", "samba-421m",
+               "samba-421m-rom", "samba-511m", "samba-511m-rom")
+
+OUT_ROOT = os.environ.get("REPRO_DRYRUN_DIR",
+                          os.path.join(os.path.dirname(__file__),
+                                       "..", "..", "..",
+                                       "experiments", "dryrun"))
+
+
+def _set_nested(cfg, dotted: str, value):
+    """cfg override: 'rom.capacity_factor=1.25' / 'remat=full' etc."""
+    try:
+        value = ast.literal_eval(value)
+    except (ValueError, SyntaxError):
+        pass
+    parts = dotted.split(".")
+    if len(parts) == 1:
+        return cfg.replace(**{parts[0]: value})
+    sub = getattr(cfg, parts[0])
+    sub = dataclasses.replace(sub, **{parts[1]: value})
+    return cfg.replace(**{parts[0]: sub})
+
+
+def apply_overrides(cfg, sets):
+    for s in sets or ():
+        k, v = s.split("=", 1)
+        cfg = _set_nested(cfg, k, v)
+    return cfg
+
+
+def rule_overrides(rules: ShardingRules, sets):
+    kw = {}
+    for s in sets or ():
+        k, v = s.split("=", 1)
+        if v in ("None", "none", ""):
+            kw[k] = (None,)
+        else:
+            axes = tuple(a.strip() for a in v.split("+"))
+            kw[k] = ((axes if len(axes) > 1 else axes[0]), None)
+    return rules.override(**kw) if kw else rules
+
+
+def _mem_dict(mem):
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def _param_bytes_per_device(shapes, shardings, n_dev):
+    import numpy as np
+    total = 0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(shapes),
+                        jax.tree_util.tree_leaves(
+                            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        spec = sh.spec
+        shard = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                shard *= sh.mesh.shape[a]
+        total += n // max(shard, 1)
+    return total
+
+
+def _block_cost(cfg, pattern, repeats, shape, mesh, rules):
+    """Per-layer-block cost/collectives, lowered standalone under the same
+    mesh — corrects XLA cost_analysis counting ``lax.scan`` bodies once.
+
+    corrected_total = program_cost + (repeats - 1) * block_cost
+    (validated against a fully unrolled compile in tests/benchmarks).
+
+    The block is lowered in ``cost_scan`` unroll mode so *inner* loops
+    (attention tiles, scan chunks) are also counted exactly.
+    """
+    from jax.sharding import NamedSharding
+    from repro.distributed import sharding as shd
+    from repro.models import lm
+    from repro.nn.layers import set_unroll
+
+    cfg_one = cfg.replace(segments=((pattern, 1),), scan_layers=False)
+    mode = shape.mode
+    B, S = shape.global_batch, shape.seq_len
+    if mode == "decode":
+        S = 1
+    x_sds = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    bp_shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0),
+                               cfg_one))["segments"][0][0]
+    bp_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        shd.param_specs(bp_shapes, mesh, rules, lenient=True),
+        is_leaf=lambda v: hasattr(v, "index"))
+    x_sh = NamedSharding(mesh, shd.resolve_spec(
+        x_sds.shape, ("act_batch", "act_seq", "act_embed"), mesh, rules))
+    rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                    train=(mode == "train"))
+
+    set_unroll(True)
+    try:
+        if mode in ("train", "prefill"):
+            blk = lm._remat(
+                lambda bp, x, rng: lm._block_apply(pattern, cfg, bp, x, rt,
+                                                   rng),
+                cfg)
+
+            def fwd(bp, x, rng):
+                y, aux = blk(bp, x, rng)
+                return jnp.sum(y.astype(jnp.float32))
+
+            if mode == "train":
+                fn = jax.grad(fwd, argnums=(0, 1))
+            else:
+                fn = fwd
+            jf = jax.jit(fn, in_shardings=(bp_sh, x_sh, None))
+            lowered = jf.lower(bp_shapes, x_sds, rng_sds)
+        else:
+            st_shapes = jax.eval_shape(
+                lambda: lm.init_state(cfg_one, B, shape.seq_len,
+                                      jnp.dtype(cfg.dtype)))["segments"][0][0]
+            from repro import train as _tr
+            st_sh = _tr.serve_state_shardings(cfg, st_shapes, mesh, rules)
+
+            def step(bp, bst, x, pos):
+                y, st, aux = lm._block_step(pattern, cfg, bp, bst, x, pos, rt)
+                return y, st
+
+            jf = jax.jit(step, in_shardings=(bp_sh, st_sh, x_sh, None),
+                         out_shardings=(x_sh, st_sh))
+            lowered = jf.lower(bp_shapes, st_shapes, x_sds,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    finally:
+        set_unroll(False)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    colls = hlo.parse_collectives(compiled.as_text())
+    return cost, colls
+
+
+def _corrected(cost, colls, block_costs):
+    """Add (repeats-1) x block cost to the scan-once program cost."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    secs = colls.seconds
+    wire = sum(colls.wire_bytes_by_kind.values())
+    counts = dict(colls.counts)
+    for (bcost, bcolls), extra in block_costs:
+        flops += extra * float(bcost.get("flops", 0.0))
+        bytes_acc += extra * float(bcost.get("bytes accessed", 0.0))
+        secs += extra * bcolls.seconds
+        wire += extra * sum(bcolls.wire_bytes_by_kind.values())
+        for k, v in bcolls.counts.items():
+            counts[k] = counts.get(k, 0) + extra * v
+    return {"flops": flops, "bytes accessed": bytes_acc}, secs, wire, counts
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides=None, rules_over=None, grad_accum: int = 1):
+    """Build and lower one cell; returns (lowered, cfg, shape, mesh, extras)."""
+    cfg = apply_overrides(get_config(arch), overrides)
+    shape, skip = applicable_shapes(cfg)[shape_name]
+    if skip:
+        return None, cfg, None, None, {"skipped": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rule_overrides(ShardingRules(), rules_over)
+    extras = {}
+    if shape.mode == "train":
+        hp = tr.TrainHParams(grad_accum=grad_accum)
+        fn = tr.make_train_fn(cfg, mesh, rules, hp)
+        st_shapes = tr.train_state_shapes(cfg)
+        st_sh = tr.state_shardings(st_shapes, mesh, rules)
+        batch = sp.input_specs(cfg, shape)
+        b_sh = tr.batch_shardings(batch, mesh)
+        jf = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None))
+        lowered = jf.lower(st_shapes, batch)
+        extras["param_bytes_per_device"] = _param_bytes_per_device(
+            st_shapes["params"], st_sh["params"], mesh.devices.size)
+        extras["state_bytes_per_device"] = _param_bytes_per_device(
+            st_shapes, st_sh, mesh.devices.size)
+    elif shape.mode == "prefill":
+        fn = tr.make_prefill_fn(cfg, mesh, rules)
+        from repro.models import lm
+        p_shapes = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = tr.state_shardings(p_shapes, mesh, rules)
+        batch = {k: v for k, v in sp.input_specs(cfg, shape).items()
+                 if k != "labels"}
+        b_sh = tr.batch_shardings(batch, mesh)
+        jf = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jf.lower(p_shapes, batch)
+        extras["param_bytes_per_device"] = _param_bytes_per_device(
+            p_shapes, p_sh, mesh.devices.size)
+    else:  # decode
+        fn = tr.make_serve_fn(cfg, mesh, rules)
+        from repro.models import lm
+        p_shapes = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = tr.state_shardings(p_shapes, mesh, rules)
+        st_shapes = sp.decode_state_shapes(cfg, shape)
+        st_sh = tr.serve_state_shardings(cfg, st_shapes, mesh, rules)
+        tok, pos = sp.decode_specs(cfg, shape)
+        tok_sh = tr.batch_shardings({"t": tok}, mesh)["t"]
+        jf = jax.jit(fn, in_shardings=(p_sh, st_sh, tok_sh, None),
+                     out_shardings=(None, None, st_sh))
+        lowered = jf.lower(p_shapes, st_shapes, tok, pos)
+        extras["param_bytes_per_device"] = _param_bytes_per_device(
+            p_shapes, p_sh, mesh.devices.size)
+        extras["cache_bytes_per_device"] = _param_bytes_per_device(
+            st_shapes, st_sh, mesh.devices.size)
+    return lowered, cfg, shape, mesh, extras
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides=None, rules_over=None, tag: str = "",
+             out_dir: str = None, grad_accum: int = 1,
+             save: bool = True, correct: bool = True) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    lowered, cfg, shape, mesh, extras = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, overrides=overrides,
+        rules_over=rules_over, grad_accum=grad_accum)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "overrides": list(overrides or ()),
+           "rules": list(rules_over or ())}
+    if lowered is None:
+        rec.update({"skipped": extras["skipped"]})
+    else:
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        colls = hlo.parse_collectives(txt)
+
+        # scan-body trip-count correction (XLA counts loop bodies once);
+        # skipped for the multi-pod pass (compile success + memory +
+        # raw collectives are its deliverable; rooflines are single-pod)
+        block_costs = []
+        rules = rule_overrides(ShardingRules(), rules_over)
+        if cfg.scan_layers and correct:
+            for pattern, repeats in cfg.segments:
+                if repeats > 1:
+                    bc = _block_cost(cfg, pattern, repeats, shape, mesh,
+                                     rules)
+                    block_costs.append((bc, repeats - 1))
+        if block_costs:
+            rec["raw_uncorrected"] = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "collective_s": colls.seconds,
+            }
+            cost, secs, wire, counts = _corrected(cost, colls, block_costs)
+            colls = hlo.CollectiveStats(
+                counts=counts, bytes_by_kind=colls.bytes_by_kind,
+                wire_bytes_by_kind={"corrected_total": wire},
+                seconds=secs, seconds_by_kind=colls.seconds_by_kind,
+                ops=[])
+        terms = hlo.roofline_terms(cost, colls)
+        n_dev = mesh.devices.size
+        mf = hlo.model_flops(cfg, shape, n_dev)
+        terms["model_flops_per_device"] = mf
+        terms["useful_flops_ratio"] = (
+            mf / terms["hlo_flops_per_device"]
+            if terms["hlo_flops_per_device"] else None)
+        terms["roofline_fraction"] = (
+            (mf / hlo.PEAK_FLOPS) / terms["step_s_model"]
+            if terms["step_s_model"] else None)
+        rec.update({
+            "n_devices": n_dev,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": _mem_dict(compiled.memory_analysis()),
+            "cost_keys": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+            "collectives": {
+                "counts": colls.counts,
+                "bytes_by_kind": colls.bytes_by_kind,
+                "wire_bytes_by_kind": colls.wire_bytes_by_kind,
+                "seconds_by_kind": colls.seconds_by_kind,
+            },
+            "roofline": terms,
+            **extras,
+        })
+    if save:
+        out_dir = out_dir or os.path.join(OUT_ROOT, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(out_dir, f"{arch}__{shape_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        rec["path"] = path
+    return rec
+
+
+def all_cells(include_paper: bool = True):
+    out = []
+    for a in ASSIGNED_ARCHS:
+        for s in SHAPES:
+            out.append((a, s))
+    if include_paper:
+        for a in PAPER_ARCHS:                 # extra rows beyond the spec
+            for s in ("train_4k", "long_500k"):
+                out.append((a, s))
+    return out

@@ -1,0 +1,56 @@
+"""Roofline summary tables from the dry-run JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.dryrun_lib import OUT_ROOT
+
+
+def load_records(mesh="single"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(OUT_ROOT, mesh, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | "
+                f"{r['skipped']} |")
+    t = r["roofline"]
+    tag = f" `{r['tag']}`" if r.get("tag") else ""
+    return ("| {arch}{tag} | {shape} | {c:.4f} | {m:.4f} | {x:.4f} | "
+            "{ratio} | {bn} | {frac} |").format(
+        arch=r["arch"], tag=tag, shape=r["shape"],
+        c=t["compute_s"], m=t["memory_s"], x=t["collective_s"],
+        ratio=(f"{t['useful_flops_ratio']:.2f}"
+               if t.get("useful_flops_ratio") else "—"),
+        bn=t["bottleneck"],
+        frac=(f"{t['roofline_fraction']:.3f}"
+              if t.get("roofline_fraction") else "—"))
+
+
+HEADER = ("| arch | shape | compute s | memory s | collective s | "
+          "MODEL/HLO flops | bottleneck | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def print_summary(mesh="single"):
+    recs = load_records(mesh)
+    if not recs:
+        print(f"no records under {OUT_ROOT}/{mesh}")
+        return
+    print(f"### Roofline table — {mesh}-pod mesh "
+          f"({'256' if mesh == 'single' else '512'} chips)\n")
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+
+
+def markdown_summary(mesh="single") -> str:
+    recs = load_records(mesh)
+    lines = [HEADER] + [fmt_row(r) for r in recs]
+    return "\n".join(lines)

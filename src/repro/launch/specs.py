@@ -1,0 +1,43 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns (abstract batch, mode) for train/prefill
+cells; ``decode_specs`` the (tokens_t, pos) pair; state/TrainState shapes
+come from ``jax.eval_shape`` over the real init functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract train/prefill batch for one (arch x input-shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.kind == "encoder":
+        return {"frames": SDS((B, S, cfg.frontend_dim), jnp.bfloat16),
+                "labels": SDS((B, S), jnp.int32),
+                "mask": SDS((B, S), jnp.bool_)}
+    if cfg.kind == "vlm":
+        P = cfg.num_prefix_embeds
+        return {"tokens": SDS((B, S - P), jnp.int32),
+                "labels": SDS((B, S - P), jnp.int32),
+                "patches": SDS((B, P, cfg.frontend_dim), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(tokens_t, pos) abstract inputs for a serve_step cell."""
+    B = shape.global_batch
+    return SDS((B, 1), jnp.int32), SDS((), jnp.int32)
+
+
+def decode_state_shapes(cfg: ModelConfig, shape: InputShape):
+    from repro.models import lm
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: lm.init_state(cfg, B, S, jnp.dtype(cfg.dtype)))

@@ -1,0 +1,25 @@
+"""Encoder-only (HuBERT-style) model — thin façade over models/lm.py.
+
+The encoder path is implemented inside ``models/lm.py`` (``cfg.kind ==
+"encoder"``): the frame frontend is a stub projection per the task spec
+(``input_specs`` provides precomputed frame embeddings), masked positions
+are replaced by a learned ``mask_embed``, attention is bidirectional
+(``causal=False``), and the loss is computed only at masked positions
+(masked-unit prediction over ``vocab_size`` cluster units).
+
+This module exposes the encoder-specific pieces under their natural names.
+"""
+from __future__ import annotations
+
+from repro.models.lm import (embed_inputs, forward, init_params,  # noqa: F401
+                             loss_fn)
+
+
+def masked_accuracy(params, batch, cfg, rt):
+    """Prediction accuracy at masked positions (eval metric)."""
+    import jax.numpy as jnp
+
+    logits, _ = forward(params, batch, cfg, rt)
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == batch["labels"]) & batch["mask"]
+    return ok.sum() / jnp.maximum(batch["mask"].sum(), 1)

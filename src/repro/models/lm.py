@@ -1,0 +1,374 @@
+"""Decoder LM assembled from block-pattern segments.
+
+A model is ``cfg.segments = (((kind, ...), repeats), ...)``.  Segments with
+``repeats > 1`` run under ``lax.scan`` over stacked parameters (HLO stays
+small at 60-layer scale); pre-norm + residual wrap every sub-layer.  A block
+context dict threads RoM routing decisions to a following FFN-MoE
+(paper Eq. 14-15).
+
+Decode mirrors the same structure with per-layer state pytrees (stacked for
+scanned segments) and a single-token ``step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moe_mamba, rom, rom_ffn
+from repro.core.router import METRIC_KEYS, pack_metrics
+from repro.nn import attention as attn
+from repro.nn import attn_moe
+from repro.nn import mlp as mlp_mod
+from repro.nn import rglru as rgl
+from repro.nn import ssm
+from repro.nn import xlstm as xl
+from repro.nn.layers import (Runtime, embed_init, embed_lookup, rmsnorm,
+                             rmsnorm_init, softcap)
+
+
+# ---------------------------------------------------------------------------
+# mixer registry
+# ---------------------------------------------------------------------------
+
+def _noctx(fn):
+    return lambda p, x, cfg, rt, ctx: fn(p, x, cfg, rt)
+
+
+def _noctx_step(fn):
+    return lambda p, x, st, pos, cfg, rt, ctx: fn(p, x, st, pos, cfg, rt)
+
+
+def _stateless_step(apply_fn):
+    def step(p, x_t, st, pos, cfg, rt, ctx):
+        y, aux = apply_fn(p, x_t, cfg, rt, ctx)
+        return y, st, aux
+    return step
+
+
+def _mlp_apply(p, x, cfg, rt, ctx):
+    return mlp_mod.mlp_apply(p, x, cfg, rt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mixer:
+    init: Any
+    apply: Any                       # (p, x, cfg, rt, ctx) -> (y, aux)
+    init_state: Any = None           # (cfg, batch, max_len, dtype) -> pytree
+    step: Any = None                 # (p, x_t, st, pos, cfg, rt, ctx)
+
+
+def _st(fn):
+    """Adapt (cfg,batch,dtype) state-init to the (cfg,batch,max_len,dtype) API."""
+    return lambda cfg, batch, max_len, dtype: fn(cfg, batch, dtype)
+
+
+MIXERS: Dict[str, Mixer] = {
+    "attn": Mixer(attn.attention_init, _noctx(attn.attention_apply),
+                  lambda cfg, b, L, dt: attn.attention_init_state(cfg, b, L, dt),
+                  _noctx_step(attn.attention_step)),
+    "mlp": Mixer(lambda k, cfg: mlp_mod.mlp_init(k, cfg), _mlp_apply,
+                 lambda cfg, b, L, dt: {},
+                 _stateless_step(_mlp_apply)),
+    "moe": Mixer(rom_ffn.moe_ffn_init, rom_ffn.moe_ffn_apply,
+                 lambda cfg, b, L, dt: {},
+                 _stateless_step(rom_ffn.moe_ffn_apply)),
+    "mamba": Mixer(ssm.mamba_init, _noctx(ssm.mamba_apply),
+                   _st(ssm.mamba_init_state), _noctx_step(ssm.mamba_step)),
+    "mamba2": Mixer(ssm.mamba2_init, _noctx(ssm.mamba2_apply),
+                    _st(ssm.mamba2_init_state), _noctx_step(ssm.mamba2_step)),
+    "gdn": Mixer(ssm.gdn_init, _noctx(ssm.gdn_apply),
+                 _st(ssm.gdn_init_state), _noctx_step(ssm.gdn_step)),
+    "rglru": Mixer(rgl.rglru_init, _noctx(rgl.rglru_apply),
+                   _st(rgl.rglru_init_state), _noctx_step(rgl.rglru_step)),
+    "mlstm": Mixer(xl.mlstm_init, _noctx(xl.mlstm_apply),
+                   _st(xl.mlstm_init_state), _noctx_step(xl.mlstm_step)),
+    "slstm": Mixer(xl.slstm_init, _noctx(xl.slstm_apply),
+                   _st(xl.slstm_init_state), _noctx_step(xl.slstm_step)),
+    "rom_mamba": Mixer(rom.rom_mamba_init, rom.rom_mamba_apply,
+                       _st(rom.rom_mamba_init_state), rom.rom_mamba_step),
+    "rom_mamba2": Mixer(rom.rom_mamba2_init, rom.rom_mamba2_apply,
+                        _st(ssm.mamba2_init_state), rom.rom_mamba2_step),
+    "rom_gdn": Mixer(rom.rom_gdn_init, rom.rom_gdn_apply,
+                     _st(rom.rom_gdn_init_state), rom.rom_gdn_step),
+    "rom_rglru": Mixer(rom.rom_rglru_init, rom.rom_rglru_apply,
+                       _st(rom.rom_rglru_init_state), rom.rom_rglru_step),
+    "rom_mlstm": Mixer(rom.rom_mlstm_init, rom.rom_mlstm_apply,
+                       _st(rom.rom_mlstm_init_state), rom.rom_mlstm_step),
+    "moemamba": Mixer(moe_mamba.moemamba_init, moe_mamba.moemamba_apply,
+                      _st(moe_mamba.moemamba_init_state),
+                      moe_mamba.moemamba_step),
+    "moa": Mixer(attn_moe.moa_init, _noctx(attn_moe.moa_apply)),
+    "switchhead": Mixer(attn_moe.switchhead_init,
+                        _noctx(attn_moe.switchhead_apply)),
+}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg):
+    n_seg = len(cfg.segments)
+    keys = jax.random.split(key, n_seg + 3)
+    params: Dict[str, Any] = {}
+    params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                 dtype=cfg.param_dtype)
+    if cfg.frontend is not None:
+        from repro.nn.layers import dense_init
+        k1, k2 = jax.random.split(keys[1])
+        params["frontend_proj"] = dense_init(k1, cfg.frontend_dim,
+                                             cfg.d_model,
+                                             dtype=cfg.param_dtype)
+        params["frontend_bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.kind == "encoder":
+            params["mask_embed"] = (jax.random.normal(k2, (cfg.d_model,))
+                                    * 0.02).astype(cfg.param_dtype)
+    segs = []
+    for si, (pattern, repeats) in enumerate(cfg.segments):
+        def block_init(k, pattern=pattern):
+            ks = jax.random.split(k, len(pattern))
+            bp = {}
+            for i, kind in enumerate(pattern):
+                bp[f"l{i}_norm"] = rmsnorm_init(cfg.d_model)
+                bp[f"l{i}_{kind}"] = MIXERS[kind].init(ks[i], cfg)
+            return bp
+        bkeys = jax.random.split(keys[2 + si], repeats)
+        if repeats > 1 and cfg.scan_layers:
+            segs.append(jax.vmap(block_init)(bkeys))
+        else:
+            segs.append([block_init(k) for k in bkeys])
+    params["segments"] = segs
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        from repro.nn.layers import dense_init
+        params["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size,
+                                       dtype=cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(pattern, cfg, bp, x, rt: Runtime, rng):
+    ctx: Dict[str, Any] = {}
+    aux = jnp.zeros((len(METRIC_KEYS),), jnp.float32)
+    rngs = jax.random.split(rng, len(pattern))
+    for i, kind in enumerate(pattern):
+        h = rmsnorm(bp[f"l{i}_norm"], x, cfg.norm_eps)
+        y, a = MIXERS[kind].apply(bp[f"l{i}_{kind}"], h, cfg,
+                                  rt.with_rng(rngs[i]), ctx)
+        x = (x + y.astype(x.dtype))
+        x = rt.shard.cons(x, "act_batch", "act_seq", "act_embed")
+        aux = aux + pack_metrics(a)
+    return x, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def backbone(params, x, cfg, rt: Runtime):
+    """x (B,S,D) embedded inputs -> (hidden (B,S,D), aux metrics vector)."""
+    rng = rt.rng if rt.rng is not None else jax.random.PRNGKey(0)
+    aux_total = jnp.zeros((len(METRIC_KEYS),), jnp.float32)
+    for (pattern, repeats), seg in zip(cfg.segments, params["segments"]):
+        blk = functools.partial(_block_apply, pattern, cfg)
+        fn = _remat(lambda bp, h, r, blk=blk: blk(bp, h, rt, r), cfg)
+        if isinstance(seg, list):
+            rngs = jax.random.split(rng, repeats + 1)
+            rng = rngs[0]
+            for bp, r in zip(seg, rngs[1:]):
+                x, aux = fn(bp, x, r)
+                aux_total = aux_total + aux
+        else:
+            rngs = jax.random.split(rng, repeats + 1)
+            rng = rngs[0]
+
+            def body(carry, xs, fn=fn):
+                bp, r = xs
+                y, aux = fn(bp, carry, r)
+                return y, aux
+
+            x, auxs = jax.lax.scan(body, x, (seg, rngs[1:]))
+            aux_total = aux_total + auxs.sum(0)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def embed_inputs(params, batch, cfg, rt: Runtime):
+    """Return (B, S, D) embedded sequence from the model-kind's raw inputs."""
+    cd = jnp.dtype(cfg.dtype)
+    if cfg.kind == "encoder":
+        x = (batch["frames"].astype(cd) @ params["frontend_proj"].astype(cd)
+             + params["frontend_bias"].astype(cd))
+        x = jnp.where(batch["mask"][..., None],
+                      params["mask_embed"].astype(cd), x)
+        return x
+    tok = embed_lookup(params["embed"], batch["tokens"], cd)
+    if cfg.kind == "vlm":
+        pre = (batch["patches"].astype(cd)
+               @ params["frontend_proj"].astype(cd)
+               + params["frontend_bias"].astype(cd))
+        tok = jnp.concatenate([pre, tok], axis=1)
+    return tok
+
+
+def logits_fn(params, hidden, cfg, rt: Runtime):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", hidden,
+                            table.astype(hidden.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden,
+                            table.astype(hidden.dtype),
+                            preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return rt.shard.cons(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def forward(params, batch, cfg, rt: Runtime):
+    x = embed_inputs(params, batch, cfg, rt)
+    x = rt.shard.cons(x, "act_batch", "act_seq", "act_embed")
+    h, aux = backbone(params, x, cfg, rt)
+    if cfg.kind == "vlm":
+        h = h[:, batch["patches"].shape[1]:]
+    logits = logits_fn(params, h, cfg, rt)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, rt: Runtime):
+    """Token cross-entropy (+ router aux losses). Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg, rt)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    if cfg.kind == "encoder":
+        valid = valid & batch["mask"]
+    lab = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    ntok = jnp.maximum(valid.sum(), 1)
+    ce = nll.sum() / ntok
+    metrics = {k: aux[i] for i, k in enumerate(METRIC_KEYS)}
+    loss = ce + metrics["aux_loss"]          # aux summed over layers already
+    metrics["ce"] = ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch, max_len, dtype):
+    segs = []
+    for pattern, repeats in cfg.segments:
+        def block_state(pattern=pattern):
+            st = {}
+            for i, kind in enumerate(pattern):
+                mx = MIXERS[kind]
+                if mx.init_state is None:
+                    raise NotImplementedError(
+                        f"{kind} has no decode state (train/prefill only)")
+                st[f"l{i}_{kind}"] = mx.init_state(cfg, batch, max_len, dtype)
+            return st
+        if repeats > 1 and cfg.scan_layers:
+            one = block_state()
+            segs.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), one))
+        else:
+            segs.append([block_state() for _ in range(repeats)])
+    return {"segments": segs}
+
+
+def _block_step(pattern, cfg, bp, bst, x_t, pos, rt: Runtime):
+    ctx: Dict[str, Any] = {}
+    aux = jnp.zeros((len(METRIC_KEYS),), jnp.float32)
+    new_st = {}
+    for i, kind in enumerate(pattern):
+        h = rmsnorm(bp[f"l{i}_norm"], x_t, cfg.norm_eps)
+        key = f"l{i}_{kind}"
+        y, st, a = MIXERS[kind].step(bp[key], h, bst[key], pos, cfg, rt, ctx)
+        new_st[key] = st
+        x_t = x_t + y.astype(x_t.dtype)
+        aux = aux + pack_metrics(a)
+    return x_t, new_st, aux
+
+
+def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime):
+    """tokens_t (B, 1) int32; pos scalar int32. Returns (logits, new_state)."""
+    cd = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens_t, cd)
+    x = rt.shard.cons(x, "act_batch", None, "act_embed")
+    new_segs = []
+    for (pattern, repeats), seg, sst in zip(cfg.segments, params["segments"],
+                                            state["segments"]):
+        fn = functools.partial(_block_step, pattern, cfg)
+        if isinstance(seg, list):
+            outs = []
+            for bp, bst in zip(seg, sst):
+                x, st, _ = fn(bp, bst, x, pos, rt)
+                outs.append(st)
+            new_segs.append(outs)
+        else:
+            def body(carry, xs, fn=fn):
+                bp, bst = xs
+                y, st, aux = fn(bp, bst, carry, pos, rt)
+                return y, st
+
+            x, sts = jax.lax.scan(body, x, (seg, sst))
+            new_segs.append(sts)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, rt)
+    return logits[:, 0], {"segments": new_segs}
+
+
+# ---------------------------------------------------------------------------
+# logical axes for decode-state leaves (mirrors sharding.AXES_BY_NAME)
+# ---------------------------------------------------------------------------
+
+STATE_AXES = {
+    ("k", 4): ("act_batch", "act_kv_seq", None, None),
+    ("v", 4): ("act_batch", "act_kv_seq", None, None),
+    ("kpos", 1): (None,),
+    ("h", 2): ("act_batch", "act_inner"),             # rglru (B,R)
+    ("h", 3): ("act_batch", "act_inner", None),       # mamba (B,De,N); slstm
+    ("h", 4): ("act_batch", None, None, None),        # mamba2 (B,H,P,N)
+    ("conv", 3): ("act_batch", None, "act_inner"),
+    ("S", 4): ("act_batch", None, None, None),        # gdn
+    ("C", 4): ("act_batch", None, None, None),        # mlstm
+    ("n", 3): ("act_batch", None, None),              # mlstm/slstm
+    ("m", 2): ("act_batch", None),                    # mlstm
+    ("m", 3): ("act_batch", None, None),              # slstm
+    ("c", 3): ("act_batch", None, None),              # slstm
+}
+
+
+def state_logical(path, leaf):
+    name = None
+    for entry in reversed(path):
+        k = getattr(entry, "key", getattr(entry, "name", None))
+        if isinstance(k, str):
+            name = k
+            break
+    nd = len(leaf.shape)
+    for cand in ((name, nd), (name, nd - 1)):
+        if cand in STATE_AXES:
+            ax = STATE_AXES[cand]
+            if cand[1] == nd - 1:
+                return ("layers",) + ax
+            return ax
+    # slstm 'h' 3-dim collides with mamba 'h' 3-dim; both resolve above.
+    return (None,) * nd

@@ -1,0 +1,309 @@
+"""GQA attention: blockwise (flash-style online-softmax) prefill + cached decode.
+
+Blockwise prefill keeps memory at O(q_block x kv_block) via an online-softmax
+inner scan; sliding-window attention statically slices only the in-window KV
+span per query block (compute-optimal).  Full-causal blockwise computes all KV
+blocks with masking (2x masked-FLOPs overhead vs a causal kernel — recorded in
+the roofline's MODEL_FLOPS/HLO_FLOPs ratio and addressed in §Perf).
+
+Decode uses either a full-length cache (full attention) or a ring buffer of
+``window`` slots (windowed attention).  Cache sequence dims are sharded over
+the ``model`` mesh axis when head sharding is indivisible (flash-decoding
+style partial-softmax collectives are inserted by GSPMD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (Runtime, apply_rope, cost_map, cost_scan, dense,
+                             dense_init)
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg):
+    a = cfg.attention
+    d, qd, kvd = cfg.d_model, a.num_heads * a.head_dim, a.num_kv_heads * a.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d, qd, dtype=cfg.param_dtype),
+        "w_k": dense_init(ks[1], d, kvd, dtype=cfg.param_dtype),
+        "w_v": dense_init(ks[2], d, kvd, dtype=cfg.param_dtype),
+        "w_o": dense_init(ks[3], qd, d, dtype=cfg.param_dtype),
+    }
+    if a.qkv_bias:
+        p["b_q"] = jnp.zeros((qd,), jnp.float32)
+        p["b_k"] = jnp.zeros((kvd,), jnp.float32)
+        p["b_v"] = jnp.zeros((kvd,), jnp.float32)
+    return p
+
+
+def _heads_logical(a, mesh):
+    """Consistent sharding scheme for (B,S,H,Dh)/(B,S,KV,Dh) activations."""
+    m = mesh.shape.get("model", 1) if mesh is not None else 1
+    if a.num_heads % m == 0 and a.num_kv_heads % m == 0:
+        return ("act_batch", "act_seq", "heads", None)
+    if a.tp_fallback == "head_dim" and a.head_dim % m == 0:
+        return ("act_batch", "act_seq", None, "head_dim")
+    return ("act_batch", "act_seq", None, None)
+
+
+def _project_qkv(params, x, cfg, rt: Runtime, positions):
+    a = cfg.attention
+    B, S, _ = x.shape
+    q = dense(x, params["w_q"], params.get("b_q"))
+    k = dense(x, params["w_k"], params.get("b_k"))
+    v = dense(x, params["w_v"], params.get("b_v"))
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    if a.use_rope:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    lg = _heads_logical(a, rt.shard.mesh)
+    return rt.shard.cons(q, *lg), rt.shard.cons(k, *lg), rt.shard.cons(v, *lg)
+
+
+def _block_attn(q, k, v, qpos, kpos, *, causal, window):
+    """Core block attention. q (B,Sq,KV,G,Dh); k,v (B,Sk,KV,Dh);
+    qpos (Sq,), kpos (Sk,). Returns (acc (B,Sq,KV,G,Dh) f32, m, l)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqngd,bknd->bqngk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale      # (B,Sq,KV,G,Sk)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask &= kpos[None, :] >= 0                               # padding slots
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                             # (B,Sq,KV,G)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqngk,bknd->bqngd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        q_block=512, kv_block=1024, qpos=None, kpos=None):
+    """q (B,S,H,Dh); k,v (B,Sk,KV,Dh) -> (B,S,H,Dh)."""
+    B, S, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if qpos is None:
+        qpos = jnp.arange(S)
+    if kpos is None:
+        kpos = jnp.arange(Sk)
+
+    if S <= q_block and Sk <= kv_block:          # single-block fast path
+        qg = q.reshape(B, S, KV, G, Dh)
+        acc, m, l = _block_attn(qg, k, v, qpos, kpos, causal=causal,
+                                window=window)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+    q_block = min(q_block, S)
+    if S % q_block or (Sk == S and Sk % min(kv_block, Sk)):
+        # pad to tile multiples (padding keys are masked via kpos = -1)
+        pad = (-S) % q_block
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos_p = jnp.concatenate([qpos, qpos[-1] + 1 + jnp.arange(pad)])
+        kpos_p = jnp.concatenate([kpos, jnp.full((pad,), -1, kpos.dtype)])
+        out = blockwise_attention(
+            qp, kp, vp, causal=causal, window=window, q_block=q_block,
+            kv_block=q_block if Sk == S else kv_block,
+            qpos=qpos_p, kpos=kpos_p)
+        return out[:, :S]
+    qg = q.reshape(B, S, KV, G, Dh)
+    nqb = S // q_block
+
+    if window is not None and Sk == S:
+        # Sliding window: per q block, statically slice the in-window span.
+        span = window + q_block                  # kv needed per q block
+        kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        kpos_p = jnp.concatenate([jnp.full((window,), -1), kpos])
+
+        def one_block(i):
+            qb = jax.lax.dynamic_slice_in_dim(qg, i * q_block, q_block, 1)
+            kb = jax.lax.dynamic_slice_in_dim(kp, i * q_block, span, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, i * q_block, span, 1)
+            pb = jax.lax.dynamic_slice_in_dim(kpos_p, i * q_block, span, 0)
+            qp = qpos[0] + i * q_block + jnp.arange(q_block)
+            acc, m, l = _block_attn(qb, kb, vb, qp, pb, causal=causal,
+                                    window=window)
+            return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+        out = cost_map(one_block, nqb)                       # (nqb,B,qb,...)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, KV, G, Dh)
+        return out.reshape(B, S, H, Dh)
+
+    # Full attention: outer map over q blocks, inner online-softmax scan
+    # over kv blocks (flash-style; masked blocks cost FLOPs — see module doc).
+    kv_block = min(kv_block, Sk)
+    assert Sk % kv_block == 0, (Sk, kv_block)
+    nkb = Sk // kv_block
+
+    def one_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * q_block, q_block, 1)
+        qp = qpos[0] + i * q_block + jnp.arange(q_block)
+
+        def inner(carry, j):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            pb = jax.lax.dynamic_slice_in_dim(kpos, j * kv_block, kv_block, 0)
+            acc_j, m_j, l_j = _block_attn(qb, kb, vb, qp, pb, causal=causal,
+                                          window=window)
+            m_new = jnp.maximum(m, m_j)
+            r, r_j = jnp.exp(m - m_new), jnp.exp(m_j - m_new)
+            return (acc * r[..., None] + acc_j * r_j[..., None],
+                    m_new, l * r + l_j * r_j), None
+
+        z = jnp.zeros((B, q_block, KV, G, Dh), jnp.float32)
+        m0 = jnp.full((B, q_block, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_block, KV, G), jnp.float32)
+        (acc, m, l), _ = cost_scan(inner, (z, m0, l0), jnp.arange(nkb))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    out = cost_map(one_block, nqb)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, KV, G, Dh)
+    return out.reshape(B, S, H, Dh)
+
+
+def attention_apply(params, x, cfg, rt: Runtime):
+    """Train/prefill attention."""
+    a = cfg.attention
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :] + rt.pos_offset
+    q, k, v = _project_qkv(params, x, cfg, rt, positions)
+    if a.impl == "full" or S <= a.q_block:
+        y = blockwise_attention(q, k, v, causal=a.causal, window=a.window,
+                                q_block=max(S, 1), kv_block=max(S, 1))
+    else:
+        y = blockwise_attention(q, k, v, causal=a.causal, window=a.window,
+                                q_block=a.q_block, kv_block=a.kv_block)
+    y = dense(y.reshape(B, S, a.num_heads * a.head_dim), params["w_o"])
+    return y, {}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def attention_init_state(cfg, batch, max_len, dtype):
+    a = cfg.attention
+    L = min(max_len, a.window) if a.window is not None else max_len
+    return {
+        "k": jnp.zeros((batch, L, a.num_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, L, a.num_kv_heads, a.head_dim), dtype),
+        "kpos": jnp.full((L,), -1, jnp.int32),
+    }
+
+
+def attention_state_logical(cfg, mesh):
+    """Logical axes for the KV cache: shard seq over model when heads can't."""
+    lg = _heads_logical(cfg.attention, mesh)
+    if lg[2] == "heads":
+        seq_ax = "act_seq"
+    else:
+        seq_ax = "act_kv_seq"                    # -> 'model'
+    return {"k": ("act_batch", seq_ax, None, None),
+            "v": ("act_batch", seq_ax, None, None),
+            "kpos": (None,)}
+
+
+def _use_seq_sharded_decode(a, mesh, L):
+    """True when the KV cache seq dim is model-sharded (heads indivisible)
+    and the flash-decoding step is enabled (§Perf cell C)."""
+    if a.decode != "flash" or mesh is None or "model" not in mesh.shape:
+        return False
+    m = mesh.shape["model"]
+    heads_ok = a.num_heads % m == 0 and a.num_kv_heads % m == 0
+    return (not heads_ok) and L % m == 0 and m > 1
+
+
+def _flash_decode_body(q, k, v, kpos, k_t, v_t, pos, *, a):
+    """shard_map body: each device owns a contiguous seq chunk of the cache.
+
+    The update lands only on the owning shard (no GSPMD resharding of the
+    whole cache — the measured pathology in §Perf cell C); partial softmax
+    stats combine across shards flash-decoding style.
+    """
+    B = q.shape[0]
+    n = jax.lax.axis_size("model")
+    idx = jax.lax.axis_index("model")
+    L_loc = k.shape[1]
+    L = L_loc * n
+    slot_g = pos % L if a.window is not None else pos
+    slot = slot_g - idx * L_loc
+    mine = (slot >= 0) & (slot < L_loc)
+    slot_c = jnp.clip(slot, 0, L_loc - 1)
+    k_new = jax.lax.dynamic_update_slice_in_dim(
+        k, k_t.astype(k.dtype), slot_c, 1)
+    v_new = jax.lax.dynamic_update_slice_in_dim(
+        v, v_t.astype(v.dtype), slot_c, 1)
+    kp_new = jax.lax.dynamic_update_slice_in_dim(
+        kpos, jnp.full((1,), pos, jnp.int32), slot_c, 0)
+    k = jnp.where(mine, k_new, k)
+    v = jnp.where(mine, v_new, v)
+    kpos = jnp.where(mine, kp_new, kpos)
+
+    qg = q.reshape(B, 1, a.num_kv_heads, a.num_heads // a.num_kv_heads,
+                   a.head_dim)
+    acc, m, l = _block_attn(qg, k, v, jnp.full((1,), pos), kpos,
+                            causal=a.causal, window=a.window)
+    m_g = jax.lax.pmax(m, "model")
+    scale = jnp.exp(m - m_g)
+    acc = jax.lax.psum(acc * scale[..., None], "model")
+    l = jax.lax.psum(l * scale, "model")
+    y = acc / jnp.maximum(l, 1e-30)[..., None]
+    return y.astype(q.dtype), k, v, kpos
+
+
+def attention_step(params, x_t, state, pos, cfg, rt: Runtime):
+    """x_t (B,1,D); pos scalar int32 absolute position."""
+    a = cfg.attention
+    B = x_t.shape[0]
+    mesh = rt.shard.mesh
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_t, v_t = _project_qkv(params, x_t, cfg, rt, positions)
+    L = state["k"].shape[1]
+
+    if _use_seq_sharded_decode(a, mesh, L):
+        # flash-decoding over the model axis (seq-sharded cache)
+        import functools
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
+        bspec = P(dp) if dp else P()
+        qs = P(*bspec, None, None, None)
+        cs = P(*bspec, "model", None, None)
+        ts = P(*bspec, None, None, None)          # (B,1,KV,Dh) new k/v token
+        y, k, v, kpos = jax.shard_map(
+            functools.partial(_flash_decode_body, a=a), mesh=mesh,
+            in_specs=(P(*bspec, None, None), cs, cs, P("model"),
+                      ts, ts, P()),
+            out_specs=(P(*bspec, None, None, None, None), cs, cs,
+                       P("model")),
+            check_vma=False)(
+            q[:, 0], state["k"], state["v"], state["kpos"],
+            k_t, v_t, pos)
+        y = y.astype(x_t.dtype)
+    else:
+        slot = pos % L if a.window is not None else pos
+        k = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], k_t.astype(state["k"].dtype), slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], v_t.astype(state["v"].dtype), slot, 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            state["kpos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+        qg = q.reshape(B, 1, a.num_kv_heads, a.num_heads // a.num_kv_heads,
+                       a.head_dim)
+        acc, m, l = _block_attn(qg, k, v, jnp.full((1,), pos), kpos,
+                                causal=a.causal, window=a.window)
+        y = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x_t.dtype)
+    y = dense(y.reshape(B, 1, a.num_heads * a.head_dim), params["w_o"])
+    return y, {"k": k, "v": v, "kpos": kpos}, {}

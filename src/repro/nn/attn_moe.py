@@ -1,0 +1,132 @@
+"""Attention-MoE baselines from the paper's Table 1: MoA and SwitchHead.
+
+Both are implemented in their mathematically exact *dense-compute* form
+(every expert computes, masked combine).  These baselines exist for the
+paper-comparison benchmarks (param/FLOP accounting + tiny-scale PPL proxy);
+they are not perf-optimized — the paper's point is precisely that RoM beats
+them at matched total parameters.
+
+MoA (Mixture of Attention Heads, Zhang et al. 2022): experts are query-side
+heads (W_q + W_o per expert); K/V are a single shared head (MQA-style).
+Attention is linear in nothing here (softmax per expert), so experts run
+densely and the router mixes their outputs.
+
+SwitchHead (Csordas et al. 2023): per attention head, E value experts and E
+output experts under one per-head router; Q/K are shared.  Because attention
+is linear in V, mixing values *before* the attention product is exactly
+equivalent to mixing expert outputs after — that identity makes the dense
+form cheap: one attention per head, expert mixing on both sides.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import blockwise_attention
+from repro.nn.layers import Runtime, apply_rope, dense, dense_init
+
+
+# ---------------------------------------------------------------------------
+# MoA
+# ---------------------------------------------------------------------------
+
+def _moa_dim(cfg):
+    # each MoA expert carries a full multi-head-width query/output transform
+    # (the paper aligns MoA total params to RoM's 1.1B this way, Table 1)
+    return cfg.attention.num_heads * cfg.attention.head_dim
+
+
+def moa_init(key, cfg):
+    a, m = cfg.attention, cfg.attn_moe
+    d, dh = cfg.d_model, _moa_dim(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "e_w_q": (jax.random.normal(ks[0], (m.num_experts, d, dh)) *
+                  d ** -0.5).astype(cfg.param_dtype),
+        "e_w_o": (jax.random.normal(ks[1], (m.num_experts, dh, d)) *
+                  dh ** -0.5).astype(cfg.param_dtype),
+        "w_k": dense_init(ks[2], d, dh, dtype=cfg.param_dtype),
+        "w_v": dense_init(ks[3], d, dh, dtype=cfg.param_dtype),
+        "w_router": (jax.random.normal(ks[4], (d, m.num_experts)) *
+                     d ** -0.5).astype(jnp.float32),
+    }
+
+
+def moa_apply(params, x, cfg, rt: Runtime):
+    a, m = cfg.attention, cfg.attn_moe
+    B, S, _ = x.shape
+    E, dh = m.num_experts, _moa_dim(cfg)
+    probs = jax.nn.softmax(
+        (x.astype(jnp.float32) @ params["w_router"]), axis=-1)   # (B,S,E)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    mix = (jax.nn.one_hot(top_i, E, dtype=jnp.float32) *
+           top_p[..., None]).sum(2)                              # (B,S,E)
+
+    pos = jnp.arange(S)[None, :] + rt.pos_offset
+    q = jnp.einsum("bsd,edh->bseh", x, params["e_w_q"].astype(x.dtype))
+    k = dense(x, params["w_k"])[:, :, None, :]                   # (B,S,1,dh)
+    v = dense(x, params["w_v"])[:, :, None, :]
+    if a.use_rope:
+        q = apply_rope(q, pos, a.rope_theta)
+        k = apply_rope(k, pos, a.rope_theta)
+    y = blockwise_attention(q, k, v, causal=a.causal, window=a.window,
+                            q_block=a.q_block, kv_block=a.kv_block)
+    # per-expert output proj, mixed by routing weights
+    out = jnp.einsum("bseh,ehd,bse->bsd", y.astype(jnp.float32),
+                     params["e_w_o"].astype(jnp.float32), mix)
+    aux = {"entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))}
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# SwitchHead
+# ---------------------------------------------------------------------------
+
+def switchhead_init(key, cfg):
+    a, m = cfg.attention, cfg.attn_moe
+    d, H, dh = cfg.d_model, a.num_heads, a.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "w_q": dense_init(ks[0], d, H * dh, dtype=cfg.param_dtype),
+        "w_k": dense_init(ks[1], d, H * dh, dtype=cfg.param_dtype),
+        "e_w_v": (jax.random.normal(ks[2], (m.num_experts, d, H * dh)) *
+                  d ** -0.5).astype(cfg.param_dtype),
+        "e_w_o": (jax.random.normal(ks[3], (m.num_experts, H * dh, d)) *
+                  (H * dh) ** -0.5).astype(cfg.param_dtype),
+        "w_router": (jax.random.normal(ks[4], (d, H * m.num_experts)) *
+                     d ** -0.5).astype(jnp.float32),
+    }
+
+
+def switchhead_apply(params, x, cfg, rt: Runtime):
+    a, m = cfg.attention, cfg.attn_moe
+    B, S, _ = x.shape
+    H, dh, E = a.num_heads, a.head_dim, m.num_experts
+    logits = (x.astype(jnp.float32) @ params["w_router"]).reshape(B, S, H, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    mix = (jax.nn.one_hot(top_i, E, dtype=jnp.float32) *
+           top_p[..., None]).sum(3)                              # (B,S,H,E)
+
+    pos = jnp.arange(S)[None, :] + rt.pos_offset
+    q = dense(x, params["w_q"]).reshape(B, S, H, dh)
+    k = dense(x, params["w_k"]).reshape(B, S, H, dh)
+    if a.use_rope:
+        q = apply_rope(q, pos, a.rope_theta)
+        k = apply_rope(k, pos, a.rope_theta)
+    # value experts mixed pre-attention (exact: attention is linear in V)
+    v_all = jnp.einsum("bsd,edh->bseh", x,
+                       params["e_w_v"].astype(x.dtype))          # (B,S,E,H*dh)
+    v_all = v_all.reshape(B, S, E, H, dh)
+    v = jnp.einsum("bsehd,bshe->bshd", v_all.astype(jnp.float32),
+                   mix).astype(x.dtype)
+    y = blockwise_attention(q, k, v, causal=a.causal, window=a.window,
+                            q_block=a.q_block, kv_block=a.kv_block)
+    # output experts mixed post-attention (destination-side routing)
+    yh = y.reshape(B, S, H, dh)
+    o_all = jnp.einsum("bshd,ehdf->bshef", yh.astype(jnp.float32),
+                       params["e_w_o"].astype(jnp.float32).reshape(
+                           E, H, dh, cfg.d_model))
+    out = jnp.einsum("bshef,bshe->bsf", o_all, mix)
+    aux = {"entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))}
+    return out.astype(x.dtype), aux

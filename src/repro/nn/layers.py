@@ -1,0 +1,140 @@
+"""Base neural substrate: dense / norm / embedding / RoPE (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardCtx
+
+
+@dataclasses.dataclass
+class Runtime:
+    """Per-call runtime context threaded through layer ``apply`` fns."""
+    shard: ShardCtx
+    rng: Optional[jax.Array] = None
+    train: bool = False
+    pos_offset: int = 0          # decode: absolute position of current token
+
+    def with_rng(self, rng):
+        return dataclasses.replace(self, rng=rng)
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# trace-time unroll mode: XLA cost_analysis counts loop bodies ONCE, so the
+# dry-run's standalone block-cost lowering unrolls inner scans/maps to get
+# exact per-layer FLOPs/bytes/collectives.  Bounded by ``cap`` (very long
+# token-level recurrences stay loops; the residual undercount is recorded in
+# EXPERIMENTS.md §Dry-run).  Never enabled for real execution.
+# ---------------------------------------------------------------------------
+
+_UNROLL = False
+_UNROLL_CAP = 256
+
+
+def set_unroll(flag: bool):
+    global _UNROLL
+    _UNROLL = bool(flag)
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+def cost_scan(f, init, xs, length=None):
+    """lax.scan that fully unrolls under cost-exact mode.
+
+    ``unroll=True`` unrolls at HLO-build time (body traced once), so even
+    hundreds of iterations lower quickly; trip counts beyond the cap stay
+    loops (token-level recurrences) and their residual undercount is
+    documented in EXPERIMENTS.md §Dry-run.
+    """
+    n = length
+    if n is None:
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    unroll = bool(_UNROLL and n <= _UNROLL_CAP)
+    return jax.lax.scan(f, init, xs, length=length, unroll=unroll)
+
+
+def cost_map(f, n: int):
+    """lax.map(f, arange(n)) that unrolls under cost-exact mode."""
+    if not _UNROLL or n > _UNROLL_CAP:
+        return jax.lax.map(f, jnp.arange(n))
+
+    def body(carry, i):
+        return carry, f(i)
+
+    _, ys = jax.lax.scan(body, 0, jnp.arange(n), unroll=True)
+    return ys
+
+
+def dense_init(key, d_in, d_out, *, dtype="float32", scale=None):
+    scale = (1.0 / (d_in ** 0.5)) if scale is None else scale
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale
+    return w.astype(_dtype(dtype))
+
+
+def dense(x, w, b=None, *, compute_dtype=None):
+    cd = compute_dtype or x.dtype
+    y = jnp.einsum("...d,df->...f", x, w.astype(cd),
+                   preferred_element_type=jnp.float32).astype(cd)
+    if b is not None:
+        y = y + b.astype(cd)
+    return y
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab, d, *, dtype="float32"):
+    return jax.random.normal(key, (vocab, d)).astype(_dtype(dtype)) * 0.02
+
+
+def embed_lookup(table, ids, compute_dtype):
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (...,S,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                             # (...,S,1,Dh/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,30 @@
+"""Dense channel mixers: SwiGLU / GeGLU / GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Runtime, dense, dense_init, silu
+
+
+def mlp_init(key, cfg, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], cfg.d_model, d_ff, dtype=cfg.param_dtype),
+         "w_down": dense_init(ks[1], d_ff, cfg.d_model, dtype=cfg.param_dtype)}
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate_ffn"] = dense_init(ks[2], cfg.d_model, d_ff,
+                                     dtype=cfg.param_dtype)
+    return p
+
+
+def mlp_apply(params, x, cfg, rt: Runtime):
+    h = dense(x, params["w_up"])
+    if cfg.mlp_act == "swiglu":
+        h = h * silu(dense(x, params["w_gate_ffn"]))
+    elif cfg.mlp_act == "geglu":
+        h = h * jax.nn.gelu(dense(x, params["w_gate_ffn"]))
+    else:
+        h = jax.nn.gelu(h)
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_mlp")
+    return dense(h, params["w_down"]), {}

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Structure (De et al., 2024): two input branches from d_model to d_rnn — a
+GeLU gate branch and a recurrent branch (causal conv then RG-LRU) — merged
+multiplicatively, then projected back.  The RG-LRU:
+
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate, block-diag)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate,      block-diag)
+    a_t = a ** (c * r_t),  a = sigmoid(Lambda)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence runs through the chunked associative scan in
+``kernels/ref.py``.  RoM expertizes ``w_rec_in`` / ``w_rec_gate`` / ``w_out``
+(the large projections); gates, conv and Lambda stay shared across experts —
+the same selective-expertization rule the paper applies to Mamba's small
+dt/x projections (§4.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import diag_recurrence
+from repro.nn.layers import Runtime, dense, dense_init
+from repro.nn.ssm import causal_conv1d, causal_conv1d_step
+
+
+def rglru_dims(cfg):
+    r = cfg.rglru
+    d_rnn = r.d_rnn or cfg.d_model
+    return d_rnn, r.num_heads, d_rnn // r.num_heads
+
+
+def rglru_init_shared(key, cfg):
+    """Conv + gates + Lambda — shared across RoM experts."""
+    d_rnn, nh, dh = rglru_dims(cfg)
+    r = cfg.rglru
+    ks = jax.random.split(key, 4)
+    u = jax.random.uniform(ks[3], (d_rnn,), jnp.float32, 0.9, 0.999)
+    a = u ** (1.0 / r.c)                      # want a^c ~ U(0.9, 0.999)
+    return {
+        "conv_w": (jax.random.normal(ks[0], (r.conv_kernel, d_rnn)) *
+                   (1.0 / r.conv_kernel)).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_a_gate": (jax.random.normal(ks[1], (nh, dh, dh)) *
+                     dh ** -0.5).astype(jnp.float32),
+        "w_x_gate": (jax.random.normal(ks[2], (nh, dh, dh)) *
+                     dh ** -0.5).astype(jnp.float32),
+        "b_a_gate": jnp.zeros((d_rnn,), jnp.float32),
+        "b_x_gate": jnp.zeros((d_rnn,), jnp.float32),
+        "a_param": jnp.log(a / (1 - a)),      # logit(a)
+    }
+
+
+def rglru_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = rglru_init_shared(ks[0], cfg)
+    d_rnn, _, _ = rglru_dims(cfg)
+    p["w_rec_in"] = dense_init(ks[1], cfg.d_model, d_rnn, dtype=cfg.param_dtype)
+    p["w_rec_gate"] = dense_init(ks[2], cfg.d_model, d_rnn,
+                                 dtype=cfg.param_dtype)
+    p["w_out"] = dense_init(ks[3], d_rnn, cfg.d_model, dtype=cfg.param_dtype)
+    return p
+
+
+def _gates(shared, u, cfg):
+    """u (..., d_rnn) -> (log_a_t, scaled input gate) in float32."""
+    d_rnn, nh, dh = rglru_dims(cfg)
+    uh = u.reshape(*u.shape[:-1], nh, dh).astype(jnp.float32)
+    ra = jnp.einsum("...hd,hde->...he", uh, shared["w_a_gate"])
+    rx = jnp.einsum("...hd,hde->...he", uh, shared["w_x_gate"])
+    r = jax.nn.sigmoid(ra.reshape(*u.shape) + shared["b_a_gate"])
+    i = jax.nn.sigmoid(rx.reshape(*u.shape) + shared["b_x_gate"])
+    # log a_t = c * r_t * log sigmoid(Lambda) = -c * r_t * softplus(-Lambda)
+    log_a = -cfg.rglru.c * r * jax.nn.softplus(-shared["a_param"])
+    return log_a, i
+
+
+def rglru_core(shared, u, cfg, rt: Runtime):
+    """Recurrent branch: conv -> RG-LRU. u (B,S,R) -> (B,S,R)."""
+    u = causal_conv1d(u, shared["conv_w"], shared["conv_b"])
+    log_a, i = _gates(shared, u, cfg)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * i * u.astype(jnp.float32)
+    h = diag_recurrence(log_a, b, chunk=256)
+    return h.astype(u.dtype)
+
+
+def rglru_apply(params, x, cfg, rt: Runtime):
+    u = dense(x, params["w_rec_in"])
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    h = rglru_core(params, u, cfg, rt)
+    gate = jax.nn.gelu(dense(x, params["w_rec_gate"]))
+    out = dense(h * gate, params["w_out"])
+    return out, {}
+
+
+def rglru_init_state(cfg, batch, dtype):
+    d_rnn, _, _ = rglru_dims(cfg)
+    k = cfg.rglru.conv_kernel
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, d_rnn), dtype)}
+
+
+def rglru_core_step(shared, u_t, state, cfg, rt: Runtime):
+    u, conv_buf = causal_conv1d_step(u_t, state["conv"], shared["conv_w"],
+                                     shared["conv_b"])
+    log_a, i = _gates(shared, u, cfg)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
+    h = a * state["h"] + mult * i * u.astype(jnp.float32)
+    return h.astype(u_t.dtype), {"h": h, "conv": conv_buf}
+
+
+def rglru_step(params, x_t, state, pos, cfg, rt: Runtime):
+    xt = x_t[:, 0]
+    u_t = dense(xt, params["w_rec_in"])
+    h, state = rglru_core_step(params, u_t, state, cfg, rt)
+    gate = jax.nn.gelu(dense(xt, params["w_rec_gate"]))
+    out = dense(h * gate, params["w_out"])
+    return out[:, None], state, {}

@@ -1,0 +1,392 @@
+"""SSM token mixers: Mamba (selective scan), Mamba-2 (SSD), Gated DeltaNet.
+
+Each mixer is split into projections (the parts RoM expertizes) and a shared
+core, so `core/rom.py` can reuse the cores with routed projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.nn.layers import Runtime, dense, dense_init, rmsnorm, silu
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (kernel k, shared "Conv 1D" of the paper)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b=None):
+    """x (B,S,C); w (K,C). y_t = sum_k w[k] * x_{t-K+1+k}."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, k:k + S, :] * w[k].astype(x.dtype) for k in range(K))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def causal_conv1d_step(x_t, buf, w, b=None):
+    """x_t (B,C); buf (B,K-1,C) past inputs. Returns (y_t, new_buf)."""
+    K = w.shape[0]
+    win = jnp.concatenate([buf, x_t[:, None, :]], axis=1)       # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x_t.dtype)
+    if b is not None:
+        y = y + b.astype(x_t.dtype)
+    return y, win[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (v1) — selective scan
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    m = cfg.mamba
+    de = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or max(1, -(-cfg.d_model // 16))
+    return de, dt_rank, m.d_state
+
+
+def mamba_init_shared(key, cfg):
+    """x Proj / dt Proj / Conv1D / A / D — shared across experts (§4.3)."""
+    de, dt_rank, n = mamba_dims(cfg)
+    m = cfg.mamba
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[3], (de,)) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    b_dt = dt + jnp.log(-jnp.expm1(-dt))          # inverse softplus
+    return {
+        "conv_w": (jax.random.normal(ks[0], (m.conv_kernel, de)) *
+                   (1.0 / m.conv_kernel)).astype(jnp.float32),
+        "conv_b": jnp.zeros((de,), jnp.float32),
+        "w_x": dense_init(ks[1], de, dt_rank + 2 * n, dtype=cfg.param_dtype),
+        "w_dt": dense_init(ks[2], dt_rank, de, dtype=cfg.param_dtype,
+                           scale=dt_rank ** -0.5),
+        "b_dt": b_dt.astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (de, 1))),
+        "D": jnp.ones((de,), jnp.float32),
+    }
+
+
+def mamba_init(key, cfg):
+    de, _, _ = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = mamba_init_shared(ks[0], cfg)
+    p["w_in"] = dense_init(ks[1], cfg.d_model, de, dtype=cfg.param_dtype)
+    p["w_gate"] = dense_init(ks[2], cfg.d_model, de, dtype=cfg.param_dtype)
+    p["w_out"] = dense_init(ks[3], de, cfg.d_model, dtype=cfg.param_dtype)
+    return p
+
+
+def mamba_core(shared, h, cfg, rt: Runtime, *, x_proj_fn=None, dt_proj_fn=None):
+    """Shared middle: conv -> x/dt proj -> selective scan. h (B,S,De) -> y."""
+    de, dt_rank, n = mamba_dims(cfg)
+    u = silu(causal_conv1d(h, shared["conv_w"], shared["conv_b"]))
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    xdbc = (x_proj_fn or (lambda t: dense(t, shared["w_x"])))(u)
+    dt_in, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + n], axis=-1)
+    dt_lin = (dt_proj_fn or (lambda t: dense(t, shared["w_dt"])))(dt_in)
+    dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + shared["b_dt"])
+    A = -jnp.exp(shared["A_log"])
+    y = ops.selective_scan(u, dt.astype(u.dtype), A, Bm, Cm, shared["D"],
+                           chunk=cfg.mamba.chunk,
+                           acc_dtype=cfg.mamba.scan_dtype)
+    return rt.shard.cons(y, "act_batch", "act_seq", "act_inner")
+
+
+def mamba_apply(params, x, cfg, rt: Runtime):
+    h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    y = mamba_core(params, h, cfg, rt)
+    g = silu(dense(x, params["w_gate"]))
+    out = dense(y * g, params["w_out"])
+    return out, {}
+
+
+def mamba_init_state(cfg, batch, dtype):
+    de, _, n = mamba_dims(cfg)
+    k = cfg.mamba.conv_kernel
+    return {"h": jnp.zeros((batch, de, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, de), dtype)}
+
+
+def mamba_core_step(shared, h_t, state, cfg, rt: Runtime,
+                    *, x_proj_fn=None, dt_proj_fn=None):
+    de, dt_rank, n = mamba_dims(cfg)
+    u, conv_buf = causal_conv1d_step(h_t, state["conv"], shared["conv_w"],
+                                     shared["conv_b"])
+    u = silu(u)
+    xdbc = (x_proj_fn or (lambda t: dense(t, shared["w_x"])))(u)
+    dt_in, B_t, C_t = jnp.split(xdbc, [dt_rank, dt_rank + n], axis=-1)
+    dt_lin = (dt_proj_fn or (lambda t: dense(t, shared["w_dt"])))(dt_in)
+    dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + shared["b_dt"])
+    A = -jnp.exp(shared["A_log"])
+    from repro.kernels.ref import selective_scan_step
+    hs, y = selective_scan_step(state["h"], u, dt.astype(u.dtype), A, B_t,
+                                C_t, shared["D"])
+    return y, {"h": hs, "conv": conv_buf}
+
+
+def mamba_step(params, x_t, state, pos, cfg, rt: Runtime):
+    """x_t (B,1,D) decode step."""
+    xt = x_t[:, 0]
+    h_t = dense(xt, params["w_in"])
+    y, state = mamba_core_step(params, h_t, state, cfg, rt)
+    g = silu(dense(xt, params["w_gate"]))
+    out = dense(y * g, params["w_out"])
+    return out[:, None], state, {}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, scalar-per-head A), chunked dual form
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    m = cfg.mamba2
+    de = m.expand * cfg.d_model
+    nheads = de // m.head_dim
+    return de, nheads, m.head_dim, m.d_state
+
+
+def mamba2_init(key, cfg):
+    de, nh, hd, n = mamba2_dims(cfg)
+    m = cfg.mamba2
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * de + 2 * n + nh                 # [z, x, B, C, dt]
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    return {
+        "w_zxbcdt": dense_init(ks[0], cfg.d_model, d_in_proj,
+                               dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.conv_kernel, de + 2 * n)) *
+                   (1.0 / m.conv_kernel)).astype(jnp.float32),
+        "conv_b": jnp.zeros((de + 2 * n,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log_h": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D_h": jnp.ones((nh,), jnp.float32),
+        "scale_inner": jnp.ones((de,), jnp.float32),
+        "w_out": dense_init(ks[3], de, cfg.d_model, dtype=cfg.param_dtype),
+    }
+
+
+def _segsum(a):
+    """a (...,c) -> (...,c,c) lower-tri cumulative sums: out[i,j]=sum(a[j+1..i])."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, a_log, Bm, Cm, chunk):
+    """SSD dual form. x (B,S,H,P); a_log (B,S,H) (<=0); Bm,Cm (B,S,N)."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, c, H, Pd).astype(f32)
+    ac = a_log.reshape(Bsz, nc, c, H).astype(f32)
+    bc = Bm.reshape(Bsz, nc, c, N).astype(f32)
+    cc = Cm.reshape(Bsz, nc, c, N).astype(f32)
+
+    A_cum = jnp.cumsum(ac, axis=2)                              # (B,nc,c,H)
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))              # (B,nc,H,c,c)
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bzin,bzjn->bzij", cc, bc)              # (B,nc,c,c)
+    y_diag = jnp.einsum("bzij,bzhij,bzjhp->bzihp", scores, L, xc)
+    # chunk final states
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)         # (B,nc,c,H)
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn", bc, decay_states, xc)
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(s_prev, inp):
+        dec, st = inp                                           # (B,H), (B,H,P,N)
+        s = s_prev * dec[..., None, None] + st
+        return s, s_prev
+
+    from repro.nn.layers import cost_scan
+    s0 = jnp.zeros((Bsz, H, Pd, N), f32)
+    _, prev_states = cost_scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2),
+                   states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+    state_decay = jnp.exp(A_cum)                                # (B,nc,c,H)
+    y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp", cc, state_decay, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y.astype(x.dtype)
+
+
+def mamba2_core(shared, zxbcdt, cfg, rt: Runtime):
+    """zxbcdt (B,S,2De+2N+H) -> y (B,S,De) (pre gated-norm)."""
+    de, nh, hd, n = mamba2_dims(cfg)
+    B_, S, _ = zxbcdt.shape
+    z, xbc, dt_in = jnp.split(zxbcdt, [de, 2 * de + 2 * n], axis=-1)
+    xbc = silu(causal_conv1d(xbc, shared["conv_w"], shared["conv_b"]))
+    x, Bm, Cm = jnp.split(xbc, [de, de + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + shared["dt_bias"])
+    A = -jnp.exp(shared["A_log_h"])                             # (H,)
+    xh = x.reshape(B_, S, nh, hd)
+    y = ssd_chunked(xh * dt[..., None].astype(x.dtype), dt * A, Bm, Cm,
+                    cfg.mamba2.chunk)
+    y = y + xh * shared["D_h"][:, None].astype(x.dtype)
+    y = y.reshape(B_, S, de)
+    y = rmsnorm({"scale": shared["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    return y
+
+
+def mamba2_apply(params, x, cfg, rt: Runtime):
+    zxbcdt = dense(x, params["w_zxbcdt"])
+    y = mamba2_core(params, zxbcdt, cfg, rt)
+    return dense(y, params["w_out"]), {}
+
+
+def mamba2_init_state(cfg, batch, dtype):
+    de, nh, hd, n = mamba2_dims(cfg)
+    k = cfg.mamba2.conv_kernel
+    return {"h": jnp.zeros((batch, nh, hd, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, de + 2 * n), dtype)}
+
+
+def mamba2_step(params, x_t, state, pos, cfg, rt: Runtime):
+    de, nh, hd, n = mamba2_dims(cfg)
+    xt = x_t[:, 0]
+    zxbcdt = dense(xt, params["w_zxbcdt"])
+    z, xbc, dt_in = jnp.split(zxbcdt, [de, 2 * de + 2 * n], axis=-1)
+    xbc, conv_buf = causal_conv1d_step(xbc, state["conv"], params["conv_w"],
+                                       params["conv_b"])
+    xbc = silu(xbc)
+    x_, B_t, C_t = jnp.split(xbc, [de, de + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(dt * -jnp.exp(params["A_log_h"]))               # (B,H)
+    xh = x_.reshape(-1, nh, hd).astype(jnp.float32)
+    h = (state["h"] * a[..., None, None] +
+         jnp.einsum("bhp,bn,bh->bhpn", xh, B_t.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+    y = y + xh * params["D_h"][:, None]
+    y = y.reshape(-1, de).astype(xt.dtype)
+    y = rmsnorm({"scale": params["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    out = dense(y, params["w_out"])
+    return out[:, None], {"h": h, "conv": conv_buf}, {}
+
+
+# ---------------------------------------------------------------------------
+# Gated DeltaNet:  S_t = a_t * S_{t-1} (I - b_t k_t k_t^T) + b_t v_t k_t^T
+# ---------------------------------------------------------------------------
+
+def gdn_dims(cfg):
+    g = cfg.gdn
+    dk = g.num_heads * g.head_dim
+    dv = g.expand_v * dk
+    return g.num_heads, g.head_dim, g.expand_v * g.head_dim, dk, dv
+
+
+def gdn_init(key, cfg):
+    nh, dk_h, dv_h, dk, dv = gdn_dims(cfg)
+    g = cfg.gdn
+    ks = jax.random.split(key, 4)
+    return {
+        "w_qkvz": dense_init(ks[0], cfg.d_model, 2 * dk + 2 * dv,
+                             dtype=cfg.param_dtype),
+        "w_ab": dense_init(ks[1], cfg.d_model, 2 * nh, dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[2], (g.conv_kernel, 2 * dk + dv)) *
+                   (1.0 / g.conv_kernel)).astype(jnp.float32),
+        "conv_b": jnp.zeros((2 * dk + dv,), jnp.float32),
+        "scale_inner": jnp.ones((dv,), jnp.float32),
+        "w_out": dense_init(ks[3], dv, cfg.d_model, dtype=cfg.param_dtype),
+    }
+
+
+def _gdn_scan(q, k, v, a, b):
+    """q,k (B,S,H,Dk); v (B,S,H,Dv); a,b (B,S,H). Sequential delta rule."""
+    f32 = jnp.float32
+
+    def step(S, inp):
+        qt, kt, vt, at, bt = inp
+        # S (B,H,Dk,Dv)
+        Sk = jnp.einsum("bhkv,bhk->bhv", S, kt)
+        S = (S * at[..., None, None]
+             - jnp.einsum("bhk,bhv->bhkv", kt * (at * bt)[..., None], Sk)
+             + jnp.einsum("bhk,bhv->bhkv", kt * bt[..., None], vt))
+        y = jnp.einsum("bhkv,bhk->bhv", S, qt)
+        return S, y
+
+    B_, S_, H, Dk = q.shape
+    Dv = v.shape[-1]
+    S0 = jnp.zeros((B_, H, Dk, Dv), f32)
+    xs = (q.transpose(1, 0, 2, 3).astype(f32), k.transpose(1, 0, 2, 3).astype(f32),
+          v.transpose(1, 0, 2, 3).astype(f32), a.transpose(1, 0, 2).astype(f32),
+          b.transpose(1, 0, 2).astype(f32))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3)                             # (B,S,H,Dv)
+
+
+def gdn_core(shared, qkvz, ab, cfg, rt: Runtime):
+    nh, dk_h, dv_h, dk, dv = gdn_dims(cfg)
+    B_, S, _ = qkvz.shape
+    qkv, z = jnp.split(qkvz, [2 * dk + dv], axis=-1)
+    qkv = silu(causal_conv1d(qkv, shared["conv_w"], shared["conv_b"]))
+    q, k, v = jnp.split(qkv, [dk, 2 * dk], axis=-1)
+    q = q.reshape(B_, S, nh, dk_h)
+    k = k.reshape(B_, S, nh, dk_h)
+    v = v.reshape(B_, S, nh, dv_h)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True).clip(1e-6)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True).clip(1e-6)
+    a_in, b_in = jnp.split(ab, 2, axis=-1)
+    a = jnp.exp(-jnp.exp(jnp.clip(a_in.astype(jnp.float32), -8, 3)))  # decay
+    b = jax.nn.sigmoid(b_in.astype(jnp.float32))
+    y = _gdn_scan(q, k, v, a, b).reshape(B_, S, dv).astype(qkvz.dtype)
+    y = rmsnorm({"scale": shared["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    return y
+
+
+def gdn_apply(params, x, cfg, rt: Runtime):
+    qkvz = dense(x, params["w_qkvz"])
+    ab = dense(x, params["w_ab"])
+    y = gdn_core(params, qkvz, ab, cfg, rt)
+    return dense(y, params["w_out"]), {}
+
+
+def gdn_init_state(cfg, batch, dtype):
+    nh, dk_h, dv_h, dk, dv = gdn_dims(cfg)
+    return {"S": jnp.zeros((batch, nh, dk_h, dv_h), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.gdn.conv_kernel - 1, 2 * dk + dv),
+                              dtype)}
+
+
+def gdn_step(params, x_t, state, pos, cfg, rt: Runtime):
+    nh, dk_h, dv_h, dk, dv = gdn_dims(cfg)
+    xt = x_t[:, 0]
+    qkvz = dense(xt, params["w_qkvz"])
+    ab = dense(xt, params["w_ab"])
+    qkv, z = jnp.split(qkvz, [2 * dk + dv], axis=-1)
+    qkv, conv_buf = causal_conv1d_step(qkv, state["conv"], params["conv_w"],
+                                       params["conv_b"])
+    qkv = silu(qkv)
+    q, k, v = jnp.split(qkv, [dk, 2 * dk], axis=-1)
+    B_ = xt.shape[0]
+    q = q.reshape(B_, nh, dk_h)
+    k = k.reshape(B_, nh, dk_h)
+    v = v.reshape(B_, nh, dv_h)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True).clip(1e-6)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True).clip(1e-6)
+    a_in, b_in = jnp.split(ab, 2, axis=-1)
+    a = jnp.exp(-jnp.exp(jnp.clip(a_in.astype(jnp.float32), -8, 3)))
+    b = jax.nn.sigmoid(b_in.astype(jnp.float32))
+    S = state["S"]
+    f32 = jnp.float32
+    Sk = jnp.einsum("bhkv,bhk->bhv", S, k.astype(f32))
+    S = (S * a[..., None, None]
+         - jnp.einsum("bhk,bhv->bhkv", (k * (a * b)[..., None]).astype(f32), Sk)
+         + jnp.einsum("bhk,bhv->bhkv", (k * b[..., None]).astype(f32),
+                      v.astype(f32)))
+    y = jnp.einsum("bhkv,bhk->bhv", S, q.astype(f32)).reshape(B_, dv)
+    y = rmsnorm({"scale": params["scale_inner"]},
+                y.astype(xt.dtype) * silu(z), cfg.norm_eps)
+    out = dense(y, params["w_out"])
+    return out[:, None], {"S": S, "conv": conv_buf}, {}

@@ -1,0 +1,344 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory w/ recurrence).
+
+mLSTM (Beck et al., 2024), per head with exponential gating + stabilizer m:
+
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T      n_t = f'_t n_{t-1} + i'_t k_t
+    y_t = C_t q_t / max(|n_t . q_t|, 1)
+    m_t = max(logsigmoid(f~) + m_{t-1}, i~);  f' = exp(lsig(f~)+m_{t-1}-m_t)
+
+Projections (RoM targets): ``w_in`` (up), ``w_gate`` (z branch), ``w_out``
+(down).  qk/v/if projections + conv are shared across experts — the paper's
+selective-expertization rule.
+
+sLSTM keeps per-head block-diagonal *recurrent* gate weights (h_{t-1} feeds
+the gates), so it is strictly sequential; it follows the original xLSTM
+block layout with a small post-FFN folded in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Runtime, dense, dense_init, silu
+from repro.nn.ssm import causal_conv1d, causal_conv1d_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    c = cfg.xlstm
+    inner = c.expand * cfg.d_model
+    qk = int(c.qk_ratio * inner)
+    nh = c.num_heads
+    return inner, qk, nh, qk // nh, inner // nh
+
+
+def mlstm_init_shared(key, cfg):
+    inner, qk, nh, dqk, dv = mlstm_dims(cfg)
+    c = cfg.xlstm
+    ks = jax.random.split(key, 4)
+    # forget-gate bias init: positive (remember by default)
+    b_if = jnp.concatenate([jnp.full((nh,), -1.0), jnp.full((nh,), 3.0)])
+    return {
+        "conv_w": (jax.random.normal(ks[0], (c.conv_kernel, inner)) *
+                   (1.0 / c.conv_kernel)).astype(jnp.float32),
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        "w_qk": dense_init(ks[1], inner, 2 * qk, dtype=cfg.param_dtype),
+        "w_v2": dense_init(ks[2], inner, inner, dtype=cfg.param_dtype),
+        "w_if": dense_init(ks[3], inner, 2 * nh, dtype=cfg.param_dtype),
+        "b_if": b_if.astype(jnp.float32),
+        "gn_scale": jnp.ones((inner,), jnp.float32),
+    }
+
+
+def mlstm_init(key, cfg):
+    inner, *_ = mlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = mlstm_init_shared(ks[0], cfg)
+    p["w_in"] = dense_init(ks[1], cfg.d_model, inner, dtype=cfg.param_dtype)
+    p["w_gate"] = dense_init(ks[2], cfg.d_model, inner, dtype=cfg.param_dtype)
+    p["w_out"] = dense_init(ks[3], inner, cfg.d_model, dtype=cfg.param_dtype)
+    return p
+
+
+def _headnorm(y, scale, eps):
+    """RMS norm within each head, then per-channel scale. y (...,H,Dv)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + eps)
+    flat = yn.reshape(*y.shape[:-2], -1) * scale
+    return flat
+
+
+def _mlstm_scan(q, k, v, i_log, f_log):
+    """q,k (B,S,H,Dqk); v (B,S,H,Dv); i_log,f_log (B,S,H) -> y (B,S,H,Dv)."""
+    f32 = jnp.float32
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, il, fl = inp
+        m_new = jnp.maximum(fl + m, il)
+        fp = jnp.exp(fl + m - m_new)
+        ip = jnp.exp(il - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        y = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), y
+
+    B, S, H, Dqk = q.shape
+    Dv = v.shape[-1]
+    carry = (jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
+             jnp.zeros((B, H), f32))
+    xs = (q.transpose(1, 0, 2, 3).astype(f32),
+          k.transpose(1, 0, 2, 3).astype(f32),
+          v.transpose(1, 0, 2, 3).astype(f32),
+          i_log.transpose(1, 0, 2).astype(f32),
+          f_log.transpose(1, 0, 2).astype(f32))
+    _, ys = jax.lax.scan(step, carry, xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def _mlstm_chunked(q, k, v, i_log, f_log, chunk):
+    """Chunkwise-parallel mLSTM (same math, O(S/c) sequential steps).
+
+    Within a chunk the gated attention matrix D is formed directly from
+    cumulative log-f; across chunks the (Dqk, Dv) state recurs once per
+    chunk.  Beyond-paper perf path for long prefill (see EXPERIMENTS §Perf).
+    """
+    f32 = jnp.float32
+    B, S, H, Dqk = q.shape
+    Dv = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    qc = q.reshape(B, nc, c, H, Dqk).astype(f32)
+    kc = k.reshape(B, nc, c, H, Dqk).astype(f32)
+    vc = v.reshape(B, nc, c, H, Dv).astype(f32)
+    il = i_log.reshape(B, nc, c, H).astype(f32)
+    fl = f_log.reshape(B, nc, c, H).astype(f32)
+    fcum = jnp.cumsum(fl, axis=2)                       # (B,nc,c,H)
+    ftot = fcum[:, :, -1, :]                            # (B,nc,H)
+
+    # intra-chunk: D[i,j] = exp(fcum_i - fcum_j + il_j), j <= i (stabilized)
+    lj = il - fcum                                      # (B,nc,c,H)
+    # stabilizer per (chunk, head): max over j of lj and the inbound state mag
+    m_intra = jnp.max(lj, axis=2)                       # (B,nc,H)
+
+    # inter-chunk recurrence over chunk boundary states
+    def step(carry, inp):
+        C, n, m = carry                                 # (B,H,Dqk,Dv) ...
+        kcx, vcx, ljx, fcx, ftx, mix = inp
+        # state scale entering the next chunk = sequential m at chunk end:
+        # ftot + max(m_inbound, max_j lj_j)
+        m_new = ftx + jnp.maximum(m, mix)               # (B,H)
+        # this chunk's token contributions: exp(il_j + ftot - fcum_j - m_new)
+        w = jnp.exp(ljx + ftx[:, None] - m_new[:, None])            # (B,c,H)
+        C_new = jnp.exp(ftx + m - m_new)[..., None, None] * C + jnp.einsum(
+            "bch,bchk,bchv->bhkv", w, kcx, vcx)
+        n_new = jnp.exp(ftx + m - m_new)[..., None] * n + jnp.einsum(
+            "bch,bchk->bhk", w, kcx)
+        return (C_new, n_new, m_new), (C, n, m)
+
+    # m starts at 0 (matching the sequential cell): the stabilizer enters the
+    # value through max(|n.q|, exp(-m)), so the init is part of the function.
+    carry0 = (jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
+              jnp.zeros((B, H), f32))
+    from repro.nn.layers import cost_scan
+    xs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+          lj.transpose(1, 0, 2, 3), fcum.transpose(1, 0, 2, 3),
+          ftot.transpose(1, 0, 2), m_intra.transpose(1, 0, 2))
+    _, (C_in, n_in, m_in) = cost_scan(step, carry0, xs)
+    C_in = C_in.transpose(1, 0, 2, 3, 4)                # (B,nc,H,Dqk,Dv)
+    n_in = n_in.transpose(1, 0, 2, 3)
+    m_in = m_in.transpose(1, 0, 2)                      # (B,nc,H)
+
+    # per-position stabilizer: max(intra candidates j<=i, inbound state scale)
+    m_run = jax.lax.cummax(lj, axis=2)                  # (B,nc,c,H)
+    m_tok = fcum + jnp.maximum(m_in[:, :, None, :], m_run)  # (B,nc,c,H)
+
+    # intra-chunk scores: exp(fcum_i + lj_j - m_tok_i) for j<=i
+    sij = (fcum[:, :, :, None, :] + lj[:, :, None, :, :]
+           - m_tok[:, :, :, None, :])                   # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    Dmat = jnp.where(mask[None, None, :, :, None], jnp.exp(sij), 0.0)
+    scores = jnp.einsum("bzihk,bzjhk->bzijh", qc, kc)   # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bzijh,bzijh,bzjhv->bzihv", scores, Dmat, vc)
+    qn_intra = jnp.einsum("bzijh,bzijh->bzih", scores, Dmat)   # q.n intra
+
+    # inter-chunk: decay inbound state to position i
+    dec = jnp.exp(fcum + m_in[:, :, None, :] - m_tok)   # (B,nc,c,H)
+    y_inter = jnp.einsum("bzch,bzchk,bzhkv->bzchv", dec, qc, C_in)
+    qn_inter = jnp.einsum("bzch,bzchk,bzhk->bzch", dec, qc, n_in)
+
+    num = y_intra + y_inter                             # (B,nc,c,H,Dv)
+    # sequential cell clamps the *scaled* denominator at 1 (its n, q carry
+    # the exp(-m) scale already), so the chunked clamp is also exactly 1.
+    den = jnp.maximum(jnp.abs(qn_intra + qn_inter), 1.0)
+    y = num / den[..., None]
+    return y.reshape(B, S, H, Dv)
+
+
+def mlstm_core(shared, h, z, cfg, rt: Runtime, *, chunked=False):
+    """h (B,S,inner) pre-conv input branch; z gate branch."""
+    inner, qk, nh, dqk, dv = mlstm_dims(cfg)
+    B, S, _ = h.shape
+    c = silu(causal_conv1d(h, shared["conv_w"], shared["conv_b"]))
+    qkv = dense(c, shared["w_qk"])
+    q, k = jnp.split(qkv, 2, axis=-1)
+    v = dense(h, shared["w_v2"])
+    q = q.reshape(B, S, nh, dqk)
+    k = k.reshape(B, S, nh, dqk) * (dqk ** -0.5)
+    v = v.reshape(B, S, nh, dv)
+    if_ = dense(c, shared["w_if"]).astype(jnp.float32) + shared["b_if"]
+    i_log, f_pre = jnp.split(if_, 2, axis=-1)           # (B,S,H)
+    f_log = -jax.nn.softplus(-f_pre)                    # logsigmoid
+    fn = _mlstm_chunked if chunked else _mlstm_scan
+    if chunked:
+        y = fn(q, k, v, i_log, f_log, cfg.xlstm.chunk)
+    else:
+        y = fn(q, k, v, i_log, f_log)
+    y = _headnorm(y, shared["gn_scale"], cfg.norm_eps).astype(h.dtype)
+    return y * silu(z)
+
+
+def mlstm_apply(params, x, cfg, rt: Runtime):
+    h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    z = dense(x, params["w_gate"])
+    y = mlstm_core(params, h, z, cfg, rt, chunked=cfg.xlstm.chunk > 0)
+    return dense(y, params["w_out"]), {}
+
+
+def mlstm_init_state(cfg, batch, dtype):
+    inner, qk, nh, dqk, dv = mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    return {"C": jnp.zeros((batch, nh, dqk, dv), jnp.float32),
+            "n": jnp.zeros((batch, nh, dqk), jnp.float32),
+            "m": jnp.zeros((batch, nh), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, inner), dtype)}
+
+
+def mlstm_core_step(shared, h_t, z_t, state, cfg, rt: Runtime):
+    inner, qk, nh, dqk, dv = mlstm_dims(cfg)
+    B = h_t.shape[0]
+    c, conv_buf = causal_conv1d_step(h_t, state["conv"], shared["conv_w"],
+                                     shared["conv_b"])
+    c = silu(c)
+    qkv = dense(c, shared["w_qk"])
+    q, k = jnp.split(qkv, 2, axis=-1)
+    v = dense(h_t, shared["w_v2"])
+    q = q.reshape(B, nh, dqk).astype(jnp.float32)
+    k = (k.reshape(B, nh, dqk) * (dqk ** -0.5)).astype(jnp.float32)
+    v = v.reshape(B, nh, dv).astype(jnp.float32)
+    if_ = dense(c, shared["w_if"]).astype(jnp.float32) + shared["b_if"]
+    il, fp = jnp.split(if_, 2, axis=-1)
+    fl = -jax.nn.softplus(-fp)
+    m_new = jnp.maximum(fl + state["m"], il)
+    fpx = jnp.exp(fl + state["m"] - m_new)
+    ipx = jnp.exp(il - m_new)
+    C = fpx[..., None, None] * state["C"] + ipx[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fpx[..., None] * state["n"] + ipx[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    y = num / jnp.maximum(den, 1.0)[..., None]
+    y = _headnorm(y, shared["gn_scale"], cfg.norm_eps).astype(h_t.dtype)
+    new_state = {"C": C, "n": n, "m": m_new, "conv": conv_buf}
+    return y * silu(z_t), new_state
+
+
+def mlstm_step(params, x_t, state, pos, cfg, rt: Runtime):
+    xt = x_t[:, 0]
+    h_t = dense(xt, params["w_in"])
+    z_t = dense(xt, params["w_gate"])
+    y, state = mlstm_core_step(params, h_t, z_t, state, cfg, rt)
+    out = dense(y, params["w_out"])
+    return out[:, None], state, {}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, recurrent gates (strictly sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    nh = cfg.xlstm.num_heads
+    inner = cfg.d_model
+    return inner, nh, inner // nh
+
+
+def slstm_init(key, cfg):
+    inner, nh, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_ff = int(cfg.xlstm.slstm_ff * cfg.d_model)
+    b = jnp.zeros((4 * inner,), jnp.float32)
+    b = b.at[inner:2 * inner].set(3.0)          # forget bias
+    return {
+        "w_slstm": dense_init(ks[0], cfg.d_model, 4 * inner,
+                              dtype=cfg.param_dtype),
+        "r_slstm": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) *
+                    dh ** -0.5).astype(jnp.float32),
+        "b_slstm": b,
+        "gn_scale": jnp.ones((inner,), jnp.float32),
+        "w_up": dense_init(ks[2], inner, d_ff, dtype=cfg.param_dtype),
+        "w_gate_ffn": dense_init(ks[3], inner, d_ff, dtype=cfg.param_dtype),
+        "w_down": dense_init(ks[4], d_ff, inner, dtype=cfg.param_dtype),
+    }
+
+
+def _slstm_cell(params, gx, carry, cfg):
+    """gx (B,4*inner) pre-activation from x; carry (c, n, h, m) heads (B,H,dh)."""
+    inner, nh, dh = slstm_dims(cfg)
+    c_, n_, h_, m_ = carry
+    rec = jnp.einsum("bhd,hdg->bhg", h_, params["r_slstm"])      # (B,H,4dh)
+    g = gx.reshape(-1, nh, 4 * dh).astype(jnp.float32) + rec \
+        + params["b_slstm"].reshape(nh, 4 * dh)
+    il, fp, z, o = jnp.split(g, 4, axis=-1)                      # (B,H,dh)
+    fl = -jax.nn.softplus(-fp)                                   # logsigmoid
+    m_new = jnp.maximum(fl + m_, il)
+    i = jnp.exp(il - m_new)
+    f = jnp.exp(fl + m_ - m_new)
+    c_new = f * c_ + i * jnp.tanh(z)
+    n_new = f * n_ + i
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params, x, cfg, rt: Runtime):
+    inner, nh, dh = slstm_dims(cfg)
+    B, S, _ = x.shape
+    gx = dense(x, params["w_slstm"])
+
+    def step(carry, g_t):
+        return _slstm_cell(params, g_t, carry, cfg)
+
+    z0 = jnp.zeros((B, nh, dh), jnp.float32)
+    carry = (z0, z0, z0, jnp.full((B, nh, dh), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, carry, gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3)                                 # (B,S,H,dh)
+    h = _headnorm(h, params["gn_scale"], cfg.norm_eps).astype(x.dtype)
+    # folded post-FFN (xLSTM block layout)
+    u = dense(h, params["w_up"]) * silu(dense(h, params["w_gate_ffn"]))
+    return dense(u, params["w_down"]), {}
+
+
+def slstm_init_state(cfg, batch, dtype):
+    inner, nh, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def slstm_step(params, x_t, state, pos, cfg, rt: Runtime):
+    xt = x_t[:, 0]
+    gx = dense(xt, params["w_slstm"])
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_cell(params, gx, carry, cfg)
+    h = _headnorm(h, params["gn_scale"], cfg.norm_eps).astype(xt.dtype)
+    u = dense(h, params["w_up"]) * silu(dense(h, params["w_gate_ffn"]))
+    out = dense(u, params["w_down"])
+    return out[:, None], dict(zip(("c", "n", "h", "m"), carry)), {}

@@ -1,0 +1,151 @@
+"""Optimizers (pure-pytree, no external deps) + schedules + clipping.
+
+AdamW matches the paper's recipe (b1=0.9, b2=0.95, wd=0.1, clip 1.0, cosine
+with warmup).  Adafactor (factored second moment) is the default for the
+400B-class assigned arch, where full Adam state would not fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                  grads), gn
+
+
+def cosine_lr(step, *, base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum((step + 1) / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params)}
+
+
+def adamw_update(grads, opt, params, lr, cfg: AdamWConfig, count):
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 1:        # decoupled weight decay (not on scalars)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, opt["m"], opt["v"], params)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moment for matrices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8          # \hat{beta2}_t = 1 - t^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.1
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"stats": jax.tree_util.tree_map(one, params)}
+
+
+def adafactor_update(grads, opt, params, lr, cfg: AdafactorConfig, count):
+    t = count.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-cfg.decay)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps1
+        if _factored(p):
+            vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(-2)
+            denom = jnp.maximum(vr.mean(-1, keepdims=True),
+                                cfg.eps1)[..., None]     # (..., 1, 1)
+            u = g * jax.lax.rsqrt(vr[..., None] / denom) \
+                * jax.lax.rsqrt(vc[..., None, :])
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v)
+            new_st = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        newp = p.astype(jnp.float32) - lr * u
+        if p.ndim >= 1:
+            newp = newp - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), new_st
+
+    flat = jax.tree_util.tree_map(
+        upd, grads, opt["stats"], params,
+        is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+    is_pair = lambda x: isinstance(x, tuple)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
+    new_s = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
+    return new_p, {"stats": new_s}
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return (adamw_init,
+                lambda g, o, p, lr, c: adamw_update(g, o, p, lr,
+                                                    AdamWConfig(), c))
+    if name == "adafactor":
+        return (adafactor_init,
+                lambda g, o, p, lr, c: adafactor_update(g, o, p, lr,
+                                                        AdafactorConfig(), c))
+    raise KeyError(name)

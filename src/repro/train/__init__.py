@@ -1,0 +1,180 @@
+"""Train/serve step factories: pjit-sharded, grad-accumulated, remat-aware.
+
+``make_train_step(cfg, mesh)`` returns a jit-compiled ``(state, batch) ->
+(state, metrics)`` with in/out shardings resolved from the logical-axis
+tables; ``make_serve_step`` the one-token decode analogue.  Both are what
+the multi-pod dry-run lowers and what the examples run on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shd
+from repro.models import lm
+
+
+def train_state_shapes(cfg, key=None):
+    """abstract TrainState pytree via eval_shape (no allocation)."""
+    def init():
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        opt_init, _ = optim.make_optimizer(cfg.optimizer)
+        return {"params": params, "opt": opt_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+    return jax.eval_shape(init)
+
+
+def init_train_state(cfg, seed=0):
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_init, _ = optim.make_optimizer(cfg.optimizer)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shardings(state_shapes, mesh, rules=None):
+    rules = rules or shd.ShardingRules()
+    specs = shd.param_specs(state_shapes, mesh, rules, lenient=True)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_shapes, mesh):
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if leaf.shape[0] % max(
+                1, int(jnp.prod(jnp.array([mesh.shape[a] for a in dp])))) == 0 \
+                and dp:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    base_lr: float = 4e-4
+    warmup_steps: int = 95
+    total_steps: int = 9535
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+
+
+def make_train_fn(cfg, mesh=None, rules=None, hp: TrainHParams = TrainHParams()):
+    """The raw (state, batch) -> (state, metrics) function (un-jitted)."""
+    rules = rules or shd.ShardingRules()
+    _, opt_update = optim.make_optimizer(cfg.optimizer)
+
+    def loss_for(params, batch, rng):
+        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=rng, train=True)
+        return lm.loss_fn(params, batch, cfg, rt)
+
+    def train_step(state, batch):
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), state["step"])
+        params = state["params"]
+        if hp.grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch, rng)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb, rng)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((hp.grad_accum,
+                                     x.shape[0] // hp.grad_accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / hp.grad_accum, grads)
+            loss = loss / hp.grad_accum
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(0), ms)
+        grads, gnorm = optim.clip_by_global_norm(grads, hp.grad_clip)
+        lr = optim.cosine_lr(state["step"], base_lr=hp.base_lr,
+                             warmup_steps=hp.warmup_steps,
+                             total_steps=hp.total_steps)
+        new_params, new_opt = opt_update(grads, state["opt"], params, lr,
+                                         state["step"])
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_train_step(cfg, mesh, rules=None, hp: TrainHParams = TrainHParams(),
+                    donate=True):
+    """jit-wrapped train step with explicit in/out shardings for ``mesh``."""
+    rules = rules or shd.ShardingRules()
+    fn = make_train_fn(cfg, mesh, rules, hp)
+    shapes = train_state_shapes(cfg)
+    st_sh = state_shardings(shapes, mesh, rules)
+    return jax.jit(fn,
+                   in_shardings=(st_sh, None),
+                   out_shardings=(st_sh, None),
+                   donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_fn(cfg, mesh=None, rules=None):
+    """Run the full-sequence forward to produce logits (no cache install —
+    SSM/hybrid archs re-run prefix through decode in examples; the dry-run
+    uses this for the prefill_* shapes)."""
+    rules = rules or shd.ShardingRules()
+
+    def prefill(params, batch):
+        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                        train=False)
+        logits, aux = lm.forward(params, batch, cfg, rt)
+        return logits
+
+    return prefill
+
+
+def make_serve_fn(cfg, mesh=None, rules=None):
+    rules = rules or shd.ShardingRules()
+
+    def serve_step(params, state, tokens_t, pos):
+        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                        train=False)
+        logits, new_state = lm.decode_step(params, state, tokens_t, pos,
+                                           cfg, rt)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_state
+
+    return serve_step
+
+
+def serve_state_shardings(cfg, state_shapes, mesh, rules=None):
+    rules = rules or shd.ShardingRules()
+    a = cfg.attention
+    m = mesh.shape.get("model", 1)
+    heads_ok = a is not None and a.num_heads % m == 0 \
+        and a.num_kv_heads % m == 0
+
+    def one(path, leaf):
+        la = lm.state_logical(path, leaf)
+        if heads_ok and la[-3:] == ("act_kv_seq", None, None):
+            # heads divide the model axis: shard cache heads, not seq
+            la = la[:-3] + (None, "heads", None)
+        spec = shd.resolve_spec(leaf.shape, la, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)

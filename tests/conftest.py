@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: device count stays 1 here (smoke tests and
+benches must see the real host); only launch/dryrun.py forces 512 devices,
+and multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def repo_src():
+    return os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a fresh process with a fake device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_in_subprocess

@@ -1,0 +1,100 @@
+"""Dry-run machinery tests: HLO collective parsing + one real (tiny) cell
+lowered on fake 8-device production-mesh-shaped topology (the 512-chip
+cells run via launch/dryrun.py; this keeps CI minutes sane)."""
+import pytest
+
+from repro.distributed import hlo_analysis as hlo
+
+pytestmark = []
+
+
+HLO_SAMPLE = """
+  %all-reduce = f32[128,1024]{1,0} all-reduce(%x), channel_id=1, replica_groups=[32,16]<=[512], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[256,512]{1,0} all-gather(%y), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%z), channel_id=3, replica_groups=[2,256]<=[512], dimensions={0}, to_apply=%add
+  %a2a = bf16[16,32]{1,0} all-to-all(%w), channel_id=4, replica_groups=[64,8]<=[512], dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%v), channel_id=5, source_target_pairs={{0,1},{1,0}}
+  %noop = f32[4]{0} add(%a, %b)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = hlo.parse_collectives(HLO_SAMPLE)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    assert st.bytes_by_kind["all-reduce"] == 128 * 1024 * 4
+    assert st.bytes_by_kind["all-gather"] == 256 * 512 * 2
+    # ring models
+    g = 16
+    ar = st.wire_bytes_by_kind["all-reduce"]
+    assert abs(ar - 2 * 128 * 1024 * 4 * (g - 1) / g) < 1
+    ag = st.wire_bytes_by_kind["all-gather"]
+    assert abs(ag - 256 * 512 * 2 * 3 / 4) < 1
+    rs = st.wire_bytes_by_kind["reduce-scatter"]
+    assert abs(rs - 64 * 4 * 255) < 1
+    # group of 256 uses ICI; collective seconds are positive and finite
+    assert st.seconds > 0
+
+
+def test_cross_pod_uses_dcn_rate():
+    line = ("  %ar = f32[1024]{0} all-reduce(%x), channel_id=9, "
+            "replica_groups=[1,512]<=[512], to_apply=%add")
+    st = hlo.parse_collectives(line)
+    w = st.wire_bytes_by_kind["all-reduce"]
+    assert abs(st.seconds - w / hlo.DCN_BW) < 1e-12   # 512 > pod size
+
+
+def test_roofline_terms_bottleneck():
+    st = hlo.parse_collectives("")
+    terms = hlo.roofline_terms({"flops": 197e12, "bytes accessed": 1e9}, st)
+    assert terms["bottleneck"] == "compute"
+    assert abs(terms["compute_s"] - 1.0) < 1e-9
+    terms = hlo.roofline_terms({"flops": 1e12, "bytes accessed": 819e9}, st)
+    assert terms["bottleneck"] == "memory"
+    assert abs(terms["memory_s"] - 1.0) < 1e-9
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import get_config, SHAPES
+    cfg = get_config("qwen1.5-0.5b")
+    f_train = hlo.model_flops(cfg, SHAPES["train_4k"], 256)
+    f_decode = hlo.model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert f_train > 100 * f_decode          # 6N*S vs 2N*1 per sequence
+    assert f_train > 0 and f_decode > 0
+
+
+@pytest.mark.slow
+def test_tiny_cell_lowers_on_8_devices(subproc):
+    """The full lower->compile->analyse pipeline on a mesh-shaped topology
+    (2x2x2 pod/data/model) with a reduced config."""
+    subproc("""
+import os
+import jax, jax.numpy as jnp
+from repro.configs.all_configs import reduce_for_smoke
+from repro.configs.base import get_config, InputShape
+from repro import train as tr
+from repro.launch import specs as sp
+from repro.distributed import hlo_analysis as hlo
+from repro.distributed.sharding import ShardingRules
+
+cfg = reduce_for_smoke(get_config("rom-mamba-115m"))
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+shape = InputShape("tiny", 64, 8, "train")
+fn = tr.make_train_fn(cfg, mesh, ShardingRules())
+st_shapes = tr.train_state_shapes(cfg)
+st_sh = tr.state_shardings(st_shapes, mesh)
+batch = sp.input_specs(cfg, shape)
+b_sh = tr.batch_shardings(batch, mesh)
+lowered = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                  out_shardings=(st_sh, None)).lower(st_shapes, batch)
+compiled = lowered.compile()
+cost = compiled.cost_analysis()
+colls = hlo.parse_collectives(compiled.as_text())
+terms = hlo.roofline_terms(cost, colls)
+assert terms["hlo_flops_per_device"] > 0
+assert compiled.memory_analysis().temp_size_in_bytes > 0
+print("tiny multi-pod cell OK:", terms["bottleneck"],
+      sorted(colls.counts.items()))
+""", n_devices=8, timeout=900)

@@ -1,0 +1,118 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes (spec requirement c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+
+
+def _scan_inputs(key, B, S, De, N, dtype):
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (B, S, De)).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, De)) - 1.0)
+          ).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (De, N)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N)).astype(dtype)
+    D = jnp.ones((De,), jnp.float32) * 0.5
+    return u, dt, A, Bm, Cm, D
+
+
+@pytest.mark.parametrize("B,S,De,N,chunk", [
+    (1, 32, 8, 4, 8), (2, 64, 16, 16, 16), (2, 128, 32, 16, 64),
+    (1, 96, 8, 8, 32),   # S % chunk == 0 held by construction below
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan_pallas_vs_ref(B, S, De, N, chunk, dtype):
+    u, dt, A, Bm, Cm, D = _scan_inputs(jax.random.PRNGKey(0), B, S, De, N,
+                                       dtype)
+    y_ref = ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=chunk)
+    y_pal = ops.selective_scan(u, dt, A, Bm, Cm, D, chunk=chunk,
+                               impl="interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_selective_scan_ref_vs_naive():
+    u, dt, A, Bm, Cm, D = _scan_inputs(jax.random.PRNGKey(1), 2, 48, 8, 4,
+                                       jnp.float32)
+    y_ref = ref.selective_scan_ref(u, dt, A, Bm, Cm, None, chunk=16)
+    y_naive = ref.selective_scan_naive(u, dt, A, Bm, Cm, None)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_naive),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_selective_scan_step_consistency():
+    u, dt, A, Bm, Cm, D = _scan_inputs(jax.random.PRNGKey(2), 2, 16, 8, 4,
+                                       jnp.float32)
+    y_full = ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=8)
+    h = jnp.zeros((2, 8, 4), jnp.float32)
+    ys = []
+    for t in range(16):
+        h, y = ref.selective_scan_step(h, u[:, t], dt[:, t], A, Bm[:, t],
+                                       Cm[:, t], D)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (2, 8, 16, 8), (4, 32, 64, 32), (3, 16, 40, 24), (8, 8, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_pallas_vs_ref(E, C, D, F, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (E, C, D)).astype(dtype)
+    w = jax.random.normal(ks[1], (E, D, F)).astype(dtype) * 0.1
+    gs = jax.random.randint(ks[2], (E,), 0, C + 1)
+    y_ref = ref.grouped_matmul_ref(x, w, gs)
+    y_pal = grouped_matmul_pallas(x, w, gs, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_grouped_matmul_zero_and_full_groups():
+    x = jnp.ones((3, 8, 16))
+    w = jnp.ones((3, 16, 8))
+    gs = jnp.array([0, 8, 3])
+    y = grouped_matmul_pallas(x, w, gs, interpret=True)
+    assert float(jnp.abs(y[0]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(y[1]), 16.0)
+    assert float(jnp.abs(y[2, 3:]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(y[2, :3]), 16.0)
+
+
+def test_selective_scan_bf16_accumulation_close():
+    """scan_dtype=bfloat16 (perf knob, §Perf) stays near the f32 scan."""
+    u, dt, A, Bm, Cm, D = _scan_inputs(jax.random.PRNGKey(5), 2, 64, 16, 8,
+                                       jnp.bfloat16)
+    y32 = ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=16)
+    y16 = ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=16,
+                                 acc_dtype=jnp.bfloat16)
+    err = np.abs(np.asarray(y16, np.float32) - np.asarray(y32, np.float32))
+    scale = np.abs(np.asarray(y32, np.float32)).max()
+    assert err.max() / scale < 0.05
+
+
+def test_diag_recurrence_vs_naive():
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    B, S, D = 2, 40, 8
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (B, S, D)))
+    b = jax.random.normal(ks[1], (B, S, D))
+    y = ref.diag_recurrence(log_a, b, chunk=16)
+    h = np.zeros((B, D), np.float32)
+    outs = []
+    la, bb = np.asarray(log_a), np.asarray(b)
+    for t in range(S):
+        h = np.exp(la[:, t]) * h + bb[:, t]
+        outs.append(h.copy())
+    np.testing.assert_allclose(np.asarray(y), np.stack(outs, 1), atol=1e-4,
+                               rtol=1e-4)

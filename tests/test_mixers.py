@@ -1,0 +1,116 @@
+"""Token-mixer equivalences: full-sequence vs single-token decode steps,
+and chunked-parallel vs sequential forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (GDNConfig, Mamba2Config, MambaConfig,
+                                ModelConfig, RGLRUConfig, XLSTMConfig)
+from repro.distributed.sharding import ShardCtx
+from repro.nn import rglru as rgl
+from repro.nn import ssm
+from repro.nn import xlstm as xl
+from repro.nn.layers import Runtime
+
+RT = Runtime(shard=ShardCtx())
+
+
+def _cfg(**kw):
+    base = dict(name="t", d_model=32, vocab_size=64,
+                segments=((("mamba",), 1),),
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+MIX = [
+    ("mamba", ssm.mamba_init, ssm.mamba_apply, ssm.mamba_init_state,
+     ssm.mamba_step, 1e-4),
+    ("mamba2", ssm.mamba2_init, ssm.mamba2_apply, ssm.mamba2_init_state,
+     ssm.mamba2_step, 5e-4),
+    ("gdn", ssm.gdn_init, ssm.gdn_apply, ssm.gdn_init_state, ssm.gdn_step,
+     5e-4),
+    ("rglru", rgl.rglru_init, rgl.rglru_apply, rgl.rglru_init_state,
+     rgl.rglru_step, 1e-4),
+    ("mlstm", xl.mlstm_init, xl.mlstm_apply, xl.mlstm_init_state,
+     xl.mlstm_step, 5e-4),
+    ("slstm", xl.slstm_init, xl.slstm_apply, xl.slstm_init_state,
+     xl.slstm_step, 1e-4),
+]
+
+
+@pytest.mark.parametrize("name,init,apply,init_state,step,tol", MIX)
+def test_step_matches_sequence(name, init, apply, init_state, step, tol):
+    cfg = _cfg()
+    B, S = 2, 16
+    params = init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    y_full, _ = apply(params, x, cfg, RT)
+    st = init_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, st, _ = step(params, x[:, t:t + 1], st, jnp.int32(t), cfg, RT)
+        outs.append(y)
+    y_steps = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               atol=tol, rtol=tol)
+
+
+def test_mlstm_chunked_matches_sequential():
+    cfg = _cfg()
+    params = xl.mlstm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32)) * 0.5
+    h = x @ params["w_in"]
+    z = x @ params["w_gate"]
+    y_seq = xl.mlstm_core(params, h, z, cfg, RT, chunked=False)
+    y_chk = xl.mlstm_core(params, h, z, cfg, RT, chunked=True)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Mamba-2 SSD output must not depend on the chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    B, S, H, P, N = 2, 64, 2, 8, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    y8 = ssm.ssd_chunked(x, a, Bm, Cm, 8)
+    y16 = ssm.ssd_chunked(x, a, Bm, Cm, 16)
+    y64 = ssm.ssd_chunked(x, a, Bm, Cm, 64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_selective_scan_chunk_invariance():
+    from repro.kernels import ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, De, N = 2, 64, 8, 4
+    u = jax.random.normal(ks[0], (B, S, De))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, De)))
+    A = -jnp.exp(jax.random.normal(ks[2], (De, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y8 = ref.selective_scan_ref(u, dt, A, Bm, Cm, chunk=8)
+    y32 = ref.selective_scan_ref(u, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rglru_stability():
+    """RG-LRU is a contraction: bounded inputs give bounded states at long S."""
+    cfg = _cfg()
+    params = rgl.rglru_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 32))
+    y, _ = rgl.rglru_apply(params, x, cfg, RT)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.abs(y).max()) < 1e3

@@ -1,0 +1,134 @@
+"""Router + dispatch invariants, including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import moe_dispatch as md
+from repro.core import router as rtr
+
+
+def _route(key, G, g, D, E, K, **kw):
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (G, g, D))
+    w = rtr.router_init(ks[1], D, E)
+    return x, rtr.route(w, x, num_experts=E, top_k=K, **kw)
+
+
+def test_topk_weights_are_selected_probs():
+    x, r = _route(jax.random.PRNGKey(0), 2, 32, 8, 8, 2)
+    probs = np.asarray(r.probs)
+    idx = np.asarray(r.expert_idx)
+    w = np.asarray(r.weights)
+    for gi in range(2):
+        for t in range(32):
+            top = np.sort(probs[gi, t])[::-1][:2]
+            np.testing.assert_allclose(np.sort(w[gi, t])[::-1], top,
+                                       rtol=1e-5)
+            assert len(set(idx[gi, t])) == 2            # distinct experts
+
+
+def test_normalized_weights_sum_to_one():
+    x, r = _route(jax.random.PRNGKey(1), 1, 16, 8, 4, 3,
+                  normalize_weights=True)
+    np.testing.assert_allclose(np.asarray(r.weights.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_jitter_changes_routing_only_in_train():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 64, 16))
+    w = rtr.router_init(key, 16, 8)
+    r_eval = rtr.route(w, x, num_experts=8, top_k=1, jitter_eps=0.5,
+                       rng=jax.random.PRNGKey(3), train=False)
+    r_eval2 = rtr.route(w, x, num_experts=8, top_k=1, jitter_eps=0.5,
+                        rng=jax.random.PRNGKey(4), train=False)
+    assert np.array_equal(np.asarray(r_eval.expert_idx),
+                          np.asarray(r_eval2.expert_idx))
+    r_tr = rtr.route(w, x, num_experts=8, top_k=1, jitter_eps=0.5,
+                     rng=jax.random.PRNGKey(3), train=True)
+    r_tr2 = rtr.route(w, x, num_experts=8, top_k=1, jitter_eps=0.5,
+                      rng=jax.random.PRNGKey(4), train=True)
+    assert not np.array_equal(np.asarray(r_tr.expert_idx),
+                              np.asarray(r_tr2.expert_idx))
+
+
+@settings(deadline=None, max_examples=25)
+@given(g=st.integers(4, 64), E=st.integers(2, 8), K=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1), cf=st.floats(0.5, 4.0))
+def test_dispatch_combine_matches_dense_when_no_drops(g, E, K, seed, cf):
+    K = min(K, E)
+    D, F = 8, 6
+    key = jax.random.PRNGKey(seed)
+    x, r = _route(key, 1, g, D, E, K)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (E, D, F)) * 0.3
+    dsp = md.make_dispatch(r, capacity_factor=float(E))  # capacity >= g*K
+    lin = md.SharedMoELinear(dsp)
+    y_cap = lin(x, w, weighted=True)
+    y_dense = md.dense_moe_linear(r, x, w, weighted=True)
+    assert float(dsp.drop_frac) < 1e-6        # f32 mean noise only
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-4)
+    # tight capacity never corrupts non-dropped assignments: each kept token
+    # differs from dense only by the dropped assignments' contributions
+    dsp_t = md.make_dispatch(r, capacity_factor=cf)
+    lin_t = md.SharedMoELinear(dsp_t)
+    y_t = lin_t(x, w, weighted=True)
+    assert np.all(np.isfinite(np.asarray(y_t)))
+
+
+@settings(deadline=None, max_examples=20)
+@given(g=st.integers(4, 48), E=st.integers(2, 8), seed=st.integers(0, 10**6))
+def test_dispatch_slot_accounting(g, E, seed):
+    """Every non-dropped assignment occupies exactly one slot of its expert,
+    in token order; group_sizes match the routing histogram."""
+    key = jax.random.PRNGKey(seed)
+    x, r = _route(key, 1, g, 8, E, 1)
+    dsp = md.make_dispatch(r, capacity_factor=float(E))
+    idx = np.asarray(r.expert_idx)[0, :, 0]
+    sizes = np.asarray(dsp.group_sizes)[0]
+    hist = np.bincount(idx, minlength=E)
+    np.testing.assert_array_equal(sizes, hist)
+    tfs = np.asarray(dsp.token_for_slot)[0].reshape(E, dsp.capacity)
+    valid = np.asarray(dsp.slot_valid)[0].reshape(E, dsp.capacity)
+    for e in range(E):
+        toks = tfs[e][valid[e]]
+        expect = np.where(idx == e)[0]
+        np.testing.assert_array_equal(toks, expect)   # stable token order
+
+
+def test_ragged_matches_capacity():
+    x, r = _route(jax.random.PRNGKey(7), 1, 40, 8, 4, 2)
+    w = jax.random.normal(jax.random.PRNGKey(8), (4, 8, 6)) * 0.3
+    dsp = md.make_dispatch(r, capacity_factor=4.0)
+    y_cap = md.SharedMoELinear(dsp)(x, w, weighted=True)
+    y_rag = md.ragged_moe_linear(dsp, x, w, weighted=True)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_rag),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_impl_matches_capacity():
+    x, r = _route(jax.random.PRNGKey(9), 2, 32, 8, 4, 1)
+    w = jax.random.normal(jax.random.PRNGKey(10), (4, 8, 6)) * 0.3
+    dsp = md.make_dispatch(r, capacity_factor=4.0)
+    y_cap = md.SharedMoELinear(dsp, impl="capacity")(x, w, weighted=False)
+    y_grp = md.SharedMoELinear(dsp, impl="grouped")(x, w, weighted=False)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_grp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_aux_loss_balanced_vs_collapsed():
+    """Uniform routing minimizes the Switch aux loss; collapse maximizes."""
+    E, g = 4, 256
+    probs_bal = jnp.full((1, g, E), 1.0 / E)
+    idx_bal = jnp.tile(jnp.arange(E), g // E).reshape(1, g, 1)
+    probs_col = jnp.zeros((1, g, E)).at[..., 0].set(1.0)
+    idx_col = jnp.zeros((1, g, 1), jnp.int32)
+
+    def aux(probs, idx):
+        onehot = jax.nn.one_hot(idx, E)
+        load = onehot.sum((1, 2)) / g
+        return float(E * jnp.mean(jnp.sum(load * probs.mean(1), -1)))
+
+    assert abs(aux(probs_bal, idx_bal) - 1.0) < 1e-5
+    assert aux(probs_col, idx_col) > 3.9

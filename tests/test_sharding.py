@@ -1,0 +1,97 @@
+"""Logical-axis sharding resolution — uses AbstractMesh, so the production
+(16,16) and (2,16,16) topologies are checked without 512 devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import train as tr
+from repro.configs.base import ASSIGNED_ARCHS, get_config, SHAPES
+from repro.distributed import sharding as shd
+from repro.launch import specs as sp
+from repro.models import lm
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_resolver_divisibility_fallback():
+    rules = shd.ShardingRules()
+    # kv_heads=8 with model=16: not divisible -> replicated
+    spec = shd.resolve_spec((8, 128), ("heads", "head_dim"), SINGLE, rules)
+    assert spec == P(None, "model")       # falls through to head_dim
+    spec = shd.resolve_spec((32, 128), ("heads", None), SINGLE, rules)
+    assert spec == P("model")
+    # same mesh axis never used twice in one tensor
+    spec = shd.resolve_spec((4096, 4096), ("mlp", "qkv"), SINGLE, rules)
+    assert spec == P("model")             # second dim falls to None
+
+
+def test_batch_axis_uses_pod_and_data():
+    rules = shd.ShardingRules()
+    spec = shd.resolve_spec((256, 4096), ("act_batch", "act_seq"), MULTI,
+                            rules)
+    assert spec == P(("pod", "data"))
+    # batch=1 (long_500k): replicated
+    spec = shd.resolve_spec((1, 4096), ("act_batch", "act_seq"), MULTI,
+                            rules)
+    assert spec == P()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_every_param_leaf_resolves(arch, mesh):
+    """Catches any param leaf missing from AXES_BY_NAME, for every arch."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0),
+                                                   cfg))
+    specs = shd.param_specs(shapes, mesh, shd.ShardingRules())  # no lenient
+    n = len(jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P)))
+    assert n == len(jax.tree_util.tree_leaves(
+        shapes, is_leaf=lambda x: hasattr(x, "shape")))
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "xlstm-350m",
+                                  "recurrentgemma-2b", "rom-mamba-1.3b"])
+def test_decode_state_leaves_resolve(arch):
+    cfg = get_config(arch)
+    from repro.configs.base import applicable_shapes
+    shp = applicable_shapes(cfg)["decode_32k"][0]
+    if shp is None:
+        pytest.skip("no decode for this arch")
+    st = sp.decode_state_shapes(cfg, shp)
+
+    def one(path, leaf):
+        la = lm.state_logical(path, leaf)
+        return shd.resolve_spec(leaf.shape, la, SINGLE, shd.ShardingRules())
+
+    specs = jax.tree_util.tree_map_with_path(one, st)
+    assert jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_expert_weights_replicated_rom_sharded_ep():
+    """Paper: RoM experts replicated (no EP); llama4 EP experts sharded."""
+    rules = shd.ShardingRules()
+    spec = shd.resolve_spec((8, 2048, 4096), ("experts", "embed", "inner"),
+                            SINGLE, rules)
+    assert spec[0] is None                        # experts replicated
+    spec = shd.resolve_spec((128, 5120, 8192),
+                            ("experts_ep", "embed", "mlp"), SINGLE, rules)
+    assert spec[0] == "data" and spec[2] == "model"
+
+
+def test_zero3_weight_sharding():
+    rules = shd.ShardingRules()
+    spec = shd.resolve_spec((5120, 13824), ("embed", "mlp"), SINGLE, rules)
+    assert spec == P("data", "model")             # ZeRO-3 + TP
+
+
+def test_rules_override():
+    rules = shd.ShardingRules().override(act_seq=("model", None))
+    spec = shd.resolve_spec((1, 524288, 2560),
+                            ("act_batch", "act_seq", "act_embed"),
+                            SINGLE, rules)
+    assert spec == P(None, "model")               # SP for B=1 long-context
