@@ -1,0 +1,146 @@
+"""Serving benchmark: parallel prefill vs per-token prefill, engine
+throughput, and time-to-first-token; emits JSON.
+
+    PYTHONPATH=src python benchmarks/serving.py --smoke
+    PYTHONPATH=src python benchmarks/serving.py --arch rom-mamba-115m \
+        --smoke --prompt-len 128 --gen 32 --out serving.json
+
+Measures, on the same config and prompts:
+
+  prefill_parallel_tps   tokens/s prefilling via models/lm.prefill (the
+                         engine path: one training-style pass per
+                         power-of-two chunk)
+  prefill_pertoken_tps   tokens/s prefilling by stepping the jitted decode
+                         path one token at a time (the pre-engine baseline)
+  prefill_speedup        parallel / per-token
+  decode_tps             engine decode tokens/s (all slots)
+  ttft_mean_s            mean submit->first-token latency across requests
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import train as tr
+from repro.configs.all_configs import reduce_for_smoke
+from repro.configs.base import get_config
+from repro.data.pipeline import corpus_for
+from repro.models import lm
+from repro.serve import Request, ServeEngine
+
+
+def _best_of(fn, iters):
+    """Best-of-N timing: the minimum wall time is the least load-disturbed
+    sample (both timed regions here are short on the smoke config)."""
+    return max(fn() for _ in range(iters))
+
+
+def pertoken_prefill_tps(cfg, params, prompts, max_len, iters=3):
+    """The old serve path: prompts consumed one jitted decode step/token."""
+    B, S = prompts.shape
+    serve = jax.jit(tr.make_serve_fn(cfg))
+
+    def once():
+        state = lm.init_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
+        t0 = time.perf_counter()
+        for pos in range(S):
+            nxt, logits, state = serve(params, state,
+                                       prompts[:, pos:pos + 1],
+                                       jnp.int32(pos))
+        jax.block_until_ready(nxt)
+        return B * S / (time.perf_counter() - t0)
+
+    once()                                   # compile outside timed region
+    return _best_of(once, iters)
+
+
+def parallel_prefill_tps(cfg, params, prompts, max_len, chunk, iters=3):
+    """The engine path: chunked parallel prefill (state threads chunks)."""
+    from repro.serve.engine import prefill_chunks
+    B, S = prompts.shape
+    pf = jax.jit(tr.make_prefill_step_fn(cfg))
+    chunks = prefill_chunks(S, chunk)
+
+    def once():
+        state = lm.init_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
+        t0 = time.perf_counter()
+        pos = 0
+        for c in chunks:
+            logits, state = pf(params, state, prompts[:, pos:pos + c],
+                               jnp.int32(pos))
+            pos += c
+        jax.block_until_ready(logits)
+        return B * S / (time.perf_counter() - t0)
+
+    once()                                   # compile outside timed region
+    return _best_of(once, iters)
+
+
+def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
+    B = prompts.shape[0]
+    engine = ServeEngine(cfg, params, max_slots=B, max_len=max_len,
+                         seed=seed, max_prefill_chunk=chunk)
+    reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
+            for i in range(B)]
+    results = engine.run(reqs)
+    s = engine.stats
+    return {
+        "decode_tps": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+        "ttft_mean_s": float(np.mean([r.ttft_s for r in results])),
+        "ttft_max_s": float(np.max([r.ttft_s for r in results])),
+        "requests": len(results),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rom-mamba-115m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="",
+                    help="write JSON here (default: stdout)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if cfg.kind == "encoder":
+        raise SystemExit("encoder-only arch has no decode step")
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    max_len = args.prompt_len + args.gen
+    corpus = corpus_for(cfg, args.prompt_len + 1, args.batch, args.seed)
+    prompts = jnp.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]
+
+    par = parallel_prefill_tps(cfg, params, prompts, max_len,
+                               args.prefill_chunk)
+    per = pertoken_prefill_tps(cfg, params, prompts, max_len)
+    eng = engine_metrics(cfg, params, np.asarray(prompts), args.gen, max_len,
+                         args.prefill_chunk, args.seed)
+    report = {
+        "arch": args.arch, "smoke": args.smoke,
+        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+        "prefill_parallel_tps": round(par, 1),
+        "prefill_pertoken_tps": round(per, 1),
+        "prefill_speedup": round(par / per, 2),
+        **{k: (round(v, 4) if isinstance(v, float) else v)
+           for k, v in eng.items()},
+    }
+    text = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,54 +1,50 @@
-"""Batched serving example: continuous batched decode over mixed-length
-requests with per-slot position tracking (inference-side API demo).
+"""Continuous-batching example: mixed-length requests with per-request
+sampling settings, served through the engine (parallel prefill + one jitted
+multi-slot decode with per-slot positions).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro import train as tr
 from repro.configs.all_configs import reduce_for_smoke
 from repro.configs.base import get_config
 from repro.models import lm
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main():
     cfg = reduce_for_smoke(get_config("recurrentgemma-2b")).replace(
         d_model=128)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    serve = jax.jit(tr.make_serve_fn(cfg))
 
-    # 4 requests with different prompt lengths, decoded as one batch.
+    # 6 requests with different prompt lengths and sampling settings served
+    # on 4 slots: slots free up on finish and are refilled from the queue.
     rng = np.random.default_rng(0)
-    prompt_lens = [5, 9, 3, 7]
-    B, max_new = len(prompt_lens), 16
-    max_len = max(prompt_lens) + max_new
-    prompts = [rng.integers(2, cfg.vocab_size, size=(n,)).tolist()
-               for n in prompt_lens]
+    prompt_lens = [5, 9, 3, 7, 12, 4]
+    samplings = [
+        SamplingParams(),                                   # greedy
+        SamplingParams(temperature=0.8, top_k=40),
+        SamplingParams(temperature=1.0, top_p=0.9),
+        SamplingParams(),
+        SamplingParams(temperature=0.7, top_k=20, top_p=0.95),
+        SamplingParams(temperature=1.2),
+    ]
+    reqs = [Request(id=i,
+                    prompt=rng.integers(2, cfg.vocab_size, size=(n,)).tolist(),
+                    max_new_tokens=16, sampling=sp)
+            for i, (n, sp) in enumerate(zip(prompt_lens, samplings))]
 
-    state = lm.init_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
-    done_prompt = [False] * B
-    outputs = [[] for _ in range(B)]
-    # step the whole batch in lockstep; slots still consuming their prompt
-    # feed the next prompt token, finished slots feed the model's sample.
-    last = jnp.zeros((B, 1), jnp.int32)
-    for pos in range(max_len - 1):
-        feed = []
-        for b in range(B):
-            if pos < prompt_lens[b]:
-                feed.append(prompts[b][pos])
-            else:
-                feed.append(int(last[b, 0]))
-        nxt, logits, state = serve(params, state,
-                                   jnp.asarray(feed)[:, None],
-                                   jnp.int32(pos))
-        last = nxt[:, None]
-        for b in range(B):
-            if pos >= prompt_lens[b] - 1 and len(outputs[b]) < max_new:
-                outputs[b].append(int(nxt[b]))
-    for b in range(B):
-        print(f"req{b} prompt[{prompt_lens[b]}] -> {outputs[b][:12]}")
+    engine = ServeEngine(cfg, params, max_slots=4,
+                         max_len=max(prompt_lens) + 16, seed=0)
+    results = engine.run(reqs)
+    for r in sorted(results, key=lambda r: r.id):
+        print(f"req{r.id} prompt[{r.prompt_len}] {r.finish_reason:>6} "
+              f"ttft {r.ttft_s * 1e3:6.1f}ms -> {r.tokens[:12]}")
+    s = engine.stats
+    print(f"prefill {s['prefill_tokens']} tok / {s['prefill_s']:.3f}s | "
+          f"decode {s['decode_tokens']} tok / {s['decode_s']:.3f}s "
+          f"in {s['decode_steps']} steps (continuous batching)")
 
 
 if __name__ == "__main__":

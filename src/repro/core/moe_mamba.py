@@ -93,6 +93,35 @@ def moemamba_init_state(cfg, batch, dtype):
     return ssm.mamba_init_state(cfg, batch, dtype)
 
 
+def moemamba_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    """Parallel prefill mirroring ``moemamba_step`` routing (no jitter)."""
+    rom = cfg.rom
+    t = rom.targets
+    metrics = []
+    if "conv" in t:
+        sr_c = SharedRouting(params["conv_router"]["w_router"], x, rom, rt)
+        h = sr_c.proj(x, params["e_w_in"], weighted=False, tag="x")
+        metrics.append(sr_c.metrics())
+    else:
+        h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    y, state = ssm.mamba_core_prefill(params, h, state, cfg, rt)
+    if "gate" in t:
+        sr_g = SharedRouting(params["gate_router"]["w_router"], x, rom, rt)
+        g = silu(sr_g.proj(x, params["e_w_gate"], weighted=False, tag="x"))
+        metrics.append(sr_g.metrics())
+    else:
+        g = silu(dense(x, params["w_gate"]))
+    z = y * g
+    if "out" in t:
+        sr_o = SharedRouting(params["out_router"]["w_router"], x, rom, rt)
+        out = sr_o.proj(z, params["e_w_out"], weighted=True, tag="z")
+        metrics.append(sr_o.metrics())
+    else:
+        out = dense(z, params["w_out"])
+    return out, state, _sum_metrics(metrics)
+
+
 def moemamba_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     rom = cfg.rom
     t = rom.targets

@@ -179,6 +179,35 @@ def rom_mamba_init_state(cfg, batch, dtype):
     return ssm.mamba_init_state(cfg, batch, dtype)
 
 
+def rom_mamba_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    """Parallel prefill with the same per-token routing decisions the decode
+    step would make (router is deterministic at inference: no jitter, no
+    rng), so the prefill->decode boundary is routing-consistent."""
+    rom = cfg.rom
+    t = rom.targets
+    sr = SharedRouting(params["w_router"], x, rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    if "conv" in t:
+        h = sr.proj(x, params["e_w_in"], weighted=False, tag="x")
+    else:
+        h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    x_fn, dt_fn = _rom_proj_fns(sr, params, t)
+    y, state = ssm.mamba_core_prefill(params, h, state, cfg, rt,
+                                      x_proj_fn=x_fn, dt_proj_fn=dt_fn)
+    if "gate" in t:
+        g = silu(sr.proj(x, params["e_w_gate"], weighted=False, tag="x"))
+    else:
+        g = silu(dense(x, params["w_gate"]))
+    z = y * g
+    if "out" in t:
+        out = sr.proj(z, params["e_w_out"], weighted=True, tag="z")
+    else:
+        out = dense(z, params["w_out"])
+    return out, state, sr.metrics()
+
+
 def rom_mamba_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     rom = cfg.rom
     t = rom.targets
@@ -263,6 +292,16 @@ def rom_mamba2_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     return out, {"h": h, "conv": conv_buf}, sr.metrics()
 
 
+def rom_mamba2_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    zxbcdt = sr.proj(x, params["e_w_zxbcdt"], weighted=False, tag="x")
+    y, state = ssm.mamba2_core_prefill(params, zxbcdt, state, cfg, rt)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
+    return out, state, sr.metrics()
+
+
 def rom_gdn_init(key, cfg):
     rom = cfg.rom
     nh, dk_h, dv_h, dk, dv = ssm.gdn_dims(cfg)
@@ -328,6 +367,17 @@ def rom_gdn_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     return out, {"S": S, "conv": conv_buf}, sr.metrics()
 
 
+def rom_gdn_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    qkvz = sr.proj(x, params["e_w_qkvz"], weighted=False, tag="x")
+    ab = dense(x, params["w_ab"])
+    y, state = ssm.gdn_core_prefill(params, qkvz, ab, state, cfg, rt)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
+    return out, state, sr.metrics()
+
+
 def rom_rglru_init(key, cfg):
     rom = cfg.rom
     d_rnn, _, _ = rgl.rglru_dims(cfg)
@@ -371,6 +421,19 @@ def rom_rglru_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     return out, state, sr.metrics()
 
 
+def rom_rglru_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    u = sr.proj(x, params["e_w_rec_in"], weighted=False, tag="x")
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    h, state = rgl.rglru_core_prefill(params, u, state, cfg, rt)
+    gate = jax.nn.gelu(sr.proj(x, params["e_w_rec_gate"], weighted=False,
+                               tag="x"))
+    out = sr.proj(h * gate, params["e_w_out"], weighted=True, tag="z")
+    return out, state, sr.metrics()
+
+
 def rom_mlstm_init(key, cfg):
     rom = cfg.rom
     inner, *_ = xl.mlstm_dims(cfg)
@@ -408,4 +471,17 @@ def rom_mlstm_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     z_t = sr.proj(x_t, params["e_w_gate"], weighted=False, tag="x")[:, 0]
     y, state = xl.mlstm_core_step(params, h_t, z_t, state, cfg, rt)
     out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
+    return out, state, sr.metrics()
+
+
+def rom_mlstm_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
+    sr = SharedRouting(params["w_router"], x, cfg.rom, rt, rng=None)
+    if ctx is not None:
+        ctx["rom_routing"] = sr
+    h = sr.proj(x, params["e_w_in"], weighted=False, tag="x")
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    z = sr.proj(x, params["e_w_gate"], weighted=False, tag="x")
+    y, state = xl.mlstm_core_prefill(params, h, z, state, cfg, rt,
+                                     chunked=cfg.xlstm.chunk > 0)
+    out = sr.proj(y, params["e_w_out"], weighted=True, tag="y")
     return out, state, sr.metrics()

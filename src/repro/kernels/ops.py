@@ -25,8 +25,14 @@ def _resolve(impl):
 
 
 def selective_scan(u, dt, A, Bm, Cm, D=None, *, chunk=128, impl=None,
-                   acc_dtype="float32"):
+                   acc_dtype="float32", h0=None, return_state=False):
     impl = _resolve(impl)
+    if h0 is not None or return_state:
+        # stateful prefill path: only the ref oracle threads/returns the
+        # recurrent state (the Pallas kernel computes outputs only)
+        return _ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=chunk,
+                                       acc_dtype=acc_dtype, h0=h0,
+                                       return_state=return_state)
     if impl == "ref":
         return _ref.selective_scan_ref(u, dt, A, Bm, Cm, D, chunk=chunk,
                                        acc_dtype=acc_dtype)

@@ -41,6 +41,8 @@ def selective_scan_ref(u, dt, A, Bm, Cm, D=None, *, chunk=128, h0=None,
 
     if h0 is None:
         h0 = jnp.zeros((Bsz, De, N), f32)
+    else:
+        h0 = h0.astype(f32)
 
     def per_chunk(h, xs):
         ucx, dtx, bx, cx = xs                      # (B, chunk, ...)
@@ -115,6 +117,8 @@ def diag_recurrence(log_a, b, *, chunk=256, h0=None, return_state=False):
     bc = b.reshape(Bsz, nc, chunk, D).astype(f32)
     if h0 is None:
         h0 = jnp.zeros((Bsz, D), f32)
+    else:
+        h0 = h0.astype(f32)
 
     def per_chunk(h, xs):
         ax, bx = xs

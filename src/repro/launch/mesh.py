@@ -8,18 +8,20 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n):
+    """axis_types only exists on newer JAX; older versions default to Auto."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh():
     """Whatever this host has (1 CPU device in the container): (1, 1) mesh
     so the same sharded code paths run end-to-end in examples/tests."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n, 1), ("data", "model"), **_axis_types_kw(2))

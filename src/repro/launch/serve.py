@@ -1,5 +1,9 @@
-"""Batched decode driver: prefill a prompt through decode steps, then
-generate.  CPU-runnable with --smoke (reduced same-family config).
+"""Serving driver on the continuous-batching engine.
+
+Prompts are prefilled with the parallel training-style forward (one pass per
+power-of-two chunk instead of one decode step per token) and decoded with
+per-slot positions; finished slots are refilled from the request queue.
+CPU-runnable with --smoke (reduced same-family config).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rom-mamba-115m \
         --smoke --batch 4 --prompt-len 32 --gen 32
@@ -10,22 +14,28 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro import train as tr
 from repro.configs.all_configs import reduce_for_smoke
 from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (and #requests unless --requests)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests to serve (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -38,33 +48,38 @@ def main():
     mesh = make_host_mesh()
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
-    serve = jax.jit(tr.make_serve_fn(cfg, mesh))
     max_len = args.prompt_len + args.gen
-    state = lm.init_state(cfg, args.batch, max_len, jnp.dtype(cfg.dtype))
+    engine = ServeEngine(cfg, params, max_slots=args.batch, max_len=max_len,
+                         mesh=mesh, seed=args.seed)
 
-    corpus = corpus_for(cfg, args.prompt_len + 1, args.batch, args.seed)
-    prompt = jnp.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]
+    n_req = args.requests or args.batch
+    corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
+    prompts = np.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
+    reqs = [Request(id=i, prompt=prompts[i].tolist(),
+                    max_new_tokens=args.gen, sampling=sp)
+            for i in range(n_req)]
 
-    # prefill by stepping the decode path (exercises SSM/KV caches exactly)
     t0 = time.perf_counter()
-    tok = prompt[:, :1]
-    for pos in range(args.prompt_len):
-        tok_in = prompt[:, pos:pos + 1]
-        nxt, logits, state = serve(params, state, tok_in, jnp.int32(pos))
-    t1 = time.perf_counter()
-    outs = []
-    tok = nxt[:, None]
-    for pos in range(args.prompt_len, max_len):
-        nxt, logits, state = serve(params, state, tok, jnp.int32(pos))
-        outs.append(nxt)
-        tok = nxt[:, None]
-    jax.block_until_ready(tok)
-    t2 = time.perf_counter()
-    gen = jnp.stack(outs, axis=1)
-    print(f"prefill {args.prompt_len} steps: {t1 - t0:.3f}s | "
-          f"decode {args.gen} steps: {t2 - t1:.3f}s "
-          f"({args.gen * args.batch / (t2 - t1):.1f} tok/s)")
-    print("sample generations:", gen[:2, :16].tolist())
+    results = engine.run(reqs)
+    wall = time.perf_counter() - t0
+
+    s = engine.stats
+    gen_tok = sum(len(r.tokens) for r in results)
+    ttfts = [r.ttft_s for r in results]
+    print(f"served {len(results)} requests ({gen_tok} generated tok) "
+          f"in {wall:.3f}s | "
+          f"prefill {s['prefill_tokens']} tok in {s['prefill_s']:.3f}s "
+          f"({s['prefill_tokens'] / max(s['prefill_s'], 1e-9):.1f} tok/s) | "
+          f"decode {s['decode_tokens']} tok in {s['decode_s']:.3f}s "
+          f"({s['decode_tokens'] / max(s['decode_s'], 1e-9):.1f} tok/s)")
+    print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
+          f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
+          f"max {np.max(ttfts) * 1e3:.1f}ms")
+    by_id = {r.id: r for r in results}
+    print("sample generations:",
+          [by_id[i].tokens[:16] for i in range(min(2, n_req))])
 
 
 if __name__ == "__main__":

@@ -49,6 +49,17 @@ def _stateless_step(apply_fn):
     return step
 
 
+def _stateless_prefill(apply_fn):
+    def prefill(p, x, st, pos0, cfg, rt, ctx):
+        y, aux = apply_fn(p, x, cfg, rt, ctx)
+        return y, st, aux
+    return prefill
+
+
+def _noctx_prefill(fn):
+    return lambda p, x, st, pos0, cfg, rt, ctx: fn(p, x, st, pos0, cfg, rt)
+
+
 def _mlp_apply(p, x, cfg, rt, ctx):
     return mlp_mod.mlp_apply(p, x, cfg, rt)
 
@@ -59,6 +70,10 @@ class Mixer:
     apply: Any                       # (p, x, cfg, rt, ctx) -> (y, aux)
     init_state: Any = None           # (cfg, batch, max_len, dtype) -> pytree
     step: Any = None                 # (p, x_t, st, pos, cfg, rt, ctx)
+    prefill: Any = None              # (p, x, st, pos0, cfg, rt, ctx)
+    #   -> (y (B,S,D), terminal decode state, aux): the parallel
+    #   training-style forward over a prompt chunk, whose extracted state
+    #   matches stepping token-by-token through ``step``
 
 
 def _st(fn):
@@ -69,38 +84,53 @@ def _st(fn):
 MIXERS: Dict[str, Mixer] = {
     "attn": Mixer(attn.attention_init, _noctx(attn.attention_apply),
                   lambda cfg, b, L, dt: attn.attention_init_state(cfg, b, L, dt),
-                  _noctx_step(attn.attention_step)),
+                  _noctx_step(attn.attention_step),
+                  _noctx_prefill(attn.attention_prefill)),
     "mlp": Mixer(lambda k, cfg: mlp_mod.mlp_init(k, cfg), _mlp_apply,
                  lambda cfg, b, L, dt: {},
-                 _stateless_step(_mlp_apply)),
+                 _stateless_step(_mlp_apply),
+                 _stateless_prefill(_mlp_apply)),
     "moe": Mixer(rom_ffn.moe_ffn_init, rom_ffn.moe_ffn_apply,
                  lambda cfg, b, L, dt: {},
-                 _stateless_step(rom_ffn.moe_ffn_apply)),
+                 _stateless_step(rom_ffn.moe_ffn_apply),
+                 _stateless_prefill(rom_ffn.moe_ffn_apply)),
     "mamba": Mixer(ssm.mamba_init, _noctx(ssm.mamba_apply),
-                   _st(ssm.mamba_init_state), _noctx_step(ssm.mamba_step)),
+                   _st(ssm.mamba_init_state), _noctx_step(ssm.mamba_step),
+                   _noctx_prefill(ssm.mamba_prefill)),
     "mamba2": Mixer(ssm.mamba2_init, _noctx(ssm.mamba2_apply),
-                    _st(ssm.mamba2_init_state), _noctx_step(ssm.mamba2_step)),
+                    _st(ssm.mamba2_init_state), _noctx_step(ssm.mamba2_step),
+                    _noctx_prefill(ssm.mamba2_prefill)),
     "gdn": Mixer(ssm.gdn_init, _noctx(ssm.gdn_apply),
-                 _st(ssm.gdn_init_state), _noctx_step(ssm.gdn_step)),
+                 _st(ssm.gdn_init_state), _noctx_step(ssm.gdn_step),
+                 _noctx_prefill(ssm.gdn_prefill)),
     "rglru": Mixer(rgl.rglru_init, _noctx(rgl.rglru_apply),
-                   _st(rgl.rglru_init_state), _noctx_step(rgl.rglru_step)),
+                   _st(rgl.rglru_init_state), _noctx_step(rgl.rglru_step),
+                   _noctx_prefill(rgl.rglru_prefill)),
     "mlstm": Mixer(xl.mlstm_init, _noctx(xl.mlstm_apply),
-                   _st(xl.mlstm_init_state), _noctx_step(xl.mlstm_step)),
+                   _st(xl.mlstm_init_state), _noctx_step(xl.mlstm_step),
+                   _noctx_prefill(xl.mlstm_prefill)),
     "slstm": Mixer(xl.slstm_init, _noctx(xl.slstm_apply),
-                   _st(xl.slstm_init_state), _noctx_step(xl.slstm_step)),
+                   _st(xl.slstm_init_state), _noctx_step(xl.slstm_step),
+                   _noctx_prefill(xl.slstm_prefill)),
     "rom_mamba": Mixer(rom.rom_mamba_init, rom.rom_mamba_apply,
-                       _st(rom.rom_mamba_init_state), rom.rom_mamba_step),
+                       _st(rom.rom_mamba_init_state), rom.rom_mamba_step,
+                       rom.rom_mamba_prefill),
     "rom_mamba2": Mixer(rom.rom_mamba2_init, rom.rom_mamba2_apply,
-                        _st(ssm.mamba2_init_state), rom.rom_mamba2_step),
+                        _st(ssm.mamba2_init_state), rom.rom_mamba2_step,
+                        rom.rom_mamba2_prefill),
     "rom_gdn": Mixer(rom.rom_gdn_init, rom.rom_gdn_apply,
-                     _st(rom.rom_gdn_init_state), rom.rom_gdn_step),
+                     _st(rom.rom_gdn_init_state), rom.rom_gdn_step,
+                     rom.rom_gdn_prefill),
     "rom_rglru": Mixer(rom.rom_rglru_init, rom.rom_rglru_apply,
-                       _st(rom.rom_rglru_init_state), rom.rom_rglru_step),
+                       _st(rom.rom_rglru_init_state), rom.rom_rglru_step,
+                       rom.rom_rglru_prefill),
     "rom_mlstm": Mixer(rom.rom_mlstm_init, rom.rom_mlstm_apply,
-                       _st(rom.rom_mlstm_init_state), rom.rom_mlstm_step),
+                       _st(rom.rom_mlstm_init_state), rom.rom_mlstm_step,
+                       rom.rom_mlstm_prefill),
     "moemamba": Mixer(moe_mamba.moemamba_init, moe_mamba.moemamba_apply,
                       _st(moe_mamba.moemamba_init_state),
-                      moe_mamba.moemamba_step),
+                      moe_mamba.moemamba_step,
+                      moe_mamba.moemamba_prefill),
     "moa": Mixer(attn_moe.moa_init, _noctx(attn_moe.moa_apply)),
     "switchhead": Mixer(attn_moe.switchhead_init,
                         _noctx(attn_moe.switchhead_apply)),
@@ -336,13 +366,71 @@ def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime):
 
 
 # ---------------------------------------------------------------------------
+# prefill: parallel forward over a prompt chunk, extracting decode state
+# ---------------------------------------------------------------------------
+
+def _block_prefill(pattern, cfg, bp, bst, x, pos0, rt: Runtime):
+    ctx: Dict[str, Any] = {}
+    aux = jnp.zeros((len(METRIC_KEYS),), jnp.float32)
+    new_st = {}
+    for i, kind in enumerate(pattern):
+        h = rmsnorm(bp[f"l{i}_norm"], x, cfg.norm_eps)
+        key = f"l{i}_{kind}"
+        mx = MIXERS[kind]
+        if mx.prefill is None:
+            raise NotImplementedError(f"{kind} has no prefill path")
+        y, st, a = mx.prefill(bp[key], h, bst[key], pos0, cfg, rt, ctx)
+        new_st[key] = st
+        x = x + y.astype(x.dtype)
+        x = rt.shard.cons(x, "act_batch", "act_seq", "act_embed")
+        aux = aux + pack_metrics(a)
+    return x, new_st, aux
+
+
+def prefill(params, state, tokens, pos0, cfg, rt: Runtime):
+    """Parallel prefill: tokens (B,S) int32 at absolute positions
+    [pos0, pos0+S) -> (logits (B,S,V), new decode state).
+
+    Runs the training-style (whole-sequence) forward through every layer and
+    extracts the terminal recurrent/conv/KV state, replacing S sequential
+    decode steps with one parallel pass.  Composable over chunks: feed the
+    returned state back in with ``pos0 += S`` to prefill long prompts in
+    fixed-size chunks (bounded jit specializations).
+    """
+    cd = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, cd)
+    x = rt.shard.cons(x, "act_batch", "act_seq", "act_embed")
+    new_segs = []
+    for (pattern, repeats), seg, sst in zip(cfg.segments, params["segments"],
+                                            state["segments"]):
+        fn = functools.partial(_block_prefill, pattern, cfg)
+        if isinstance(seg, list):
+            outs = []
+            for bp, bst in zip(seg, sst):
+                x, st, _ = fn(bp, bst, x, pos0, rt)
+                outs.append(st)
+            new_segs.append(outs)
+        else:
+            def body(carry, xs, fn=fn):
+                bp, bst = xs
+                y, st, aux = fn(bp, bst, carry, pos0, rt)
+                return y, st
+
+            x, sts = jax.lax.scan(body, x, (seg, sst))
+            new_segs.append(sts)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, rt)
+    return logits, {"segments": new_segs}
+
+
+# ---------------------------------------------------------------------------
 # logical axes for decode-state leaves (mirrors sharding.AXES_BY_NAME)
 # ---------------------------------------------------------------------------
 
 STATE_AXES = {
     ("k", 4): ("act_batch", "act_kv_seq", None, None),
     ("v", 4): ("act_batch", "act_kv_seq", None, None),
-    ("kpos", 1): (None,),
+    ("kpos", 2): ("act_batch", "act_kv_seq"),
     ("h", 2): ("act_batch", "act_inner"),             # rglru (B,R)
     ("h", 3): ("act_batch", "act_inner", None),       # mamba (B,De,N); slstm
     ("h", 4): ("act_batch", None, None, None),        # mamba2 (B,H,P,N)

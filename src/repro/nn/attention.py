@@ -174,6 +174,29 @@ def blockwise_attention(q, k, v, *, causal=True, window=None,
     return out.reshape(B, S, H, Dh)
 
 
+def _batched_attn(qg, k, v, qpos_b, kpos_b, *, causal, window):
+    """Attention with *per-batch-row* positions (continuous batching).
+
+    qg (B,Sq,KV,G,Dh); k,v (B,Sk,KV,Dh); qpos_b (B,Sq); kpos_b (B,Sk) with
+    -1 marking invalid cache slots.  Returns (acc f32, m, l) partial-softmax
+    triples like ``_block_attn`` so callers can combine across shards.
+    """
+    scale = qg.shape[-1] ** -0.5
+    logits = jnp.einsum("bqngd,bknd->bqngk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale   # (B,Sq,KV,G,Sk)
+    mask = kpos_b[:, None, :] >= 0
+    if causal:
+        mask &= qpos_b[:, :, None] >= kpos_b[:, None, :]
+    if window is not None:
+        mask &= qpos_b[:, :, None] - kpos_b[:, None, :] < window
+    logits = jnp.where(mask[:, :, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqngk,bknd->bqngd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
 def attention_apply(params, x, cfg, rt: Runtime):
     """Train/prefill attention."""
     a = cfg.attention
@@ -200,7 +223,9 @@ def attention_init_state(cfg, batch, max_len, dtype):
     return {
         "k": jnp.zeros((batch, L, a.num_kv_heads, a.head_dim), dtype),
         "v": jnp.zeros((batch, L, a.num_kv_heads, a.head_dim), dtype),
-        "kpos": jnp.full((L,), -1, jnp.int32),
+        # per-slot positions: each batch row decodes at its own position
+        # under continuous batching, so slot validity is per (row, slot)
+        "kpos": jnp.full((batch, L), -1, jnp.int32),
     }
 
 
@@ -213,7 +238,7 @@ def attention_state_logical(cfg, mesh):
         seq_ax = "act_kv_seq"                    # -> 'model'
     return {"k": ("act_batch", seq_ax, None, None),
             "v": ("act_batch", seq_ax, None, None),
-            "kpos": (None,)}
+            "kpos": ("act_batch", seq_ax)}
 
 
 def _use_seq_sharded_decode(a, mesh, L):
@@ -226,36 +251,30 @@ def _use_seq_sharded_decode(a, mesh, L):
     return (not heads_ok) and L % m == 0 and m > 1
 
 
-def _flash_decode_body(q, k, v, kpos, k_t, v_t, pos, *, a):
+def _flash_decode_body(q, k, v, kpos, k_t, v_t, pos_b, *, a):
     """shard_map body: each device owns a contiguous seq chunk of the cache.
 
     The update lands only on the owning shard (no GSPMD resharding of the
     whole cache — the measured pathology in §Perf cell C); partial softmax
-    stats combine across shards flash-decoding style.
+    stats combine across shards flash-decoding style.  ``pos_b`` (B,) is the
+    per-slot decode position (continuous batching).
     """
     B = q.shape[0]
     n = jax.lax.axis_size("model")
     idx = jax.lax.axis_index("model")
     L_loc = k.shape[1]
     L = L_loc * n
-    slot_g = pos % L if a.window is not None else pos
+    slot_g = pos_b % L if a.window is not None else pos_b       # (B,)
     slot = slot_g - idx * L_loc
-    mine = (slot >= 0) & (slot < L_loc)
-    slot_c = jnp.clip(slot, 0, L_loc - 1)
-    k_new = jax.lax.dynamic_update_slice_in_dim(
-        k, k_t.astype(k.dtype), slot_c, 1)
-    v_new = jax.lax.dynamic_update_slice_in_dim(
-        v, v_t.astype(v.dtype), slot_c, 1)
-    kp_new = jax.lax.dynamic_update_slice_in_dim(
-        kpos, jnp.full((1,), pos, jnp.int32), slot_c, 0)
-    k = jnp.where(mine, k_new, k)
-    v = jnp.where(mine, v_new, v)
-    kpos = jnp.where(mine, kp_new, kpos)
+    upd = jnp.arange(L_loc)[None, :] == slot[:, None]           # (B,L_loc)
+    k = jnp.where(upd[..., None, None], k_t.astype(k.dtype), k)
+    v = jnp.where(upd[..., None, None], v_t.astype(v.dtype), v)
+    kpos = jnp.where(upd, pos_b[:, None], kpos)
 
     qg = q.reshape(B, 1, a.num_kv_heads, a.num_heads // a.num_kv_heads,
                    a.head_dim)
-    acc, m, l = _block_attn(qg, k, v, jnp.full((1,), pos), kpos,
-                            causal=a.causal, window=a.window)
+    acc, m, l = _batched_attn(qg, k, v, pos_b[:, None], kpos,
+                              causal=a.causal, window=a.window)
     m_g = jax.lax.pmax(m, "model")
     scale = jnp.exp(m - m_g)
     acc = jax.lax.psum(acc * scale[..., None], "model")
@@ -264,12 +283,19 @@ def _flash_decode_body(q, k, v, kpos, k_t, v_t, pos, *, a):
     return y.astype(q.dtype), k, v, kpos
 
 
+def _pos_vector(pos, B):
+    """Accept a scalar (lockstep batch) or (B,) per-slot position array."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos.reshape(-1), (B,))
+
+
 def attention_step(params, x_t, state, pos, cfg, rt: Runtime):
-    """x_t (B,1,D); pos scalar int32 absolute position."""
+    """x_t (B,1,D); pos: scalar int32 or (B,) per-slot absolute positions."""
     a = cfg.attention
     B = x_t.shape[0]
     mesh = rt.shard.mesh
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_b = _pos_vector(pos, B)
+    positions = pos_b[:, None]
     q, k_t, v_t = _project_qkv(params, x_t, cfg, rt, positions)
     L = state["k"].shape[1]
 
@@ -279,31 +305,91 @@ def attention_step(params, x_t, state, pos, cfg, rt: Runtime):
         from jax.sharding import PartitionSpec as P
         dp = tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
         bspec = P(dp) if dp else P()
-        qs = P(*bspec, None, None, None)
         cs = P(*bspec, "model", None, None)
         ts = P(*bspec, None, None, None)          # (B,1,KV,Dh) new k/v token
         y, k, v, kpos = jax.shard_map(
             functools.partial(_flash_decode_body, a=a), mesh=mesh,
-            in_specs=(P(*bspec, None, None), cs, cs, P("model"),
-                      ts, ts, P()),
+            in_specs=(P(*bspec, None, None), cs, cs, P(*bspec, "model"),
+                      ts, ts, P(*bspec)),
             out_specs=(P(*bspec, None, None, None, None), cs, cs,
-                       P("model")),
+                       P(*bspec, "model")),
             check_vma=False)(
             q[:, 0], state["k"], state["v"], state["kpos"],
-            k_t, v_t, pos)
+            k_t, v_t, pos_b)
         y = y.astype(x_t.dtype)
     else:
-        slot = pos % L if a.window is not None else pos
-        k = jax.lax.dynamic_update_slice_in_dim(
-            state["k"], k_t.astype(state["k"].dtype), slot, 1)
-        v = jax.lax.dynamic_update_slice_in_dim(
-            state["v"], v_t.astype(state["v"].dtype), slot, 1)
-        kpos = jax.lax.dynamic_update_slice_in_dim(
-            state["kpos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+        slot = pos_b % L if a.window is not None else pos_b     # (B,)
+        upd = jnp.arange(L)[None, :] == slot[:, None]           # (B,L)
+        k = jnp.where(upd[..., None, None], k_t.astype(state["k"].dtype),
+                      state["k"])
+        v = jnp.where(upd[..., None, None], v_t.astype(state["v"].dtype),
+                      state["v"])
+        kpos = jnp.where(upd, pos_b[:, None], state["kpos"])
         qg = q.reshape(B, 1, a.num_kv_heads, a.num_heads // a.num_kv_heads,
                        a.head_dim)
-        acc, m, l = _block_attn(qg, k, v, jnp.full((1,), pos), kpos,
-                                causal=a.causal, window=a.window)
+        acc, m, l = _batched_attn(qg, k, v, pos_b[:, None], kpos,
+                                  causal=a.causal, window=a.window)
         y = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x_t.dtype)
     y = dense(y.reshape(B, 1, a.num_heads * a.head_dim), params["w_o"])
     return y, {"k": k, "v": v, "kpos": kpos}, {}
+
+
+# ---------------------------------------------------------------------------
+# prefill: parallel attention over a whole prompt chunk + cache install
+# ---------------------------------------------------------------------------
+
+def attention_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    """x (B,S,D) prompt chunk at absolute positions [pos0, pos0+S).
+
+    Runs the parallel (training-style) attention over the chunk — attending
+    to any valid cached entries from earlier chunks — and installs the new
+    K/V into the decode cache, so decode can continue token-by-token from
+    ``pos0 + S``.  Returns (y, new_state, aux).  For a sliding-window cache
+    only the last ``min(S, L)`` tokens are written (ring layout).
+    """
+    a = cfg.attention
+    B, S, _ = x.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    positions = pos0 + jnp.arange(S)[None, :]                # (1,S)
+    q, k, v = _project_qkv(params, x, cfg, rt, positions)
+    kc, vc, kposc = state["k"], state["v"], state["kpos"]
+    L = kc.shape[1]
+
+    # attend over [cached entries | this chunk]; invalid slots carry kpos=-1
+    k_all = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+    kpos_new = jnp.broadcast_to(positions, (B, S))
+    kpos_all = jnp.concatenate([kposc, kpos_new], axis=1)    # (B,L+S)
+    qg = q.reshape(B, S, a.num_kv_heads, a.num_heads // a.num_kv_heads,
+                   a.head_dim)
+    acc, m, l = _batched_attn(qg, k_all, v_all,
+                              jnp.broadcast_to(positions, (B, S)), kpos_all,
+                              causal=a.causal, window=a.window)
+    y = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    y = dense(y.reshape(B, S, a.num_heads * a.head_dim), params["w_o"])
+
+    # cache install
+    if a.window is None or S <= L:
+        if a.window is None:
+            # contiguous: requires pos0 + S <= L (engine admission invariant)
+            k_new = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), pos0, 1)
+            v_new = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), pos0, 1)
+            kpos_out = jax.lax.dynamic_update_slice_in_dim(
+                kposc, kpos_new, pos0, 1)
+        else:
+            slots = (pos0 + jnp.arange(S)) % L               # (S,) unique
+            k_new = kc.at[:, slots].set(k.astype(kc.dtype))
+            v_new = vc.at[:, slots].set(v.astype(vc.dtype))
+            kpos_out = kposc.at[:, slots].set(kpos_new)
+    else:
+        # window ring smaller than the chunk: keep only the last L tokens
+        T = L
+        starts = pos0 + S - T + jnp.arange(T)
+        slots = starts % L                                   # (T,) unique
+        k_new = kc.at[:, slots].set(k[:, -T:].astype(kc.dtype))
+        v_new = vc.at[:, slots].set(v[:, -T:].astype(vc.dtype))
+        kpos_out = kposc.at[:, slots].set(
+            jnp.broadcast_to(starts[None, :], (B, T)))
+    return y, {"k": k_new, "v": v_new, "kpos": kpos_out}, {}

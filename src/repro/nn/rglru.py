@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.kernels.ref import diag_recurrence
 from repro.nn.layers import Runtime, dense, dense_init
-from repro.nn.ssm import causal_conv1d, causal_conv1d_step
+from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
+                          causal_conv1d_step)
 
 
 def rglru_dims(cfg):
@@ -119,3 +120,24 @@ def rglru_step(params, x_t, state, pos, cfg, rt: Runtime):
     gate = jax.nn.gelu(dense(xt, params["w_rec_gate"]))
     out = dense(h * gate, params["w_out"])
     return out[:, None], state, {}
+
+
+def rglru_core_prefill(shared, u, state, cfg, rt: Runtime):
+    """Parallel prefill over a prompt chunk: (h (B,S,R), terminal state)."""
+    u_c, conv_buf = causal_conv1d_prefill(u, state["conv"], shared["conv_w"],
+                                          shared["conv_b"])
+    log_a, i = _gates(shared, u_c, cfg)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * i * u_c.astype(jnp.float32)
+    h, h_last = diag_recurrence(log_a, b, chunk=256, h0=state["h"],
+                                return_state=True)
+    return h.astype(u.dtype), {"h": h_last, "conv": conv_buf}
+
+
+def rglru_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    u = dense(x, params["w_rec_in"])
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    h, state = rglru_core_prefill(params, u, state, cfg, rt)
+    gate = jax.nn.gelu(dense(x, params["w_rec_gate"]))
+    out = dense(h * gate, params["w_out"])
+    return out, state, {}

@@ -38,6 +38,22 @@ def causal_conv1d_step(x_t, buf, w, b=None):
     return y, win[:, 1:]
 
 
+def causal_conv1d_prefill(x, buf, w, b=None):
+    """Parallel conv over a whole prompt chunk, threading the decode buffer.
+
+    x (B,S,C) new raw inputs; buf (B,K-1,C) past raw inputs (as kept by
+    ``causal_conv1d_step``).  Returns (y (B,S,C), new_buf (B,K-1,C)) such
+    that stepping token-by-token produces identical outputs and buffer.
+    """
+    K = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)      # (B,K-1+S,C)
+    y = sum(xp[:, k:k + S, :] * w[k].astype(x.dtype) for k in range(K))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y, xp[:, S:, :]
+
+
 # ---------------------------------------------------------------------------
 # Mamba (v1) — selective scan
 # ---------------------------------------------------------------------------
@@ -140,6 +156,41 @@ def mamba_step(params, x_t, state, pos, cfg, rt: Runtime):
     return out[:, None], state, {}
 
 
+def mamba_core_prefill(shared, h, state, cfg, rt: Runtime,
+                       *, x_proj_fn=None, dt_proj_fn=None):
+    """Parallel-prefill core: one training-style scan over the whole chunk,
+    returning (y (B,S,De), state) where state matches stepping token-by-token
+    through ``mamba_core_step``.  Composable: threads an incoming state, so
+    long prompts can be prefilled in fixed-size chunks."""
+    de, dt_rank, n = mamba_dims(cfg)
+    u_raw, conv_buf = causal_conv1d_prefill(h, state["conv"],
+                                            shared["conv_w"],
+                                            shared["conv_b"])
+    u = silu(u_raw)
+    u = rt.shard.cons(u, "act_batch", "act_seq", "act_inner")
+    xdbc = (x_proj_fn or (lambda t: dense(t, shared["w_x"])))(u)
+    dt_in, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + n], axis=-1)
+    dt_lin = (dt_proj_fn or (lambda t: dense(t, shared["w_dt"])))(dt_in)
+    dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + shared["b_dt"])
+    A = -jnp.exp(shared["A_log"])
+    y, h_last = ops.selective_scan(u, dt.astype(u.dtype), A, Bm, Cm,
+                                   shared["D"], chunk=cfg.mamba.chunk,
+                                   acc_dtype=cfg.mamba.scan_dtype,
+                                   h0=state["h"], return_state=True)
+    y = rt.shard.cons(y, "act_batch", "act_seq", "act_inner")
+    return y, {"h": h_last, "conv": conv_buf}
+
+
+def mamba_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    """x (B,S,D) prompt chunk -> (y (B,S,D), terminal decode state, aux)."""
+    h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    y, state = mamba_core_prefill(params, h, state, cfg, rt)
+    g = silu(dense(x, params["w_gate"]))
+    out = dense(y * g, params["w_out"])
+    return out, state, {}
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 (SSD, scalar-per-head A), chunked dual form
 # ---------------------------------------------------------------------------
@@ -181,12 +232,27 @@ def _segsum(a):
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked(x, a_log, Bm, Cm, chunk):
-    """SSD dual form. x (B,S,H,P); a_log (B,S,H) (<=0); Bm,Cm (B,S,N)."""
+def ssd_chunked(x, a_log, Bm, Cm, chunk, *, h0=None, return_state=False):
+    """SSD dual form. x (B,S,H,P); a_log (B,S,H) (<=0); Bm,Cm (B,S,N).
+
+    ``h0`` (B,H,P,N) threads an incoming recurrent state (prefill
+    continuation); ``return_state`` additionally returns the terminal state.
+    Zero-padded tail positions (x=0, a_log=0) are state-preserving, so S is
+    padded up to a chunk multiple internally.
+    """
     Bsz, S, H, Pd = x.shape
     N = Bm.shape[-1]
     c = min(chunk, S)
-    assert S % c == 0
+    if S % c:
+        pad = c - S % c
+        y = ssd_chunked(jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        jnp.pad(a_log, ((0, 0), (0, pad), (0, 0))),
+                        jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+                        jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+                        chunk, h0=h0, return_state=return_state)
+        if return_state:
+            return y[0][:, :S], y[1]
+        return y[:, :S]
     nc = S // c
     f32 = jnp.float32
     xc = x.reshape(Bsz, nc, c, H, Pd).astype(f32)
@@ -211,14 +277,16 @@ def ssd_chunked(x, a_log, Bm, Cm, chunk):
         return s, s_prev
 
     from repro.nn.layers import cost_scan
-    s0 = jnp.zeros((Bsz, H, Pd, N), f32)
-    _, prev_states = cost_scan(
+    s0 = h0.astype(f32) if h0 is not None else jnp.zeros((Bsz, H, Pd, N), f32)
+    s_last, prev_states = cost_scan(
         step, s0, (chunk_decay.transpose(1, 0, 2),
                    states.transpose(1, 0, 2, 3, 4)))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
     state_decay = jnp.exp(A_cum)                                # (B,nc,c,H)
     y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp", cc, state_decay, prev_states)
     y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    if return_state:
+        return y.astype(x.dtype), s_last
     return y.astype(x.dtype)
 
 
@@ -275,6 +343,34 @@ def mamba2_step(params, x_t, state, pos, cfg, rt: Runtime):
     return out[:, None], {"h": h, "conv": conv_buf}, {}
 
 
+def mamba2_core_prefill(shared, zxbcdt, state, cfg, rt: Runtime):
+    """zxbcdt (B,S,2De+2N+H) -> (y (B,S,De), terminal decode state)."""
+    de, nh, hd, n = mamba2_dims(cfg)
+    B_, S, _ = zxbcdt.shape
+    z, xbc, dt_in = jnp.split(zxbcdt, [de, 2 * de + 2 * n], axis=-1)
+    xbc_raw, conv_buf = causal_conv1d_prefill(xbc, state["conv"],
+                                              shared["conv_w"],
+                                              shared["conv_b"])
+    xbc = silu(xbc_raw)
+    x, Bm, Cm = jnp.split(xbc, [de, de + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + shared["dt_bias"])
+    A = -jnp.exp(shared["A_log_h"])                             # (H,)
+    xh = x.reshape(B_, S, nh, hd)
+    y, h_last = ssd_chunked(xh * dt[..., None].astype(x.dtype), dt * A,
+                            Bm, Cm, cfg.mamba2.chunk,
+                            h0=state["h"], return_state=True)
+    y = y + xh * shared["D_h"][:, None].astype(x.dtype)
+    y = y.reshape(B_, S, de)
+    y = rmsnorm({"scale": shared["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    return y, {"h": h_last, "conv": conv_buf}
+
+
+def mamba2_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    zxbcdt = dense(x, params["w_zxbcdt"])
+    y, state = mamba2_core_prefill(params, zxbcdt, state, cfg, rt)
+    return dense(y, params["w_out"]), state, {}
+
+
 # ---------------------------------------------------------------------------
 # Gated DeltaNet:  S_t = a_t * S_{t-1} (I - b_t k_t k_t^T) + b_t v_t k_t^T
 # ---------------------------------------------------------------------------
@@ -302,7 +398,7 @@ def gdn_init(key, cfg):
     }
 
 
-def _gdn_scan(q, k, v, a, b):
+def _gdn_scan(q, k, v, a, b, *, S0=None, return_state=False):
     """q,k (B,S,H,Dk); v (B,S,H,Dv); a,b (B,S,H). Sequential delta rule."""
     f32 = jnp.float32
 
@@ -318,12 +414,16 @@ def _gdn_scan(q, k, v, a, b):
 
     B_, S_, H, Dk = q.shape
     Dv = v.shape[-1]
-    S0 = jnp.zeros((B_, H, Dk, Dv), f32)
+    if S0 is None:
+        S0 = jnp.zeros((B_, H, Dk, Dv), f32)
     xs = (q.transpose(1, 0, 2, 3).astype(f32), k.transpose(1, 0, 2, 3).astype(f32),
           v.transpose(1, 0, 2, 3).astype(f32), a.transpose(1, 0, 2).astype(f32),
           b.transpose(1, 0, 2).astype(f32))
-    _, ys = jax.lax.scan(step, S0, xs)
-    return ys.transpose(1, 0, 2, 3)                             # (B,S,H,Dv)
+    S_last, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    ys = ys.transpose(1, 0, 2, 3)                               # (B,S,H,Dv)
+    if return_state:
+        return ys, S_last
+    return ys
 
 
 def gdn_core(shared, qkvz, ab, cfg, rt: Runtime):
@@ -390,3 +490,34 @@ def gdn_step(params, x_t, state, pos, cfg, rt: Runtime):
                 y.astype(xt.dtype) * silu(z), cfg.norm_eps)
     out = dense(y, params["w_out"])
     return out[:, None], {"S": S, "conv": conv_buf}, {}
+
+
+def gdn_core_prefill(shared, qkvz, ab, state, cfg, rt: Runtime):
+    """Parallel GDN prefill: (y (B,S,Dv), terminal decode state)."""
+    nh, dk_h, dv_h, dk, dv = gdn_dims(cfg)
+    B_, S, _ = qkvz.shape
+    qkv, z = jnp.split(qkvz, [2 * dk + dv], axis=-1)
+    qkv_raw, conv_buf = causal_conv1d_prefill(qkv, state["conv"],
+                                              shared["conv_w"],
+                                              shared["conv_b"])
+    qkv = silu(qkv_raw)
+    q, k, v = jnp.split(qkv, [dk, 2 * dk], axis=-1)
+    q = q.reshape(B_, S, nh, dk_h)
+    k = k.reshape(B_, S, nh, dk_h)
+    v = v.reshape(B_, S, nh, dv_h)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True).clip(1e-6)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True).clip(1e-6)
+    a_in, b_in = jnp.split(ab, 2, axis=-1)
+    a = jnp.exp(-jnp.exp(jnp.clip(a_in.astype(jnp.float32), -8, 3)))
+    b = jax.nn.sigmoid(b_in.astype(jnp.float32))
+    ys, S_last = _gdn_scan(q, k, v, a, b, S0=state["S"], return_state=True)
+    y = ys.reshape(B_, S, dv).astype(qkvz.dtype)
+    y = rmsnorm({"scale": shared["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    return y, {"S": S_last, "conv": conv_buf}
+
+
+def gdn_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    qkvz = dense(x, params["w_qkvz"])
+    ab = dense(x, params["w_ab"])
+    y, state = gdn_core_prefill(params, qkvz, ab, state, cfg, rt)
+    return dense(y, params["w_out"]), state, {}

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn.layers import Runtime, dense, dense_init, silu
-from repro.nn.ssm import causal_conv1d, causal_conv1d_step
+from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
+                          causal_conv1d_step)
 
 
 # ---------------------------------------------------------------------------
@@ -72,7 +73,7 @@ def _headnorm(y, scale, eps):
     return flat
 
 
-def _mlstm_scan(q, k, v, i_log, f_log):
+def _mlstm_scan(q, k, v, i_log, f_log, *, carry0=None, return_state=False):
     """q,k (B,S,H,Dqk); v (B,S,H,Dv); i_log,f_log (B,S,H) -> y (B,S,H,Dv)."""
     f32 = jnp.float32
 
@@ -92,29 +93,50 @@ def _mlstm_scan(q, k, v, i_log, f_log):
 
     B, S, H, Dqk = q.shape
     Dv = v.shape[-1]
-    carry = (jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
-             jnp.zeros((B, H), f32))
+    carry = carry0 if carry0 is not None else (
+        jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
+        jnp.zeros((B, H), f32))
+    carry = tuple(c.astype(f32) for c in carry)
     xs = (q.transpose(1, 0, 2, 3).astype(f32),
           k.transpose(1, 0, 2, 3).astype(f32),
           v.transpose(1, 0, 2, 3).astype(f32),
           i_log.transpose(1, 0, 2).astype(f32),
           f_log.transpose(1, 0, 2).astype(f32))
-    _, ys = jax.lax.scan(step, carry, xs)
-    return ys.transpose(1, 0, 2, 3)
+    carry, ys = jax.lax.scan(step, carry, xs)
+    ys = ys.transpose(1, 0, 2, 3)
+    if return_state:
+        return ys, carry
+    return ys
 
 
-def _mlstm_chunked(q, k, v, i_log, f_log, chunk):
+def _mlstm_chunked(q, k, v, i_log, f_log, chunk, *, carry0=None,
+                   return_state=False):
     """Chunkwise-parallel mLSTM (same math, O(S/c) sequential steps).
 
     Within a chunk the gated attention matrix D is formed directly from
     cumulative log-f; across chunks the (Dqk, Dv) state recurs once per
     chunk.  Beyond-paper perf path for long prefill (see EXPERIMENTS §Perf).
+    ``carry0`` threads an incoming (C, n, m) state; ``return_state``
+    additionally returns the terminal one.  Tail positions padded with
+    i_log=-inf / f_log=0 are state-preserving, so S is padded internally.
     """
     f32 = jnp.float32
     B, S, H, Dqk = q.shape
     Dv = v.shape[-1]
     c = min(chunk, S)
-    assert S % c == 0
+    if S % c:
+        pad = c - S % c
+        padded = _mlstm_chunked(
+            jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)),
+                    constant_values=-1e30),
+            jnp.pad(f_log, ((0, 0), (0, pad), (0, 0))),
+            chunk, carry0=carry0, return_state=return_state)
+        if return_state:
+            return padded[0][:, :S], padded[1]
+        return padded[:, :S]
     nc = S // c
     qc = q.reshape(B, nc, c, H, Dqk).astype(f32)
     kc = k.reshape(B, nc, c, H, Dqk).astype(f32)
@@ -146,13 +168,15 @@ def _mlstm_chunked(q, k, v, i_log, f_log, chunk):
 
     # m starts at 0 (matching the sequential cell): the stabilizer enters the
     # value through max(|n.q|, exp(-m)), so the init is part of the function.
-    carry0 = (jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
-              jnp.zeros((B, H), f32))
+    if carry0 is None:
+        carry0 = (jnp.zeros((B, H, Dqk, Dv), f32), jnp.zeros((B, H, Dqk), f32),
+                  jnp.zeros((B, H), f32))
+    carry0 = tuple(x.astype(f32) for x in carry0)
     from repro.nn.layers import cost_scan
     xs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
           lj.transpose(1, 0, 2, 3), fcum.transpose(1, 0, 2, 3),
           ftot.transpose(1, 0, 2), m_intra.transpose(1, 0, 2))
-    _, (C_in, n_in, m_in) = cost_scan(step, carry0, xs)
+    carry_last, (C_in, n_in, m_in) = cost_scan(step, carry0, xs)
     C_in = C_in.transpose(1, 0, 2, 3, 4)                # (B,nc,H,Dqk,Dv)
     n_in = n_in.transpose(1, 0, 2, 3)
     m_in = m_in.transpose(1, 0, 2)                      # (B,nc,H)
@@ -180,7 +204,10 @@ def _mlstm_chunked(q, k, v, i_log, f_log, chunk):
     # the exp(-m) scale already), so the chunked clamp is also exactly 1.
     den = jnp.maximum(jnp.abs(qn_intra + qn_inter), 1.0)
     y = num / den[..., None]
-    return y.reshape(B, S, H, Dv)
+    y = y.reshape(B, S, H, Dv)
+    if return_state:
+        return y, carry_last
+    return y
 
 
 def mlstm_core(shared, h, z, cfg, rt: Runtime, *, chunked=False):
@@ -259,6 +286,45 @@ def mlstm_step(params, x_t, state, pos, cfg, rt: Runtime):
     y, state = mlstm_core_step(params, h_t, z_t, state, cfg, rt)
     out = dense(y, params["w_out"])
     return out[:, None], state, {}
+
+
+def mlstm_core_prefill(shared, h, z, state, cfg, rt: Runtime, *,
+                       chunked=False):
+    """Parallel prefill core: (y (B,S,inner), terminal decode state)."""
+    inner, qk, nh, dqk, dv = mlstm_dims(cfg)
+    B, S, _ = h.shape
+    c_raw, conv_buf = causal_conv1d_prefill(h, state["conv"],
+                                            shared["conv_w"],
+                                            shared["conv_b"])
+    c = silu(c_raw)
+    qkv = dense(c, shared["w_qk"])
+    q, k = jnp.split(qkv, 2, axis=-1)
+    v = dense(h, shared["w_v2"])
+    q = q.reshape(B, S, nh, dqk)
+    k = k.reshape(B, S, nh, dqk) * (dqk ** -0.5)
+    v = v.reshape(B, S, nh, dv)
+    if_ = dense(c, shared["w_if"]).astype(jnp.float32) + shared["b_if"]
+    i_log, f_pre = jnp.split(if_, 2, axis=-1)           # (B,S,H)
+    f_log = -jax.nn.softplus(-f_pre)                    # logsigmoid
+    carry0 = (state["C"], state["n"], state["m"])
+    if chunked:
+        y, carry = _mlstm_chunked(q, k, v, i_log, f_log, cfg.xlstm.chunk,
+                                  carry0=carry0, return_state=True)
+    else:
+        y, carry = _mlstm_scan(q, k, v, i_log, f_log, carry0=carry0,
+                               return_state=True)
+    y = _headnorm(y, shared["gn_scale"], cfg.norm_eps).astype(h.dtype)
+    C_l, n_l, m_l = carry
+    return y * silu(z), {"C": C_l, "n": n_l, "m": m_l, "conv": conv_buf}
+
+
+def mlstm_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    h = dense(x, params["w_in"])
+    h = rt.shard.cons(h, "act_batch", "act_seq", "act_inner")
+    z = dense(x, params["w_gate"])
+    y, state = mlstm_core_prefill(params, h, z, state, cfg, rt,
+                                  chunked=cfg.xlstm.chunk > 0)
+    return dense(y, params["w_out"]), state, {}
 
 
 # ---------------------------------------------------------------------------
@@ -342,3 +408,20 @@ def slstm_step(params, x_t, state, pos, cfg, rt: Runtime):
     u = dense(h, params["w_up"]) * silu(dense(h, params["w_gate_ffn"]))
     out = dense(u, params["w_down"])
     return out[:, None], dict(zip(("c", "n", "h", "m"), carry)), {}
+
+
+def slstm_prefill(params, x, state, pos0, cfg, rt: Runtime):
+    """sLSTM is strictly sequential; prefill is one fused lax.scan over the
+    chunk (still one jit call instead of S) threading the decode carry."""
+    gx = dense(x, params["w_slstm"])
+
+    def step(carry, g_t):
+        return _slstm_cell(params, g_t, carry, cfg)
+
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3)                                 # (B,S,H,dh)
+    h = _headnorm(h, params["gn_scale"], cfg.norm_eps).astype(x.dtype)
+    u = dense(h, params["w_up"]) * silu(dense(h, params["w_gate_ffn"]))
+    out = dense(u, params["w_down"])
+    return out, dict(zip(("c", "n", "h", "m"), carry)), {}

@@ -1,0 +1,14 @@
+"""Serving subsystem: parallel prefill + continuous batching.
+
+``ServeEngine`` holds a fixed number of decode *slots* and drives one jitted
+multi-slot decode step with per-slot positions; prompts are prefilled with
+the parallel training-style forward (``models/lm.prefill``) in power-of-two
+chunks, and the extracted state is inserted into the request's slot.  Slots
+are re-admitted from a FIFO queue as requests finish (EOS / length caps).
+"""
+from repro.serve.engine import Request, RequestResult, ServeEngine
+from repro.serve.sampling import SamplingParams, sample
+from repro.serve.scheduler import FIFOScheduler
+
+__all__ = ["Request", "RequestResult", "ServeEngine", "SamplingParams",
+           "sample", "FIFOScheduler"]

@@ -1,0 +1,268 @@
+"""Continuous-batching serving engine.
+
+Design (vLLM-style, sized for a single host or one model replica):
+
+  * ``max_slots`` decode lanes share one jitted multi-slot decode step with
+    *per-slot positions* — each lane is at its own point in its own request.
+  * A prompt is prefilled with the parallel training-style forward
+    (``models/lm.prefill``) in descending power-of-two chunks, so jit
+    specializes on at most log2(max chunk) distinct shapes instead of one
+    per prompt length, and the recurrent/conv/KV state threads through the
+    chunks exactly as token-by-token stepping would produce it.
+  * The terminal prefill state is inserted into the request's slot of the
+    batched decode state; the first token is sampled from the last prompt
+    logit (that instant is the request's TTFT).
+  * Slots retire on EOS / max-new-tokens / cache exhaustion and are refilled
+    from the scheduler queue — decode never restarts for the other lanes.
+
+Everything device-side is functional (state in, state out); host-side
+bookkeeping is plain numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.serve.sampling import SamplingParams, sample
+from repro.serve.scheduler import FIFOScheduler
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    id: int
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    sampling: SamplingParams = SamplingParams()
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    id: int
+    prompt_len: int
+    tokens: List[int]                   # generated tokens (incl. EOS if hit)
+    finish_reason: str                  # eos | length | max_len
+    ttft_s: float                       # submit -> first token
+    latency_s: float                    # submit -> finish
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Request
+    tokens: List[int]
+    t_submit: float
+    t_first: float
+
+
+def prefill_chunks(n: int, max_chunk: int) -> List[int]:
+    """Greedy descending power-of-two decomposition of a prompt length.
+
+    Bounds jit specializations of the prefill step to log2(max_chunk)+1
+    shapes while keeping the number of passes per prompt logarithmic.
+    """
+    out = []
+    while n > 0:
+        c = min(1 << (n.bit_length() - 1), max_chunk)
+        out.append(c)
+        n -= c
+    return out
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed-slot decode state."""
+
+    def __init__(self, cfg, params, *, max_slots: int = 4,
+                 max_len: int = 128, mesh=None, rules=None, seed: int = 0,
+                 max_prefill_chunk: int = 128, scheduler=None):
+        if cfg.kind == "encoder":
+            raise ValueError("encoder-only configs have no decode path")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.max_prefill_chunk = max_prefill_chunk
+        rules = rules or shd.ShardingRules()
+
+        from repro import train as tr
+        prefill_fn = tr.make_prefill_step_fn(cfg, mesh, rules)
+
+        def decode_fn(params, state, toks, pos, rng, temp, topk, topp):
+            rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                            train=False)
+            logits, new_state = lm.decode_step(params, state, toks, pos,
+                                               cfg, rt)
+            nxt = sample(logits, rng, temp, topk, topp)
+            return nxt, new_state
+
+        def insert_fn(batch_state, one_state, slot):
+            def upd(axis):
+                return lambda b, o: jax.lax.dynamic_update_slice_in_dim(
+                    b, o.astype(b.dtype), slot, axis)
+            segs = []
+            for bseg, oseg in zip(batch_state["segments"],
+                                  one_state["segments"]):
+                if isinstance(bseg, list):      # unstacked: batch at axis 0
+                    segs.append([jax.tree_util.tree_map(upd(0), bb, oo)
+                                 for bb, oo in zip(bseg, oseg)])
+                else:                           # lax.scan-stacked: (layers,B,…)
+                    segs.append(jax.tree_util.tree_map(upd(1), bseg, oseg))
+            return {"segments": segs}
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._insert = jax.jit(insert_fn)
+
+        self.state = lm.init_state(cfg, max_slots, max_len, self.dtype)
+        self._lanes: List[Optional[_Lane]] = [None] * max_slots
+        self._pos = np.zeros((max_slots,), np.int32)
+        self._last = np.zeros((max_slots,), np.int32)
+        self._temp = np.zeros((max_slots,), np.float32)
+        self._topk = np.zeros((max_slots,), np.int32)
+        self._topp = np.ones((max_slots,), np.float32)
+        self._rng = jax.random.PRNGKey(seed)
+        self._tick = 0
+        self._finished: List[RequestResult] = []
+        self._submit_t: Dict[int, float] = {}
+        self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
+        self.stats: Dict[str, Any] = {
+            "prefill_tokens": 0, "prefill_s": 0.0,
+            "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
+        }
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt len {len(req.prompt)} >= "
+                f"engine max_len {self.max_len}")
+        self._submit_t[req.id] = time.perf_counter()
+        self.scheduler.add(req)
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> List[RequestResult]:
+        """Drive the engine until the queue and all lanes drain."""
+        for r in (requests or ()):
+            self.submit(r)
+        results: List[RequestResult] = []
+        while True:
+            self._admit()
+            results.extend(self._drain())
+            if not any(l is not None for l in self._lanes):
+                break
+            results.extend(self.step())
+        return results
+
+    # ------------------------------------------------------------- internals
+
+    def _next_rng(self):
+        self._tick += 1
+        return jax.random.fold_in(self._rng, self._tick)
+
+    def _drain(self) -> List[RequestResult]:
+        out, self._finished = self._finished, []
+        return out
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (a request whose very first token
+        finishes frees its slot immediately, so keep admitting)."""
+        while self.scheduler:
+            free = [i for i, l in enumerate(self._lanes) if l is None]
+            if not free:
+                return
+            self._admit_into(free[0], self.scheduler.pop_next())
+
+    def _admit_into(self, slot: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        # TTFT counts queue wait: clock starts at submit, not admission
+        t_submit = self._submit_t.pop(req.id, t0)
+        prompt = np.asarray(req.prompt, np.int32)[None, :]       # (1,S)
+        S = prompt.shape[1]
+        st = lm.init_state(self.cfg, 1, self.max_len, self.dtype)
+        pos = 0
+        logits = None
+        for c in prefill_chunks(S, self.max_prefill_chunk):
+            logits, st = self._prefill(self.params, st,
+                                       jnp.asarray(prompt[:, pos:pos + c]),
+                                       jnp.int32(pos))
+            pos += c
+        sp = req.sampling
+        first = sample(logits[:, -1], self._next_rng(),
+                       jnp.full((1,), sp.temperature, jnp.float32),
+                       jnp.full((1,), sp.top_k, jnp.int32),
+                       jnp.full((1,), sp.top_p, jnp.float32))
+        first_tok = int(np.asarray(first)[0])                    # sync point
+        t1 = time.perf_counter()
+        self.state = self._insert(self.state, st, jnp.int32(slot))
+        self.stats["prefill_tokens"] += S
+        self.stats["prefill_s"] += t1 - t0
+
+        lane = _Lane(req=req, tokens=[first_tok], t_submit=t_submit,
+                     t_first=t1)
+        self._lanes[slot] = lane
+        self._pos[slot] = S
+        self._last[slot] = first_tok
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        # the very first token may already finish the request
+        reason = self._finish_reason(slot)
+        if reason:
+            self._retire(slot, reason)
+
+    def _finish_reason(self, slot: int) -> Optional[str]:
+        lane = self._lanes[slot]
+        if lane.req.eos_id is not None and lane.tokens[-1] == lane.req.eos_id:
+            return "eos"
+        if len(lane.tokens) >= lane.req.max_new_tokens:
+            return "length"
+        if self._pos[slot] + 1 >= self.max_len:
+            return "max_len"
+        return None
+
+    def _retire(self, slot: int, reason: str) -> None:
+        lane = self._lanes[slot]
+        now = time.perf_counter()
+        self._finished.append(RequestResult(
+            id=lane.req.id, prompt_len=len(lane.req.prompt),
+            tokens=list(lane.tokens), finish_reason=reason,
+            ttft_s=lane.t_first - lane.t_submit,
+            latency_s=now - lane.t_submit))
+        self._lanes[slot] = None
+
+    def step(self) -> List[RequestResult]:
+        """One decode step for every active lane; returns newly finished."""
+        active = [b for b, l in enumerate(self._lanes) if l is not None]
+        if not active:
+            return []
+        t0 = time.perf_counter()
+        nxt, self.state = self._decode(
+            self.params, self.state,
+            jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
+            self._next_rng(), jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._topp))
+        nxt = np.asarray(nxt)                                    # sync point
+        t1 = time.perf_counter()
+        self.stats["decode_tokens"] += len(active)
+        self.stats["decode_s"] += t1 - t0
+        self.stats["decode_steps"] += 1
+        for b in active:
+            tok = int(nxt[b])
+            self._pos[b] += 1
+            self._last[b] = tok
+            self._lanes[b].tokens.append(tok)
+            reason = self._finish_reason(b)
+            if reason:
+                self._retire(b, reason)
+        return self._drain()

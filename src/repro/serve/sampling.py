@@ -1,0 +1,56 @@
+"""Per-slot token sampling: temperature / top-k / top-p, fully vectorized.
+
+Every parameter is a per-slot array so one jitted call samples for the whole
+continuous batch, with each slot carrying its own request's settings:
+
+  temperature <= 0  -> greedy (argmax), the rest of the pipeline is skipped
+  top_k == 0        -> no top-k truncation
+  top_p >= 1        -> no nucleus truncation
+
+Filters compose in the usual order (temperature scale -> top-k -> top-p),
+then a Gumbel-max draw picks the token.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling settings (host-side convenience container)."""
+    temperature: float = 0.0            # 0 -> greedy
+    top_k: int = 0                      # 0 -> disabled
+    top_p: float = 1.0                  # 1.0 -> disabled
+
+
+def sample(logits, rng, temperature, top_k, top_p):
+    """logits (B,V); temperature (B,) f32; top_k (B,) i32; top_p (B,) f32
+    -> sampled token ids (B,) i32."""
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: keep the k highest-scoring tokens per row
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)   # (B,1)
+    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p (nucleus): smallest prefix of the sorted distribution whose
+    # mass reaches top_p; implemented as a probability threshold so it maps
+    # back to the unsorted layout without a scatter
+    probs = jax.nn.softmax(scaled, axis=-1)
+    ps = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(ps, axis=-1)
+    # lower clamp keeps the top-1 token at top_p=0 (else all tokens mask)
+    keep = (cum - ps) < jnp.clip(top_p, 1e-6, 1.0)[:, None]      # (B,V)
+    cutoff = jnp.min(jnp.where(keep, ps, jnp.inf), axis=-1, keepdims=True)
+    scaled = jnp.where(probs < cutoff, -jnp.inf, scaled)
+
+    g = jax.random.gumbel(rng, scaled.shape, jnp.float32)
+    sampled = jnp.argmax(scaled + g, axis=-1)
+    return jnp.where(greedy, jnp.argmax(lf, axis=-1),
+                     sampled).astype(jnp.int32)

@@ -1,0 +1,42 @@
+"""Request scheduling policies for the serving engine.
+
+The engine asks the scheduler which waiting request to admit whenever a slot
+frees up.  FIFO is the default; ``ShortestPromptFirst`` trades fairness for
+lower mean TTFT under mixed prompt lengths (shorter prefills first).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+
+class FIFOScheduler:
+    """First-in-first-out admission."""
+
+    def __init__(self):
+        self._q = deque()
+
+    def add(self, request) -> None:
+        self._q.append(request)
+
+    def pop_next(self):
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+class ShortestPromptFirst(FIFOScheduler):
+    """Admit the waiting request with the shortest prompt (min mean TTFT)."""
+
+    def pop_next(self):
+        if not self._q:
+            return None
+        best = min(range(len(self._q)), key=lambda i: len(self._q[i].prompt))
+        self._q.rotate(-best)
+        req = self._q.popleft()
+        self._q.rotate(best)
+        return req

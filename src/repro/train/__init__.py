@@ -135,8 +135,8 @@ def make_train_step(cfg, mesh, rules=None, hp: TrainHParams = TrainHParams(),
 
 def make_prefill_fn(cfg, mesh=None, rules=None):
     """Run the full-sequence forward to produce logits (no cache install —
-    SSM/hybrid archs re-run prefix through decode in examples; the dry-run
-    uses this for the prefill_* shapes)."""
+    the dry-run uses this for the prefill_* shapes; serving uses
+    ``make_prefill_step_fn`` below, which does install state)."""
     rules = rules or shd.ShardingRules()
 
     def prefill(params, batch):
@@ -148,7 +148,25 @@ def make_prefill_fn(cfg, mesh=None, rules=None):
     return prefill
 
 
+def make_prefill_step_fn(cfg, mesh=None, rules=None):
+    """Parallel-prefill step for serving: (params, state, tokens (B,S),
+    pos0) -> (logits (B,S,V), new decode state).  One training-style forward
+    over the whole prompt chunk replaces S sequential decode steps; the
+    extracted state is bit-compatible with token-by-token stepping (tested
+    per mixer in tests/test_prefill_decode.py)."""
+    rules = rules or shd.ShardingRules()
+
+    def prefill_step(params, state, tokens, pos0):
+        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                        train=False)
+        return lm.prefill(params, state, tokens, pos0, cfg, rt)
+
+    return prefill_step
+
+
 def make_serve_fn(cfg, mesh=None, rules=None):
+    """One-token decode step; ``pos`` may be a scalar (lockstep batch) or a
+    (B,) vector of per-slot positions (continuous batching)."""
     rules = rules or shd.ShardingRules()
 
     def serve_step(params, state, tokens_t, pos):
@@ -174,6 +192,8 @@ def serve_state_shardings(cfg, state_shapes, mesh, rules=None):
         if heads_ok and la[-3:] == ("act_kv_seq", None, None):
             # heads divide the model axis: shard cache heads, not seq
             la = la[:-3] + (None, "heads", None)
+        elif heads_ok and la[-1:] == ("act_kv_seq",):
+            la = la[:-1] + (None,)               # kpos follows the cache
         spec = shd.resolve_spec(leaf.shape, la, mesh, rules)
         return NamedSharding(mesh, spec)
 

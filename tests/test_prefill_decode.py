@@ -1,0 +1,195 @@
+"""Prefill/decode equivalence: the serving engine's core correctness
+obligation.  For every mixer kind and RoM dispatch impl, logits and state
+from (parallel prefill -> N decode steps) must match per-token stepping
+within dtype tolerance — including RoM expert routing decisions at the
+prefill->decode boundary."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
+                                MambaConfig, ModelConfig, RGLRUConfig,
+                                RoMConfig, XLSTMConfig)
+from repro.core import moe_mamba, rom
+from repro.distributed.sharding import ShardCtx
+from repro.nn import attention as attn
+from repro.nn import rglru as rgl
+from repro.nn import ssm
+from repro.nn import xlstm as xl
+from repro.nn.layers import Runtime
+
+RT = Runtime(shard=ShardCtx())
+B, S = 2, 13            # deliberately not a multiple of any chunk size
+
+
+def _cfg(**kw):
+    base = dict(name="t", d_model=32, vocab_size=64,
+                segments=((("mamba",), 1),),
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8),
+                rom=RoMConfig(num_experts=4, top_k=1, jitter_eps=0.0,
+                              capacity_factor=4.0, impl="capacity"),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _step_reference(step, params, x, init_state, cfg, with_ctx):
+    st = init_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        a = (params, x[:, t:t + 1], st, jnp.int32(t), cfg, RT)
+        y, st, _ = step(*a, None) if with_ctx else step(*a)
+        outs.append(y)
+    return jnp.concatenate(outs, 1), st
+
+
+def _assert_match(prefill, step, params, x, init_state, cfg, with_ctx,
+                  tol):
+    y_steps, st_steps = _step_reference(step, params, x, init_state, cfg,
+                                        with_ctx)
+    st0 = init_state(cfg, B, jnp.float32)
+    a = (params, x, st0, jnp.int32(0), cfg, RT)
+    y_pre, st_pre, _ = prefill(*a, None) if with_ctx else prefill(*a)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_steps),
+                               atol=tol, rtol=tol)
+    for k in st_steps:
+        np.testing.assert_allclose(np.asarray(st_pre[k]),
+                                   np.asarray(st_steps[k]),
+                                   atol=tol, rtol=tol, err_msg=k)
+
+
+MIX = [
+    ("mamba", ssm.mamba_init, ssm.mamba_init_state, ssm.mamba_step,
+     ssm.mamba_prefill, 5e-4),
+    ("mamba2", ssm.mamba2_init, ssm.mamba2_init_state, ssm.mamba2_step,
+     ssm.mamba2_prefill, 1e-3),
+    ("gdn", ssm.gdn_init, ssm.gdn_init_state, ssm.gdn_step,
+     ssm.gdn_prefill, 1e-3),
+    ("rglru", rgl.rglru_init, rgl.rglru_init_state, rgl.rglru_step,
+     rgl.rglru_prefill, 5e-4),
+    ("mlstm", xl.mlstm_init, xl.mlstm_init_state, xl.mlstm_step,
+     xl.mlstm_prefill, 1e-3),
+    ("slstm", xl.slstm_init, xl.slstm_init_state, xl.slstm_step,
+     xl.slstm_prefill, 5e-4),
+]
+
+
+@pytest.mark.parametrize("name,init,init_state,step,prefill,tol", MIX)
+def test_prefill_matches_stepping(name, init, init_state, step, prefill,
+                                  tol):
+    cfg = _cfg()
+    params = init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    _assert_match(prefill, step, params, x, init_state, cfg, False, tol)
+
+
+ROM = [
+    ("rom_mamba", rom.rom_mamba_init, rom.rom_mamba_init_state,
+     rom.rom_mamba_step, rom.rom_mamba_prefill),
+    ("rom_mamba2", rom.rom_mamba2_init, ssm.mamba2_init_state,
+     rom.rom_mamba2_step, rom.rom_mamba2_prefill),
+    ("rom_gdn", rom.rom_gdn_init, rom.rom_gdn_init_state,
+     rom.rom_gdn_step, rom.rom_gdn_prefill),
+    ("rom_rglru", rom.rom_rglru_init, rom.rom_rglru_init_state,
+     rom.rom_rglru_step, rom.rom_rglru_prefill),
+    ("rom_mlstm", rom.rom_mlstm_init, rom.rom_mlstm_init_state,
+     rom.rom_mlstm_step, rom.rom_mlstm_prefill),
+    ("moemamba", moe_mamba.moemamba_init, moe_mamba.moemamba_init_state,
+     moe_mamba.moemamba_step, moe_mamba.moemamba_prefill),
+]
+
+
+@pytest.mark.parametrize("name,init,init_state,step,prefill", ROM)
+@pytest.mark.parametrize("impl", ["dense", "capacity"])
+def test_rom_prefill_matches_stepping(name, init, init_state, step, prefill,
+                                      impl):
+    """Routing decisions at the prefill->decode boundary must agree: the
+    router is deterministic at inference, and capacity is sized so neither
+    path drops tokens."""
+    cfg = _cfg(rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                             capacity_factor=8.0, impl=impl))
+    params = init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    _assert_match(prefill, step, params, x, init_state, cfg, True, 2e-3)
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_attention_prefill_matches_stepping(window):
+    cfg = _cfg(attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                         head_dim=8, window=window))
+    params = attn.attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    max_len = 20
+    st = attn.attention_init_state(cfg, B, max_len, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, st, _ = attn.attention_step(params, x[:, t:t + 1], st,
+                                       jnp.int32(t), cfg, RT)
+        outs.append(y)
+    y_steps = jnp.concatenate(outs, 1)
+    st0 = attn.attention_init_state(cfg, B, max_len, jnp.float32)
+    y_pre, st_pre, _ = attn.attention_prefill(params, x, st0, jnp.int32(0),
+                                              cfg, RT)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_steps),
+                               atol=5e-4, rtol=5e-4)
+    for k in st:
+        np.testing.assert_allclose(np.asarray(st_pre[k]), np.asarray(st[k]),
+                                   atol=5e-4, rtol=5e-4, err_msg=k)
+
+
+def test_chunked_prefill_composes():
+    """Prefilling 13 tokens as 8+4+1 power-of-two chunks (the engine's
+    decomposition) threads state identically to one pass / per-token."""
+    cfg = _cfg()
+    params = ssm.mamba_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    y_steps, st_steps = _step_reference(ssm.mamba_step, params, x,
+                                        ssm.mamba_init_state, cfg, False)
+    st = ssm.mamba_init_state(cfg, B, jnp.float32)
+    ys, pos = [], 0
+    for c in (8, 4, 1):
+        y, st, _ = ssm.mamba_prefill(params, x[:, pos:pos + c], st,
+                                     jnp.int32(pos), cfg, RT)
+        ys.append(y)
+        pos += c
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_steps), atol=5e-4, rtol=5e-4)
+    for k in st_steps:
+        np.testing.assert_allclose(np.asarray(st[k]),
+                                   np.asarray(st_steps[k]),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_model_prefill_then_decode_matches_full_stepping():
+    """Whole-model check on a hybrid block (mamba + attn + mlp): prefill the
+    prompt in one pass, then decode; logits must match stepping everything."""
+    import repro.train as tr
+    from repro.models import lm
+
+    cfg = _cfg(segments=((("mamba", "attn", "mlp"), 2),), d_ff=64)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2,
+                              cfg.vocab_size)
+    max_len = S + 4
+    serve = tr.make_serve_fn(cfg)
+    st = lm.init_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
+    for t in range(S):
+        nxt, logits_ref, st = serve(params, st, toks[:, t:t + 1],
+                                    jnp.int32(t))
+    pf = tr.make_prefill_step_fn(cfg)
+    st0 = lm.init_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
+    logits_pre, st_pre = pf(params, st0, toks, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                               np.asarray(logits_ref), atol=2e-3, rtol=2e-3)
+    # continuing decode from either state gives the same next logits
+    _, l1, _ = serve(params, st, toks[:, -1:], jnp.int32(S))
+    _, l2, _ = serve(params, st_pre, toks[:, -1:], jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1), atol=2e-3,
+                               rtol=2e-3)

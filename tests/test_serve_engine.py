@@ -1,0 +1,181 @@
+"""Serving engine behaviour: continuous batching, per-slot positions,
+admission/eviction, sampling, scheduling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.train as tr
+from repro.configs.base import (AttentionConfig, MambaConfig, ModelConfig)
+from repro.models import lm
+from repro.serve import (FIFOScheduler, Request, SamplingParams, ServeEngine,
+                         sample)
+from repro.serve.engine import prefill_chunks
+from repro.serve.scheduler import ShortestPromptFirst
+
+
+def _cfg(**kw):
+    base = dict(name="t", d_model=32, vocab_size=64,
+                segments=((("mamba", "attn"), 1),),
+                mamba=MambaConfig(d_state=4, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _greedy_reference(cfg, params, prompt, gen, max_len):
+    serve = jax.jit(tr.make_serve_fn(cfg))
+    st = lm.init_state(cfg, 1, max_len, jnp.dtype(cfg.dtype))
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    for t in range(toks.shape[1]):
+        nxt, _, st = serve(params, st, toks[:, t:t + 1], jnp.int32(t))
+    out, pos = [int(nxt[0])], toks.shape[1]
+    while len(out) < gen:
+        nxt, _, st = serve(params, st, nxt[:, None], jnp.int32(pos))
+        out.append(int(nxt[0]))
+        pos += 1
+    return out
+
+
+def test_engine_continuous_batching_matches_pertoken_greedy():
+    """5 mixed-length requests on 3 slots (forces slot reuse): every
+    request's greedy output must equal its isolated per-token decode."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 32
+    rng = np.random.default_rng(0)
+    lens = [4, 9, 3, 7, 11]
+    reqs = [Request(id=i,
+                    prompt=rng.integers(2, cfg.vocab_size, size=(n,)).tolist(),
+                    max_new_tokens=6)
+            for i, n in enumerate(lens)]
+    eng = ServeEngine(cfg, params, max_slots=3, max_len=max_len, seed=0)
+    results = {r.id: r for r in eng.run(reqs)}
+    assert set(results) == set(range(5))
+    for req in reqs:
+        ref = _greedy_reference(cfg, params, req.prompt, 6, max_len)
+        assert results[req.id].tokens == ref, req.id
+        assert results[req.id].finish_reason == "length"
+        assert results[req.id].ttft_s >= 0.0
+
+
+def test_engine_eos_and_maxlen_eviction():
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 6, 7]
+    ref = _greedy_reference(cfg, params, prompt, 8, 32)
+    eos = ref[2]                       # force an EOS hit at the 3rd token
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=32, seed=0)
+    res = eng.run([Request(id=0, prompt=prompt, max_new_tokens=8,
+                           eos_id=eos)])[0]
+    assert res.finish_reason == "eos"
+    assert res.tokens == ref[:3]
+    # cache exhaustion: prompt 3 + decode to max_len ends the request
+    eng2 = ServeEngine(cfg, params, max_slots=1, max_len=8, seed=0)
+    res2 = eng2.run([Request(id=1, prompt=prompt, max_new_tokens=100)])[0]
+    assert res2.finish_reason == "max_len"
+    assert len(res2.tokens) == 8 - 3
+
+
+def test_engine_rejects_bad_requests():
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(id=0, prompt=[]))
+    with pytest.raises(ValueError):
+        eng.submit(Request(id=1, prompt=list(range(8))))
+
+
+def test_prefill_chunks_power_of_two():
+    assert prefill_chunks(13, 64) == [8, 4, 1]
+    assert prefill_chunks(64, 16) == [16, 16, 16, 16]
+    assert prefill_chunks(1, 64) == [1]
+    for n in range(1, 200):
+        cs = prefill_chunks(n, 32)
+        assert sum(cs) == n
+        assert all(c & (c - 1) == 0 and c <= 32 for c in cs)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def _sample(logits, rng, t, k, p):
+    B = logits.shape[0]
+    return np.asarray(sample(
+        jnp.asarray(logits), rng,
+        jnp.full((B,), t, jnp.float32),
+        jnp.full((B,), k, jnp.int32),
+        jnp.full((B,), p, jnp.float32)))
+
+
+def test_sampling_greedy_is_argmax():
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (4, 32)))
+    toks = _sample(logits, jax.random.PRNGKey(1), 0.0, 0, 1.0)
+    np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+def test_sampling_topk_restricts_support():
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (2, 64)))
+    top2 = np.argsort(logits, -1)[:, -2:]
+    for i in range(20):
+        toks = _sample(logits, jax.random.PRNGKey(i), 1.5, 2, 1.0)
+        for b in range(2):
+            assert toks[b] in top2[b]
+
+
+def test_sampling_topp_restricts_support():
+    # one dominant token (p=0.99 mass): nucleus 0.5 must always pick it
+    logits = np.zeros((1, 16), np.float32)
+    logits[0, 3] = 10.0
+    for i in range(20):
+        toks = _sample(logits, jax.random.PRNGKey(i), 1.0, 0, 0.5)
+        assert toks[0] == 3
+
+
+def test_sampling_topp_zero_is_top1():
+    """top_p=0 must degenerate to top-1, not mask every token."""
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (3, 32)))
+    for i in range(10):
+        toks = _sample(logits, jax.random.PRNGKey(i), 1.0, 0, 0.0)
+        np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+def test_sampling_temperature_spreads():
+    logits = np.zeros((1, 8), np.float32)
+    logits[0, 0] = 2.0
+    seen = {int(_sample(logits, jax.random.PRNGKey(i), 5.0, 0, 1.0)[0])
+            for i in range(64)}
+    assert len(seen) > 1               # high temperature actually samples
+
+
+def test_sampling_per_slot_params_are_independent():
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (2, 32)))
+    toks = np.asarray(sample(
+        jnp.asarray(logits), jax.random.PRNGKey(7),
+        jnp.asarray([0.0, 2.0], jnp.float32),       # slot0 greedy
+        jnp.asarray([0, 0], jnp.int32),
+        jnp.asarray([1.0, 1.0], jnp.float32)))
+    assert toks[0] == logits[0].argmax()
+
+
+# ---------------------------------------------------------------------------
+# scheduling
+# ---------------------------------------------------------------------------
+
+def test_fifo_scheduler_order():
+    s = FIFOScheduler()
+    for i in (3, 1, 2):
+        s.add(Request(id=i, prompt=[0] * (i + 1)))
+    assert [s.pop_next().id for _ in range(3)] == [3, 1, 2]
+    assert s.pop_next() is None
+
+
+def test_shortest_prompt_first():
+    s = ShortestPromptFirst()
+    for i, n in enumerate((5, 2, 9, 3)):
+        s.add(Request(id=i, prompt=[0] * n))
+    assert [s.pop_next().id for _ in range(4)] == [1, 3, 0, 2]

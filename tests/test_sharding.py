@@ -12,8 +12,17 @@ from repro.distributed import sharding as shd
 from repro.launch import specs as sp
 from repro.models import lm
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    """AbstractMesh's constructor changed across JAX versions: newer takes
+    (shape, axis_names); 0.4.37 takes one ((name, size), ...) tuple."""
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+SINGLE = _abstract_mesh((16, 16), ("data", "model"))
+MULTI = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_resolver_divisibility_fallback():
