@@ -1,5 +1,7 @@
 """Serving benchmark: parallel prefill vs per-token prefill, engine
-throughput, and time-to-first-token; emits JSON.
+throughput, time-to-first-token, and a staggered-arrival load scenario
+comparing stall-free interleaved admission against sequential prefill;
+emits JSON.
 
     PYTHONPATH=src python benchmarks/serving.py --smoke
     PYTHONPATH=src python benchmarks/serving.py --arch rom-mamba-115m \
@@ -15,6 +17,15 @@ Measures, on the same config and prompts:
   prefill_speedup        parallel / per-token
   decode_tps             engine decode tokens/s (all slots)
   ttft_mean_s            mean submit->first-token latency across requests
+
+  load.*                 staggered-arrival scenario: requests arrive in
+                         bursts while decode is active.  Per admission mode:
+                         decode tokens/s (counting mixed-step time),
+                         decode stall seconds, and TTFT p50/p95 — overall
+                         and for the mid-run arrivals.  ``baseline`` is the
+                         same initial batch with no arrivals (the
+                         no-admission decode rate the stall-free engine is
+                         held to).
 """
 from __future__ import annotations
 
@@ -90,11 +101,125 @@ def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
     results = engine.run(reqs)
     s = engine.stats
     return {
-        "decode_tps": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+        "decode_tps": s["decode_tokens"] / max(s["decode_s"] + s["mixed_s"],
+                                               1e-9),
         "ttft_mean_s": float(np.mean([r.ttft_s for r in results])),
         "ttft_max_s": float(np.max([r.ttft_s for r in results])),
         "requests": len(results),
     }
+
+
+# ---------------------------------------------------------------------------
+# staggered-arrival load scenario
+# ---------------------------------------------------------------------------
+
+def _pct(xs, p):
+    return round(float(np.percentile(np.asarray(xs), p)), 4) if xs else 0.0
+
+
+def _reset_stats(engine):
+    for k, v in engine.stats.items():
+        engine.stats[k] = type(v)()
+
+
+def _drive(engine, initial, arrivals):
+    """Run a scenario: ``initial`` requests submitted up front, ``arrivals``
+    as (decode_step, request) pairs injected once decode reaches that step —
+    i.e. while other requests are actively decoding."""
+    for r in initial:
+        engine.submit(r)
+    pending = sorted(arrivals, key=lambda a: a[0])
+    results = []
+    t0 = time.perf_counter()
+    while engine.busy() or pending:
+        while pending and (engine.stats["decode_steps"] >= pending[0][0]
+                           or not engine.busy()):
+            engine.submit(pending.pop(0)[1])
+        results.extend(engine.tick())
+    wall = time.perf_counter() - t0
+    return results, wall
+
+
+def _scenario_requests(prompts, gen, n_initial):
+    initial = [Request(id=i, prompt=prompts[i].tolist(),
+                       max_new_tokens=2 * gen)
+               for i in range(n_initial)]
+    rest = list(range(n_initial, prompts.shape[0]))
+    # one burst while the initial batch is mid-decode: batched prefill lanes
+    # (all arrivals share one job) are what cut TTFT vs the sequential
+    # engine's serialized per-request prefills
+    arrivals = [(2, Request(id=i, prompt=prompts[i].tolist(),
+                            max_new_tokens=gen))
+                for i in rest]
+    return initial, arrivals
+
+
+def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
+                 max_slots=6, n_initial=4):
+    """Staggered arrivals during active decode, run under both admission
+    modes plus a no-admission baseline (warm-up pass first so jit
+    compilation stays out of every timed region)."""
+    # short prompts, two chunks each: enough to interleave admission with
+    # decode (stall-freedom needs chunks, not many of them) without paying
+    # one dispatch overhead per tiny chunk on the admission critical path
+    prompts = prompts[:, :min(prompts.shape[1], 32)]
+    chunk = max(8, min(chunk, prompts.shape[1] // 2))
+    n_burst = prompts.shape[0] - n_initial
+    # the scenario's own parameters (they intentionally differ from the
+    # top-level prompt_len/prefill-chunk args) ride in the report so the
+    # per-PR artifact trail stays attributable
+    out = {"prompt_len": int(prompts.shape[1]), "chunk": int(chunk),
+           "gen": int(gen), "max_slots": int(max_slots),
+           "n_initial": int(n_initial), "n_arrivals": int(n_burst)}
+    iters = 5                       # best-of-N: least load-disturbed run
+    for mode in ("interleaved", "sequential"):
+        eng = ServeEngine(cfg, params, max_slots=max_slots, max_len=max_len,
+                          seed=seed, max_prefill_chunk=chunk, admission=mode)
+        _drive(eng, *_scenario_requests(prompts, gen, n_initial))  # compile
+        best = None
+        for _ in range(iters):
+            _reset_stats(eng)
+            initial, arrivals = _scenario_requests(prompts, gen, n_initial)
+            results, wall = _drive(eng, initial, arrivals)
+            if best is None or wall < best[2]:
+                best = (results, dict(eng.stats), wall, arrivals)
+        results, s, wall, arrivals = best
+        arr_ids = {r.id for _, r in arrivals}
+        ttft_all = [r.ttft_s for r in results]
+        ttft_arr = [r.ttft_s for r in results if r.id in arr_ids]
+        out[mode] = {
+            "requests": len(results),
+            "decode_tps": round(s["decode_tokens"] /
+                                max(s["decode_s"] + s["mixed_s"], 1e-9), 1),
+            "decode_stall_s": round(s["stall_s"], 4),
+            "mixed_steps": s["mixed_steps"],
+            "wall_s": round(wall, 4),
+            "ttft_p50_s": _pct(ttft_all, 50),
+            "ttft_p95_s": _pct(ttft_all, 95),
+            "arrival_ttft_p50_s": _pct(ttft_arr, 50),
+            "arrival_ttft_p95_s": _pct(ttft_arr, 95),
+        }
+        if mode == "interleaved":
+            # no-admission baseline on the warm engine: initial batch only
+            tps = 0.0
+            for _ in range(iters):
+                _reset_stats(eng)
+                initial, _ = _scenario_requests(prompts, gen, n_initial)
+                _drive(eng, initial, [])
+                s = eng.stats
+                tps = max(tps, s["decode_tokens"] /
+                          max(s["decode_s"] + s["mixed_s"], 1e-9))
+            out["baseline_decode_tps"] = round(tps, 1)
+    out["decode_tps_vs_baseline"] = round(
+        out["interleaved"]["decode_tps"] /
+        max(out["baseline_decode_tps"], 1e-9), 3)
+    out["ttft_p50_vs_sequential"] = round(
+        out["interleaved"]["ttft_p50_s"] /
+        max(out["sequential"]["ttft_p50_s"], 1e-9), 3)
+    out["ttft_p95_vs_sequential"] = round(
+        out["interleaved"]["ttft_p95_s"] /
+        max(out["sequential"]["ttft_p95_s"], 1e-9), 3)
+    return out
 
 
 def main():
@@ -117,15 +242,21 @@ def main():
     if cfg.kind == "encoder":
         raise SystemExit("encoder-only arch has no decode step")
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
-    max_len = args.prompt_len + args.gen
-    corpus = corpus_for(cfg, args.prompt_len + 1, args.batch, args.seed)
-    prompts = jnp.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]
+    max_len = args.prompt_len + 2 * args.gen + 1
+    n_load = 6                      # 4 initial + one burst of 2 arrivals
+    corpus = corpus_for(cfg, args.prompt_len + 1,
+                        max(args.batch, n_load), args.seed)
+    all_prompts = jnp.asarray(corpus.batch_at(0)["tokens"])[:,
+                                                            :args.prompt_len]
+    prompts = all_prompts[:args.batch]
 
     par = parallel_prefill_tps(cfg, params, prompts, max_len,
                                args.prefill_chunk)
     per = pertoken_prefill_tps(cfg, params, prompts, max_len)
     eng = engine_metrics(cfg, params, np.asarray(prompts), args.gen, max_len,
                          args.prefill_chunk, args.seed)
+    load = load_metrics(cfg, params, np.asarray(all_prompts[:n_load]),
+                        args.gen, max_len, args.prefill_chunk, args.seed)
     report = {
         "arch": args.arch, "smoke": args.smoke,
         "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
@@ -134,6 +265,7 @@ def main():
         "prefill_speedup": round(par / per, 2),
         **{k: (round(v, 4) if isinstance(v, float) else v)
            for k, v in eng.items()},
+        "load": load,
     }
     text = json.dumps(report, indent=2)
     if args.out:

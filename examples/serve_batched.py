@@ -43,8 +43,10 @@ def main():
               f"ttft {r.ttft_s * 1e3:6.1f}ms -> {r.tokens[:12]}")
     s = engine.stats
     print(f"prefill {s['prefill_tokens']} tok / {s['prefill_s']:.3f}s | "
-          f"decode {s['decode_tokens']} tok / {s['decode_s']:.3f}s "
-          f"in {s['decode_steps']} steps (continuous batching)")
+          f"decode {s['decode_tokens']} tok / "
+          f"{s['decode_s'] + s['mixed_s']:.3f}s "
+          f"in {s['decode_steps']} steps "
+          f"({s['mixed_steps']} interleaved with prefill chunks)")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.core import router as rtr
 from repro.core.rom import SharedRouting, _expert_init, _fold_rng
 from repro.nn import ssm
 from repro.nn.layers import Runtime, dense, dense_init, silu
+from repro.serve.state import batch_spec
 
 
 def moemamba_init(key, cfg):
@@ -91,6 +92,9 @@ def moemamba_apply(params, x, cfg, rt: Runtime, ctx=None):
 
 def moemamba_init_state(cfg, batch, dtype):
     return ssm.mamba_init_state(cfg, batch, dtype)
+
+
+moemamba_state_spec = batch_spec(moemamba_init_state)
 
 
 def moemamba_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):

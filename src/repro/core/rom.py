@@ -33,6 +33,7 @@ from repro.nn import rglru as rgl
 from repro.nn import ssm
 from repro.nn import xlstm as xl
 from repro.nn.layers import Runtime, dense, dense_init, silu
+from repro.serve.state import batch_spec
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +178,12 @@ def rom_mamba_apply(params, x, cfg, rt: Runtime, ctx=None):
 
 def rom_mamba_init_state(cfg, batch, dtype):
     return ssm.mamba_init_state(cfg, batch, dtype)
+
+
+# RoM routes projections only; the recurrent/conv decode state is the
+# wrapped core's, so every RoM variant shares its core's StateSpec.
+rom_mamba_state_spec = batch_spec(rom_mamba_init_state)
+rom_mamba2_state_spec = ssm.mamba2_state_spec
 
 
 def rom_mamba_prefill(params, x, state, pos0, cfg, rt: Runtime, ctx=None):
@@ -330,6 +337,9 @@ def rom_gdn_init_state(cfg, batch, dtype):
     return ssm.gdn_init_state(cfg, batch, dtype)
 
 
+rom_gdn_state_spec = batch_spec(rom_gdn_init_state)
+
+
 def rom_gdn_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
     if ctx is not None:
@@ -408,6 +418,9 @@ def rom_rglru_init_state(cfg, batch, dtype):
     return rgl.rglru_init_state(cfg, batch, dtype)
 
 
+rom_rglru_state_spec = batch_spec(rom_rglru_init_state)
+
+
 def rom_rglru_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     sr = SharedRouting(params["w_router"], x_t, cfg.rom, rt, rng=None)
     if ctx is not None:
@@ -461,6 +474,9 @@ def rom_mlstm_apply(params, x, cfg, rt: Runtime, ctx=None):
 
 def rom_mlstm_init_state(cfg, batch, dtype):
     return xl.mlstm_init_state(cfg, batch, dtype)
+
+
+rom_mlstm_state_spec = batch_spec(rom_mlstm_init_state)
 
 
 def rom_mlstm_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):

@@ -88,7 +88,7 @@ def grouped_matmul_pallas(x, w, group_sizes, *, tile_c=128, tile_f=128,
             scratch_shapes=[pltpu.VMEM((tile_c, tile_f), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((E * Cp, Fp), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(group_sizes.astype(jnp.int32), xf, wp)

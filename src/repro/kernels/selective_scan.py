@@ -67,7 +67,7 @@ def selective_scan_pallas(u, dt, A, Bm, Cm, *, chunk=128, de_tile=512,
         out_specs=pl.BlockSpec((1, chunk, de_tile), lambda b, d, s: (b, s, d)),
         out_shape=jax.ShapeDtypeStruct((Bsz, S, De), u.dtype),
         scratch_shapes=[pltpu.VMEM((de_tile, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, dt, Bm, Cm, A)

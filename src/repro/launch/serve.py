@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--admission", default="interleaved",
+                    choices=("interleaved", "sequential"),
+                    help="stall-free chunked admission (default) vs the "
+                         "full-prefill-per-request baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,7 +54,8 @@ def main():
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.prompt_len + args.gen
     engine = ServeEngine(cfg, params, max_slots=args.batch, max_len=max_len,
-                         mesh=mesh, seed=args.seed)
+                         mesh=mesh, seed=args.seed,
+                         admission=args.admission)
 
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
@@ -68,12 +73,14 @@ def main():
     s = engine.stats
     gen_tok = sum(len(r.tokens) for r in results)
     ttfts = [r.ttft_s for r in results]
+    dec_s = s["decode_s"] + s["mixed_s"]       # mixed steps advance decode too
     print(f"served {len(results)} requests ({gen_tok} generated tok) "
           f"in {wall:.3f}s | "
           f"prefill {s['prefill_tokens']} tok in {s['prefill_s']:.3f}s "
           f"({s['prefill_tokens'] / max(s['prefill_s'], 1e-9):.1f} tok/s) | "
-          f"decode {s['decode_tokens']} tok in {s['decode_s']:.3f}s "
-          f"({s['decode_tokens'] / max(s['decode_s'], 1e-9):.1f} tok/s)")
+          f"decode {s['decode_tokens']} tok in {dec_s:.3f}s "
+          f"({s['decode_tokens'] / max(dec_s, 1e-9):.1f} tok/s) | "
+          f"{s['mixed_steps']} mixed steps, stall {s['stall_s']:.3f}s")
     print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
           f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
           f"max {np.max(ttfts) * 1e3:.1f}ms")

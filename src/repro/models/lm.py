@@ -28,6 +28,7 @@ from repro.nn import ssm
 from repro.nn import xlstm as xl
 from repro.nn.layers import (Runtime, embed_init, embed_lookup, rmsnorm,
                              rmsnorm_init, softcap)
+from repro.serve.state import STATELESS, StateSpec
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +69,8 @@ def _mlp_apply(p, x, cfg, rt, ctx):
 class Mixer:
     init: Any
     apply: Any                       # (p, x, cfg, rt, ctx) -> (y, aux)
-    init_state: Any = None           # (cfg, batch, max_len, dtype) -> pytree
+    state_spec: StateSpec = None     # decode-state pytree factory + slot axis
+    #   (declared once in the mixer's own module; None -> train/prefill only)
     step: Any = None                 # (p, x_t, st, pos, cfg, rt, ctx)
     prefill: Any = None              # (p, x, st, pos0, cfg, rt, ctx)
     #   -> (y (B,S,D), terminal decode state, aux): the parallel
@@ -76,59 +78,54 @@ class Mixer:
     #   matches stepping token-by-token through ``step``
 
 
-def _st(fn):
-    """Adapt (cfg,batch,dtype) state-init to the (cfg,batch,max_len,dtype) API."""
-    return lambda cfg, batch, max_len, dtype: fn(cfg, batch, dtype)
-
-
 MIXERS: Dict[str, Mixer] = {
     "attn": Mixer(attn.attention_init, _noctx(attn.attention_apply),
-                  lambda cfg, b, L, dt: attn.attention_init_state(cfg, b, L, dt),
+                  attn.attention_state_spec,
                   _noctx_step(attn.attention_step),
                   _noctx_prefill(attn.attention_prefill)),
     "mlp": Mixer(lambda k, cfg: mlp_mod.mlp_init(k, cfg), _mlp_apply,
-                 lambda cfg, b, L, dt: {},
+                 STATELESS,
                  _stateless_step(_mlp_apply),
                  _stateless_prefill(_mlp_apply)),
     "moe": Mixer(rom_ffn.moe_ffn_init, rom_ffn.moe_ffn_apply,
-                 lambda cfg, b, L, dt: {},
+                 STATELESS,
                  _stateless_step(rom_ffn.moe_ffn_apply),
                  _stateless_prefill(rom_ffn.moe_ffn_apply)),
     "mamba": Mixer(ssm.mamba_init, _noctx(ssm.mamba_apply),
-                   _st(ssm.mamba_init_state), _noctx_step(ssm.mamba_step),
+                   ssm.mamba_state_spec, _noctx_step(ssm.mamba_step),
                    _noctx_prefill(ssm.mamba_prefill)),
     "mamba2": Mixer(ssm.mamba2_init, _noctx(ssm.mamba2_apply),
-                    _st(ssm.mamba2_init_state), _noctx_step(ssm.mamba2_step),
+                    ssm.mamba2_state_spec, _noctx_step(ssm.mamba2_step),
                     _noctx_prefill(ssm.mamba2_prefill)),
     "gdn": Mixer(ssm.gdn_init, _noctx(ssm.gdn_apply),
-                 _st(ssm.gdn_init_state), _noctx_step(ssm.gdn_step),
+                 ssm.gdn_state_spec, _noctx_step(ssm.gdn_step),
                  _noctx_prefill(ssm.gdn_prefill)),
     "rglru": Mixer(rgl.rglru_init, _noctx(rgl.rglru_apply),
-                   _st(rgl.rglru_init_state), _noctx_step(rgl.rglru_step),
+                   rgl.rglru_state_spec, _noctx_step(rgl.rglru_step),
                    _noctx_prefill(rgl.rglru_prefill)),
     "mlstm": Mixer(xl.mlstm_init, _noctx(xl.mlstm_apply),
-                   _st(xl.mlstm_init_state), _noctx_step(xl.mlstm_step),
+                   xl.mlstm_state_spec, _noctx_step(xl.mlstm_step),
                    _noctx_prefill(xl.mlstm_prefill)),
     "slstm": Mixer(xl.slstm_init, _noctx(xl.slstm_apply),
-                   _st(xl.slstm_init_state), _noctx_step(xl.slstm_step),
+                   xl.slstm_state_spec, _noctx_step(xl.slstm_step),
                    _noctx_prefill(xl.slstm_prefill)),
     "rom_mamba": Mixer(rom.rom_mamba_init, rom.rom_mamba_apply,
-                       _st(rom.rom_mamba_init_state), rom.rom_mamba_step,
+                       rom.rom_mamba_state_spec, rom.rom_mamba_step,
                        rom.rom_mamba_prefill),
     "rom_mamba2": Mixer(rom.rom_mamba2_init, rom.rom_mamba2_apply,
-                        _st(ssm.mamba2_init_state), rom.rom_mamba2_step,
+                        rom.rom_mamba2_state_spec, rom.rom_mamba2_step,
                         rom.rom_mamba2_prefill),
     "rom_gdn": Mixer(rom.rom_gdn_init, rom.rom_gdn_apply,
-                     _st(rom.rom_gdn_init_state), rom.rom_gdn_step,
+                     rom.rom_gdn_state_spec, rom.rom_gdn_step,
                      rom.rom_gdn_prefill),
     "rom_rglru": Mixer(rom.rom_rglru_init, rom.rom_rglru_apply,
-                       _st(rom.rom_rglru_init_state), rom.rom_rglru_step,
+                       rom.rom_rglru_state_spec, rom.rom_rglru_step,
                        rom.rom_rglru_prefill),
     "rom_mlstm": Mixer(rom.rom_mlstm_init, rom.rom_mlstm_apply,
-                       _st(rom.rom_mlstm_init_state), rom.rom_mlstm_step,
+                       rom.rom_mlstm_state_spec, rom.rom_mlstm_step,
                        rom.rom_mlstm_prefill),
     "moemamba": Mixer(moe_mamba.moemamba_init, moe_mamba.moemamba_apply,
-                      _st(moe_mamba.moemamba_init_state),
+                      moe_mamba.moemamba_state_spec,
                       moe_mamba.moemamba_step,
                       moe_mamba.moemamba_prefill),
     "moa": Mixer(attn_moe.moa_init, _noctx(attn_moe.moa_apply)),
@@ -309,10 +306,11 @@ def init_state(cfg, batch, max_len, dtype):
             st = {}
             for i, kind in enumerate(pattern):
                 mx = MIXERS[kind]
-                if mx.init_state is None:
+                if mx.state_spec is None:
                     raise NotImplementedError(
                         f"{kind} has no decode state (train/prefill only)")
-                st[f"l{i}_{kind}"] = mx.init_state(cfg, batch, max_len, dtype)
+                st[f"l{i}_{kind}"] = mx.state_spec.init(cfg, batch, max_len,
+                                                        dtype)
             return st
         if repeats > 1 and cfg.scan_layers:
             one = block_state()

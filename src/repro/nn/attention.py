@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.nn.layers import (Runtime, apply_rope, cost_map, cost_scan, dense,
                              dense_init)
+from repro.serve.state import StateSpec
 
 NEG_INF = -1e30
 
@@ -227,6 +228,11 @@ def attention_init_state(cfg, batch, max_len, dtype):
         # under continuous batching, so slot validity is per (row, slot)
         "kpos": jnp.full((batch, L), -1, jnp.int32),
     }
+
+
+#: KV cache + per-(slot, cache-slot) kpos validity; slots at axis 0 of every
+#: leaf (the cache seq dim is axis 1, so generic slot gather/insert is safe)
+attention_state_spec = StateSpec(init=attention_init_state)
 
 
 def attention_state_logical(cfg, mesh):

@@ -24,6 +24,7 @@ from repro.kernels.ref import diag_recurrence
 from repro.nn.layers import Runtime, dense, dense_init
 from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
                           causal_conv1d_step)
+from repro.serve.state import batch_spec
 
 
 def rglru_dims(cfg):
@@ -101,6 +102,9 @@ def rglru_init_state(cfg, batch, dtype):
     k = cfg.rglru.conv_kernel
     return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
             "conv": jnp.zeros((batch, k - 1, d_rnn), dtype)}
+
+
+rglru_state_spec = batch_spec(rglru_init_state)
 
 
 def rglru_core_step(shared, u_t, state, cfg, rt: Runtime):

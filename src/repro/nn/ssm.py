@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.nn.layers import Runtime, dense, dense_init, rmsnorm, silu
+from repro.serve.state import batch_spec
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +128,10 @@ def mamba_init_state(cfg, batch, dtype):
     k = cfg.mamba.conv_kernel
     return {"h": jnp.zeros((batch, de, n), jnp.float32),
             "conv": jnp.zeros((batch, k - 1, de), dtype)}
+
+
+#: decode-state declaration (recurrent h + conv buffer, slots at axis 0)
+mamba_state_spec = batch_spec(mamba_init_state)
 
 
 def mamba_core_step(shared, h_t, state, cfg, rt: Runtime,
@@ -321,6 +326,9 @@ def mamba2_init_state(cfg, batch, dtype):
             "conv": jnp.zeros((batch, k - 1, de + 2 * n), dtype)}
 
 
+mamba2_state_spec = batch_spec(mamba2_init_state)
+
+
 def mamba2_step(params, x_t, state, pos, cfg, rt: Runtime):
     de, nh, hd, n = mamba2_dims(cfg)
     xt = x_t[:, 0]
@@ -457,6 +465,9 @@ def gdn_init_state(cfg, batch, dtype):
     return {"S": jnp.zeros((batch, nh, dk_h, dv_h), jnp.float32),
             "conv": jnp.zeros((batch, cfg.gdn.conv_kernel - 1, 2 * dk + dv),
                               dtype)}
+
+
+gdn_state_spec = batch_spec(gdn_init_state)
 
 
 def gdn_step(params, x_t, state, pos, cfg, rt: Runtime):

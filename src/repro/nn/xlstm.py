@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.nn.layers import Runtime, dense, dense_init, silu
 from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
                           causal_conv1d_step)
+from repro.serve.state import batch_spec
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +251,9 @@ def mlstm_init_state(cfg, batch, dtype):
             "conv": jnp.zeros((batch, k - 1, inner), dtype)}
 
 
+mlstm_state_spec = batch_spec(mlstm_init_state)
+
+
 def mlstm_core_step(shared, h_t, z_t, state, cfg, rt: Runtime):
     inner, qk, nh, dqk, dv = mlstm_dims(cfg)
     B = h_t.shape[0]
@@ -397,6 +401,9 @@ def slstm_init_state(cfg, batch, dtype):
     z = jnp.zeros((batch, nh, dh), jnp.float32)
     return {"c": z, "n": z, "h": z,
             "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+slstm_state_spec = batch_spec(slstm_init_state)
 
 
 def slstm_step(params, x_t, state, pos, cfg, rt: Runtime):

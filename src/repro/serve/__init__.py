@@ -1,14 +1,33 @@
-"""Serving subsystem: parallel prefill + continuous batching.
+"""Serving subsystem: parallel prefill + stall-free continuous batching.
 
-``ServeEngine`` holds a fixed number of decode *slots* and drives one jitted
-multi-slot decode step with per-slot positions; prompts are prefilled with
-the parallel training-style forward (``models/lm.prefill``) in power-of-two
-chunks, and the extracted state is inserted into the request's slot.  Slots
-are re-admitted from a FIFO queue as requests finish (EOS / length caps).
+``ServeEngine`` holds a fixed number of decode *slots* over a generic
+:class:`~repro.serve.state.StateStore` and drives one jitted step per tick.
+Admission is stall-free by default: pending prompts prefill in power-of-two
+chunks *interleaved* with decode — one **mixed step** advances every active
+decode slot and one prefill chunk in the same dispatch — and multiple queued
+requests share batched prefill lanes.  A ``sequential`` admission mode keeps
+the PR-1 behaviour (full prefill per request, decode stalled) for A/B runs.
+
+``engine`` is imported lazily: mixer modules declare their ``StateSpec`` via
+``repro.serve.state``, so an eager import here would cycle through
+``models/lm`` back into the partially-initialized mixer module.
 """
-from repro.serve.engine import Request, RequestResult, ServeEngine
 from repro.serve.sampling import SamplingParams, sample
-from repro.serve.scheduler import FIFOScheduler
+from repro.serve.scheduler import FIFOScheduler, ShortestPromptFirst
+from repro.serve.state import (StateSpec, StateStore, adopt_slots,
+                               gather_slots, init_slots, insert_slots,
+                               slot_axes)
+
+_ENGINE_NAMES = ("Request", "RequestResult", "ServeEngine")
 
 __all__ = ["Request", "RequestResult", "ServeEngine", "SamplingParams",
-           "sample", "FIFOScheduler"]
+           "sample", "FIFOScheduler", "ShortestPromptFirst", "StateSpec",
+           "StateStore", "adopt_slots", "gather_slots", "init_slots",
+           "insert_slots", "slot_axes"]
+
+
+def __getattr__(name):
+    if name in _ENGINE_NAMES:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,17 +1,27 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with stall-free chunked admission.
 
 Design (vLLM-style, sized for a single host or one model replica):
 
   * ``max_slots`` decode lanes share one jitted multi-slot decode step with
     *per-slot positions* — each lane is at its own point in its own request.
-  * A prompt is prefilled with the parallel training-style forward
-    (``models/lm.prefill``) in descending power-of-two chunks, so jit
-    specializes on at most log2(max chunk) distinct shapes instead of one
-    per prompt length, and the recurrent/conv/KV state threads through the
-    chunks exactly as token-by-token stepping would produce it.
-  * The terminal prefill state is inserted into the request's slot of the
-    batched decode state; the first token is sampled from the last prompt
-    logit (that instant is the request's TTFT).
+  * Slot state is managed through the generic
+    :class:`~repro.serve.state.StateStore`: every mixer declares its
+    decode-state pytree and slot axis once (``state_spec`` on the Mixer
+    registry), so admission/eviction never special-cases a mixer.
+  * Admission is **stall-free** (``admission="interleaved"``, the default):
+    queued prompts prefill in descending power-of-two chunks (jit
+    specializations stay O(log max_chunk)) *interleaved* with decode — one
+    jitted **mixed step** advances every active decode slot and one prefill
+    chunk in the same dispatch, so decode lanes never wait for a prompt.
+    When several requests are queued, up to ``prefill_lanes`` of them share
+    **batched prefill lanes**: one job prefills them together (lane batch
+    padded to a power of two so lane-count specializations stay logarithmic
+    too), and each request's terminal state is adopted into its slot the
+    chunk its prompt completes.
+  * ``admission="sequential"`` keeps the PR-1 behaviour — full prefill per
+    request while decode stalls — as the A/B baseline for the benchmark.
+  * The first token is sampled from the last prompt logit inside the same
+    dispatch that finishes the prompt (that instant is the request's TTFT).
   * Slots retire on EOS / max-new-tokens / cache exhaustion and are refilled
     from the scheduler queue — decode never restarts for the other lanes.
 
@@ -32,6 +42,7 @@ from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.serve.sampling import SamplingParams, sample
 from repro.serve.scheduler import FIFOScheduler
+from repro.serve.state import StateStore
 
 
 @dataclasses.dataclass
@@ -62,6 +73,17 @@ class _Lane:
     t_first: float
 
 
+@dataclasses.dataclass
+class _PrefillLane:
+    """One request inside an in-flight batched prefill job."""
+    req: Request
+    slot: int                           # reserved decode slot
+    row: int                            # row in the job's lane batch
+    t_submit: float
+    remaining: int                      # prompt tokens not yet prefilled
+    done: bool = False
+
+
 def prefill_chunks(n: int, max_chunk: int) -> List[int]:
     """Greedy descending power-of-two decomposition of a prompt length.
 
@@ -76,26 +98,79 @@ def prefill_chunks(n: int, max_chunk: int) -> List[int]:
     return out
 
 
+class _PrefillJob:
+    """A batched admission in flight: up to ``width`` requests prefilled
+    together, one chunk per engine tick, all lanes advancing in lockstep
+    from position 0.  Each chunk is the largest power of two that every
+    still-active lane can consume (the min of their next greedy chunks), so
+    chunk sizes stay powers of two <= max_chunk and lanes with shorter
+    prompts drop out at chunk boundaries — their terminal state is adopted
+    into their slot while longer lanes keep prefilling."""
+
+    def __init__(self, lanes: List[_PrefillLane], width: int, state,
+                 max_chunk: int):
+        self.lanes = lanes
+        self.width = width
+        self.state = state
+        self.pos = 0
+        self.max_chunk = max_chunk
+        self.prompts = {l.row: np.asarray(l.req.prompt, np.int32)
+                        for l in lanes}
+        self.temp = np.zeros((width,), np.float32)
+        self.topk = np.zeros((width,), np.int32)
+        self.topp = np.ones((width,), np.float32)
+        for l in lanes:
+            sp = l.req.sampling
+            self.temp[l.row] = sp.temperature
+            self.topk[l.row] = sp.top_k
+            self.topp[l.row] = sp.top_p
+
+    def active(self) -> List[_PrefillLane]:
+        return [l for l in self.lanes if not l.done]
+
+    def next_chunk(self) -> int:
+        return min(min(1 << (l.remaining.bit_length() - 1)
+                       for l in self.active()), self.max_chunk)
+
+    def token_block(self, c: int) -> np.ndarray:
+        """(width, c) token block: each active lane's next c prompt tokens.
+        Finished/padding rows feed token 0 — their output and state rows are
+        never read (the terminal state was adopted when the lane finished)."""
+        blk = np.zeros((self.width, c), np.int32)
+        for l in self.active():
+            blk[l.row] = self.prompts[l.row][self.pos:self.pos + c]
+        return blk
+
+    def finished(self) -> bool:
+        return all(l.done for l in self.lanes)
+
+
 class ServeEngine:
     """Continuous-batching engine over a fixed-slot decode state."""
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_len: int = 128, mesh=None, rules=None, seed: int = 0,
-                 max_prefill_chunk: int = 128, scheduler=None):
+                 max_prefill_chunk: int = 128, scheduler=None,
+                 admission: str = "interleaved",
+                 prefill_lanes: Optional[int] = None):
         if cfg.kind == "encoder":
             raise ValueError("encoder-only configs have no decode path")
+        if admission not in ("interleaved", "sequential"):
+            raise ValueError(f"unknown admission mode {admission!r}")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.dtype = jnp.dtype(cfg.dtype)
         self.max_prefill_chunk = max_prefill_chunk
+        self.admission = admission
+        self.prefill_lanes = min(prefill_lanes or max_slots, max_slots)
         rules = rules or shd.ShardingRules()
 
         from repro import train as tr
         prefill_fn = tr.make_prefill_step_fn(cfg, mesh, rules)
 
-        def decode_fn(params, state, toks, pos, rng, temp, topk, topp):
+        def decode_core(params, state, toks, pos, rng, temp, topk, topp):
             rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
                             train=False)
             logits, new_state = lm.decode_step(params, state, toks, pos,
@@ -103,26 +178,31 @@ class ServeEngine:
             nxt = sample(logits, rng, temp, topk, topp)
             return nxt, new_state
 
-        def insert_fn(batch_state, one_state, slot):
-            def upd(axis):
-                return lambda b, o: jax.lax.dynamic_update_slice_in_dim(
-                    b, o.astype(b.dtype), slot, axis)
-            segs = []
-            for bseg, oseg in zip(batch_state["segments"],
-                                  one_state["segments"]):
-                if isinstance(bseg, list):      # unstacked: batch at axis 0
-                    segs.append([jax.tree_util.tree_map(upd(0), bb, oo)
-                                 for bb, oo in zip(bseg, oseg)])
-                else:                           # lax.scan-stacked: (layers,B,…)
-                    segs.append(jax.tree_util.tree_map(upd(1), bseg, oseg))
-            return {"segments": segs}
+        def pf_core(params, pf_state, toks, pos0, rng, temp, topk, topp):
+            logits, new_state = prefill_fn(params, pf_state, toks, pos0)
+            first = sample(logits[:, -1], rng, temp, topk, topp)
+            return first, new_state
 
-        self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
-        self._insert = jax.jit(insert_fn)
+        def mixed_fn(params, state, toks, pos, rng_d, temp, topk, topp,
+                     pf_state, pf_toks, pf_pos, rng_p, pf_temp, pf_topk,
+                     pf_topp):
+            """The mixed step: every decode slot + one prefill chunk, one
+            dispatch — admission costs no decode stall."""
+            nxt, new_state = decode_core(params, state, toks, pos, rng_d,
+                                         temp, topk, topp)
+            first, new_pf = pf_core(params, pf_state, pf_toks, pf_pos,
+                                    rng_p, pf_temp, pf_topk, pf_topp)
+            return nxt, new_state, first, new_pf
 
-        self.state = lm.init_state(cfg, max_slots, max_len, self.dtype)
+        self._prefill = jax.jit(prefill_fn)          # sequential admission
+        self._decode = jax.jit(decode_core)
+        self._pf = jax.jit(pf_core)                  # prefill + first token
+        self._mixed = jax.jit(mixed_fn)
+
+        self.store = StateStore(cfg, max_slots, max_len, self.dtype)
         self._lanes: List[Optional[_Lane]] = [None] * max_slots
+        self._job: Optional[_PrefillJob] = None
+        self._reserved: set = set()                  # slots held by the job
         self._pos = np.zeros((max_slots,), np.int32)
         self._last = np.zeros((max_slots,), np.int32)
         self._temp = np.zeros((max_slots,), np.float32)
@@ -136,7 +216,23 @@ class ServeEngine:
         self.stats: Dict[str, Any] = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
+            "mixed_steps": 0, "mixed_s": 0.0,
+            # stall accounting: ``active_ticks`` counts ticks that began
+            # with live decode lanes; ``stall_s`` accumulates time those
+            # lanes spent NOT advancing (sequential admission's prefills,
+            # plus any tick whose dispatch skipped decode).  The stall-free
+            # property is the invariant active_ticks == decode_steps with
+            # stall_s == 0 — measured, not true by construction.
+            "active_ticks": 0, "stall_s": 0.0,
         }
+
+    @property
+    def state(self):
+        return self.store.state
+
+    @state.setter
+    def state(self, value):
+        self.store.state = value
 
     # ------------------------------------------------------------------ API
 
@@ -150,19 +246,70 @@ class ServeEngine:
         self._submit_t[req.id] = time.perf_counter()
         self.scheduler.add(req)
 
+    def busy(self) -> bool:
+        return (bool(self.scheduler) or self._job is not None
+                or any(l is not None for l in self._lanes))
+
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> List[RequestResult]:
-        """Drive the engine until the queue and all lanes drain."""
+        """Drive the engine until the queue, prefill jobs and lanes drain."""
         for r in (requests or ()):
             self.submit(r)
         results: List[RequestResult] = []
-        while True:
-            self._admit()
-            results.extend(self._drain())
-            if not any(l is not None for l in self._lanes):
-                break
-            results.extend(self.step())
+        while self.busy():
+            results.extend(self.tick())
+        results.extend(self._drain())
         return results
+
+    def tick(self) -> List[RequestResult]:
+        """One scheduling iteration: admit, then one dispatch that advances
+        every active decode slot and (interleaved mode) one prefill chunk of
+        the in-flight admission job.  Returns newly finished requests."""
+        self._admit()
+        active = [b for b, l in enumerate(self._lanes) if l is not None]
+        if active:
+            self.stats["active_ticks"] += 1
+        job = self._job
+        if job is not None:
+            c = job.next_chunk()
+            toks = jnp.asarray(job.token_block(c))
+            live = len(job.active())
+            t0 = time.perf_counter()
+            if active:
+                nxt, self.state, first, job.state = self._mixed(
+                    self.params, self.state,
+                    jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
+                    self._next_rng(), jnp.asarray(self._temp),
+                    jnp.asarray(self._topk), jnp.asarray(self._topp),
+                    job.state, toks, jnp.int32(job.pos), self._next_rng(),
+                    jnp.asarray(job.temp), jnp.asarray(job.topk),
+                    jnp.asarray(job.topp))
+                nxt = np.asarray(nxt)                # sync point
+                first = np.asarray(first)
+                t1 = time.perf_counter()
+                self.stats["mixed_steps"] += 1
+                self.stats["mixed_s"] += t1 - t0
+                self.stats["decode_steps"] += 1
+                self.stats["decode_tokens"] += len(active)
+                self._apply_decode(nxt, active)
+            else:
+                first, job.state = self._pf(
+                    self.params, job.state, toks, jnp.int32(job.pos),
+                    self._next_rng(), jnp.asarray(job.temp),
+                    jnp.asarray(job.topk), jnp.asarray(job.topp))
+                first = np.asarray(first)            # sync point
+                t1 = time.perf_counter()
+                self.stats["prefill_s"] += t1 - t0
+                if active:
+                    # a prefill-only dispatch while decode lanes are live
+                    # is exactly a stall (never taken by the current
+                    # scheduler; counted so regressions surface in stats)
+                    self.stats["stall_s"] += t1 - t0
+            self.stats["prefill_tokens"] += live * c
+            self._advance_job(c, first, t1)
+        elif active:
+            self._decode_only(active)
+        return self._drain()
 
     # ------------------------------------------------------------- internals
 
@@ -174,22 +321,87 @@ class ServeEngine:
         out, self._finished = self._finished, []
         return out
 
-    def _admit(self) -> None:
-        """Fill free slots from the queue (a request whose very first token
-        finishes frees its slot immediately, so keep admitting)."""
-        while self.scheduler:
-            free = [i for i, l in enumerate(self._lanes) if l is None]
-            if not free:
-                return
-            self._admit_into(free[0], self.scheduler.pop_next())
+    def _free_slots(self) -> List[int]:
+        return [i for i, l in enumerate(self._lanes)
+                if l is None and i not in self._reserved]
 
-    def _admit_into(self, slot: int, req: Request) -> None:
+    def _admit(self) -> None:
+        if self.admission == "sequential":
+            # PR-1 behaviour: full prefill per request, decode stalled
+            while self.scheduler:
+                free = self._free_slots()
+                if not free:
+                    return
+                self._admit_sequential(free[0], self.scheduler.pop_next())
+            return
+        if self._job is not None or not self.scheduler:
+            return
+        free = self._free_slots()
+        n = min(len(free), len(self.scheduler), self.prefill_lanes)
+        if n == 0:
+            return
+        # batched prefill lanes: lane batch padded to a power of two so jit
+        # specializes on O(log lanes x log chunk) shapes, not one per count
+        width = 1 << (n - 1).bit_length()
+        lanes = []
+        t_now = time.perf_counter()
+        for row in range(n):
+            req = self.scheduler.pop_next()
+            slot = free[row]
+            lanes.append(_PrefillLane(
+                req=req, slot=slot, row=row,
+                t_submit=self._submit_t.pop(req.id, t_now),
+                remaining=len(req.prompt)))
+            self._reserved.add(slot)
+        self._job = _PrefillJob(lanes, width, self.store.fresh(width),
+                                self.max_prefill_chunk)
+
+    def _advance_job(self, c: int, first: np.ndarray, t_done: float) -> None:
+        job = self._job
+        job.pos += c
+        finished = []
+        for l in job.lanes:
+            if l.done:
+                continue
+            l.remaining -= c
+            if l.remaining == 0:
+                finished.append(l)
+        if finished:
+            # adopt the finished lanes' terminal prefill state into their
+            # slots; ``first`` holds each lane's token sampled from its last
+            # prompt logit inside the dispatch that completed the prompt
+            self.store.adopt(job.state, [l.row for l in finished],
+                             [l.slot for l in finished])
+            for l in finished:
+                l.done = True
+                self._reserved.discard(l.slot)
+                self._activate(l.slot, l.req, int(first[l.row]),
+                               l.t_submit, t_done)
+        if job.finished():
+            self._job = None
+
+    def _activate(self, slot: int, req: Request, first_tok: int,
+                  t_submit: float, t_first: float) -> None:
+        sp = req.sampling
+        self._lanes[slot] = _Lane(req=req, tokens=[first_tok],
+                                  t_submit=t_submit, t_first=t_first)
+        self._pos[slot] = len(req.prompt)
+        self._last[slot] = first_tok
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        # the very first token may already finish the request
+        reason = self._finish_reason(slot)
+        if reason:
+            self._retire(slot, reason)
+
+    def _admit_sequential(self, slot: int, req: Request) -> None:
         t0 = time.perf_counter()
         # TTFT counts queue wait: clock starts at submit, not admission
         t_submit = self._submit_t.pop(req.id, t0)
         prompt = np.asarray(req.prompt, np.int32)[None, :]       # (1,S)
         S = prompt.shape[1]
-        st = lm.init_state(self.cfg, 1, self.max_len, self.dtype)
+        st = self.store.fresh(1)
         pos = 0
         logits = None
         for c in prefill_chunks(S, self.max_prefill_chunk):
@@ -204,22 +416,14 @@ class ServeEngine:
                        jnp.full((1,), sp.top_p, jnp.float32))
         first_tok = int(np.asarray(first)[0])                    # sync point
         t1 = time.perf_counter()
-        self.state = self._insert(self.state, st, jnp.int32(slot))
+        self.store.adopt(st, [0], [slot])
         self.stats["prefill_tokens"] += S
         self.stats["prefill_s"] += t1 - t0
-
-        lane = _Lane(req=req, tokens=[first_tok], t_submit=t_submit,
-                     t_first=t1)
-        self._lanes[slot] = lane
-        self._pos[slot] = S
-        self._last[slot] = first_tok
-        self._temp[slot] = sp.temperature
-        self._topk[slot] = sp.top_k
-        self._topp[slot] = sp.top_p
-        # the very first token may already finish the request
-        reason = self._finish_reason(slot)
-        if reason:
-            self._retire(slot, reason)
+        if any(l is not None for l in self._lanes):
+            # decode lanes sat idle for this whole prefill: that is the
+            # stall the interleaved mixed step eliminates
+            self.stats["stall_s"] += t1 - t0
+        self._activate(slot, req, first_tok, t_submit, t1)
 
     def _finish_reason(self, slot: int) -> Optional[str]:
         lane = self._lanes[slot]
@@ -241,11 +445,17 @@ class ServeEngine:
             latency_s=now - lane.t_submit))
         self._lanes[slot] = None
 
-    def step(self) -> List[RequestResult]:
-        """One decode step for every active lane; returns newly finished."""
-        active = [b for b, l in enumerate(self._lanes) if l is not None]
-        if not active:
-            return []
+    def _apply_decode(self, nxt: np.ndarray, active: List[int]) -> None:
+        for b in active:
+            tok = int(nxt[b])
+            self._pos[b] += 1
+            self._last[b] = tok
+            self._lanes[b].tokens.append(tok)
+            reason = self._finish_reason(b)
+            if reason:
+                self._retire(b, reason)
+
+    def _decode_only(self, active: List[int]) -> None:
         t0 = time.perf_counter()
         nxt, self.state = self._decode(
             self.params, self.state,
@@ -257,12 +467,4 @@ class ServeEngine:
         self.stats["decode_tokens"] += len(active)
         self.stats["decode_s"] += t1 - t0
         self.stats["decode_steps"] += 1
-        for b in active:
-            tok = int(nxt[b])
-            self._pos[b] += 1
-            self._last[b] = tok
-            self._lanes[b].tokens.append(tok)
-            reason = self._finish_reason(b)
-            if reason:
-                self._retire(b, reason)
-        return self._drain()
+        self._apply_decode(nxt, active)

@@ -1,13 +1,19 @@
 """Request scheduling policies for the serving engine.
 
-The engine asks the scheduler which waiting request to admit whenever a slot
-frees up.  FIFO is the default; ``ShortestPromptFirst`` trades fairness for
-lower mean TTFT under mixed prompt lengths (shorter prefills first).
+The engine asks the scheduler which waiting request(s) to admit whenever
+decode slots free up (or, in interleaved admission, whenever it can start a
+new batched prefill job).  Ordering is a property of *pop time*, not
+enqueue time: every ``pop_next`` decides over everything currently queued,
+so requests arriving mid-run compete with older ones instead of being
+appended behind a stale ordering.
+
+FIFO is the default; ``ShortestPromptFirst`` trades fairness for lower mean
+TTFT under mixed prompt lengths (shorter prefills first).
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
-from typing import Optional
 
 
 class FIFOScheduler:
@@ -29,14 +35,28 @@ class FIFOScheduler:
         return bool(self._q)
 
 
-class ShortestPromptFirst(FIFOScheduler):
-    """Admit the waiting request with the shortest prompt (min mean TTFT)."""
+class ShortestPromptFirst:
+    """Admit the waiting request with the shortest prompt (min mean TTFT).
+
+    Backed by a heap keyed on (prompt length, arrival order): a request
+    submitted mid-run is ranked against every request still waiting the
+    moment the engine next admits — not slotted into an ordering frozen when
+    the queue was first built — and equal-length prompts keep FIFO order.
+    """
+
+    def __init__(self):
+        self._h = []
+        self._n = 0                     # arrival counter: stable tiebreak
+
+    def add(self, request) -> None:
+        heapq.heappush(self._h, (len(request.prompt), self._n, request))
+        self._n += 1
 
     def pop_next(self):
-        if not self._q:
-            return None
-        best = min(range(len(self._q)), key=lambda i: len(self._q[i].prompt))
-        self._q.rotate(-best)
-        req = self._q.popleft()
-        self._q.rotate(best)
-        return req
+        return heapq.heappop(self._h)[2] if self._h else None
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+    def __bool__(self) -> bool:
+        return bool(self._h)

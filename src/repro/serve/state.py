@@ -1,0 +1,160 @@
+"""Unified slot-state store: generic decode-state management for serving.
+
+Every mixer declares a :class:`StateSpec` — its decode-state pytree factory
+and the axis that carries the slot (batch) dimension — once, next to its
+step/prefill functions.  ``models/lm.py`` threads the spec through the
+``Mixer`` registry, and the engine manipulates *any* model's state through
+four slot-generic primitives:
+
+  ``init_slots``     allocate an n-slot state for the whole model
+  ``gather_slots``   pull selected slots out as a smaller state
+  ``insert_slots``   write a smaller state into selected slots
+  ``adopt_slots``    gather rows from a source state (e.g. a prefill lane
+                     batch) and insert them into destination slots in one go
+
+This replaces the per-mixer ``insert_fn`` closures the engine used to carry
+(axis special-casing for attention KV vs recurrent state), and is the API
+surface later serving features (speculative decoding over the SSM state)
+build on: they need exactly "give me slot i's state" / "put this state into
+slot i", independent of which mixers the model stacks.
+
+Slot-axis bookkeeping: a mixer's ``slot_axis`` refers to its *own* state
+leaves; when a segment is ``lax.scan``-stacked, every leaf gains a leading
+``layers`` axis and the slot axis shifts by one.  ``slot_axes`` resolves
+this per leaf from the config's segment layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    """A mixer's decode-state declaration.
+
+    init: (cfg, batch, max_len, dtype) -> decode-state pytree with ``batch``
+        slots along ``slot_axis`` of every leaf.
+    slot_axis: axis carrying the slot dimension in every leaf of the pytree
+        (before any segment-level layer stacking).
+    """
+    init: Callable[..., Any]
+    slot_axis: int = 0
+
+
+def batch_spec(init_fn) -> StateSpec:
+    """Adapt a (cfg, batch, dtype) state init — constant-size recurrent
+    state, no per-token cache, so ``max_len`` is irrelevant — to StateSpec."""
+    return StateSpec(init=lambda cfg, batch, max_len, dtype:
+                     init_fn(cfg, batch, dtype))
+
+
+#: Spec for mixers with no decode state (MLP / FFN-MoE): empty pytree.
+STATELESS = StateSpec(init=lambda cfg, batch, max_len, dtype: {})
+
+
+# ---------------------------------------------------------------------------
+# slot-generic primitives over the whole-model state pytree
+# ---------------------------------------------------------------------------
+
+def _block_axes(pattern, bst, shift):
+    from repro.models import lm
+    out = {}
+    for i, kind in enumerate(pattern):
+        spec = lm.MIXERS[kind].state_spec
+        key = f"l{i}_{kind}"
+        out[key] = jax.tree_util.tree_map(
+            lambda _leaf, ax=spec.slot_axis: ax + shift, bst[key])
+    return out
+
+
+def slot_axes(cfg, state):
+    """Per-leaf slot-axis pytree matching ``state``'s structure exactly.
+
+    Unstacked segments keep each mixer's declared ``slot_axis``; scan-stacked
+    segments shift it by one for the leading ``layers`` axis.
+    """
+    segs = []
+    for (pattern, repeats), sst in zip(cfg.segments, state["segments"]):
+        if isinstance(sst, list):
+            segs.append([_block_axes(pattern, bst, 0) for bst in sst])
+        else:
+            segs.append(_block_axes(pattern, sst, 1))
+    return {"segments": segs}
+
+
+def init_slots(cfg, n, max_len, dtype):
+    """Fresh n-slot decode state for the whole model (every mixer's
+    ``state_spec.init``, stacked per the segment layout)."""
+    from repro.models import lm
+    return lm.init_state(cfg, n, max_len, dtype)
+
+
+def gather_slots(state, axes, slots):
+    """Pull ``slots`` (int array (m,)) out of every leaf's slot axis,
+    producing an m-slot state with the same structure."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda leaf, ax: jnp.take(leaf, slots, axis=ax), state, axes)
+
+
+def insert_slots(dst, src, axes, slots):
+    """Write the m-slot ``src`` state into ``slots`` (int array (m,)) of
+    ``dst`` along every leaf's slot axis; returns the updated state."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def one(d, s, ax):
+        idx = (slice(None),) * ax + (slots,)
+        return d.at[idx].set(s.astype(d.dtype))
+
+    return jax.tree_util.tree_map(one, dst, src, axes)
+
+
+def adopt_slots(dst, src, axes, rows, slots):
+    """``insert_slots(dst, gather_slots(src, rows), slots)``: move rows of a
+    source state (a prefill lane batch) into destination slots."""
+    return insert_slots(dst, gather_slots(src, axes, rows), axes, slots)
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+class StateStore:
+    """The engine's batched decode state plus its per-leaf slot axes.
+
+    Holds the canonical ``max_slots``-wide state and exposes slot-generic
+    operations; ``fresh(n)`` allocates side states (prefill lane batches)
+    with the same structure so ``adopt`` can move rows between them.
+    """
+
+    def __init__(self, cfg, max_slots, max_len, dtype):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.state = init_slots(cfg, max_slots, max_len, dtype)
+        self.axes = slot_axes(cfg, self.state)
+        # axes are static python ints: close over them so jit sees concrete
+        # index tuples (retraces only per (m,) shape of rows/slots)
+        self._adopt = jax.jit(lambda dst, src, rows, slots: adopt_slots(
+            dst, src, self.axes, rows, slots))
+        self._gather = jax.jit(lambda st, slots: gather_slots(
+            st, self.axes, slots))
+
+    def fresh(self, n):
+        """A zero-initialized n-slot state with this model's structure."""
+        return init_slots(self.cfg, n, self.max_len, self.dtype)
+
+    def gather(self, slots):
+        """An m-slot copy of the given slots' state."""
+        return self._gather(self.state, jnp.asarray(slots, jnp.int32))
+
+    def adopt(self, src_state, rows, slots):
+        """Install ``src_state``'s ``rows`` into this store's ``slots``."""
+        self.state = self._adopt(self.state, src_state,
+                                 jnp.asarray(rows, jnp.int32),
+                                 jnp.asarray(slots, jnp.int32))
