@@ -26,6 +26,17 @@ Measures, on the same config and prompts:
                          same initial batch with no arrivals (the
                          no-admission decode rate the stall-free engine is
                          held to).
+  speculative.*          self-speculative decoding scenario: the same
+                         requests decoded greedily with speculative=K
+                         (layer-skip draft + one-dispatch verify) vs
+                         speculative=off, reporting decode tokens/s for
+                         both, the draft acceptance rate, and tokens
+                         emitted per round.
+
+Every scenario dict carries an ``engine`` stamp (admission mode,
+speculative K, draft stride, slots, prefill chunk) so the per-PR
+``serving-smoke`` artifacts are self-describing; the full JSON schema is
+documented in docs/serving.md.
 """
 from __future__ import annotations
 
@@ -92,6 +103,18 @@ def parallel_prefill_tps(cfg, params, prompts, max_len, chunk, iters=3):
     return _best_of(once, iters)
 
 
+def engine_stamp(engine):
+    """Engine-config stamp attached to every scenario dict so each
+    serving-smoke artifact records exactly how it was produced."""
+    return {
+        "admission": engine.admission,
+        "speculative_k": engine.spec.k if engine.spec else 0,
+        "draft_stride": engine.spec.draft_stride if engine.spec else 0,
+        "max_slots": engine.max_slots,
+        "max_prefill_chunk": engine.max_prefill_chunk,
+    }
+
+
 def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
     B = prompts.shape[0]
     engine = ServeEngine(cfg, params, max_slots=B, max_len=max_len,
@@ -106,7 +129,57 @@ def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
         "ttft_mean_s": float(np.mean([r.ttft_s for r in results])),
         "ttft_max_s": float(np.max([r.ttft_s for r in results])),
         "requests": len(results),
+        "engine": engine_stamp(engine),
     }
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding scenario
+# ---------------------------------------------------------------------------
+
+def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
+                        k=3, stride=2, iters=3):
+    """Greedy decode of the same requests with speculative decoding on vs
+    off: decode tokens/s for both, acceptance rate, tokens per round.
+    Greedy outputs are bit-identical by construction (tested in
+    tests/test_serve_engine.py); the benchmark records whether the draft is
+    accurate enough for the K-token dispatches to win wall-clock."""
+    B = prompts.shape[0]
+    out = {"k": int(k), "draft_stride": int(stride), "gen": int(gen)}
+
+    def run_once(spec_k):
+        eng = ServeEngine(cfg, params, max_slots=B, max_len=max_len,
+                          seed=seed, max_prefill_chunk=chunk,
+                          speculative=spec_k, draft_stride=stride)
+        reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
+                for i in range(B)]
+        eng.run(reqs)                                # compile + warm
+        best = None
+        for _ in range(iters):
+            _reset_stats(eng)
+            reqs = [Request(id=i, prompt=prompts[i].tolist(),
+                            max_new_tokens=gen) for i in range(B)]
+            eng.run(reqs)
+            s = dict(eng.stats)
+            tps = s["decode_tokens"] / max(s["decode_s"] + s["mixed_s"],
+                                           1e-9)
+            if best is None or tps > best[0]:
+                best = (tps, s, eng.spec_summary())
+        return best + (engine_stamp(eng),)
+
+    tps_off, _, _, stamp_off = run_once(0)
+    tps_on, s, summ, stamp_on = run_once(k)
+    out["baseline"] = {"decode_tps": round(tps_off, 1), "engine": stamp_off}
+    out["speculative"] = {
+        "decode_tps": round(tps_on, 1),
+        "acceptance_rate": round(summ["acceptance_rate"], 4),
+        # tokens emitted per slot per round — comparable to the 1..k+1 window
+        "tokens_per_round": round(summ["tokens_per_slot_round"], 3),
+        "rounds": s["spec_rounds"],
+        "engine": stamp_on,
+    }
+    out["decode_tps_vs_baseline"] = round(tps_on / max(tps_off, 1e-9), 3)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +271,7 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
             "ttft_p95_s": _pct(ttft_all, 95),
             "arrival_ttft_p50_s": _pct(ttft_arr, 50),
             "arrival_ttft_p95_s": _pct(ttft_arr, 95),
+            "engine": engine_stamp(eng),
         }
         if mode == "interleaved":
             # no-admission baseline on the warm engine: initial batch only
@@ -229,6 +303,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=128)
+    ap.add_argument("--speculative-k", type=int, default=3,
+                    help="draft window of the speculative scenario")
+    ap.add_argument("--draft-stride", type=int, default=2,
+                    help="layer-skip stride of the speculative draft")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--seed", type=int, default=0)
@@ -257,6 +335,9 @@ def main():
                          args.prefill_chunk, args.seed)
     load = load_metrics(cfg, params, np.asarray(all_prompts[:n_load]),
                         args.gen, max_len, args.prefill_chunk, args.seed)
+    spec = speculative_metrics(cfg, params, np.asarray(prompts), args.gen,
+                               max_len, args.prefill_chunk, args.seed,
+                               k=args.speculative_k, stride=args.draft_stride)
     report = {
         "arch": args.arch, "smoke": args.smoke,
         "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
@@ -266,6 +347,7 @@ def main():
         **{k: (round(v, 4) if isinstance(v, float) else v)
            for k, v in eng.items()},
         "load": load,
+        "speculative": spec,
     }
     text = json.dumps(report, indent=2)
     if args.out:

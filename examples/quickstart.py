@@ -3,7 +3,8 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Runs in ~2 minutes on CPU.  Shows the three public API layers:
-configs -> train-step factory -> decode-step factory.
+configs -> train-step factory -> serving engine.  See docs/architecture.md
+for the layer map and docs/serving.md for the engine reference.
 """
 import jax
 import jax.numpy as jnp
@@ -12,7 +13,7 @@ from repro import train as tr
 from repro.configs.base import (AttentionConfig, MambaConfig, ModelConfig,
                                 RoMConfig)
 from repro.data.pipeline import MarkovCorpus
-from repro.models import lm
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -42,20 +43,19 @@ def main():
                   f"load_max={float(m['load_max']):.2f}  "
                   f"drop={float(m['drop_frac']):.3f}")
 
-    # 3. Generate: single-token decode steps against SSM + windowed-KV state.
-    serve = jax.jit(tr.make_serve_fn(cfg))
+    # 3. Generate through the serving engine: parallel prefill (one
+    #    training-style pass per power-of-two prompt chunk) + continuous-
+    #    batching greedy decode.  docs/serving.md documents the engine API,
+    #    including speculative decoding (ServeEngine(..., speculative=K)).
     B, prompt_len, gen_len = 2, 16, 24
-    prompt = jnp.asarray(corpus.batch_at(999)["tokens"])[:B, :prompt_len]
-    dstate = lm.init_state(cfg, B, prompt_len + gen_len, jnp.float32)
-    for pos in range(prompt_len):
-        nxt, _, dstate = serve(state["params"], dstate,
-                               prompt[:, pos:pos + 1], jnp.int32(pos))
-    toks = [nxt]
-    for pos in range(prompt_len, prompt_len + gen_len - 1):
-        nxt, _, dstate = serve(state["params"], dstate, toks[-1][:, None],
-                               jnp.int32(pos))
-        toks.append(nxt)
-    print("generated:", jnp.stack(toks, 1)[0].tolist())
+    prompts = jnp.asarray(corpus.batch_at(999)["tokens"])[:B, :prompt_len]
+    engine = ServeEngine(cfg, state["params"], max_slots=B,
+                         max_len=prompt_len + gen_len + 1)
+    results = engine.run([
+        Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen_len)
+        for i in range(B)])
+    by_id = {r.id: r for r in results}
+    print("generated:", by_id[0].tokens)
 
 
 if __name__ == "__main__":

@@ -3,10 +3,13 @@
 Prompts are prefilled with the parallel training-style forward (one pass per
 power-of-two chunk instead of one decode step per token) and decoded with
 per-slot positions; finished slots are refilled from the request queue.
-CPU-runnable with --smoke (reduced same-family config).
+``--speculative K`` decodes self-speculatively (layer-skip draft +
+full-model verify; see docs/serving.md).  CPU-runnable with --smoke
+(reduced same-family config).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rom-mamba-115m \
-        --smoke --batch 4 --prompt-len 32 --gen 32
+        --smoke --batch 4 --prompt-len 32 --gen 32 \
+        --speculative 4 --draft-stride 2
 """
 from __future__ import annotations
 
@@ -42,6 +45,13 @@ def main():
                     choices=("interleaved", "sequential"),
                     help="stall-free chunked admission (default) vs the "
                          "full-prefill-per-request baseline")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "round with a layer-skip reduced model, verify in "
+                         "one full-model pass (0 = off)")
+    ap.add_argument("--draft-stride", type=int, default=2,
+                    help="layer-skip stride of the draft model (keep every "
+                         "Nth block; 1 = full model)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,7 +65,9 @@ def main():
     max_len = args.prompt_len + args.gen
     engine = ServeEngine(cfg, params, max_slots=args.batch, max_len=max_len,
                          mesh=mesh, seed=args.seed,
-                         admission=args.admission)
+                         admission=args.admission,
+                         speculative=args.speculative,
+                         draft_stride=args.draft_stride)
 
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
@@ -81,6 +93,13 @@ def main():
           f"decode {s['decode_tokens']} tok in {dec_s:.3f}s "
           f"({s['decode_tokens'] / max(dec_s, 1e-9):.1f} tok/s) | "
           f"{s['mixed_steps']} mixed steps, stall {s['stall_s']:.3f}s")
+    if args.speculative:
+        sp = engine.spec_summary()
+        print(f"speculative K={args.speculative} stride={args.draft_stride}: "
+              f"{s['spec_rounds']} rounds, "
+              f"acceptance {sp['acceptance_rate']:.2%}, "
+              f"{s['spec_emitted']} tok emitted "
+              f"({sp['tokens_per_slot_round']:.2f}/slot/round)")
     print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
           f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
           f"max {np.max(ttfts) * 1e3:.1f}ms")

@@ -321,6 +321,30 @@ def init_state(cfg, batch, max_len, dtype):
     return {"segments": segs}
 
 
+def draft_layers(cfg, stride):
+    """Static per-segment block-keep masks for the layer-skip draft model.
+
+    Self-speculative decoding (serve/speculative.py) drafts tokens with a
+    cheap reduced model: the same parameters and the same decode state, but
+    only every ``stride``-th *block* (one repeat of a segment pattern) is
+    applied.  Returns ``((keep_bool, ...), ...)`` — one tuple per segment,
+    one bool per repeat — counting blocks globally across segments so the
+    kept set is a uniform stride over depth.  Block 0 is always kept;
+    ``stride=1`` keeps every block (the draft degenerates to the full
+    model).  Pass the result as ``decode_step(..., keep=...)``.
+    """
+    if stride < 1:
+        raise ValueError(f"draft stride must be >= 1, got {stride}")
+    keeps, g = [], 0
+    for _pattern, repeats in cfg.segments:
+        seg = []
+        for _ in range(repeats):
+            seg.append(g % stride == 0)
+            g += 1
+        keeps.append(tuple(seg))
+    return tuple(keeps)
+
+
 def _block_step(pattern, cfg, bp, bst, x_t, pos, rt: Runtime):
     ctx: Dict[str, Any] = {}
     aux = jnp.zeros((len(METRIC_KEYS),), jnp.float32)
@@ -335,18 +359,33 @@ def _block_step(pattern, cfg, bp, bst, x_t, pos, rt: Runtime):
     return x_t, new_st, aux
 
 
-def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime):
-    """tokens_t (B, 1) int32; pos scalar int32. Returns (logits, new_state)."""
+def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime, keep=None):
+    """tokens_t (B, 1) int32; pos scalar int32 or (B,) per-slot positions.
+    Returns (logits (B, V), new_state).
+
+    ``keep`` (optional) is a per-segment tuple of per-repeat bools (see
+    :func:`draft_layers`): blocks with ``False`` are skipped — the residual
+    stream passes through unchanged and their state leaves are returned
+    untouched — so the returned state keeps the full model's pytree
+    structure and remains interchangeable with the serving
+    :class:`~repro.serve.state.StateStore`.  Scan-stacked segments slice the
+    kept repeats out of the stacked params/state with static indices, scan
+    over the subset, and scatter the updated per-layer states back.
+    """
     cd = jnp.dtype(cfg.dtype)
     x = embed_lookup(params["embed"], tokens_t, cd)
     x = rt.shard.cons(x, "act_batch", None, "act_embed")
     new_segs = []
-    for (pattern, repeats), seg, sst in zip(cfg.segments, params["segments"],
-                                            state["segments"]):
+    for si, ((pattern, repeats), seg, sst) in enumerate(
+            zip(cfg.segments, params["segments"], state["segments"])):
+        kseg = None if keep is None else keep[si]
         fn = functools.partial(_block_step, pattern, cfg)
         if isinstance(seg, list):
             outs = []
-            for bp, bst in zip(seg, sst):
+            for bi, (bp, bst) in enumerate(zip(seg, sst)):
+                if kseg is not None and not kseg[bi]:
+                    outs.append(bst)                 # skipped: state as-is
+                    continue
                 x, st, _ = fn(bp, bst, x, pos, rt)
                 outs.append(st)
             new_segs.append(outs)
@@ -356,8 +395,18 @@ def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime):
                 y, st, aux = fn(bp, bst, carry, pos, rt)
                 return y, st
 
-            x, sts = jax.lax.scan(body, x, (seg, sst))
-            new_segs.append(sts)
+            if kseg is None or all(kseg):
+                x, sts = jax.lax.scan(body, x, (seg, sst))
+                new_segs.append(sts)
+            elif not any(kseg):
+                new_segs.append(sst)
+            else:
+                idx = jnp.asarray([i for i, k in enumerate(kseg) if k])
+                sub_p = jax.tree_util.tree_map(lambda a: a[idx], seg)
+                sub_s = jax.tree_util.tree_map(lambda a: a[idx], sst)
+                x, sub_new = jax.lax.scan(body, x, (sub_p, sub_s))
+                new_segs.append(jax.tree_util.tree_map(
+                    lambda full, sub: full.at[idx].set(sub), sst, sub_new))
     h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_fn(params, h, cfg, rt)
     return logits[:, 0], {"segments": new_segs}

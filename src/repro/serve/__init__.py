@@ -1,4 +1,5 @@
-"""Serving subsystem: parallel prefill + stall-free continuous batching.
+"""Serving subsystem: parallel prefill, stall-free continuous batching, and
+self-speculative decoding.  See ``docs/serving.md`` for the full reference.
 
 ``ServeEngine`` holds a fixed number of decode *slots* over a generic
 :class:`~repro.serve.state.StateStore` and drives one jitted step per tick.
@@ -7,27 +8,38 @@ chunks *interleaved* with decode — one **mixed step** advances every active
 decode slot and one prefill chunk in the same dispatch — and multiple queued
 requests share batched prefill lanes.  A ``sequential`` admission mode keeps
 the PR-1 behaviour (full prefill per request, decode stalled) for A/B runs.
+``ServeEngine(..., speculative=K)`` drafts K tokens per round with a
+layer-skip reduced model and verifies them in one full-model pass
+(``repro.serve.speculative``), emitting up to K+1 tokens per slot per
+dispatch.
 
-``engine`` is imported lazily: mixer modules declare their ``StateSpec`` via
-``repro.serve.state``, so an eager import here would cycle through
-``models/lm`` back into the partially-initialized mixer module.
+``engine`` and ``speculative`` are imported lazily: mixer modules declare
+their ``StateSpec`` via ``repro.serve.state``, so an eager import here would
+cycle through ``models/lm`` back into the partially-initialized mixer
+module.
 """
-from repro.serve.sampling import SamplingParams, sample
+from repro.serve.sampling import (SamplingParams, filtered_logits, sample,
+                                  spec_accept)
 from repro.serve.scheduler import FIFOScheduler, ShortestPromptFirst
 from repro.serve.state import (StateSpec, StateStore, adopt_slots,
                                gather_slots, init_slots, insert_slots,
-                               slot_axes)
+                               select_window, slot_axes)
 
 _ENGINE_NAMES = ("Request", "RequestResult", "ServeEngine")
+_SPEC_NAMES = ("SpecConfig", "make_spec_fn")
 
 __all__ = ["Request", "RequestResult", "ServeEngine", "SamplingParams",
-           "sample", "FIFOScheduler", "ShortestPromptFirst", "StateSpec",
+           "sample", "spec_accept", "filtered_logits", "FIFOScheduler",
+           "ShortestPromptFirst", "SpecConfig", "make_spec_fn", "StateSpec",
            "StateStore", "adopt_slots", "gather_slots", "init_slots",
-           "insert_slots", "slot_axes"]
+           "insert_slots", "select_window", "slot_axes"]
 
 
 def __getattr__(name):
     if name in _ENGINE_NAMES:
         from repro.serve import engine
         return getattr(engine, name)
+    if name in _SPEC_NAMES:
+        from repro.serve import speculative
+        return getattr(speculative, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -42,12 +42,18 @@ from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.serve.sampling import SamplingParams, sample
 from repro.serve.scheduler import FIFOScheduler
+from repro.serve.speculative import SpecConfig, make_spec_fn
 from repro.serve.state import StateStore
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    prompt: token ids (len < engine max_len); max_new_tokens: decode budget;
+    sampling: per-request temperature/top-k/top-p applied inside the jitted
+    step; eos_id: optional stop token (kept in the output when hit).
+    """
     id: int
     prompt: Sequence[int]
     max_new_tokens: int = 16
@@ -57,6 +63,7 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Terminal record for one request, returned by ``run``/``tick``."""
     id: int
     prompt_len: int
     tokens: List[int]                   # generated tokens (incl. EOS if hit)
@@ -146,17 +153,28 @@ class _PrefillJob:
 
 
 class ServeEngine:
-    """Continuous-batching engine over a fixed-slot decode state."""
+    """Continuous-batching engine over a fixed-slot decode state.
+
+    ``speculative=K`` (K >= 1) turns on self-speculative decoding: every
+    decode dispatch drafts K tokens with a layer-skip reduced model
+    (``draft_stride``), verifies them with one full-model pass, and emits
+    1..K+1 tokens per slot (see ``serve/speculative.py``).  Greedy outputs
+    are bit-identical to ``speculative=0``; sampled outputs stay unbiased
+    via rejection-sampling acceptance.
+    """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_len: int = 128, mesh=None, rules=None, seed: int = 0,
                  max_prefill_chunk: int = 128, scheduler=None,
                  admission: str = "interleaved",
-                 prefill_lanes: Optional[int] = None):
+                 prefill_lanes: Optional[int] = None,
+                 speculative: int = 0, draft_stride: int = 2):
         if cfg.kind == "encoder":
             raise ValueError("encoder-only configs have no decode path")
         if admission not in ("interleaved", "sequential"):
             raise ValueError(f"unknown admission mode {admission!r}")
+        if speculative < 0:
+            raise ValueError(f"speculative K must be >= 0, got {speculative}")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -165,7 +183,10 @@ class ServeEngine:
         self.max_prefill_chunk = max_prefill_chunk
         self.admission = admission
         self.prefill_lanes = min(prefill_lanes or max_slots, max_slots)
+        self.spec = (SpecConfig(k=speculative, draft_stride=draft_stride)
+                     if speculative else None)
         rules = rules or shd.ShardingRules()
+        self.store = StateStore(cfg, max_slots, max_len, self.dtype)
 
         from repro import train as tr
         prefill_fn = tr.make_prefill_step_fn(cfg, mesh, rules)
@@ -199,7 +220,25 @@ class ServeEngine:
         self._pf = jax.jit(pf_core)                  # prefill + first token
         self._mixed = jax.jit(mixed_fn)
 
-        self.store = StateStore(cfg, max_slots, max_len, self.dtype)
+        if self.spec is not None:
+            spec_core = make_spec_fn(cfg, mesh, rules, self.spec,
+                                     self.store.axes)
+
+            def spec_mixed_fn(params, state, last, pos, rng_d, temp, topk,
+                              topp, pf_state, pf_toks, pf_pos, rng_p,
+                              pf_temp, pf_topk, pf_topp):
+                """Speculative mixed step: one dispatch advances every
+                decode slot by up to K+1 tokens *and* one prefill chunk."""
+                toks, n_emit, new_state = spec_core(
+                    params, state, last, pos, rng_d, temp, topk, topp)
+                first, new_pf = pf_core(params, pf_state, pf_toks, pf_pos,
+                                        rng_p, pf_temp, pf_topk, pf_topp)
+                return toks, n_emit, new_state, first, new_pf
+
+            self._spec = jax.jit(spec_core)
+            self._spec_mixed = jax.jit(spec_mixed_fn)
+        else:
+            self._spec = self._spec_mixed = None
         self._lanes: List[Optional[_Lane]] = [None] * max_slots
         self._job: Optional[_PrefillJob] = None
         self._reserved: set = set()                  # slots held by the job
@@ -224,10 +263,20 @@ class ServeEngine:
             # property is the invariant active_ticks == decode_steps with
             # stall_s == 0 — measured, not true by construction.
             "active_ticks": 0, "stall_s": 0.0,
+            # speculative decoding: drafted counts K per live slot per
+            # round; accepted counts drafts that survived verification;
+            # emitted counts tokens actually appended host-side (accepted
+            # prefix + the full-model correction/bonus token, truncated at
+            # EOS / max-tokens / max_len).  acceptance = accepted / drafted.
+            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+            "spec_emitted": 0,
         }
 
     @property
     def state(self):
+        """The canonical ``max_slots``-wide decode state pytree (slot b of
+        every leaf — along the store's per-leaf slot axis — belongs to
+        decode lane b)."""
         return self.store.state
 
     @state.setter
@@ -237,6 +286,8 @@ class ServeEngine:
     # ------------------------------------------------------------------ API
 
     def submit(self, req: Request) -> None:
+        """Queue a request (prompt must be non-empty and < max_len); its
+        TTFT clock starts now."""
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.id}: empty prompt")
         if len(req.prompt) >= self.max_len:
@@ -246,7 +297,23 @@ class ServeEngine:
         self._submit_t[req.id] = time.perf_counter()
         self.scheduler.add(req)
 
+    def spec_summary(self) -> Dict[str, float]:
+        """Derived speculative-decoding stats: ``acceptance_rate`` =
+        accepted / drafted, ``slot_rounds`` = (slot, round) pairs
+        (drafted / K), ``tokens_per_slot_round`` = emitted tokens per slot
+        per round, in [1, K+1].  Zeros when speculation is off or idle."""
+        s = self.stats
+        k = self.spec.k if self.spec else 0
+        slot_rounds = s["spec_drafted"] / k if k else 0.0
+        return {
+            "acceptance_rate": s["spec_accepted"] / max(s["spec_drafted"], 1),
+            "slot_rounds": slot_rounds,
+            "tokens_per_slot_round": s["spec_emitted"] / max(slot_rounds, 1),
+        }
+
     def busy(self) -> bool:
+        """True while any work remains: queued requests, an in-flight
+        prefill job, or live decode lanes."""
         return (bool(self.scheduler) or self._job is not None
                 or any(l is not None for l in self._lanes))
 
@@ -275,7 +342,25 @@ class ServeEngine:
             toks = jnp.asarray(job.token_block(c))
             live = len(job.active())
             t0 = time.perf_counter()
-            if active:
+            if active and self._spec is not None:
+                sp_toks, n_emit, self.state, first, job.state = \
+                    self._spec_mixed(
+                        self.params, self.state, jnp.asarray(self._last),
+                        jnp.asarray(self._pos), self._next_rng(),
+                        jnp.asarray(self._temp), jnp.asarray(self._topk),
+                        jnp.asarray(self._topp),
+                        job.state, toks, jnp.int32(job.pos),
+                        self._next_rng(), jnp.asarray(job.temp),
+                        jnp.asarray(job.topk), jnp.asarray(job.topp))
+                sp_toks = np.asarray(sp_toks)        # sync point
+                n_emit = np.asarray(n_emit)
+                first = np.asarray(first)
+                t1 = time.perf_counter()
+                self.stats["mixed_steps"] += 1
+                self.stats["mixed_s"] += t1 - t0
+                self.stats["decode_steps"] += 1
+                self._apply_spec(sp_toks, n_emit, active)
+            elif active:
                 nxt, self.state, first, job.state = self._mixed(
                     self.params, self.state,
                     jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
@@ -308,7 +393,10 @@ class ServeEngine:
             self.stats["prefill_tokens"] += live * c
             self._advance_job(c, first, t1)
         elif active:
-            self._decode_only(active)
+            if self._spec is not None:
+                self._spec_only(active)
+            else:
+                self._decode_only(active)
         return self._drain()
 
     # ------------------------------------------------------------- internals
@@ -468,3 +556,44 @@ class ServeEngine:
         self.stats["decode_s"] += t1 - t0
         self.stats["decode_steps"] += 1
         self._apply_decode(nxt, active)
+
+    # -------------------------------------------------- speculative decoding
+
+    def _spec_only(self, active: List[int]) -> None:
+        """One speculative round (draft K + verify + commit), no prefill."""
+        t0 = time.perf_counter()
+        toks, n_emit, self.state = self._spec(
+            self.params, self.state,
+            jnp.asarray(self._last), jnp.asarray(self._pos),
+            self._next_rng(), jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._topp))
+        toks = np.asarray(toks)                                  # sync point
+        n_emit = np.asarray(n_emit)
+        t1 = time.perf_counter()
+        self.stats["decode_s"] += t1 - t0
+        self.stats["decode_steps"] += 1
+        self._apply_spec(toks, n_emit, active)
+
+    def _apply_spec(self, toks: np.ndarray, n_emit: np.ndarray,
+                    active: List[int]) -> None:
+        """Apply one speculative round's tokens: up to ``n_emit[b]`` tokens
+        per slot, re-checking finish conditions after every token so EOS /
+        max-tokens / max_len inside the window truncate emission (the
+        rejected or post-finish suffix of the window is simply dropped —
+        the slot retires and its committed state is never read again)."""
+        k = self.spec.k
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_drafted"] += k * len(active)
+        for b in active:
+            self.stats["spec_accepted"] += int(n_emit[b]) - 1
+            for j in range(int(n_emit[b])):
+                tok = int(toks[b, j])
+                self._pos[b] += 1
+                self._last[b] = tok
+                self._lanes[b].tokens.append(tok)
+                self.stats["spec_emitted"] += 1
+                self.stats["decode_tokens"] += 1
+                reason = self._finish_reason(b)
+                if reason:
+                    self._retire(b, reason)
+                    break

@@ -1,4 +1,5 @@
-"""Per-slot token sampling: temperature / top-k / top-p, fully vectorized.
+"""Per-slot token sampling: temperature / top-k / top-p, fully vectorized —
+plus the speculative-decoding acceptance rule (greedy + rejection sampling).
 
 Every parameter is a per-slot array so one jitted call samples for the whole
 continuous batch, with each slot carrying its own request's settings:
@@ -8,7 +9,10 @@ continuous batch, with each slot carrying its own request's settings:
   top_p >= 1        -> no nucleus truncation
 
 Filters compose in the usual order (temperature scale -> top-k -> top-p),
-then a Gumbel-max draw picks the token.
+then a Gumbel-max draw picks the token.  ``spec_accept`` applies the same
+filters to both the draft and the target distributions, so speculative
+decoding stays exactly unbiased under every sampling setting (and exactly
+argmax-matching under greedy).
 """
 from __future__ import annotations
 
@@ -20,19 +24,26 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """Per-request sampling settings (host-side convenience container)."""
+    """Per-request sampling settings (host-side convenience container).
+
+    The engine broadcasts these into per-slot (B,) arrays so every slot of
+    the continuous batch samples with its own request's settings inside one
+    jitted call.
+    """
     temperature: float = 0.0            # 0 -> greedy
     top_k: int = 0                      # 0 -> disabled
     top_p: float = 1.0                  # 1.0 -> disabled
 
 
-def sample(logits, rng, temperature, top_k, top_p):
-    """logits (B,V); temperature (B,) f32; top_k (B,) i32; top_p (B,) f32
-    -> sampled token ids (B,) i32."""
-    V = logits.shape[-1]
-    lf = logits.astype(jnp.float32)
-    greedy = temperature <= 0.0
+def filtered_logits(lf, temperature, top_k, top_p):
+    """Temperature-scaled, top-k / top-p-masked logits.
 
+    lf (B,V) f32; temperature (B,) f32; top_k (B,) i32; top_p (B,) f32
+    -> (B,V) f32 with filtered-out tokens at -inf.  ``softmax`` of the
+    result is the per-slot sampling distribution (greedy slots are handled
+    by the callers, not here).
+    """
+    V = lf.shape[-1]
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
     # top-k: keep the k highest-scoring tokens per row
     desc = jnp.sort(scaled, axis=-1)[:, ::-1]
@@ -48,9 +59,104 @@ def sample(logits, rng, temperature, top_k, top_p):
     # lower clamp keeps the top-1 token at top_p=0 (else all tokens mask)
     keep = (cum - ps) < jnp.clip(top_p, 1e-6, 1.0)[:, None]      # (B,V)
     cutoff = jnp.min(jnp.where(keep, ps, jnp.inf), axis=-1, keepdims=True)
-    scaled = jnp.where(probs < cutoff, -jnp.inf, scaled)
+    return jnp.where(probs < cutoff, -jnp.inf, scaled)
 
+
+def sample(logits, rng, temperature, top_k, top_p):
+    """logits (B,V); temperature (B,) f32; top_k (B,) i32; top_p (B,) f32
+    -> sampled token ids (B,) i32.  Greedy (temperature <= 0) slots take the
+    unfiltered argmax; the rest Gumbel-max-sample the filtered distribution.
+    """
+    lf = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+    scaled = filtered_logits(lf, temperature, top_k, top_p)
     g = jax.random.gumbel(rng, scaled.shape, jnp.float32)
     sampled = jnp.argmax(scaled + g, axis=-1)
     return jnp.where(greedy, jnp.argmax(lf, axis=-1),
                      sampled).astype(jnp.int32)
+
+
+def _window_probs(logits, temperature, top_k, top_p):
+    """Filtered softmax over a (B,S,V) window of logits, applying each
+    slot's sampling params at every window position."""
+    B, S, V = logits.shape
+    flat = filtered_logits(logits.astype(jnp.float32).reshape(B * S, V),
+                           jnp.repeat(temperature, S),
+                           jnp.repeat(top_k, S), jnp.repeat(top_p, S))
+    return jax.nn.softmax(flat, axis=-1).reshape(B, S, V)
+
+
+def spec_accept(target_logits, draft_logits, draft_toks, rng,
+                temperature, top_k, top_p):
+    """Speculative-decoding acceptance: longest agreeing prefix + correction.
+
+    target_logits (B,K+1,V)  full-model logits over the verify window
+                             (position j conditions on the K-token draft
+                             prefix d_1..d_j)
+    draft_logits  (B,K,V)    draft-model logits the proposals were sampled
+                             from (position j proposes d_{j+1})
+    draft_toks    (B,K)      proposed tokens d_1..d_K
+    temperature / top_k / top_p: per-slot (B,) sampling params
+
+    Returns ``(tokens (B,K+1) i32, n_emit (B,) i32)``: per slot, the first
+    ``n_emit`` entries of ``tokens`` are the accepted draft prefix followed
+    by one token from the full model (a resample on rejection, the bonus
+    K+1-th token on full acceptance), ``n_emit`` in [1, K+1].
+
+    Greedy slots (temperature <= 0) accept d_i iff it equals the target
+    argmax, and the trailing token *is* the target argmax — so greedy
+    speculative decoding emits bit-identical tokens to plain decoding.
+    Sampled slots use rejection sampling (Leviathan et al., 2023): accept
+    d_i with prob min(1, p(d_i)/q(d_i)) where p/q are the *filtered* target
+    and draft distributions, and resample rejections from
+    normalize(max(p - q, 0)) — the emitted sequence is distributed exactly
+    as sampling the full model token-by-token.
+    """
+    B, Kp1, V = target_logits.shape
+    K = Kp1 - 1
+    tf = target_logits.astype(jnp.float32)
+    greedy = temperature <= 0.0                                   # (B,)
+
+    p = _window_probs(tf, temperature, top_k, top_p)              # (B,K+1,V)
+    q = _window_probs(draft_logits, temperature, top_k, top_p)    # (B,K,V)
+
+    # per-position acceptance
+    tgt_argmax = jnp.argmax(tf, axis=-1)                          # (B,K+1)
+    accept_g = draft_toks == tgt_argmax[:, :K]
+    p_d = jnp.take_along_axis(p[:, :K], draft_toks[..., None],
+                              axis=-1)[..., 0]                    # (B,K)
+    q_d = jnp.take_along_axis(q, draft_toks[..., None], axis=-1)[..., 0]
+    rng_u, rng_r = jax.random.split(rng)
+    u = jax.random.uniform(rng_u, (B, K))
+    # p_d > 0 guards the q_d == 0 corner (a proposal outside the draft's own
+    # filtered support, impossible for tokens actually sampled from q): a
+    # token with zero target probability must never be accepted
+    accept_s = (u * q_d <= p_d) & (p_d > 0)
+    accept = jnp.where(greedy[:, None], accept_g, accept_s)       # (B,K)
+
+    # m = length of the accepted prefix (leading run of accepts)
+    m = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                axis=-1)                                          # (B,) 0..K
+
+    # trailing token from the full model at depth m.  Padding q with a zero
+    # row makes the m == K case fall out of the same formula: the residual
+    # max(p_K - 0, 0) *is* the bonus-token distribution p_K.
+    q_pad = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
+    p_m = jnp.take_along_axis(p, m[:, None, None], axis=1)[:, 0]  # (B,V)
+    q_m = jnp.take_along_axis(q_pad, m[:, None, None], axis=1)[:, 0]
+    resid = jnp.maximum(p_m - q_m, 0.0)
+    rsum = jnp.sum(resid, axis=-1, keepdims=True)
+    # numerical guard: an all-zero residual (p == q to rounding) can only be
+    # reached with vanishing probability; fall back to p_m
+    resid = jnp.where(rsum > 0, resid / jnp.maximum(rsum, 1e-30), p_m)
+    g = jax.random.gumbel(rng_r, (B, V), jnp.float32)
+    sampled_tail = jnp.argmax(jnp.log(jnp.maximum(resid, 1e-38)) + g,
+                              axis=-1)
+    greedy_tail = jnp.take_along_axis(tgt_argmax, m[:, None],
+                                      axis=1)[:, 0]
+    tail = jnp.where(greedy, greedy_tail, sampled_tail).astype(jnp.int32)
+
+    out = jnp.concatenate(
+        [draft_toks, jnp.zeros((B, 1), jnp.int32)], axis=1)       # (B,K+1)
+    out = out.at[jnp.arange(B), m].set(tail)
+    return out.astype(jnp.int32), (m + 1).astype(jnp.int32)

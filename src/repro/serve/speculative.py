@@ -1,0 +1,120 @@
+"""Self-speculative decoding over the slot-state store.
+
+The draft model is the serving model itself with blocks skipped: a
+layer-skip stride over the existing ``Mixer`` stack
+(:func:`repro.models.lm.draft_layers`) keeps every ``draft_stride``-th
+block and passes the residual stream through the rest.  Because the draft
+reuses each mixer's declared ``state_spec``, the draft state is just the
+(functional) slot state the engine already holds — no second model, no
+second store.
+
+One speculative round per engine tick, all inside a single jitted dispatch
+(:func:`make_spec_fn` builds it):
+
+  1. **Draft**: a ``lax.scan`` of K layer-skip decode steps proposes
+     ``d_1..d_K`` per slot, sampled with each slot's own sampling params
+     (greedy slots propose argmax).  The draft's state updates are
+     discarded — drafting never touches the committed slot state.
+  2. **Verify**: a ``lax.scan`` of K+1 *full-model* decode steps consumes
+     ``[last, d_1..d_K]`` at per-slot positions, emitting the target
+     logits for every window position *and a state snapshot per depth*
+     (every leaf gains a leading (K+1,) window axis).  This is the
+     multi-snapshot gather the StateStore's :func:`~repro.serve.state.
+     select_window` consumes.
+  3. **Accept**: :func:`repro.serve.sampling.spec_accept` takes the longest
+     agreeing prefix per slot — exact argmax agreement for greedy slots,
+     rejection sampling for temperature slots (unbiased under top-k/top-p
+     because both distributions are filtered identically).
+  4. **Commit**: the snapshot at each slot's accepted depth becomes the new
+     slot state (``select_window``).  Rollback is free: rejected depths are
+     simply never adopted.  RoM/SSM mixers make the snapshots cheap — the
+     recurrent state is constant-size per slot (the paper's headline
+     inference property), so a K-deep window costs K small copies, where a
+     KV-cache model would replicate its whole cache per depth (hybrid
+     patterns with ``attn`` blocks pay exactly that for those blocks).
+
+Slots at different accepted depths advance together: the engine applies
+``n_emit[b]`` in [1, K+1] tokens to slot ``b`` from one dispatch, so its
+position/eviction bookkeeping runs per emitted token (EOS or max-len inside
+the window truncates emission and retires the slot; the committed state for
+a retired slot is never read again).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.serve.sampling import sample, spec_accept
+from repro.serve.state import select_window
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs.
+
+    k: draft tokens proposed per round; each round emits 1..k+1 tokens per
+       slot in a single dispatch (k=0 disables speculation in the engine).
+    draft_stride: block stride of the layer-skip draft — the draft runs
+       blocks whose global index is a multiple of this (1 = full model,
+       i.e. the draft always agrees and every round emits k+1 tokens).
+    """
+    k: int = 4
+    draft_stride: int = 2
+
+
+def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes):
+    """Build the one-dispatch speculative round.
+
+    Returns ``spec_fn(params, state, last, pos, rng, temp, topk, topp) ->
+    (tokens (B,K+1) i32, n_emit (B,) i32, new_state)`` where ``state`` is
+    the engine's full B-slot decode state, ``last`` (B,) the slots' last
+    sampled tokens, ``pos`` (B,) their per-slot positions, and
+    temp/topk/topp the per-slot sampling params.  ``axes`` is the store's
+    per-leaf slot-axis pytree (``StateStore.axes``) used to select each
+    slot's accepted-depth snapshot.
+    """
+    keep = lm.draft_layers(cfg, spec.draft_stride)
+    K = spec.k
+    if K < 1:
+        raise ValueError(f"speculative k must be >= 1, got {K}")
+
+    def spec_fn(params, state, last, pos, rng, temp, topk, topp):
+        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
+                        train=False)
+        pos = jnp.asarray(pos, jnp.int32)
+        last = jnp.asarray(last, jnp.int32)
+
+        def draft_body(carry, j):
+            st, tok = carry
+            logits, st = lm.decode_step(params, st, tok[:, None], pos + j,
+                                        cfg, rt, keep=keep)
+            d = sample(logits, jax.random.fold_in(rng, j), temp, topk, topp)
+            return (st, d), (d, logits)
+
+        (_, _), (d_toks, d_logits) = jax.lax.scan(
+            draft_body, (state, last), jnp.arange(K))
+        # d_toks (K,B); d_logits (K,B,V); draft state dropped (never adopted)
+
+        def verify_body(st, xs):
+            tok, j = xs
+            logits, st = lm.decode_step(params, st, tok[:, None], pos + j,
+                                        cfg, rt)
+            return st, (logits, st)
+
+        v_in = jnp.concatenate([last[None, :], d_toks], axis=0)   # (K+1,B)
+        _, (t_logits, snaps) = jax.lax.scan(
+            verify_body, state, (v_in, jnp.arange(K + 1)))
+        # t_logits (K+1,B,V); snaps = per-depth state snapshots (window axis
+        # leading every leaf) — the multi-snapshot gather select_window eats
+
+        toks, n_emit = spec_accept(
+            jnp.moveaxis(t_logits, 0, 1), jnp.moveaxis(d_logits, 0, 1),
+            d_toks.T, jax.random.fold_in(rng, K + 1), temp, topk, topp)
+        new_state = select_window(snaps, axes, n_emit - 1)
+        return toks, n_emit, new_state
+
+    return spec_fn

@@ -119,6 +119,32 @@ def adopt_slots(dst, src, axes, rows, slots):
     return insert_slots(dst, gather_slots(src, axes, rows), axes, slots)
 
 
+def select_window(stacked, axes, depth):
+    """Per-slot snapshot selection over a K-token speculative window.
+
+    ``stacked`` is a state pytree whose every leaf carries a leading
+    *window* axis of length W — the per-step state snapshots a
+    ``lax.scan`` of decode steps emits (leaf shape ``(W,) + leaf.shape``,
+    so each leaf's slot axis is shifted by one).  ``axes`` is the
+    *unstacked* per-leaf slot-axis pytree (:func:`slot_axes`); ``depth``
+    is an ``(B,)`` int32 array selecting, independently per slot, which
+    snapshot to keep.  Returns the unstacked state where slot ``b``'s
+    rows come from window index ``depth[b]`` of every leaf — i.e. the
+    model state as if slot ``b`` had consumed exactly ``depth[b] + 1``
+    of the window's tokens.  This is the speculative-decoding rollback
+    primitive: committing the snapshot at each slot's accepted depth is
+    acceptance, and the rejected suffix is simply never adopted.
+    """
+    depth = jnp.asarray(depth, jnp.int32)
+
+    def one(leaf, ax):
+        moved = jnp.moveaxis(leaf, ax + 1, 1)        # (W, B, ...)
+        sel = moved[depth, jnp.arange(depth.shape[0])]   # (B, ...)
+        return jnp.moveaxis(sel, 0, ax)
+
+    return jax.tree_util.tree_map(one, stacked, axes)
+
+
 # ---------------------------------------------------------------------------
 # store
 # ---------------------------------------------------------------------------
@@ -146,15 +172,20 @@ class StateStore:
             st, self.axes, slots))
 
     def fresh(self, n):
-        """A zero-initialized n-slot state with this model's structure."""
+        """A zero-initialized n-slot state with this model's structure
+        (same pytree, n instead of max_slots along every slot axis) —
+        used for prefill lane batches and speculative draft copies."""
         return init_slots(self.cfg, n, self.max_len, self.dtype)
 
     def gather(self, slots):
-        """An m-slot copy of the given slots' state."""
+        """An m-slot copy of the given slots' state: leaf shapes keep
+        their structure with ``len(slots)`` along each slot axis."""
         return self._gather(self.state, jnp.asarray(slots, jnp.int32))
 
     def adopt(self, src_state, rows, slots):
-        """Install ``src_state``'s ``rows`` into this store's ``slots``."""
+        """Install ``src_state``'s ``rows`` into this store's ``slots``
+        (``rows`` and ``slots`` are equal-length int sequences indexing
+        the source's and this store's slot axes respectively)."""
         self.state = self._adopt(self.state, src_state,
                                  jnp.asarray(rows, jnp.int32),
                                  jnp.asarray(slots, jnp.int32))

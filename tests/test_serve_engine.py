@@ -286,6 +286,204 @@ def test_interleaved_mid_run_submission_matches_reference():
         assert got[i].tokens == _greedy_reference(cfg, params, p, 8, 32), i
 
 
+# ---------------------------------------------------------------------------
+# self-speculative decoding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", PATTERNS,
+                         ids=["+".join(p) for p in PATTERNS])
+def test_speculative_greedy_bit_identical(pattern):
+    """Greedy speculative decoding must emit bit-identical tokens to the
+    non-speculative engine for every mixer pattern (incl. RoM).  Two-block
+    models with draft stride 2 make the draft a genuinely reduced model
+    (block 1 skipped), so rejections actually occur."""
+    cfg = _full_cfg(((pattern, 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    def reqs():
+        return [Request(id=i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=(n,)).tolist(),
+                        max_new_tokens=6)
+                for i, n in enumerate([5, 11, 3, 7])]
+    rng = np.random.default_rng(7)
+    kw = dict(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8)
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(reqs())}
+    rng = np.random.default_rng(7)
+    spec = ServeEngine(cfg, params, speculative=3, draft_stride=2, **kw)
+    got = {r.id: r for r in spec.run(reqs())}
+    assert set(got) == set(ref) == {0, 1, 2, 3}
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, (pattern, i)
+        assert got[i].finish_reason == ref[i].finish_reason
+    assert spec.stats["spec_rounds"] > 0
+    assert spec.stats["spec_drafted"] > 0
+
+
+def test_speculative_k1_degenerates_to_baseline():
+    """K=1 is the smallest window: one draft token, a two-step verify, and
+    1-2 emitted tokens per round — still bit-identical to baseline."""
+    cfg = _cfg(segments=((("mamba", "attn"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 6, 7, 9, 11]
+    ref = _greedy_reference(cfg, params, prompt, 8, 32)
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=32, seed=0,
+                      speculative=1, draft_stride=2)
+    res = eng.run([Request(id=0, prompt=prompt, max_new_tokens=8)])[0]
+    assert res.tokens == ref
+    s = eng.stats
+    # every round proposes exactly 1 token and emits 1 (reject) or 2
+    assert s["spec_drafted"] == s["spec_rounds"]
+    assert s["spec_rounds"] <= s["spec_emitted"] <= 2 * s["spec_rounds"]
+
+
+def test_speculative_stride1_draft_is_full_model():
+    """draft_stride=1 makes the draft the full model: greedy drafts always
+    match the verify argmax, so every round accepts all K drafts and emits
+    K+1 tokens (except a truncated final round)."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 6, 7]
+    ref = _greedy_reference(cfg, params, prompt, 9, 32)
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=32, seed=0,
+                      speculative=2, draft_stride=1)
+    res = eng.run([Request(id=0, prompt=prompt, max_new_tokens=9)])[0]
+    assert res.tokens == ref
+    s = eng.stats
+    assert s["spec_accepted"] == s["spec_drafted"]   # full acceptance
+    # 9 tokens: first from prefill, then 8 more in ceil(8/3) = 3 rounds
+    assert s["spec_rounds"] == 3
+
+
+def test_speculative_eos_inside_draft_window():
+    """EOS proposed (and accepted) inside a draft window must truncate
+    emission at the EOS token and retire the request, exactly like the
+    baseline engine."""
+    cfg = _cfg(segments=((("mamba", "attn"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 6, 7]
+    ref = _greedy_reference(cfg, params, prompt, 8, 32)
+    eos = ref[4]                     # EOS lands mid-window for K=3
+    base = ServeEngine(cfg, params, max_slots=1, max_len=32, seed=0)
+    want = base.run([Request(id=0, prompt=prompt, max_new_tokens=8,
+                             eos_id=eos)])[0]
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=32, seed=0,
+                      speculative=3, draft_stride=2)
+    res = eng.run([Request(id=0, prompt=prompt, max_new_tokens=8,
+                           eos_id=eos)])[0]
+    assert res.finish_reason == "eos"
+    assert res.tokens == want.tokens
+    # the window's post-EOS suffix was dropped, not emitted
+    assert res.tokens[-1] == eos
+    assert eos not in res.tokens[:-1]
+
+
+def test_speculative_maxlen_inside_draft_window():
+    """Cache exhaustion mid-window: emission truncates at max_len and the
+    tokens match the baseline engine's max_len-truncated output."""
+    cfg = _cfg(segments=((("mamba", "attn"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 6, 7]
+    base = ServeEngine(cfg, params, max_slots=1, max_len=10, seed=0)
+    want = base.run([Request(id=1, prompt=prompt, max_new_tokens=100)])[0]
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=10, seed=0,
+                      speculative=4, draft_stride=2)
+    res = eng.run([Request(id=1, prompt=prompt, max_new_tokens=100)])[0]
+    assert res.finish_reason == "max_len"
+    assert res.tokens == want.tokens
+    assert len(res.tokens) == 10 - 3
+
+
+def test_spec_accept_full_rejection_and_acceptance():
+    """Unit test of the acceptance rule: a draft disagreeing everywhere
+    emits exactly 1 token (the full model's argmax — the baseline step);
+    a draft agreeing everywhere emits K+1."""
+    from repro.serve.sampling import spec_accept
+    B, K, V = 2, 3, 16
+    rng = np.random.default_rng(0)
+    t_logits = jnp.asarray(rng.normal(size=(B, K + 1, V)).astype(np.float32))
+    tgt = np.asarray(jnp.argmax(t_logits, -1))                 # (B,K+1)
+    greedy = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+              jnp.ones((B,), jnp.float32))
+
+    # full rejection: propose argmax+1 (mod V) everywhere
+    bad = jnp.asarray((tgt[:, :K] + 1) % V, jnp.int32)
+    toks, n = spec_accept(t_logits, t_logits[:, :K], bad,
+                          jax.random.PRNGKey(0), *greedy)
+    np.testing.assert_array_equal(np.asarray(n), [1, 1])
+    np.testing.assert_array_equal(np.asarray(toks)[:, 0], tgt[:, 0])
+
+    # full acceptance: propose the argmax chain itself
+    good = jnp.asarray(tgt[:, :K], jnp.int32)
+    toks, n = spec_accept(t_logits, t_logits[:, :K], good,
+                          jax.random.PRNGKey(0), *greedy)
+    np.testing.assert_array_equal(np.asarray(n), [K + 1, K + 1])
+    np.testing.assert_array_equal(np.asarray(toks), tgt)
+
+    # partial: slot 0 diverges at draft index 1 -> accepts 1 draft + fixup
+    mixed = good.at[0, 1].set((tgt[0, 1] + 1) % V)
+    toks, n = spec_accept(t_logits, t_logits[:, :K], mixed,
+                          jax.random.PRNGKey(0), *greedy)
+    np.testing.assert_array_equal(np.asarray(n), [2, K + 1])
+    np.testing.assert_array_equal(np.asarray(toks)[0, :2], tgt[0, :2])
+
+
+def test_spec_accept_sampled_restricts_support():
+    """Sampled acceptance: every emitted token must lie in the *filtered*
+    target support (top-k), whatever the draft proposed."""
+    from repro.serve.sampling import spec_accept
+    B, K, V = 3, 2, 32
+    rng = np.random.default_rng(1)
+    t_logits = jnp.asarray(rng.normal(size=(B, K + 1, V)).astype(np.float32))
+    d_logits = jnp.asarray(rng.normal(size=(B, K, V)).astype(np.float32))
+    top2 = np.argsort(np.asarray(t_logits), -1)[..., -2:]      # (B,K+1,2)
+    params = (jnp.full((B,), 1.3, jnp.float32), jnp.full((B,), 2, jnp.int32),
+              jnp.ones((B,), jnp.float32))
+    for i in range(16):
+        d_toks = jnp.asarray(rng.integers(0, V, size=(B, K)), jnp.int32)
+        toks, n = spec_accept(t_logits, d_logits, d_toks,
+                              jax.random.PRNGKey(i), *params)
+        toks, n = np.asarray(toks), np.asarray(n)
+        for b in range(B):
+            m = n[b] - 1
+            # accepted drafts passed a p(d)/q(d) test against top-2-filtered
+            # p, so they lie in the target's top-2; so does the tail token
+            for j in range(m):
+                assert toks[b, j] in top2[b, j], (b, j)
+            assert toks[b, m] in top2[b, m], b
+
+
+def test_speculative_draft_layers_layout():
+    from repro.models import lm as lm_mod
+    cfg = _cfg(segments=((("mamba",), 3), (("attn",), 2)))
+    assert lm_mod.draft_layers(cfg, 2) == ((True, False, True),
+                                           (False, True))
+    assert lm_mod.draft_layers(cfg, 1) == ((True, True, True), (True, True))
+    with pytest.raises(ValueError):
+        lm_mod.draft_layers(cfg, 0)
+
+
+def test_speculative_interleaved_admission_matches_baseline():
+    """Speculative decode composed with interleaved admission (the spec
+    mixed step): mid-run arrivals prefill while other slots advance by
+    multi-token windows; greedy tokens still match the plain engine."""
+    cfg = _cfg(segments=((("mamba", "attn"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, cfg.vocab_size, size=(n,)).tolist()
+               for n in (6, 9, 4, 5)]
+    def reqs():
+        return [Request(id=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+    kw = dict(max_slots=2, max_len=32, seed=0, max_prefill_chunk=8)
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(reqs())}
+    spec = ServeEngine(cfg, params, speculative=3, draft_stride=2, **kw)
+    got = {r.id: r for r in spec.run(reqs())}
+    assert spec.stats["mixed_steps"] > 0      # admission actually interleaved
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, i
+
+
 def test_state_store_gather_insert_roundtrip():
     """Generic slot gather/insert over a hybrid model incl. a scan-stacked
     segment: adopted rows read back exactly; untouched slots keep their
