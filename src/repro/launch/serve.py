@@ -4,12 +4,15 @@ Prompts are prefilled with the parallel training-style forward (one pass per
 power-of-two chunk instead of one decode step per token) and decoded with
 per-slot positions; finished slots are refilled from the request queue.
 ``--speculative K`` decodes self-speculatively (layer-skip draft +
-full-model verify; see docs/serving.md).  CPU-runnable with --smoke
-(reduced same-family config).
+full-model verify); ``--prefix-cache-mb`` skips prefill for cached prompt
+prefixes (radix tree of chunk-boundary state snapshots) and
+``--cache-policy cached-suffix`` admits cache hits first (see
+docs/serving.md).  CPU-runnable with --smoke (reduced same-family config).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rom-mamba-115m \
         --smoke --batch 4 --prompt-len 32 --gen 32 \
-        --speculative 4 --draft-stride 2
+        --speculative 4 --draft-stride 2 \
+        --prefix-cache-mb 64 --cache-policy cached-suffix
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
-from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve import (CachedSuffixFirst, PrefixCache, Request,
+                         SamplingParams, ServeEngine, ShortestPromptFirst)
 
 
 def main():
@@ -52,6 +56,17 @@ def main():
     ap.add_argument("--draft-stride", type=int, default=2,
                     help="layer-skip stride of the draft model (keep every "
                          "Nth block; 1 = full model)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    metavar="MB",
+                    help="prefix-cache snapshot budget in MiB (0 = off): "
+                         "admission restores the longest cached prompt "
+                         "prefix from a radix tree of chunk-boundary state "
+                         "snapshots and prefills only the uncached suffix")
+    ap.add_argument("--cache-policy", default="fifo",
+                    choices=("fifo", "spf", "cached-suffix"),
+                    help="scheduler: fifo, shortest-prompt-first, or "
+                         "cached-suffix-first (ranks by *uncached* suffix "
+                         "length; requires --prefix-cache-mb > 0)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,11 +78,23 @@ def main():
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.prompt_len + args.gen
+    cache = (PrefixCache(budget_mb=args.prefix_cache_mb)
+             if args.prefix_cache_mb > 0 else None)
+    if args.cache_policy == "cached-suffix":
+        if cache is None:
+            raise SystemExit("--cache-policy cached-suffix needs "
+                             "--prefix-cache-mb > 0")
+        scheduler = CachedSuffixFirst(cache)
+    elif args.cache_policy == "spf":
+        scheduler = ShortestPromptFirst()
+    else:
+        scheduler = None                          # engine default: FIFO
     engine = ServeEngine(cfg, params, max_slots=args.batch, max_len=max_len,
                          mesh=mesh, seed=args.seed,
                          admission=args.admission,
                          speculative=args.speculative,
-                         draft_stride=args.draft_stride)
+                         draft_stride=args.draft_stride,
+                         prefix_cache=cache, scheduler=scheduler)
 
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
@@ -100,6 +127,14 @@ def main():
               f"acceptance {sp['acceptance_rate']:.2%}, "
               f"{s['spec_emitted']} tok emitted "
               f"({sp['tokens_per_slot_round']:.2f}/slot/round)")
+    if cache is not None:
+        cs = cache.summary()
+        print(f"prefix cache ({args.prefix_cache_mb:g} MiB): "
+              f"hit rate {cs['hit_rate']:.2%}, "
+              f"{s['cache_hit_tokens']} prompt tok skipped, "
+              f"{cs['snapshots']} snapshots "
+              f"({cs['bytes_used'] / 2 ** 20:.2f} MiB), "
+              f"{cs['evictions']} evictions")
     print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
           f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
           f"max {np.max(ttfts) * 1e3:.1f}ms")

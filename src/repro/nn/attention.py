@@ -231,8 +231,18 @@ def attention_init_state(cfg, batch, max_len, dtype):
 
 
 #: KV cache + per-(slot, cache-slot) kpos validity; slots at axis 0 of every
-#: leaf (the cache seq dim is axis 1, so generic slot gather/insert is safe)
-attention_state_spec = StateSpec(init=attention_init_state)
+#: leaf (the cache seq dim is axis 1, so generic slot gather/insert is safe).
+#: Without a sliding window the cache is *append-only position-keyed*: entry
+#: p is only ever written when decode is at position p and reads causally
+#: mask kpos > qpos, so speculative rollback needs no per-depth snapshot —
+#: stale rejected-draft entries are masked now and overwritten on arrival.
+#: A sliding window breaks that (ring slot p % L: rejected future writes
+#: destroy the oldest still-in-window entries), so windowed configs keep
+#: per-depth snapshots.
+attention_state_spec = StateSpec(
+    init=attention_init_state,
+    append_only=lambda cfg: (("k", "v", "kpos")
+                             if cfg.attention.window is None else ()))
 
 
 def attention_state_logical(cfg, mesh):

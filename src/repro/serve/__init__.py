@@ -11,28 +11,36 @@ the PR-1 behaviour (full prefill per request, decode stalled) for A/B runs.
 ``ServeEngine(..., speculative=K)`` drafts K tokens per round with a
 layer-skip reduced model and verifies them in one full-model pass
 (``repro.serve.speculative``), emitting up to K+1 tokens per slot per
-dispatch.
+dispatch.  ``ServeEngine(..., prefix_cache=PrefixCache(...))`` skips
+prefill for shared prompt prefixes: a radix tree of chunk-boundary state
+snapshots (``repro.serve.cache``) turns prefill cost from O(prompt) into
+O(uncached suffix), with byte-budgeted LRU eviction.
 
 ``engine`` and ``speculative`` are imported lazily: mixer modules declare
 their ``StateSpec`` via ``repro.serve.state``, so an eager import here would
 cycle through ``models/lm`` back into the partially-initialized mixer
 module.
 """
+from repro.serve.cache import PrefixCache
 from repro.serve.sampling import (SamplingParams, filtered_logits, sample,
                                   spec_accept)
-from repro.serve.scheduler import FIFOScheduler, ShortestPromptFirst
+from repro.serve.scheduler import (CachedSuffixFirst, FIFOScheduler,
+                                   ShortestPromptFirst)
 from repro.serve.state import (StateSpec, StateStore, adopt_slots,
-                               gather_slots, init_slots, insert_slots,
-                               select_window, slot_axes)
+                               append_only_mask, gather_slots, init_slots,
+                               insert_slots, restore_slots, select_window,
+                               slot_axes, snapshot_slots, state_nbytes)
 
 _ENGINE_NAMES = ("Request", "RequestResult", "ServeEngine")
 _SPEC_NAMES = ("SpecConfig", "make_spec_fn")
 
 __all__ = ["Request", "RequestResult", "ServeEngine", "SamplingParams",
            "sample", "spec_accept", "filtered_logits", "FIFOScheduler",
-           "ShortestPromptFirst", "SpecConfig", "make_spec_fn", "StateSpec",
-           "StateStore", "adopt_slots", "gather_slots", "init_slots",
-           "insert_slots", "select_window", "slot_axes"]
+           "ShortestPromptFirst", "CachedSuffixFirst", "PrefixCache",
+           "SpecConfig", "make_spec_fn", "StateSpec",
+           "StateStore", "adopt_slots", "append_only_mask", "gather_slots",
+           "init_slots", "insert_slots", "restore_slots", "select_window",
+           "slot_axes", "snapshot_slots", "state_nbytes"]
 
 
 def __getattr__(name):

@@ -1,0 +1,272 @@
+"""Radix-tree prefix cache over the StateStore: skip prefill for shared
+prompt prefixes.
+
+Mamba/RoM decode state is **constant-size per slot** (the paper's headline
+inference property), so caching the model state at a token-prefix boundary
+costs O(1) bytes per entry regardless of prefix length — prefix caching is
+*cheaper* for SSMs than the transformer KV-cache schemes it is modeled on
+(hybrid patterns additionally snapshot their fixed-size KV cache + kpos
+leaves, so restore stays exact for every mixer).
+
+Structure: a radix tree over token-id sequences.  Each edge is labeled with
+a token run; a node represents the prompt prefix spelled by the path from
+the root and *may* hold a snapshot — a host-side copy (``snapshot_slots``)
+of the full decode-state pytree captured at a prefill **chunk boundary**.
+Chunk-boundary capture is what makes restore exact: the engine's prefill is
+bit-compatible across chunk decompositions (property-tested per mixer), so
+restoring a boundary snapshot and prefilling only the uncached suffix
+yields bit-identical greedy output to a cold prefill.
+
+Admission flow (wired through ``ServeEngine``):
+
+  * lookup the longest cached prefix of an incoming prompt (capped at
+    ``len(prompt) - 1`` — the last prompt token must be prefilled to
+    produce the first-token logits);
+  * restore the snapshot into the prefill lane via ``insert_slots`` and
+    prefill only the suffix, starting at the cached position;
+  * as prefill crosses chunk boundaries, publish new snapshots back into
+    the tree (deduplicated: a boundary already in the tree is only
+    LRU-touched, never re-copied from device).
+
+Eviction is byte-budgeted LRU over snapshots: ``state_nbytes`` accounts
+every leaf of a snapshot, and inserting past ``budget_bytes`` evicts the
+least-recently-used snapshots until the tree fits.  Evicting a snapshot
+prunes/merges now-redundant radix nodes, so the tree stays compact.
+
+The cache is deliberately model-agnostic — it maps token tuples to host
+pytrees and never inspects leaves beyond byte accounting — so one
+implementation serves every mixer pattern.  Snapshots are only shape-valid
+for the (cfg, max_len, dtype) they were captured under: use one cache per
+engine configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.state import state_nbytes
+
+
+@dataclasses.dataclass(eq=False)      # identity hash: nodes live in sets
+class _Node:
+    """One radix-tree node: ``edge`` labels the path from the parent; the
+    node spells the prefix of length ``depth``; ``snap`` (if any) is the
+    host-side decode-state snapshot for exactly that prefix."""
+    edge: Tuple[int, ...]
+    depth: int
+    parent: Optional["_Node"]
+    children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
+    snap: Any = None
+    nbytes: int = 0
+    used: int = 0                       # LRU clock value of the last touch
+
+
+def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class PrefixCache:
+    """Byte-budgeted radix-tree prefix cache of decode-state snapshots.
+
+    budget_mb: snapshot byte budget; inserting past it evicts LRU
+        snapshots (a single snapshot larger than the whole budget is
+        refused and counted in ``stats['oversize']``).
+    min_tokens: shortest prefix worth publishing (boundaries below it are
+        not captured — they save too little prefill to pay the transfer).
+    capture: master switch for publishing new snapshots; lookups still
+        serve hits when False (a frozen, pre-warmed cache).
+    """
+
+    def __init__(self, budget_mb: float = 64.0, min_tokens: int = 1,
+                 capture: bool = True):
+        if budget_mb <= 0:
+            raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
+        self.budget_bytes = int(budget_mb * (1 << 20))
+        self.min_tokens = min_tokens
+        self.capture = capture
+        self._root = _Node(edge=(), depth=0, parent=None)
+        self._snaps: set = set()        # nodes currently holding a snapshot
+        self._bytes = 0
+        self._clock = 0
+        #: bumped on every snapshot attach/evict; rankings derived from the
+        #: tree (CachedSuffixFirst's peek memo) are valid while it holds
+        self.version = 0
+        self.stats: Dict[str, int] = {
+            "hits": 0, "misses": 0, "hit_tokens": 0, "lookup_tokens": 0,
+            "inserts": 0, "dedup_skips": 0, "evictions": 0, "oversize": 0,
+        }
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def _walk_best(self, tokens: Sequence[int],
+                   cap: int) -> Optional[_Node]:
+        """Deepest snapshot-holding node spelling a prefix of ``tokens``
+        no longer than ``cap``; None on a total miss."""
+        node, best, i = self._root, None, 0
+        while True:
+            if node.snap is not None and node.depth <= cap:
+                best = node
+            if node.depth > cap or i >= len(tokens):
+                return best
+            nxt = node.children.get(tokens[i])
+            if nxt is None:
+                return best
+            m = _common_len(tokens[i:], nxt.edge)
+            if m < len(nxt.edge):
+                return best             # diverged mid-edge
+            i += m
+            node = nxt
+
+    def peek_len(self, tokens: Sequence[int]) -> int:
+        """Longest cached-prefix length for this prompt, side-effect free
+        (no LRU touch, no stats) — for schedulers and admission grouping."""
+        best = self._walk_best(tokens, max(len(tokens) - 1, 0))
+        return best.depth if best is not None else 0
+
+    def lookup(self, tokens: Sequence[int]) -> Tuple[int, Any]:
+        """Longest cached prefix strictly shorter than the prompt:
+        ``(prefix_len, snapshot)``, or ``(0, None)`` on a miss.  Touches
+        LRU and records hit/miss stats — call once per admitted request."""
+        self.stats["lookup_tokens"] += len(tokens)
+        best = self._walk_best(tokens, max(len(tokens) - 1, 0))
+        if best is None:
+            self.stats["misses"] += 1
+            return 0, None
+        self._clock += 1
+        best.used = self._clock
+        self.stats["hits"] += 1
+        self.stats["hit_tokens"] += best.depth
+        return best.depth, best.snap
+
+    def contains(self, tokens: Sequence[int]) -> bool:
+        """True iff exactly this prefix holds a snapshot."""
+        best = self._walk_best(tokens, len(tokens))
+        return best is not None and best.depth == len(tokens)
+
+    # ------------------------------------------------------------- updates
+
+    def insert(self, tokens: Sequence[int],
+               snap_fn: Callable[[], Any]) -> bool:
+        """Publish a boundary snapshot for ``tokens``.
+
+        ``snap_fn`` produces the host-side snapshot and is only called if
+        the prefix is new (dedup keeps device->host copies off the hot
+        path for already-cached prefixes, which are LRU-touched instead).
+        Returns True iff a new snapshot was stored.
+        """
+        if not self.capture or len(tokens) < self.min_tokens:
+            return False
+        node = self._ensure_node(tuple(tokens))
+        self._clock += 1
+        node.used = self._clock
+        if node.snap is not None:
+            self.stats["dedup_skips"] += 1
+            return False
+        snap = snap_fn()
+        nbytes = state_nbytes(snap)
+        if nbytes > self.budget_bytes:
+            self.stats["oversize"] += 1
+            self._prune(node)
+            return False
+        node.snap, node.nbytes = snap, nbytes
+        self._snaps.add(node)
+        self._bytes += nbytes
+        self.version += 1
+        self.stats["inserts"] += 1
+        self._evict_to_budget(keep=node)
+        return True
+
+    def _ensure_node(self, tokens: Tuple[int, ...]) -> _Node:
+        """Find-or-create the node spelling ``tokens``, splitting edges."""
+        node, i = self._root, 0
+        while i < len(tokens):
+            nxt = node.children.get(tokens[i])
+            if nxt is None:
+                child = _Node(edge=tokens[i:], depth=len(tokens),
+                              parent=node)
+                node.children[tokens[i]] = child
+                return child
+            m = _common_len(tokens[i:], nxt.edge)
+            if m == len(nxt.edge):
+                node, i = nxt, i + m
+                continue
+            # split nxt's edge at m: node -> mid -> nxt
+            mid = _Node(edge=nxt.edge[:m], depth=nxt.depth - len(nxt.edge)
+                        + m, parent=node, children={nxt.edge[m]: nxt})
+            nxt.edge = nxt.edge[m:]
+            nxt.parent = mid
+            node.children[tokens[i]] = mid
+            node, i = mid, i + m
+        return node
+
+    def _evict_to_budget(self, keep: Optional[_Node] = None) -> None:
+        while self._bytes > self.budget_bytes and self._snaps:
+            victims = self._snaps - {keep} if keep in self._snaps \
+                else self._snaps
+            if not victims:
+                return
+            self._evict(min(victims, key=lambda n: n.used))
+
+    def _evict(self, node: _Node) -> None:
+        self._bytes -= node.nbytes
+        node.snap, node.nbytes = None, 0
+        self._snaps.discard(node)
+        self.version += 1
+        self.stats["evictions"] += 1
+        self._prune(node)
+
+    def _prune(self, node: _Node) -> None:
+        """Drop snapshot-less leaf chains and merge pass-through nodes so
+        the tree stays a proper radix tree after eviction."""
+        while (node.parent is not None and node.snap is None
+               and not node.children):
+            parent = node.parent
+            del parent.children[node.edge[0]]
+            node = parent
+        if (node.parent is not None and node.snap is None
+                and len(node.children) == 1):
+            (child,) = node.children.values()
+            child.edge = node.edge + child.edge
+            child.parent = node.parent
+            node.parent.children[node.edge[0]] = child
+
+    # ------------------------------------------------------------- reports
+
+    def summary(self) -> Dict[str, Any]:
+        """Derived stats: ``hit_rate`` over lookups, ``token_hit_rate``
+        (cached prefix tokens / prompt tokens looked up), byte usage."""
+        s = self.stats
+        lookups = s["hits"] + s["misses"]
+        return {
+            "snapshots": len(self),
+            "bytes_used": self._bytes,
+            "budget_bytes": self.budget_bytes,
+            "hit_rate": s["hits"] / max(lookups, 1),
+            "token_hit_rate": s["hit_tokens"] / max(s["lookup_tokens"], 1),
+            **s,
+        }
+
+    # introspection used by tests: every (prefix, nbytes) currently held
+    def snapshot_prefixes(self) -> List[Tuple[Tuple[int, ...], int]]:
+        out = []
+
+        def rec(node, prefix):
+            prefix = prefix + node.edge
+            if node.snap is not None:
+                out.append((prefix, node.nbytes))
+            for c in node.children.values():
+                rec(c, prefix)
+
+        rec(self._root, ())
+        return sorted(out)

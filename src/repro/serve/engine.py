@@ -20,6 +20,12 @@ Design (vLLM-style, sized for a single host or one model replica):
     chunk its prompt completes.
   * ``admission="sequential"`` keeps the PR-1 behaviour — full prefill per
     request while decode stalls — as the A/B baseline for the benchmark.
+  * With a :class:`~repro.serve.cache.PrefixCache`, admission first looks
+    up the longest cached prefix of each prompt, restores its boundary
+    snapshot into the prefill lane, and prefills only the uncached suffix
+    (serving cost O(uncached suffix), not O(prompt)); crossing new chunk
+    boundaries publishes snapshots back to the tree.  Batched lanes group
+    by cached-prefix length, since a job's lanes advance in lockstep.
   * The first token is sampled from the last prompt logit inside the same
     dispatch that finishes the prompt (that instant is the request's TTFT).
   * Slots retire on EOS / max-new-tokens / cache exhaustion and are refilled
@@ -108,18 +114,21 @@ def prefill_chunks(n: int, max_chunk: int) -> List[int]:
 class _PrefillJob:
     """A batched admission in flight: up to ``width`` requests prefilled
     together, one chunk per engine tick, all lanes advancing in lockstep
-    from position 0.  Each chunk is the largest power of two that every
-    still-active lane can consume (the min of their next greedy chunks), so
-    chunk sizes stay powers of two <= max_chunk and lanes with shorter
-    prompts drop out at chunk boundaries — their terminal state is adopted
-    into their slot while longer lanes keep prefilling."""
+    from position ``pos0`` (0 cold; the shared cached-prefix length when
+    admission restored a prefix-cache snapshot — lanes in one job always
+    share it, which is why cache-aware admission groups by hit length).
+    Each chunk is the largest power of two that every still-active lane can
+    consume (the min of their next greedy chunks), so chunk sizes stay
+    powers of two <= max_chunk and lanes with shorter prompts drop out at
+    chunk boundaries — their terminal state is adopted into their slot
+    while longer lanes keep prefilling."""
 
     def __init__(self, lanes: List[_PrefillLane], width: int, state,
-                 max_chunk: int):
+                 max_chunk: int, pos0: int = 0):
         self.lanes = lanes
         self.width = width
         self.state = state
-        self.pos = 0
+        self.pos = pos0
         self.max_chunk = max_chunk
         self.prompts = {l.row: np.asarray(l.req.prompt, np.int32)
                         for l in lanes}
@@ -161,6 +170,16 @@ class ServeEngine:
     1..K+1 tokens per slot (see ``serve/speculative.py``).  Greedy outputs
     are bit-identical to ``speculative=0``; sampled outputs stay unbiased
     via rejection-sampling acceptance.
+
+    ``prefix_cache`` (a :class:`~repro.serve.cache.PrefixCache`) turns on
+    prefix caching: admission skips prefill for the longest cached prefix
+    of each prompt by restoring a chunk-boundary state snapshot, and
+    publishes new boundaries as prefill crosses them.  Cache-hit greedy
+    outputs are bit-identical to a cold prefill (chunk-boundary snapshots
+    restore exactly).  Pair with
+    :class:`~repro.serve.scheduler.CachedSuffixFirst` to admit hits first.
+    A cache's snapshots are only shape-valid for one (cfg, max_len, dtype)
+    combination — share it across engines of the same configuration only.
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
@@ -168,7 +187,8 @@ class ServeEngine:
                  max_prefill_chunk: int = 128, scheduler=None,
                  admission: str = "interleaved",
                  prefill_lanes: Optional[int] = None,
-                 speculative: int = 0, draft_stride: int = 2):
+                 speculative: int = 0, draft_stride: int = 2,
+                 prefix_cache=None):
         if cfg.kind == "encoder":
             raise ValueError("encoder-only configs have no decode path")
         if admission not in ("interleaved", "sequential"):
@@ -185,6 +205,7 @@ class ServeEngine:
         self.prefill_lanes = min(prefill_lanes or max_slots, max_slots)
         self.spec = (SpecConfig(k=speculative, draft_stride=draft_stride)
                      if speculative else None)
+        self.cache = prefix_cache
         rules = rules or shd.ShardingRules()
         self.store = StateStore(cfg, max_slots, max_len, self.dtype)
 
@@ -222,7 +243,8 @@ class ServeEngine:
 
         if self.spec is not None:
             spec_core = make_spec_fn(cfg, mesh, rules, self.spec,
-                                     self.store.axes)
+                                     self.store.axes,
+                                     self.store.append_only)
 
             def spec_mixed_fn(params, state, last, pos, rng_d, temp, topk,
                               topp, pf_state, pf_toks, pf_pos, rng_p,
@@ -270,6 +292,11 @@ class ServeEngine:
             # EOS / max-tokens / max_len).  acceptance = accepted / drafted.
             "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
             "spec_emitted": 0,
+            # prefix cache: prompt tokens whose prefill was skipped by
+            # restoring a cached boundary snapshot (``prefill_tokens``
+            # above counts only the uncached suffixes actually computed);
+            # hit/miss/evict detail lives in ``PrefixCache.stats``
+            "cache_hit_tokens": 0,
         }
 
     @property
@@ -296,6 +323,14 @@ class ServeEngine:
                 f"engine max_len {self.max_len}")
         self._submit_t[req.id] = time.perf_counter()
         self.scheduler.add(req)
+
+    def reset_stats(self) -> None:
+        """Zero every counter in ``stats`` (benchmark iterations re-time a
+        warm engine).  The prefix cache's own stats are cumulative over its
+        lifetime and are deliberately not touched — reset the cache by
+        constructing a new one."""
+        for k, v in self.stats.items():
+            self.stats[k] = type(v)()
 
     def spec_summary(self) -> Dict[str, float]:
         """Derived speculative-decoding stats: ``acceptance_rate`` =
@@ -428,32 +463,92 @@ class ServeEngine:
         n = min(len(free), len(self.scheduler), self.prefill_lanes)
         if n == 0:
             return
+        # assemble the job by peeking: lanes in a batched job advance in
+        # lockstep from one position, so with a prefix cache every admitted
+        # request must share the same cached-prefix length — stop at the
+        # first request whose hit length differs (it leads the next job).
+        # Cache-off keeps the plain pop loop (and the PR-2 scheduler
+        # protocol, which had no peek_next).
+        take: List[Request] = []
+        pos0 = 0
+        if self.cache is None:
+            take = [self.scheduler.pop_next() for _ in range(n)]
+        else:
+            while len(take) < n and self.scheduler:
+                req = self.scheduler.peek_next()
+                hit = self.cache.peek_len(req.prompt)
+                if not take:
+                    pos0 = hit
+                elif hit != pos0:
+                    break
+                self.scheduler.pop_next()
+                take.append(req)
         # batched prefill lanes: lane batch padded to a power of two so jit
         # specializes on O(log lanes x log chunk) shapes, not one per count
-        width = 1 << (n - 1).bit_length()
+        width = 1 << (len(take) - 1).bit_length()
         lanes = []
         t_now = time.perf_counter()
-        for row in range(n):
-            req = self.scheduler.pop_next()
+        for row, req in enumerate(take):
             slot = free[row]
             lanes.append(_PrefillLane(
                 req=req, slot=slot, row=row,
                 t_submit=self._submit_t.pop(req.id, t_now),
-                remaining=len(req.prompt)))
+                remaining=len(req.prompt) - pos0))
             self._reserved.add(slot)
-        self._job = _PrefillJob(lanes, width, self.store.fresh(width),
-                                self.max_prefill_chunk)
+        state = self.store.fresh(width)
+        if self.cache is not None:
+            rows, snaps = [], []
+            for l in lanes:
+                hit, snap = self.cache.lookup(l.req.prompt)
+                # grouping above guarantees hit == pos0 (tree unchanged
+                # since the peek); lanes may still hold *different*
+                # equal-length prefixes, hence one snapshot per lane
+                if snap is not None:
+                    rows.append(l.row)
+                    snaps.append(snap)
+                    self.stats["cache_hit_tokens"] += hit
+            if rows:
+                # one host->device transfer + one insert for the whole
+                # job: concatenate the 1-slot snapshots along each leaf's
+                # slot axis into a len(rows)-slot source state
+                src = jax.tree_util.tree_map(
+                    lambda ax, *leaves: np.concatenate(leaves, axis=ax),
+                    self.store.axes, *snaps)
+                state = self.store.restore_rows(state, src, rows)
+        self._job = _PrefillJob(lanes, width, state,
+                                self.max_prefill_chunk, pos0=pos0)
 
     def _advance_job(self, c: int, first: np.ndarray, t_done: float) -> None:
         job = self._job
         job.pos += c
         finished = []
+        crossed = []                    # lanes that consumed this chunk
         for l in job.lanes:
             if l.done:
                 continue
+            crossed.append(l)
             l.remaining -= c
             if l.remaining == 0:
                 finished.append(l)
+        if self.cache is not None and self.cache.capture:
+            # publish this boundary's snapshots: each crossing lane's state
+            # row is the exact decode state for prompt[:job.pos] (full
+            # prompt for lanes finishing now).  Prefixes already in the
+            # tree are skipped with a walk; the rest share one batched
+            # gather + device->host transfer, split host-side per lane
+            # (mirrors the one-transfer batching on the restore side).
+            new = [(l, tuple(l.req.prompt[:job.pos])) for l in crossed]
+            new = [(l, p) for l, p in new
+                   if len(p) >= self.cache.min_tokens
+                   and not self.cache.contains(p)]
+            if new:
+                snap = self.store.snapshot_rows(job.state,
+                                                [l.row for l, _ in new])
+                for i, (l, prefix) in enumerate(new):
+                    one = jax.tree_util.tree_map(
+                        lambda ax, leaf, i=i: np.take(leaf, [i], axis=ax),
+                        self.store.axes, snap)
+                    self.cache.insert(prefix, lambda s=one: s)
         if finished:
             # adopt the finished lanes' terminal prefill state into their
             # slots; ``first`` holds each lane's token sampled from its last
@@ -491,12 +586,23 @@ class ServeEngine:
         S = prompt.shape[1]
         st = self.store.fresh(1)
         pos = 0
+        if self.cache is not None:
+            hit, snap = self.cache.lookup(req.prompt)
+            if snap is not None:
+                st = self.store.restore_rows(st, snap, [0])
+                pos = hit
+                self.stats["cache_hit_tokens"] += hit
+        pos0 = pos
         logits = None
-        for c in prefill_chunks(S, self.max_prefill_chunk):
+        for c in prefill_chunks(S - pos0, self.max_prefill_chunk):
             logits, st = self._prefill(self.params, st,
                                        jnp.asarray(prompt[:, pos:pos + c]),
                                        jnp.int32(pos))
             pos += c
+            if self.cache is not None and self.cache.capture:
+                self.cache.insert(
+                    tuple(req.prompt[:pos]),
+                    lambda s=st: self.store.snapshot_rows(s, [0]))
         sp = req.sampling
         first = sample(logits[:, -1], self._next_rng(),
                        jnp.full((1,), sp.temperature, jnp.float32),
@@ -505,7 +611,7 @@ class ServeEngine:
         first_tok = int(np.asarray(first)[0])                    # sync point
         t1 = time.perf_counter()
         self.store.adopt(st, [0], [slot])
-        self.stats["prefill_tokens"] += S
+        self.stats["prefill_tokens"] += S - pos0
         self.stats["prefill_s"] += t1 - t0
         if any(l is not None for l in self._lanes):
             # decode lanes sat idle for this whole prefill: that is the

@@ -5,10 +5,17 @@ decode slots free up (or, in interleaved admission, whenever it can start a
 new batched prefill job).  Ordering is a property of *pop time*, not
 enqueue time: every ``pop_next`` decides over everything currently queued,
 so requests arriving mid-run compete with older ones instead of being
-appended behind a stale ordering.
+appended behind a stale ordering.  ``peek_next`` returns the request
+``pop_next`` would return without removing it — the engine peeks while
+assembling a batched prefill job so it can stop admitting at a group
+boundary (prefix-cache admission groups lanes by cached-prefix length)
+without perturbing the queue.
 
 FIFO is the default; ``ShortestPromptFirst`` trades fairness for lower mean
-TTFT under mixed prompt lengths (shorter prefills first).
+TTFT under mixed prompt lengths (shorter prefills first);
+``CachedSuffixFirst`` is prefix-cache-aware — it ranks by *uncached suffix*
+length, so a long prompt whose prefix is already cached admits before a
+short cold one.
 """
 from __future__ import annotations
 
@@ -24,6 +31,9 @@ class FIFOScheduler:
 
     def add(self, request) -> None:
         self._q.append(request)
+
+    def peek_next(self):
+        return self._q[0] if self._q else None
 
     def pop_next(self):
         return self._q.popleft() if self._q else None
@@ -52,6 +62,9 @@ class ShortestPromptFirst:
         heapq.heappush(self._h, (len(request.prompt), self._n, request))
         self._n += 1
 
+    def peek_next(self):
+        return self._h[0][2] if self._h else None
+
     def pop_next(self):
         return heapq.heappop(self._h)[2] if self._h else None
 
@@ -60,3 +73,64 @@ class ShortestPromptFirst:
 
     def __bool__(self) -> bool:
         return bool(self._h)
+
+
+class CachedSuffixFirst:
+    """Admit the request with the shortest *uncached* prompt suffix.
+
+    Prefix-cache-aware ShortestPromptFirst: the effective prefill cost of a
+    request is ``len(prompt) - cached_prefix_len``, so a long prompt whose
+    prefix is already in the :class:`~repro.serve.cache.PrefixCache`
+    outranks a short cold prompt.  Hits admitting first compounds: their
+    prefill completes sooner, publishes deeper boundaries, and upgrades the
+    hit length of queued requests sharing the prefix — so ranking must
+    happen at *pop time* against the live tree, never be frozen at enqueue.
+    A plain list scanned per pop does exactly that (heap keys would go
+    stale as the tree fills and evicts); equal suffixes keep FIFO order.
+    """
+
+    def __init__(self, cache):
+        self._cache = cache
+        self._q = []
+        self._n = 0
+        self._peeked = None             # memo: (entry, cache.version)
+
+    def _key(self, entry):
+        order, req = entry
+        return (len(req.prompt) - self._cache.peek_len(req.prompt), order)
+
+    def add(self, request) -> None:
+        self._q.append((self._n, request))
+        self._n += 1
+        self._peeked = None             # new arrival may outrank the memo
+
+    def peek_next(self):
+        if not self._q:
+            return None
+        entry = min(self._q, key=self._key)
+        self._peeked = (entry, self._cache.version)
+        return entry[1]
+
+    def pop_next(self):
+        """Pop the best entry.  A peek directly followed by a pop (the
+        engine's admission loop) reuses the peek's ranking instead of
+        re-scanning the queue — one O(queue) pass with a radix walk per
+        entry, not two.  The memo is dropped when an arrival or any radix
+        mutation (``cache.version``) could change the ranking, so pops
+        always reflect the live tree."""
+        if not self._q:
+            return None
+        if (self._peeked is not None
+                and self._peeked[1] == self._cache.version):
+            entry = self._peeked[0]
+        else:
+            entry = min(self._q, key=self._key)
+        self._peeked = None
+        self._q.remove(entry)
+        return entry[1]
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

@@ -17,8 +17,15 @@ One speculative round per engine tick, all inside a single jitted dispatch
      discarded — drafting never touches the committed slot state.
   2. **Verify**: a ``lax.scan`` of K+1 *full-model* decode steps consumes
      ``[last, d_1..d_K]`` at per-slot positions, emitting the target
-     logits for every window position *and a state snapshot per depth*
-     (every leaf gains a leading (K+1,) window axis).  This is the
+     logits for every window position *and a state snapshot per depth* —
+     but only for leaves that actually need one.  Leaves a mixer declares
+     ``append_only`` on its :class:`~repro.serve.state.StateSpec`
+     (attention K/V/kpos without a sliding window) are position-keyed
+     caches whose rollback is free: rejected-draft entries sit at future
+     positions, are causally masked until decode reaches them, and are
+     then overwritten — so the verify scan stacks only the recurrent
+     leaves (constant-size per slot) and the KV caches ride through from
+     the final verify step uncopied.  The stacked recurrent subset is the
      multi-snapshot gather the StateStore's :func:`~repro.serve.state.
      select_window` consumes.
   3. **Accept**: :func:`repro.serve.sampling.spec_accept` takes the longest
@@ -26,12 +33,14 @@ One speculative round per engine tick, all inside a single jitted dispatch
      rejection sampling for temperature slots (unbiased under top-k/top-p
      because both distributions are filtered identically).
   4. **Commit**: the snapshot at each slot's accepted depth becomes the new
-     slot state (``select_window``).  Rollback is free: rejected depths are
-     simply never adopted.  RoM/SSM mixers make the snapshots cheap — the
-     recurrent state is constant-size per slot (the paper's headline
-     inference property), so a K-deep window costs K small copies, where a
-     KV-cache model would replicate its whole cache per depth (hybrid
-     patterns with ``attn`` blocks pay exactly that for those blocks).
+     slot state (``select_window`` over the recurrent subset, recombined
+     with the final verify state's cache leaves).  Rollback is free:
+     rejected depths are simply never adopted.  RoM/SSM mixers make the
+     snapshots cheap — the recurrent state is constant-size per slot (the
+     paper's headline inference property), so a K-deep window costs K
+     small copies; hybrid patterns with non-windowed ``attn`` blocks pay
+     nothing extra for the KV cache (append-only classification), and
+     only sliding-window attention still replicates its cache per depth.
 
 Slots at different accepted depths advance together: the engine applies
 ``n_emit[b]`` in [1, K+1] tokens to slot ``b`` from one dispatch, so its
@@ -66,7 +75,7 @@ class SpecConfig:
     draft_stride: int = 2
 
 
-def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes):
+def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes, append_only=None):
     """Build the one-dispatch speculative round.
 
     Returns ``spec_fn(params, state, last, pos, rng, temp, topk, topp) ->
@@ -75,12 +84,24 @@ def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes):
     sampled tokens, ``pos`` (B,) their per-slot positions, and
     temp/topk/topp the per-slot sampling params.  ``axes`` is the store's
     per-leaf slot-axis pytree (``StateStore.axes``) used to select each
-    slot's accepted-depth snapshot.
+    slot's accepted-depth snapshot; ``append_only`` the matching bool
+    pytree (``StateStore.append_only``) marking leaves whose per-depth
+    snapshot is skipped — they are taken from the final verify step
+    instead (rollback via position masking).  ``append_only=None``
+    snapshots every leaf (the pre-classification behaviour).
     """
     keep = lm.draft_layers(cfg, spec.draft_stride)
     K = spec.k
     if K < 1:
         raise ValueError(f"speculative k must be >= 1, got {K}")
+    ax_leaves = jax.tree_util.tree_leaves(axes)
+    ao_leaves = (jax.tree_util.tree_leaves(append_only)
+                 if append_only is not None else [False] * len(ax_leaves))
+    # leaf indices (in canonical tree_leaves order, shared by state/axes/
+    # append_only — all three have identical structure) that need a
+    # per-depth snapshot in the verify scan
+    rec_idx = tuple(i for i, ao in enumerate(ao_leaves) if not ao)
+    rec_axes = tuple(ax_leaves[i] for i in rec_idx)
 
     def spec_fn(params, state, last, pos, rng, temp, topk, topp):
         rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
@@ -103,18 +124,26 @@ def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes):
             tok, j = xs
             logits, st = lm.decode_step(params, st, tok[:, None], pos + j,
                                         cfg, rt)
-            return st, (logits, st)
+            leaves = jax.tree_util.tree_leaves(st)
+            return st, (logits, tuple(leaves[i] for i in rec_idx))
 
         v_in = jnp.concatenate([last[None, :], d_toks], axis=0)   # (K+1,B)
-        _, (t_logits, snaps) = jax.lax.scan(
+        final, (t_logits, snaps) = jax.lax.scan(
             verify_body, state, (v_in, jnp.arange(K + 1)))
-        # t_logits (K+1,B,V); snaps = per-depth state snapshots (window axis
-        # leading every leaf) — the multi-snapshot gather select_window eats
+        # t_logits (K+1,B,V); snaps = per-depth snapshots of the recurrent
+        # leaves only (window axis leading each) — the multi-snapshot gather
+        # select_window eats; append-only cache leaves skip the stack and
+        # ride through in ``final``
 
         toks, n_emit = spec_accept(
             jnp.moveaxis(t_logits, 0, 1), jnp.moveaxis(d_logits, 0, 1),
             d_toks.T, jax.random.fold_in(rng, K + 1), temp, topk, topp)
-        new_state = select_window(snaps, axes, n_emit - 1)
+        sel = select_window(snaps, rec_axes, n_emit - 1)
+        leaves = list(jax.tree_util.tree_leaves(final))
+        for i, leaf in zip(rec_idx, sel):
+            leaves[i] = leaf
+        new_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(state), leaves)
         return toks, n_emit, new_state
 
     return spec_fn

@@ -40,9 +40,24 @@ class StateSpec:
         slots along ``slot_axis`` of every leaf.
     slot_axis: axis carrying the slot dimension in every leaf of the pytree
         (before any segment-level layer stacking).
+    append_only: leaf names (or a ``cfg -> names`` callable for
+        config-dependent cases) of *append-only, position-keyed* cache
+        leaves: entries are only ever written at their own absolute
+        position and reads mask invalid/future positions, so speculative
+        rollback never needs per-depth snapshots of them — stale entries
+        from rejected drafts are masked now and overwritten when decode
+        reaches their position.  Constant-size recurrent state (overwritten
+        in place every step) must NOT be listed here.
     """
     init: Callable[..., Any]
     slot_axis: int = 0
+    append_only: Any = ()
+
+
+def append_only_leaves(spec: StateSpec, cfg):
+    """Resolve a spec's append-only leaf names for this config."""
+    ao = spec.append_only
+    return frozenset(ao(cfg) if callable(ao) else ao)
 
 
 def batch_spec(init_fn) -> StateSpec:
@@ -83,6 +98,40 @@ def slot_axes(cfg, state):
             segs.append([_block_axes(pattern, bst, 0) for bst in sst])
         else:
             segs.append(_block_axes(pattern, sst, 1))
+    return {"segments": segs}
+
+
+def _leaf_name(path):
+    for entry in reversed(path):
+        k = getattr(entry, "key", getattr(entry, "name", None))
+        if isinstance(k, str):
+            return k
+    return None
+
+
+def _block_append_only(pattern, bst, cfg):
+    from repro.models import lm
+    out = {}
+    for i, kind in enumerate(pattern):
+        ao = append_only_leaves(lm.MIXERS[kind].state_spec, cfg)
+        key = f"l{i}_{kind}"
+        out[key] = jax.tree_util.tree_map_with_path(
+            lambda p, _leaf: _leaf_name(p) in ao, bst[key])
+    return out
+
+
+def append_only_mask(cfg, state):
+    """Per-leaf bool pytree matching ``state``: True where the leaf is an
+    append-only position-keyed cache (see :class:`StateSpec`).  Structure
+    mirrors :func:`slot_axes`; consumers (speculative verify) use it to skip
+    per-depth snapshots of leaves whose rollback is free."""
+    segs = []
+    for (pattern, repeats), sst in zip(cfg.segments, state["segments"]):
+        if isinstance(sst, list):
+            segs.append([_block_append_only(pattern, bst, cfg)
+                         for bst in sst])
+        else:
+            segs.append(_block_append_only(pattern, sst, cfg))
     return {"segments": segs}
 
 
@@ -146,6 +195,30 @@ def select_window(stacked, axes, depth):
 
 
 # ---------------------------------------------------------------------------
+# host-side snapshots (prefix cache, state migration)
+# ---------------------------------------------------------------------------
+
+def state_nbytes(tree) -> int:
+    """Per-leaf byte accounting: total bytes a state pytree occupies (host
+    or device).  The prefix cache budgets its snapshots with this."""
+    return sum(int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def snapshot_slots(state, axes, slots):
+    """Host-side copy of ``slots``' rows: ``gather_slots`` then a device ->
+    host transfer, so the snapshot survives device-state mutation and costs
+    no device memory.  Inverse of :func:`restore_slots`."""
+    return jax.device_get(gather_slots(state, axes, slots))
+
+
+def restore_slots(dst, src, axes, slots):
+    """Write a host-side snapshot (from :func:`snapshot_slots`) back into
+    ``slots`` of the device state ``dst``; returns the updated state."""
+    return insert_slots(dst, src, axes, slots)
+
+
+# ---------------------------------------------------------------------------
 # store
 # ---------------------------------------------------------------------------
 
@@ -164,6 +237,7 @@ class StateStore:
         self.dtype = dtype
         self.state = init_slots(cfg, max_slots, max_len, dtype)
         self.axes = slot_axes(cfg, self.state)
+        self.append_only = append_only_mask(cfg, self.state)
         # axes are static python ints: close over them so jit sees concrete
         # index tuples (retraces only per (m,) shape of rows/slots)
         self._adopt = jax.jit(lambda dst, src, rows, slots: adopt_slots(
@@ -189,3 +263,14 @@ class StateStore:
         self.state = self._adopt(self.state, src_state,
                                  jnp.asarray(rows, jnp.int32),
                                  jnp.asarray(slots, jnp.int32))
+
+    def snapshot_rows(self, state, rows):
+        """Host-side copy of ``rows`` of a state with this store's
+        structure (the canonical state or a ``fresh`` side state)."""
+        return jax.device_get(self._gather(state,
+                                           jnp.asarray(rows, jnp.int32)))
+
+    def restore_rows(self, state, snap, rows):
+        """Write a host snapshot into ``rows`` of a state with this
+        store's structure; returns the updated state."""
+        return restore_slots(state, snap, self.axes, rows)

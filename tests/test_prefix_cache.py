@@ -1,0 +1,351 @@
+"""Prefix cache over the StateStore: radix-tree semantics, byte-budgeted
+LRU eviction, snapshot/restore round-trips, and — the contract that
+matters — bit-identical greedy decode after a cache hit, per mixer pattern
+and composed with interleaved admission and speculative decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
+                                MambaConfig, ModelConfig, RGLRUConfig,
+                                RoMConfig, XLSTMConfig)
+from repro.models import lm
+from repro.serve import (CachedSuffixFirst, PrefixCache, Request,
+                         ServeEngine, StateStore, state_nbytes)
+from repro.serve.state import (append_only_mask, restore_slots,
+                               snapshot_slots)
+
+
+# ---------------------------------------------------------------------------
+# radix tree unit tests (model-free: snapshots are plain numpy pytrees)
+# ---------------------------------------------------------------------------
+
+def _snap(nbytes=64):
+    return {"h": np.zeros((nbytes // 8,), np.float64)}
+
+
+def test_radix_insert_lookup_longest_prefix():
+    c = PrefixCache(budget_mb=1.0)
+    assert c.peek_len([1, 2, 3]) == 0
+    assert c.lookup([1, 2, 3]) == (0, None)
+    c.insert((1, 2, 3, 4), _snap)
+    c.insert((1, 2), _snap)
+    assert len(c) == 2
+    # longest cached prefix, capped strictly below the prompt length
+    assert c.peek_len([1, 2, 3, 4, 9]) == 4
+    assert c.peek_len([1, 2, 3, 4]) == 2          # own length excluded
+    assert c.peek_len([1, 2, 9]) == 2
+    assert c.peek_len([1, 9]) == 0
+    assert c.peek_len([2, 2, 3]) == 0
+    n, snap = c.lookup([1, 2, 3, 4, 9])
+    assert n == 4 and snap is not None
+    assert c.stats["hits"] == 1 and c.stats["hit_tokens"] == 4
+
+
+def test_radix_edge_split_and_divergence():
+    c = PrefixCache(budget_mb=1.0)
+    c.insert((5, 6, 7, 8), _snap)
+    # diverging insert splits the edge mid-way; both snapshots remain
+    c.insert((5, 6, 9), _snap)
+    assert c.peek_len([5, 6, 7, 8, 1]) == 4
+    assert c.peek_len([5, 6, 9, 1]) == 3
+    # the split node (5,6) holds no snapshot: no spurious hit at depth 2
+    assert c.peek_len([5, 6, 1]) == 0
+    assert not c.contains((5, 6))
+    assert c.contains((5, 6, 9))
+    # inserting onto the split point works
+    c.insert((5, 6), _snap)
+    assert c.peek_len([5, 6, 1]) == 2
+
+
+def test_radix_dedup_skips_recapture():
+    c = PrefixCache(budget_mb=1.0)
+    calls = []
+
+    def snap_fn():
+        calls.append(1)
+        return _snap()
+
+    assert c.insert((1, 2), snap_fn) is True
+    assert c.insert((1, 2), snap_fn) is False     # dedup: no second copy
+    assert len(calls) == 1
+    assert c.stats["dedup_skips"] == 1
+
+
+def test_eviction_respects_byte_budget_lru():
+    c = PrefixCache(budget_mb=1e-3)               # 1048 bytes
+    big = 400
+    c.insert((1,), lambda: _snap(big))
+    c.insert((2,), lambda: _snap(big))
+    c.lookup([1, 9])                              # touch (1,): now MRU
+    c.insert((3,), lambda: _snap(big))            # exceeds budget -> evict
+    assert c.bytes_used <= c.budget_bytes
+    assert c.stats["evictions"] == 1
+    assert c.peek_len([2, 9]) == 0                # LRU victim was (2,)
+    assert c.peek_len([1, 9]) == 1
+    assert c.peek_len([3, 9]) == 1
+
+
+def test_eviction_prunes_and_merges_radix_nodes():
+    c = PrefixCache(budget_mb=1.0)
+    c.insert((1, 2, 3), _snap)
+    c.insert((1, 2, 3, 4, 5), _snap)
+    c.insert((1, 2, 3, 9), _snap)                 # split below (1,2,3)
+    # evict the deep chain; tree must stay consistent for the others
+    c._evict(c._ensure_node((1, 2, 3, 4, 5)))
+    assert c.peek_len([1, 2, 3, 4, 5, 7]) == 3
+    assert c.peek_len([1, 2, 3, 9, 7]) == 4
+    assert [p for p, _ in c.snapshot_prefixes()] == [(1, 2, 3), (1, 2, 3, 9)]
+
+
+def test_oversize_snapshot_refused():
+    c = PrefixCache(budget_mb=1e-3)
+    assert c.insert((1, 2), lambda: _snap(4096)) is False
+    assert len(c) == 0 and c.bytes_used == 0
+    assert c.stats["oversize"] == 1
+
+
+def test_capture_flag_and_min_tokens():
+    c = PrefixCache(budget_mb=1.0, min_tokens=4)
+    assert c.insert((1, 2), _snap) is False       # below min_tokens
+    assert c.insert((1, 2, 3, 4), _snap) is True
+    frozen = PrefixCache(budget_mb=1.0, capture=False)
+    assert frozen.insert((1, 2, 3, 4), _snap) is False
+
+
+# ---------------------------------------------------------------------------
+# scheduler: cache-aware ranking
+# ---------------------------------------------------------------------------
+
+def test_cached_suffix_first_ranks_by_uncached_suffix():
+    c = PrefixCache(budget_mb=1.0)
+    c.insert((7, 7, 7, 7, 7, 7), _snap)
+    s = CachedSuffixFirst(c)
+    s.add(Request(id=0, prompt=[1, 2, 3]))                  # cold, suffix 3
+    s.add(Request(id=1, prompt=[7] * 6 + [8, 9]))           # hit 6, suffix 2
+    s.add(Request(id=2, prompt=[7] * 6 + [1, 2, 3, 4]))     # hit 6, suffix 4
+    assert s.peek_next().id == 1
+    assert [s.pop_next().id for _ in range(3)] == [1, 0, 2]
+    assert s.pop_next() is None and s.peek_next() is None
+
+
+def test_cached_suffix_first_reranks_as_tree_fills():
+    c = PrefixCache(budget_mb=1.0)
+    s = CachedSuffixFirst(c)
+    s.add(Request(id=0, prompt=[1, 2, 3]))                  # suffix 3
+    s.add(Request(id=1, prompt=[7] * 6 + [8]))              # cold suffix 7
+    assert s.peek_next().id == 0
+    c.insert((7,) * 6, _snap)                     # prefix lands mid-queue
+    assert s.pop_next().id == 1                   # suffix now 1: re-ranked
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore round-trip + leaf classification
+# ---------------------------------------------------------------------------
+
+def _full_cfg(segments, window=None, **kw):
+    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
+                d_ff=64,
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8, window=window),
+                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                              capacity_factor=8.0, impl="capacity"),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_snapshot_restore_roundtrip_host_copy():
+    cfg = _full_cfg(((("mamba", "attn"), 1), (("mamba",), 2)))
+    store = StateStore(cfg, 4, 16, jnp.float32)
+    k = jax.random.PRNGKey(0)
+    src = jax.tree_util.tree_map(
+        lambda a: jax.random.normal(k, a.shape).astype(a.dtype),
+        store.fresh(2))
+    snap = snapshot_slots(src, store.axes, [1])
+    for leaf in jax.tree_util.tree_leaves(snap):
+        assert isinstance(leaf, np.ndarray)       # host-side copy
+    assert state_nbytes(snap) == sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(snap))
+    dst = restore_slots(store.fresh(4), snap, store.axes, [3])
+    back = snapshot_slots(dst, store.axes, [3])
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(snap)):
+        np.testing.assert_array_equal(a, b)
+    # store convenience wrappers agree
+    snap2 = store.snapshot_rows(src, [1])
+    for a, b in zip(jax.tree_util.tree_leaves(snap2),
+                    jax.tree_util.tree_leaves(snap)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_append_only_mask_classifies_leaves():
+    cfg = _full_cfg(((("mamba", "attn"), 1),))
+    store = StateStore(cfg, 2, 16, jnp.float32)
+    mask = store.append_only
+    blk = mask["segments"][0][0]
+    assert blk["l1_attn"] == {"k": True, "v": True, "kpos": True}
+    assert all(v is False for v in
+               jax.tree_util.tree_leaves(blk["l0_mamba"]))
+    assert jax.tree_util.tree_structure(mask) == \
+        jax.tree_util.tree_structure(store.axes)
+    # sliding-window attention is a ring buffer: rejected speculative
+    # writes clobber live entries, so it must NOT be append-only
+    wcfg = _full_cfg(((("attn",),  1),), window=8)
+    wmask = append_only_mask(wcfg, StateStore(wcfg, 2, 16, jnp.float32).state)
+    assert all(v is False for v in jax.tree_util.tree_leaves(wmask))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: cache-hit greedy decode is bit-identical to cold
+# ---------------------------------------------------------------------------
+
+PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
+            ("mlstm",), ("slstm",), ("rom_mamba", "mlp")]
+
+
+def _shared_prefix_requests(cfg, shared_len=12, tails=(3, 5, 4), seed=3):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(2, cfg.vocab_size, size=(shared_len,)).tolist()
+    return [Request(id=i,
+                    prompt=shared + rng.integers(
+                        2, cfg.vocab_size, size=(n,)).tolist(),
+                    max_new_tokens=5)
+            for i, n in enumerate(tails)]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS,
+                         ids=["+".join(p) for p in PATTERNS])
+def test_cache_hit_bit_identical_to_cold_prefill(pattern):
+    """Requests sharing a prompt prefix, decoded greedily: a warm cache
+    (populated by a previous run over the same prefixes) must change
+    nothing about the outputs — only skip prefill work."""
+    cfg = _full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = dict(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8)
+    reqs = _shared_prefix_requests(cfg)
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(reqs)}
+
+    cache = PrefixCache(budget_mb=16.0)
+    warm = ServeEngine(cfg, params, prefix_cache=cache,
+                       scheduler=CachedSuffixFirst(cache), **kw)
+    warm.run(_shared_prefix_requests(cfg))        # populate the tree
+    assert len(cache) > 0
+    hot = ServeEngine(cfg, params, prefix_cache=cache,
+                      scheduler=CachedSuffixFirst(cache), **kw)
+    got = {r.id: r for r in hot.run(_shared_prefix_requests(cfg))}
+    assert set(got) == set(ref)
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, (pattern, i)
+        assert got[i].finish_reason == ref[i].finish_reason
+    # the cache actually skipped prefill work on the warm run
+    assert hot.stats["cache_hit_tokens"] > 0
+    assert hot.stats["prefill_tokens"] < sum(len(r.prompt) for r in reqs)
+    assert cache.stats["hits"] > 0
+
+
+def test_cache_hit_matches_cold_in_sequential_admission():
+    cfg = _full_cfg(((("mamba", "attn"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = dict(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8,
+              admission="sequential")
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(
+        _shared_prefix_requests(cfg))}
+    cache = PrefixCache(budget_mb=16.0)
+    eng = ServeEngine(cfg, params, prefix_cache=cache, **kw)
+    got = {r.id: r for r in eng.run(_shared_prefix_requests(cfg))}
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, i
+    assert eng.stats["cache_hit_tokens"] > 0      # later requests hit
+
+
+def test_cache_composes_with_speculative_and_interleaved():
+    """Prefix cache + speculative decoding + interleaved admission in one
+    engine: mid-run submissions hit cached prefixes while other slots
+    advance by multi-token speculative windows; outputs stay exact."""
+    cfg = _full_cfg(((("mamba", "attn"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = dict(max_slots=2, max_len=64, seed=0, max_prefill_chunk=8)
+    reqs = _shared_prefix_requests(cfg, shared_len=16, tails=(3, 5, 4, 6))
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(list(reqs))}
+
+    cache = PrefixCache(budget_mb=16.0)
+    eng = ServeEngine(cfg, params, prefix_cache=cache,
+                      scheduler=CachedSuffixFirst(cache),
+                      speculative=3, draft_stride=2, **kw)
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    results = []
+    for _ in range(3):                            # decode is now active
+        results.extend(eng.tick())
+    eng.submit(reqs[2])                           # arrives mid-run: its
+    eng.submit(reqs[3])                           # prefix is cached by now
+    while eng.busy():
+        results.extend(eng.tick())
+    got = {r.id: r for r in results}
+    assert set(got) == set(ref)
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, i
+    assert eng.stats["cache_hit_tokens"] > 0
+    assert eng.stats["spec_rounds"] > 0
+    assert eng.stats["mixed_steps"] > 0
+
+
+def test_batched_admission_groups_by_hit_length():
+    """4 free slots, 3 queued hits + 1 cold request: the job takes the
+    equal-hit-length prefix group and leaves the cold request for the next
+    job (lanes advance in lockstep from one shared position)."""
+    cfg = _full_cfg(((("mamba", "attn"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(2, cfg.vocab_size, size=(8,)).tolist()
+    cache = PrefixCache(budget_mb=16.0)
+    kw = dict(max_slots=4, max_len=48, seed=0, max_prefill_chunk=8)
+    ServeEngine(cfg, params, prefix_cache=cache, **kw).run(
+        [Request(id=9, prompt=shared + [7, 8], max_new_tokens=2)])
+    assert cache.contains(tuple(shared))
+
+    eng = ServeEngine(cfg, params, prefix_cache=cache, **kw)
+    hits = [Request(id=i, prompt=shared + rng.integers(
+        2, cfg.vocab_size, size=(3,)).tolist(), max_new_tokens=4)
+        for i in range(3)]
+    cold = Request(id=3, prompt=rng.integers(
+        2, cfg.vocab_size, size=(6,)).tolist(), max_new_tokens=4)
+    for r in hits + [cold]:
+        eng.submit(r)
+    eng.tick()                                    # first job: the hit group
+    job = eng._job
+    assert job is not None
+    assert sorted(l.req.id for l in job.lanes) == [0, 1, 2]
+    assert job.pos >= len(shared)                 # started at the hit depth
+    results = []
+    while eng.busy():
+        results.extend(eng.tick())
+    assert {r.id for r in results} | {r.id for r in eng._drain()} >= \
+        {0, 1, 2}
+
+
+def test_cache_eviction_under_pressure_keeps_outputs_exact():
+    """A tiny byte budget forces constant eviction; hits become rare but
+    outputs must stay bit-identical to the cold engine."""
+    cfg = _full_cfg(((("mamba", "attn"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = dict(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8)
+    reqs = _shared_prefix_requests(cfg, shared_len=16, tails=(3, 5, 4, 6))
+    ref = {r.id: r for r in ServeEngine(cfg, params, **kw).run(list(reqs))}
+    store = StateStore(cfg, 1, 48, jnp.float32)
+    one = state_nbytes(store.snapshot_rows(store.state, [0]))
+    cache = PrefixCache(budget_mb=2.5 * one / (1 << 20))  # ~2 snapshots
+    eng = ServeEngine(cfg, params, prefix_cache=cache,
+                      scheduler=CachedSuffixFirst(cache), **kw)
+    got = {r.id: r for r in eng.run(list(reqs))}
+    for i in ref:
+        assert got[i].tokens == ref[i].tokens, i
+    assert cache.stats["evictions"] > 0
+    assert cache.bytes_used <= cache.budget_bytes
