@@ -59,8 +59,9 @@ from repro import train as tr
 from repro.configs.all_configs import reduce_for_smoke
 from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
+from repro.distributed.plan import ParallelPlan
 from repro.models import lm
-from repro.serve import Request, ServeEngine
+from repro.serve import EngineConfig, Request, ServeEngine
 
 
 def _best_of(fn, iters):
@@ -113,16 +114,19 @@ def parallel_prefill_tps(cfg, params, prompts, max_len, chunk, iters=3):
 #: Version of the benchmark JSON schema (stamped on every scenario via
 #: ``engine_stamp``).  Bump when scenario keys change shape or meaning so
 #: per-PR ``serving-smoke`` artifacts stay comparable across history.
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def engine_stamp(engine):
     """The one engine-config stamp every scenario dict attaches, so each
     serving-smoke artifact records exactly how it was produced.  Scenarios
     must build their stamp here — never inline — so fields (and
-    ``schema_version``) stay consistent across the report."""
+    ``schema_version``) stay consistent across the report.  ``plan``
+    records the ParallelPlan (mesh shape + slot/expert partitions), making
+    every perf artifact attributable to a topology."""
     return {
         "schema_version": SCHEMA_VERSION,
+        "plan": engine.plan.describe(),
         "admission": engine.admission,
         "speculative_k": engine.spec.k if engine.spec else 0,
         "draft_stride": engine.spec.draft_stride if engine.spec else 0,
@@ -130,14 +134,19 @@ def engine_stamp(engine):
         "max_prefill_chunk": engine.max_prefill_chunk,
         "prefix_cache_mb": (round(engine.cache.budget_bytes / (1 << 20), 3)
                             if engine.cache is not None else 0),
+        "cache_grain": (engine.cache.grain
+                        if engine.cache is not None else 0),
         "scheduler": type(engine.scheduler).__name__,
     }
 
 
-def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
+def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
+                   plan=None):
     B = prompts.shape[0]
-    engine = ServeEngine(cfg, params, max_slots=B, max_len=max_len,
-                         seed=seed, max_prefill_chunk=chunk)
+    engine = ServeEngine(cfg, params, plan=plan,
+                         engine=EngineConfig(max_slots=B, max_len=max_len,
+                                             seed=seed,
+                                             max_prefill_chunk=chunk))
     reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
             for i in range(B)]
     results = engine.run(reqs)
@@ -157,7 +166,7 @@ def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0):
 # ---------------------------------------------------------------------------
 
 def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
-                        k=3, stride=2, iters=3):
+                        k=3, stride=2, iters=3, plan=None):
     """Greedy decode of the same requests with speculative decoding on vs
     off: decode tokens/s for both, acceptance rate, tokens per round.
     Greedy outputs are bit-identical by construction (tested in
@@ -167,9 +176,12 @@ def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
     out = {"k": int(k), "draft_stride": int(stride), "gen": int(gen)}
 
     def run_once(spec_k):
-        eng = ServeEngine(cfg, params, max_slots=B, max_len=max_len,
-                          seed=seed, max_prefill_chunk=chunk,
-                          speculative=spec_k, draft_stride=stride)
+        eng = ServeEngine(cfg, params, plan=plan,
+                          engine=EngineConfig(max_slots=B, max_len=max_len,
+                                              seed=seed,
+                                              max_prefill_chunk=chunk,
+                                              speculative=spec_k,
+                                              draft_stride=stride))
         reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
                 for i in range(B)]
         eng.run(reqs)                                # compile + warm
@@ -207,7 +219,7 @@ def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
 
 def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
                          shared_len=48, tail_len=8, max_slots=4, chunk=16,
-                         budget_mb=64.0, iters=3):
+                         budget_mb=64.0, iters=3, plan=None, grain=1):
     """The workload prefix caching unlocks: every request shares a long
     system prompt (multi-turn chat, few-shot headers) and differs only in a
     short tail.  A warm request populates the radix tree, then the same
@@ -217,6 +229,9 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
     tests/test_prefix_cache.py); the benchmark records how much prompt work
     the O(uncached suffix) cost model actually removes."""
     from repro.serve import CachedSuffixFirst, PrefixCache
+    if plan is not None:
+        # slots must shard evenly over the plan's slot partition
+        max_slots = plan.round_slots(max_slots)
     rng = np.random.default_rng(seed)
     shared = rng.integers(2, cfg.vocab_size, size=(shared_len,)).tolist()
 
@@ -228,9 +243,12 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
                 for i in range(n_requests)]
 
     def run(cached):
-        cache = PrefixCache(budget_mb=budget_mb) if cached else None
-        eng = ServeEngine(cfg, params, max_slots=max_slots, max_len=max_len,
-                          seed=seed, max_prefill_chunk=chunk,
+        cache = (PrefixCache(budget_mb=budget_mb, grain=grain)
+                 if cached else None)
+        eng = ServeEngine(cfg, params, plan=plan,
+                          engine=EngineConfig(max_slots=max_slots,
+                                              max_len=max_len, seed=seed,
+                                              max_prefill_chunk=chunk),
                           prefix_cache=cache,
                           scheduler=CachedSuffixFirst(cache) if cached
                           else None)
@@ -329,10 +347,13 @@ def _scenario_requests(prompts, gen, n_initial):
 
 
 def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
-                 max_slots=6, n_initial=4):
+                 max_slots=6, n_initial=4, plan=None):
     """Staggered arrivals during active decode, run under both admission
     modes plus a no-admission baseline (warm-up pass first so jit
     compilation stays out of every timed region)."""
+    if plan is not None:
+        # slots must shard evenly over the plan's slot partition
+        max_slots = plan.round_slots(max_slots)
     # short prompts, two chunks each: enough to interleave admission with
     # decode (stall-freedom needs chunks, not many of them) without paying
     # one dispatch overhead per tiny chunk on the admission critical path
@@ -347,8 +368,11 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
            "n_initial": int(n_initial), "n_arrivals": int(n_burst)}
     iters = 5                       # best-of-N: least load-disturbed run
     for mode in ("interleaved", "sequential"):
-        eng = ServeEngine(cfg, params, max_slots=max_slots, max_len=max_len,
-                          seed=seed, max_prefill_chunk=chunk, admission=mode)
+        eng = ServeEngine(cfg, params, plan=plan,
+                          engine=EngineConfig(max_slots=max_slots,
+                                              max_len=max_len, seed=seed,
+                                              max_prefill_chunk=chunk,
+                                              admission=mode))
         _drive(eng, *_scenario_requests(prompts, gen, n_initial))  # compile
         best = None
         for _ in range(iters):
@@ -410,6 +434,14 @@ def main():
                     help="layer-skip stride of the speculative draft")
     ap.add_argument("--prefix-cache-mb", type=float, default=64.0,
                     help="snapshot byte budget of the prefix-cache scenario")
+    ap.add_argument("--cache-grain", type=int, default=1,
+                    help="prefix-cache snapshot alignment (publish only "
+                         "multiples of G tokens; bounds radix-tree size)")
+    ap.add_argument("--mesh", default="",
+                    help="ParallelPlan topology over this host's devices, "
+                         "e.g. 'data=4' or 'data=2,model=2' (decode slots "
+                         "shard over data, expert weights over model); "
+                         "empty = single device")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--seed", type=int, default=0)
@@ -422,6 +454,10 @@ def main():
         cfg = reduce_for_smoke(cfg)
     if cfg.kind == "encoder":
         raise SystemExit("encoder-only arch has no decode step")
+    plan = ParallelPlan.parse(args.mesh)
+    if args.batch % plan.data_size != 0:
+        raise SystemExit(f"--batch {args.batch} must be a multiple of the "
+                         f"plan's data axis ({plan.data_size})")
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.prompt_len + 2 * args.gen + 1
     n_load = 6                      # 4 initial + one burst of 2 arrivals
@@ -435,20 +471,24 @@ def main():
                                args.prefill_chunk)
     per = pertoken_prefill_tps(cfg, params, prompts, max_len)
     eng = engine_metrics(cfg, params, np.asarray(prompts), args.gen, max_len,
-                         args.prefill_chunk, args.seed)
+                         args.prefill_chunk, args.seed, plan=plan)
     load = load_metrics(cfg, params, np.asarray(all_prompts[:n_load]),
-                        args.gen, max_len, args.prefill_chunk, args.seed)
+                        args.gen, max_len, args.prefill_chunk, args.seed,
+                        plan=plan)
     spec = speculative_metrics(cfg, params, np.asarray(prompts), args.gen,
                                max_len, args.prefill_chunk, args.seed,
-                               k=args.speculative_k, stride=args.draft_stride)
+                               k=args.speculative_k, stride=args.draft_stride,
+                               plan=plan)
     pc_shared = min(48, args.prompt_len)
     pc = prefix_cache_metrics(cfg, params, args.gen,
                               pc_shared + 8 + args.gen + 1, args.seed,
                               shared_len=pc_shared,
-                              budget_mb=args.prefix_cache_mb)
+                              budget_mb=args.prefix_cache_mb,
+                              plan=plan, grain=args.cache_grain)
     report = {
         "arch": args.arch, "smoke": args.smoke,
         "schema_version": SCHEMA_VERSION,
+        "plan": plan.describe(),
         "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
         "prefill_parallel_tps": round(par, 1),
         "prefill_pertoken_tps": round(per, 1),

@@ -16,9 +16,10 @@ import jax
 
 from repro.configs.all_configs import reduce_for_smoke
 from repro.configs.base import get_config
+from repro.distributed.plan import ParallelPlan
 from repro.models import lm
-from repro.serve import (CachedSuffixFirst, PrefixCache, Request,
-                         SamplingParams, ServeEngine)
+from repro.serve import (CachedSuffixFirst, EngineConfig, PrefixCache,
+                         Request, SamplingParams, ServeEngine)
 
 
 def make_requests(cfg):
@@ -75,9 +76,17 @@ def main():
         d_model=128)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
 
+    # Everything device-side goes through one ParallelPlan.  On a 1-CPU
+    # container this is the single-device plan; with more devices, e.g.
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8, try
+    # ParallelPlan.host(data=4) — decode slots then shard over the data
+    # axis and greedy outputs stay bit-identical.
+    plan = ParallelPlan.single_device()
+
     reqs, longest = make_requests(cfg)
-    engine = ServeEngine(cfg, params, max_slots=4, max_len=longest + 16,
-                         seed=0)
+    engine = ServeEngine(cfg, params, plan=plan,
+                         engine=EngineConfig(max_slots=4,
+                                             max_len=longest + 16, seed=0))
     report(engine, engine.run(reqs))
 
     # Same batch, self-speculatively: each decode dispatch drafts 3 tokens
@@ -86,8 +95,10 @@ def main():
     # sampled requests stay unbiased (rejection-sampling acceptance).
     print("\n--- speculative (K=3, draft stride 2) ---")
     reqs, longest = make_requests(cfg)
-    spec = ServeEngine(cfg, params, max_slots=4, max_len=longest + 16,
-                       seed=0, speculative=3, draft_stride=2)
+    spec = ServeEngine(cfg, params, plan=plan,
+                       engine=EngineConfig(max_slots=4,
+                                           max_len=longest + 16, seed=0,
+                                           speculative=3, draft_stride=2))
     report(spec, spec.run(reqs))
 
     # Shared system prompt through a prefix cache: every request carries
@@ -109,7 +120,9 @@ def main():
                 for i, n in enumerate((4, 6, 3, 5))]
 
     cache = PrefixCache(budget_mb=32.0)
-    cached = ServeEngine(cfg, params, max_slots=4, max_len=64, seed=0,
+    cached = ServeEngine(cfg, params, plan=plan,
+                         engine=EngineConfig(max_slots=4, max_len=64,
+                                             seed=0),
                          prefix_cache=cache,
                          scheduler=CachedSuffixFirst(cache))
     print("turn 1 (cold cache):")

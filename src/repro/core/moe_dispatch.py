@@ -38,6 +38,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.router import Routing
 
@@ -162,21 +163,88 @@ def combine_tokens(dsp: Dispatch, y_buf: jnp.ndarray,
 # expert matmuls
 # ---------------------------------------------------------------------------
 
+def expert_partition(shard, num_experts: int):
+    """Mesh axis (name or tuple) the live rules shard the expert dim over,
+    or None when experts are replicated.
+
+    Resolved from the ``experts`` logical axis — the axis the dispatched
+    ``e_w_*`` weights carry — against the shard context's rules: the
+    training default replicates (the paper's no-EP design), while a
+    serving :class:`~repro.distributed.plan.ParallelPlan` points both
+    ``experts`` and ``experts_ep`` at its expert partition.  The usual
+    divisibility check applies (an expert count that doesn't divide the
+    axis replicates).
+    """
+    if shard is None or getattr(shard, "mesh", None) is None:
+        return None
+    spec = shard.spec((num_experts,), ("experts",))
+    return spec[0] if len(spec) else None
+
+
+def _expert_sharded_grouped(buf, w, group_sizes, mesh, axis, group_axis):
+    """Grouped GEMM with the expert dim sharded over ``axis``: shard_map
+    routes each expert's capacity rows to its owning shard and runs the
+    grouped-matmul kernel on the local expert slice — compute and weights
+    both stay shard-local; only the combine gather (outside this function)
+    crosses shards.  ``group_axis`` keeps the dispatch-group (slot/batch)
+    dim on its own partition too, so data shards never recompute each
+    other's slots.  Inside shard_map the kernel runs via ``impl=None``
+    (Pallas on TPU, the jnp oracle elsewhere — Pallas interpret mode is
+    not shard_map-safe)."""
+    from repro.kernels import ops
+    G, E, C, D = buf.shape
+    F = w.shape[-1]
+
+    def local(b, wl, gs):
+        g, e = b.shape[0], b.shape[1]
+        y = ops.grouped_matmul(b.reshape(g * e, C, D), wl,
+                               gs.reshape(g * e))
+        return y.reshape(g, e, C, F)
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:                       # pinned-jax fallback location
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(local, mesh=mesh,
+              in_specs=(P(group_axis, axis, None, None),
+                        P(axis, None, None), P(group_axis, axis)),
+              out_specs=P(group_axis, axis, None, None))(buf, w,
+                                                         group_sizes)
+
+
 def expert_matmul(buf: jnp.ndarray, w: jnp.ndarray, group_sizes=None,
-                  impl: str = "capacity") -> jnp.ndarray:
-    """buf (G, E, C, D) @ w (E, D, F) -> (G, E, C, F)."""
+                  impl: str = "capacity", *, shard=None) -> jnp.ndarray:
+    """buf (G, E, C, D) @ w (E, D, F) -> (G, E, C, F).
+
+    ``shard`` (a :class:`~repro.distributed.sharding.ShardCtx`, e.g. from
+    ``plan.shard_ctx()``) enables the expert partition: when its rules map
+    the ``experts`` logical axis onto a live mesh axis (see
+    :func:`expert_partition`), the grouped impl shard_maps the kernel over
+    the expert shards and the einsum impls constrain the buffers so GSPMD
+    keeps expert compute shard-local.
+    """
     if impl == "grouped":
         from repro.kernels import ops
         G, E, C, D = buf.shape
+        ax = expert_partition(shard, E)
+        if ax is not None:
+            # keep the group (slot/batch) dim on its own partition, too:
+            # resolve act_batch for G with the usual divisibility check
+            gspec = shard.spec((G, 1, 1, 1), ("act_batch",) + (None,) * 3)
+            gax = gspec[0] if len(gspec) else None
+            return _expert_sharded_grouped(buf, w, group_sizes,
+                                           shard.mesh, ax, gax)
+        # w rides unexpanded: the kernel maps token tiles to expert weight
+        # blocks modulo E, so no G-fold weight broadcast is materialized
         y = ops.grouped_matmul(
-            buf.reshape(G * E, C, D),
-            jnp.broadcast_to(w, (G, *w.shape)).reshape(G * E, *w.shape[1:]),
-            group_sizes.reshape(G * E),
+            buf.reshape(G * E, C, D), w, group_sizes.reshape(G * E),
             impl="interpret" if jax.default_backend() != "tpu" else None)
         return y.reshape(G, E, C, -1)
     cd = buf.dtype
-    return jnp.einsum("gecd,edf->gecf", buf, w.astype(cd),
-                      preferred_element_type=jnp.float32).astype(cd)
+    y = jnp.einsum("gecd,edf->gecf", buf, w.astype(cd),
+                   preferred_element_type=jnp.float32).astype(cd)
+    if shard is not None:
+        y = shard.cons(y, "act_batch", "act_experts", None, None)
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -190,22 +258,33 @@ class SharedMoELinear:
     dispatched (``reuse=True`` path) the cached capacity buffer is reused —
     Conv Proj and Gate Proj both project the layer input X, so RoM pays for a
     single dispatch gather serving both (see DESIGN.md §Perf).
+
+    ``shard`` (a ShardCtx, e.g. ``plan.shard_ctx()``) routes tokens to
+    expert shards: the capacity buffer is constrained over the plan's
+    expert partition (``act_experts``) so the expert matmul computes on
+    the shard owning each expert's weights.
     """
 
-    def __init__(self, dsp: Dispatch, impl: str = "capacity"):
+    def __init__(self, dsp: Dispatch, impl: str = "capacity", shard=None):
         self.dsp = dsp
         self.impl = impl
+        self.shard = shard
         self._cache = {}
 
     def dispatch(self, x: jnp.ndarray, tag: str = "x") -> jnp.ndarray:
         if tag not in self._cache:
-            self._cache[tag] = dispatch_tokens(self.dsp, x)
+            buf = dispatch_tokens(self.dsp, x)
+            if self.shard is not None:
+                buf = self.shard.cons(buf, "act_batch", "act_experts",
+                                      None, None)
+            self._cache[tag] = buf
         return self._cache[tag]
 
     def __call__(self, x: jnp.ndarray, w: jnp.ndarray, *, weighted: bool,
                  tag: str = "x") -> jnp.ndarray:
         buf = self.dispatch(x, tag)
-        y = expert_matmul(buf, w, self.dsp.group_sizes, self.impl)
+        y = expert_matmul(buf, w, self.dsp.group_sizes, self.impl,
+                          shard=self.shard)
         return combine_tokens(self.dsp, y, weighted)
 
 

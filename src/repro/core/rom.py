@@ -76,7 +76,13 @@ class SharedRouting:
             self.lin = None
         else:
             dsp = md.make_dispatch(self.routing, rom.capacity_factor)
-            self.lin = md.SharedMoELinear(dsp, impl=self.impl)
+            # the shard context carries the live plan's expert partition:
+            # dispatch buffers are constrained (and the grouped kernel
+            # shard_mapped) so tokens route to the shards owning their
+            # experts' weights — a no-op under the replicated training
+            # default and off-mesh
+            self.lin = md.SharedMoELinear(dsp, impl=self.impl,
+                                          shard=rt.shard)
 
     def proj(self, t, w, *, weighted: bool, tag: str):
         """t (B,S,Din) -> (B,S,Dout) through the routed experts w (E,Din,Dout)."""

@@ -57,10 +57,11 @@ def moe_ffn_init(key, cfg):
 def _swiglu_buffers(lin: md.SharedMoELinear, xt, wu, wg, wd):
     """Expert SwiGLU on dispatched buffers; up/gate reuse the same buffer."""
     buf = lin.dispatch(xt, "x")
-    up = md.expert_matmul(buf, wu, lin.dsp.group_sizes, lin.impl)
-    gate = md.expert_matmul(buf, wg, lin.dsp.group_sizes, lin.impl)
+    sh = lin.shard
+    up = md.expert_matmul(buf, wu, lin.dsp.group_sizes, lin.impl, shard=sh)
+    gate = md.expert_matmul(buf, wg, lin.dsp.group_sizes, lin.impl, shard=sh)
     hidden = up * silu(gate)
-    y = md.expert_matmul(hidden, wd, lin.dsp.group_sizes, lin.impl)
+    y = md.expert_matmul(hidden, wd, lin.dsp.group_sizes, lin.impl, shard=sh)
     return md.combine_tokens(lin.dsp, y, weighted=True)
 
 
@@ -104,7 +105,7 @@ def moe_ffn_apply(params, x, cfg, rt: Runtime, ctx=None):
                        mix).astype(x.dtype)
     else:
         dsp = md.make_dispatch(routing, moe.capacity_factor)
-        lin = md.SharedMoELinear(dsp, impl=moe.impl)
+        lin = md.SharedMoELinear(dsp, impl=moe.impl, shard=rt.shard)
         y = _swiglu_buffers(lin, xt, wu, wg, wd)
         metrics["drop_frac"] = dsp.drop_frac
     out = y.reshape(B, S, D)

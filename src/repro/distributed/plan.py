@@ -1,0 +1,225 @@
+"""ParallelPlan: the one mesh-aware execution plan for serving.
+
+Before this module, every serving entry point decided device placement ad
+hoc: the engine took raw ``mesh=``/``rules=`` kwargs it mostly ignored,
+``StateStore`` allocated wherever jax defaulted, and expert placement for
+RoM/MoE weights was a per-callsite accident.  A :class:`ParallelPlan`
+resolves the whole topology **once** — mesh, sharding rules, the *slot
+partition* (which mesh axis decode slots shard over) and the *expert
+partition* (which mesh axis RoM/MoE expert weights shard over) — and is
+threaded everywhere a device array is created:
+
+  * ``StateStore`` allocates ``NamedSharding``-typed decode state
+    (:meth:`slot_shardings` / :meth:`place_state`) and its slot primitives
+    stay on-plan via jit ``out_shardings``;
+  * ``ServeEngine``'s jitted mixed/speculative steps carry
+    ``in_shardings``/``out_shardings`` built here, and prefill lane batches
+    pad to a multiple of the slot partition (:meth:`lane_width`);
+  * RoM decode dispatch routes tokens to expert shards through the grouped
+    matmul under the plan's expert partition (``core/moe_dispatch``
+    resolves the ``experts_ep`` logical axis against :attr:`rules`);
+  * params are placed by :meth:`place_params`: **replicated except expert
+    leaves** — replication keeps per-slot float math identical to
+    single-device execution, so greedy decode under any plan is
+    bit-identical to :meth:`single_device` (a tested invariant), while the
+    expert dim is never a contraction dim and can shard freely.
+
+Construct plans through the factories — they install the serving
+resolution of the logical-axis tables (:func:`serving_rules`):
+
+    plan = ParallelPlan.single_device()          # the compatibility default
+    plan = ParallelPlan.host(data=4, model=2)    # this host's devices
+    plan = ParallelPlan.parse("data=4,model=2")  # CLI --mesh spec
+    plan = ParallelPlan.from_mesh(mesh)          # a mesh you already built
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def serving_rules(base: Optional[shd.ShardingRules],
+                  slot_axis: Optional[str],
+                  expert_axis: Optional[str]) -> shd.ShardingRules:
+    """Serving resolution of the logical-axis table.
+
+    Parameters replicate (no ZeRO/TP resharding on the decode path, and
+    replicated weights keep per-slot float math bit-identical across
+    topologies); batch/slot axes shard over the slot partition; the expert
+    dim of RoM/MoE weights and dispatch buffers shards over the expert
+    partition.  Everything else in ``base`` (default
+    :class:`~repro.distributed.sharding.ShardingRules`) is untouched.
+    """
+    repl = (None,)
+    slot = (slot_axis, None) if slot_axis else repl
+    exp = (expert_axis, None) if expert_axis else repl
+    over = dict(
+        batch=slot, vocab=repl, embed=repl, mlp=repl, qkv=repl,
+        heads=repl, head_dim=repl, inner=repl, heads_inner=repl, qk=repl,
+        experts=exp, experts_ep=exp,
+        act_batch=slot, act_seq_shard=repl, act_inner=repl, act_mlp=repl,
+        act_qkv=repl, act_vocab=repl, act_kv_seq=repl, act_experts=exp,
+    )
+    return (base or shd.ShardingRules()).override(**over)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Mesh + rules + slot/expert partitions, resolved once.
+
+    mesh: the device mesh (None = single device, every helper is a no-op).
+    rules: logical-axis -> mesh-axis resolution used for every sharding
+        decision under this plan (activations, params, dispatch buffers).
+    slot_axis: mesh axis the decode-slot dimension shards over (the
+        engine's ``max_slots`` and prefill lane batches), or None.
+    expert_axis: mesh axis the expert dim of RoM/MoE weights (and their
+        dispatch/capacity buffers) shards over, or None.
+
+    Use the factory classmethods — they install :func:`serving_rules`.
+    """
+    mesh: Optional[Mesh] = None
+    rules: shd.ShardingRules = dataclasses.field(
+        default_factory=shd.ShardingRules)
+    slot_axis: Optional[str] = None
+    expert_axis: Optional[str] = None
+
+    # ------------------------------------------------------------ factories
+
+    @classmethod
+    def single_device(cls) -> "ParallelPlan":
+        """The no-mesh plan: every placement helper is an identity.  The
+        one-release compatibility default of every serving entry point."""
+        return cls(mesh=None, rules=shd.ShardingRules())
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, *, rules: Optional[shd.ShardingRules] = None,
+                  slot_axis: Optional[str] = "data",
+                  expert_axis: Optional[str] = "model") -> "ParallelPlan":
+        """Plan over an existing mesh; partition axes missing from the mesh
+        (or of size 1) are dropped to None."""
+        def live(ax):
+            return ax if (ax is not None and mesh.shape.get(ax, 1) > 1) \
+                else None
+        slot_axis, expert_axis = live(slot_axis), live(expert_axis)
+        return cls(mesh=mesh,
+                   rules=serving_rules(rules, slot_axis, expert_axis),
+                   slot_axis=slot_axis, expert_axis=expert_axis)
+
+    @classmethod
+    def host(cls, data: int = 1, model: int = 1, *,
+             rules: Optional[shd.ShardingRules] = None) -> "ParallelPlan":
+        """Plan over this host's devices as a ``(data, model)`` mesh
+        (divisibility-checked by ``make_host_mesh``)."""
+        from repro.launch.mesh import make_host_mesh
+        return cls.from_mesh(make_host_mesh((data, model)), rules=rules)
+
+    @classmethod
+    def parse(cls, spec: Optional[str], *,
+              rules: Optional[shd.ShardingRules] = None) -> "ParallelPlan":
+        """CLI ``--mesh`` spec -> plan: ``"data=4,model=2"`` (either key
+        optional); empty/None/"single" -> :meth:`single_device`."""
+        if not spec or spec in ("1", "single", "single_device"):
+            return cls.single_device()
+        kw = {}
+        for part in spec.split(","):
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k not in ("data", "model") or not v.strip().isdigit():
+                raise ValueError(
+                    f"bad mesh spec {spec!r}: expected 'data=N[,model=M]'")
+            kw[k] = int(v.strip())
+        return cls.host(**kw, rules=rules)
+
+    # ------------------------------------------------------------ topology
+
+    def _axis_size(self, ax: Optional[str]) -> int:
+        if self.mesh is None or ax is None:
+            return 1
+        return int(self.mesh.shape.get(ax, 1))
+
+    @property
+    def data_size(self) -> int:
+        """Size of the slot partition (1 when unpartitioned)."""
+        return self._axis_size(self.slot_axis)
+
+    @property
+    def expert_size(self) -> int:
+        """Size of the expert partition (1 when unpartitioned)."""
+        return self._axis_size(self.expert_axis)
+
+    def shard_ctx(self) -> shd.ShardCtx:
+        """The (mesh, rules) context model code consumes (inert off-mesh)."""
+        return shd.ShardCtx(self.mesh, self.rules)
+
+    def describe(self) -> dict:
+        """JSON-friendly stamp: mesh shape + both partitions.  Benchmarks
+        attach this to every scenario so perf artifacts are attributable
+        to a topology."""
+        return {
+            "mesh": (None if self.mesh is None else
+                     {ax: int(n) for ax, n in self.mesh.shape.items()}),
+            "slot_partition": self.slot_axis,
+            "expert_partition": self.expert_axis,
+        }
+
+    def round_slots(self, n: int) -> int:
+        """Smallest multiple of the slot partition >= ``n``.  The engine
+        requires ``max_slots`` to divide over the partition; benchmark
+        scenarios round their slot counts up through this."""
+        d = self.data_size
+        return -(-n // d) * d
+
+    def lane_width(self, n: int) -> int:
+        """Prefill lane-batch width for ``n`` admitted requests: next power
+        of two (bounded jit specializations), padded up to a multiple of
+        the slot partition so lane batches divide over the data axis."""
+        return self.round_slots(1 << (max(n, 1) - 1).bit_length())
+
+    # ------------------------------------------------------------ placement
+
+    def replicated(self) -> Optional[NamedSharding]:
+        """Fully-replicated sharding on this plan's mesh (None off-mesh)."""
+        return None if self.mesh is None else NamedSharding(self.mesh, P())
+
+    def slot_shardings(self, state, axes):
+        """Per-leaf ``NamedSharding`` pytree for a decode-state pytree:
+        each leaf's slot axis (``axes`` — ``StateStore.axes``) shards over
+        the slot partition; leaves whose slot count doesn't divide the
+        partition replicate (e.g. 1-slot side states).  None off-mesh."""
+        if self.mesh is None:
+            return None
+        d = self.data_size
+
+        def one(leaf, ax):
+            if self.slot_axis is not None and d > 1 \
+                    and leaf.shape[ax] % d == 0:
+                spec = [None] * leaf.ndim
+                spec[ax] = self.slot_axis
+                return NamedSharding(self.mesh, P(*spec))
+            return NamedSharding(self.mesh, P())
+
+        return jax.tree_util.tree_map(one, state, axes)
+
+    def place_state(self, state, axes):
+        """Commit a decode-state pytree to :meth:`slot_shardings`."""
+        sh = self.slot_shardings(state, axes)
+        return state if sh is None else jax.device_put(state, sh)
+
+    def param_shardings(self, params):
+        """Per-leaf ``NamedSharding`` for a param pytree under this plan's
+        rules: expert leaves shard their expert dim over the expert
+        partition, everything else replicates (see module docstring)."""
+        if self.mesh is None:
+            return None
+        return shd.param_shardings(params, self.mesh, self.rules)
+
+    def place_params(self, params):
+        """Commit params to :meth:`param_shardings` (identity off-mesh)."""
+        if self.mesh is None:
+            return params
+        return jax.device_put(params, self.param_shardings(params))

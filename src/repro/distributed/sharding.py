@@ -145,6 +145,8 @@ DEFAULT_RULES: Dict[str, Tuple[Optional[object], ...]] = {
     "act_qkv": ("model", None),
     "act_vocab": ("model", None),
     "act_kv_seq": ("model", None),      # decode KV-cache sequence sharding
+    "act_experts": (None,),             # MoE capacity buffers; serving plans
+                                        # override to their expert partition
 }
 
 

@@ -49,9 +49,19 @@ def _kernel(gs_ref, x_ref, w_ref, o_ref, acc_ref, *, tc, cap, nk):
                    static_argnames=("tile_c", "tile_f", "tile_k", "interpret"))
 def grouped_matmul_pallas(x, w, group_sizes, *, tile_c=128, tile_f=128,
                           tile_k=128, interpret=False):
-    """x (E,C,D) @ w (E,D,F) ragged by group_sizes -> (E,C,F)."""
+    """x (E,C,D) @ w (E,D,F) ragged by group_sizes -> (E,C,F).
+
+    ``x`` may also carry ``G*E`` groups (``group_sizes (G*E,)``) against
+    ``E`` weights: token tiles map to their expert's weight block modulo
+    ``E``, so callers with multiple dispatch groups per expert (MoE
+    capacity buffers grouped over the data mesh) never materialize a
+    G-fold broadcast of the weights.
+    """
     E, C, D = x.shape
-    _, _, F = w.shape
+    Ew, _, F = w.shape
+    if E % Ew != 0:
+        raise ValueError(f"x carries {E} groups, not a multiple of the "
+                         f"{Ew} experts in w")
     tile_c = min(tile_c, C)
     tile_f = min(tile_f, F)
     tile_k = min(tile_k, D)
@@ -81,7 +91,8 @@ def grouped_matmul_pallas(x, w, group_sizes, *, tile_c=128, tile_f=128,
             in_specs=[
                 pl.BlockSpec((tile_c, tile_k), lambda i, j, k, gs: (i, k)),
                 pl.BlockSpec((1, tile_k, tile_f),
-                             lambda i, j, k, gs: ((i * tile_c) // Cp, k, j)),
+                             lambda i, j, k, gs:
+                             (((i * tile_c) // Cp) % Ew, k, j)),
             ],
             out_specs=pl.BlockSpec((tile_c, tile_f),
                                    lambda i, j, k, gs: (i, j)),

@@ -149,9 +149,14 @@ def diag_recurrence(log_a, b, *, chunk=256, h0=None, return_state=False):
 # ---------------------------------------------------------------------------
 
 def grouped_matmul_ref(x, w, group_sizes):
-    E, C, D = x.shape
-    mask = (jnp.arange(C)[None, :] < group_sizes[:, None])  # (E,C)
-    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
+    """x may carry G*E groups against E weights (expert = group % E),
+    mirroring the Pallas kernel's modulo weight-block mapping."""
+    GE, C, D = x.shape
+    E = w.shape[0]
+    mask = (jnp.arange(C)[None, :] < group_sizes[:, None])  # (GE,C)
+    xg = x.reshape(GE // E, E, C, D)
+    y = jnp.einsum("gecd,edf->gecf", xg.astype(jnp.float32),
+                   w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).reshape(GE, C, -1)
     y = jnp.where(mask[..., None], y, 0.0)
     return y.astype(x.dtype)

@@ -20,8 +20,30 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
-def make_host_mesh():
-    """Whatever this host has (1 CPU device in the container): (1, 1) mesh
-    so the same sharded code paths run end-to-end in examples/tests."""
+def make_host_mesh(shape=None):
+    """A ``("data", "model")`` mesh over this host's devices.
+
+    ``shape=None`` keeps the historical default — all devices on the data
+    axis (``(n, 1)``), so the same sharded code paths run end-to-end in
+    examples/tests on a 1-CPU container.  A requested ``(data, model)``
+    shape is validated: the host's device count must be divisible by the
+    requested total (the mesh takes the first ``data*model`` devices), and
+    an impossible request fails loudly instead of silently building
+    ``(n, 1)``.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), **_axis_types_kw(2))
+    if shape is None:
+        shape = (n, 1)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != 2 or any(s < 1 for s in shape):
+        raise ValueError(f"host mesh shape must be (data, model) with "
+                         f"positive sizes, got {shape}")
+    total = shape[0] * shape[1]
+    if total > n or n % total != 0:
+        raise ValueError(
+            f"requested host mesh {{'data': {shape[0]}, 'model': "
+            f"{shape[1]}}} needs {total} devices, but this host platform "
+            f"has {n} (device count must be a multiple; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N to fake "
+            f"more CPU devices)")
+    return jax.make_mesh(shape, ("data", "model"), **_axis_types_kw(2))

@@ -9,10 +9,17 @@ prefixes (radix tree of chunk-boundary state snapshots) and
 ``--cache-policy cached-suffix`` admits cache hits first (see
 docs/serving.md).  CPU-runnable with --smoke (reduced same-family config).
 
+Device topology is resolved once into a
+:class:`~repro.distributed.plan.ParallelPlan` (``--mesh data=N,model=M``:
+decode slots shard over the data axis, RoM/MoE expert weights over the
+model axis) and threaded through the engine, state store and cache — the
+default is single-device.
+
     PYTHONPATH=src python -m repro.launch.serve --arch rom-mamba-115m \
         --smoke --batch 4 --prompt-len 32 --gen 32 \
         --speculative 4 --draft-stride 2 \
-        --prefix-cache-mb 64 --cache-policy cached-suffix
+        --prefix-cache-mb 64 --cache-policy cached-suffix \
+        --mesh data=1
 """
 from __future__ import annotations
 
@@ -25,10 +32,11 @@ import numpy as np
 from repro.configs.all_configs import reduce_for_smoke
 from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
-from repro.launch.mesh import make_host_mesh
+from repro.distributed.plan import ParallelPlan
 from repro.models import lm
-from repro.serve import (CachedSuffixFirst, PrefixCache, Request,
-                         SamplingParams, ServeEngine, ShortestPromptFirst)
+from repro.serve import (CachedSuffixFirst, EngineConfig, PrefixCache,
+                         Request, SamplingParams, ServeEngine,
+                         ShortestPromptFirst)
 
 
 def main():
@@ -67,6 +75,15 @@ def main():
                     help="scheduler: fifo, shortest-prompt-first, or "
                          "cached-suffix-first (ranks by *uncached* suffix "
                          "length; requires --prefix-cache-mb > 0)")
+    ap.add_argument("--cache-grain", type=int, default=1, metavar="G",
+                    help="prefix-cache snapshot alignment: only publish "
+                         "boundaries at multiples of G tokens (bounds the "
+                         "radix tree; 1 = every chunk boundary)")
+    ap.add_argument("--mesh", default="", metavar="SPEC",
+                    help="ParallelPlan topology, e.g. 'data=4' or "
+                         "'data=2,model=2' over this host's devices "
+                         "(decode slots shard over data, expert weights "
+                         "over model); empty = single device")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -74,11 +91,12 @@ def main():
         cfg = reduce_for_smoke(cfg)
     if cfg.kind == "encoder":
         raise SystemExit("encoder-only arch has no decode step")
-    mesh = make_host_mesh()
+    plan = ParallelPlan.parse(args.mesh)
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.prompt_len + args.gen
-    cache = (PrefixCache(budget_mb=args.prefix_cache_mb)
+    cache = (PrefixCache(budget_mb=args.prefix_cache_mb,
+                         grain=args.cache_grain)
              if args.prefix_cache_mb > 0 else None)
     if args.cache_policy == "cached-suffix":
         if cache is None:
@@ -89,13 +107,15 @@ def main():
         scheduler = ShortestPromptFirst()
     else:
         scheduler = None                          # engine default: FIFO
-    engine = ServeEngine(cfg, params, max_slots=args.batch, max_len=max_len,
-                         mesh=mesh, seed=args.seed,
-                         admission=args.admission,
-                         speculative=args.speculative,
-                         draft_stride=args.draft_stride,
-                         prefix_cache=cache, scheduler=scheduler)
+    engine = ServeEngine(
+        cfg, params, plan=plan,
+        engine=EngineConfig(max_slots=args.batch, max_len=max_len,
+                            seed=args.seed, admission=args.admission,
+                            speculative=args.speculative,
+                            draft_stride=args.draft_stride),
+        prefix_cache=cache, scheduler=scheduler)
 
+    print(f"plan: {plan.describe()}")
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
     prompts = np.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]

@@ -16,6 +16,14 @@ prefill for shared prompt prefixes: a radix tree of chunk-boundary state
 snapshots (``repro.serve.cache``) turns prefill cost from O(prompt) into
 O(uncached suffix), with byte-budgeted LRU eviction.
 
+Device placement is resolved **once** by a
+:class:`~repro.distributed.plan.ParallelPlan` passed as
+``ServeEngine(cfg, params, plan=...)`` (default: single device): it shards
+decode slots over the plan's data axis, expert weights over its expert
+partition, and is threaded through the StateStore, every jitted step and
+the prefix cache — no serving module takes a raw mesh.  Scalar knobs are
+grouped on :class:`~repro.serve.engine.EngineConfig`.
+
 ``engine`` and ``speculative`` are imported lazily: mixer modules declare
 their ``StateSpec`` via ``repro.serve.state``, so an eager import here would
 cycle through ``models/lm`` back into the partially-initialized mixer
@@ -31,10 +39,11 @@ from repro.serve.state import (StateSpec, StateStore, adopt_slots,
                                insert_slots, restore_slots, select_window,
                                slot_axes, snapshot_slots, state_nbytes)
 
-_ENGINE_NAMES = ("Request", "RequestResult", "ServeEngine")
+_ENGINE_NAMES = ("EngineConfig", "Request", "RequestResult", "ServeEngine")
 _SPEC_NAMES = ("SpecConfig", "make_spec_fn")
 
-__all__ = ["Request", "RequestResult", "ServeEngine", "SamplingParams",
+__all__ = ["EngineConfig", "Request", "RequestResult", "ServeEngine",
+           "SamplingParams",
            "sample", "spec_accept", "filtered_logits", "FIFOScheduler",
            "ShortestPromptFirst", "CachedSuffixFirst", "PrefixCache",
            "SpecConfig", "make_spec_fn", "StateSpec",

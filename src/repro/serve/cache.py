@@ -79,15 +79,32 @@ class PrefixCache:
         not captured — they save too little prefill to pay the transfer).
     capture: master switch for publishing new snapshots; lookups still
         serve hits when False (a frozen, pre-warmed cache).
+    grain: snapshot alignment — only prefix lengths that are multiples of
+        ``grain`` are published (refusals counted in
+        ``stats['grain_skips']``), bounding the radix tree to
+        O(prompt/grain) nodes per distinct prompt instead of one per
+        chunk boundary.  ``grain=1`` (default) keeps every boundary.
+        Restores are unaffected: admission still resumes prefill from the
+        deepest published multiple.
+
+    Snapshots are host-side numpy and therefore **topology-portable**: a
+    store under any :class:`~repro.distributed.plan.ParallelPlan` gathers
+    the per-shard device slices on capture (``StateStore.snapshot_rows``)
+    and re-places restored rows onto the plan's shards
+    (``StateStore.restore_rows``), so one warm cache serves engines on
+    different meshes of the same (cfg, max_len, dtype).
     """
 
     def __init__(self, budget_mb: float = 64.0, min_tokens: int = 1,
-                 capture: bool = True):
+                 capture: bool = True, grain: int = 1):
         if budget_mb <= 0:
             raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
+        if grain < 1:
+            raise ValueError(f"grain must be >= 1, got {grain}")
         self.budget_bytes = int(budget_mb * (1 << 20))
         self.min_tokens = min_tokens
         self.capture = capture
+        self.grain = grain
         self._root = _Node(edge=(), depth=0, parent=None)
         self._snaps: set = set()        # nodes currently holding a snapshot
         self._bytes = 0
@@ -98,6 +115,7 @@ class PrefixCache:
         self.stats: Dict[str, int] = {
             "hits": 0, "misses": 0, "hit_tokens": 0, "lookup_tokens": 0,
             "inserts": 0, "dedup_skips": 0, "evictions": 0, "oversize": 0,
+            "grain_skips": 0,
         }
 
     # ------------------------------------------------------------- queries
@@ -156,6 +174,20 @@ class PrefixCache:
 
     # ------------------------------------------------------------- updates
 
+    def wants(self, tokens: Sequence[int]) -> bool:
+        """Would :meth:`insert` publish this prefix (capture / min_tokens
+        / grain gates; dedup aside)?  Grain refusals are counted here
+        (``stats['grain_skips']``), so engines that pre-filter boundaries
+        with ``wants`` — to keep refused boundaries off the batched
+        device->host transfer — keep the counter consistent with calling
+        ``insert`` directly."""
+        if not self.capture or len(tokens) < self.min_tokens:
+            return False
+        if len(tokens) % self.grain != 0:
+            self.stats["grain_skips"] += 1
+            return False
+        return True
+
     def insert(self, tokens: Sequence[int],
                snap_fn: Callable[[], Any]) -> bool:
         """Publish a boundary snapshot for ``tokens``.
@@ -165,7 +197,7 @@ class PrefixCache:
         path for already-cached prefixes, which are LRU-touched instead).
         Returns True iff a new snapshot was stored.
         """
-        if not self.capture or len(tokens) < self.min_tokens:
+        if not self.wants(tokens):
             return False
         node = self._ensure_node(tuple(tokens))
         self._clock += 1
@@ -252,6 +284,7 @@ class PrefixCache:
             "snapshots": len(self),
             "bytes_used": self._bytes,
             "budget_bytes": self.budget_bytes,
+            "grain": self.grain,
             "hit_rate": s["hits"] / max(lookups, 1),
             "token_hit_rate": s["hit_tokens"] / max(s["lookup_tokens"], 1),
             **s,

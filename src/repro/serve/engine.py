@@ -37,6 +37,7 @@ bookkeeping is plain numpy.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -44,12 +45,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed import sharding as shd
+from repro.distributed.plan import ParallelPlan
 from repro.models import lm
 from repro.serve.sampling import SamplingParams, sample
 from repro.serve.scheduler import FIFOScheduler
 from repro.serve.speculative import SpecConfig, make_spec_fn
 from repro.serve.state import StateStore
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The engine's scalar knobs, grouped (formerly a growing kwarg pile).
+
+    max_slots: decode lanes (with a plan, a multiple of its slot partition).
+    max_len: per-slot position capacity (prompt + generation).
+    seed: sampling PRNG seed.
+    max_prefill_chunk: largest power-of-two prefill chunk per dispatch.
+    admission: "interleaved" (stall-free mixed steps, default) or
+        "sequential" (full prefill per request, the PR-1 A/B baseline).
+    prefill_lanes: max requests sharing one batched prefill job
+        (default: max_slots).
+    speculative: draft window K for self-speculative decoding (0 = off).
+    draft_stride: layer-skip stride of the speculative draft model.
+    """
+    max_slots: int = 4
+    max_len: int = 128
+    seed: int = 0
+    max_prefill_chunk: int = 128
+    admission: str = "interleaved"
+    prefill_lanes: Optional[int] = None
+    speculative: int = 0
+    draft_stride: int = 2
 
 
 @dataclasses.dataclass
@@ -180,41 +206,73 @@ class ServeEngine:
     :class:`~repro.serve.scheduler.CachedSuffixFirst` to admit hits first.
     A cache's snapshots are only shape-valid for one (cfg, max_len, dtype)
     combination — share it across engines of the same configuration only.
+
+    Device placement is decided by the ``plan`` — a
+    :class:`~repro.distributed.plan.ParallelPlan` resolved once and
+    threaded through the store, every jitted step
+    (``in_shardings``/``out_shardings``), prefill lane widths (padded to a
+    multiple of the slot partition) and RoM expert dispatch.  The default
+    :meth:`~repro.distributed.plan.ParallelPlan.single_device` keeps
+    existing scripts working unchanged.  Scalar knobs live on
+    :class:`EngineConfig` (``engine=``); passing them as keywords
+    (``max_slots=8``) overrides the matching ``EngineConfig`` field.
     """
 
-    def __init__(self, cfg, params, *, max_slots: int = 4,
-                 max_len: int = 128, mesh=None, rules=None, seed: int = 0,
-                 max_prefill_chunk: int = 128, scheduler=None,
-                 admission: str = "interleaved",
-                 prefill_lanes: Optional[int] = None,
-                 speculative: int = 0, draft_stride: int = 2,
-                 prefix_cache=None):
+    def __init__(self, cfg, params, *, plan: Optional[ParallelPlan] = None,
+                 engine: Optional[EngineConfig] = None, scheduler=None,
+                 prefix_cache=None, **knobs):
+        if "mesh" in knobs or "rules" in knobs:
+            raise TypeError(
+                "ServeEngine no longer takes mesh=/rules= — resolve the "
+                "topology once with repro.distributed.plan.ParallelPlan "
+                "and pass plan=...")
+        ec = engine if engine is not None else EngineConfig()
+        if knobs:
+            valid = {f.name for f in dataclasses.fields(EngineConfig)}
+            unknown = sorted(set(knobs) - valid)
+            if unknown:
+                raise TypeError(f"unknown engine option(s) {unknown}; "
+                                f"valid EngineConfig fields: {sorted(valid)}")
+            ec = dataclasses.replace(ec, **knobs)
         if cfg.kind == "encoder":
             raise ValueError("encoder-only configs have no decode path")
-        if admission not in ("interleaved", "sequential"):
-            raise ValueError(f"unknown admission mode {admission!r}")
-        if speculative < 0:
-            raise ValueError(f"speculative K must be >= 0, got {speculative}")
+        if ec.admission not in ("interleaved", "sequential"):
+            raise ValueError(f"unknown admission mode {ec.admission!r}")
+        if ec.speculative < 0:
+            raise ValueError(
+                f"speculative K must be >= 0, got {ec.speculative}")
+        self.plan = plan if plan is not None else ParallelPlan.single_device()
+        if ec.max_slots % self.plan.data_size != 0:
+            raise ValueError(
+                f"max_slots={ec.max_slots} must be a multiple of the "
+                f"plan's slot partition (data axis size "
+                f"{self.plan.data_size}) so decode slots shard evenly")
+        self.engine_config = ec
         self.cfg = cfg
-        self.params = params
-        self.max_slots = max_slots
-        self.max_len = max_len
+        self.max_slots = max_slots = ec.max_slots
+        self.max_len = max_len = ec.max_len
         self.dtype = jnp.dtype(cfg.dtype)
-        self.max_prefill_chunk = max_prefill_chunk
-        self.admission = admission
-        self.prefill_lanes = min(prefill_lanes or max_slots, max_slots)
-        self.spec = (SpecConfig(k=speculative, draft_stride=draft_stride)
-                     if speculative else None)
+        self.max_prefill_chunk = ec.max_prefill_chunk
+        self.admission = ec.admission
+        self.prefill_lanes = min(ec.prefill_lanes or max_slots, max_slots)
+        self.spec = (SpecConfig(k=ec.speculative,
+                                draft_stride=ec.draft_stride)
+                     if ec.speculative else None)
         self.cache = prefix_cache
-        rules = rules or shd.ShardingRules()
-        self.store = StateStore(cfg, max_slots, max_len, self.dtype)
+        # everything device-side goes through the plan: params placement,
+        # state allocation, jit shardings, the model code's shard context
+        self.params = self.plan.place_params(params)
+        self.store = StateStore(cfg, max_slots, max_len, self.dtype,
+                                plan=self.plan)
+        st_sh = self.store.shardings            # None on single_device()
+        shard_ctx = self.plan.shard_ctx()
 
         from repro import train as tr
-        prefill_fn = tr.make_prefill_step_fn(cfg, mesh, rules)
+        prefill_fn = tr.make_prefill_step_fn(cfg, self.plan.mesh,
+                                             self.plan.rules)
 
         def decode_core(params, state, toks, pos, rng, temp, topk, topp):
-            rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
-                            train=False)
+            rt = lm.Runtime(shard=shard_ctx, rng=None, train=False)
             logits, new_state = lm.decode_step(params, state, toks, pos,
                                                cfg, rt)
             nxt = sample(logits, rng, temp, topk, topp)
@@ -236,13 +294,29 @@ class ServeEngine:
                                     rng_p, pf_temp, pf_topk, pf_topp)
             return nxt, new_state, first, new_pf
 
+        def sharded_jit(fn, state_arg=None, state_outs=(), n_outs=1):
+            """jit with the canonical state arg/outputs pinned to the
+            plan's slot shardings (plain jit off-mesh; prefill lane states
+            keep their committed shardings from ``store.fresh``)."""
+            if st_sh is None or state_arg is None:
+                return jax.jit(fn)
+            ins = [None] * len(inspect.signature(fn).parameters)
+            ins[state_arg] = st_sh
+            outs = [st_sh if i in state_outs else None
+                    for i in range(n_outs)]
+            return jax.jit(fn, in_shardings=tuple(ins),
+                           out_shardings=(tuple(outs) if n_outs > 1
+                                          else outs[0]))
+
         self._prefill = jax.jit(prefill_fn)          # sequential admission
-        self._decode = jax.jit(decode_core)
+        self._decode = sharded_jit(decode_core, state_arg=1,
+                                   state_outs=(1,), n_outs=2)
         self._pf = jax.jit(pf_core)                  # prefill + first token
-        self._mixed = jax.jit(mixed_fn)
+        self._mixed = sharded_jit(mixed_fn, state_arg=1,
+                                  state_outs=(1,), n_outs=4)
 
         if self.spec is not None:
-            spec_core = make_spec_fn(cfg, mesh, rules, self.spec,
+            spec_core = make_spec_fn(cfg, self.plan, self.spec,
                                      self.store.axes,
                                      self.store.append_only)
 
@@ -257,8 +331,10 @@ class ServeEngine:
                                         rng_p, pf_temp, pf_topk, pf_topp)
                 return toks, n_emit, new_state, first, new_pf
 
-            self._spec = jax.jit(spec_core)
-            self._spec_mixed = jax.jit(spec_mixed_fn)
+            self._spec = sharded_jit(spec_core, state_arg=1,
+                                     state_outs=(2,), n_outs=3)
+            self._spec_mixed = sharded_jit(spec_mixed_fn, state_arg=1,
+                                           state_outs=(2,), n_outs=5)
         else:
             self._spec = self._spec_mixed = None
         self._lanes: List[Optional[_Lane]] = [None] * max_slots
@@ -269,7 +345,7 @@ class ServeEngine:
         self._temp = np.zeros((max_slots,), np.float32)
         self._topk = np.zeros((max_slots,), np.int32)
         self._topp = np.ones((max_slots,), np.float32)
-        self._rng = jax.random.PRNGKey(seed)
+        self._rng = jax.random.PRNGKey(ec.seed)
         self._tick = 0
         self._finished: List[RequestResult] = []
         self._submit_t: Dict[int, float] = {}
@@ -484,8 +560,10 @@ class ServeEngine:
                 self.scheduler.pop_next()
                 take.append(req)
         # batched prefill lanes: lane batch padded to a power of two so jit
-        # specializes on O(log lanes x log chunk) shapes, not one per count
-        width = 1 << (len(take) - 1).bit_length()
+        # specializes on O(log lanes x log chunk) shapes, not one per count,
+        # then up to a multiple of the plan's slot partition so lane
+        # batches divide over the data axis
+        width = self.plan.lane_width(len(take))
         lanes = []
         t_now = time.perf_counter()
         for row, req in enumerate(take):
@@ -538,9 +616,11 @@ class ServeEngine:
             # gather + device->host transfer, split host-side per lane
             # (mirrors the one-transfer batching on the restore side).
             new = [(l, tuple(l.req.prompt[:job.pos])) for l in crossed]
+            # pre-filter (cache.wants: capture/min_tokens/grain, counting
+            # grain refusals; plus dedup) so refused boundaries never pay
+            # the batched gather + device->host transfer below
             new = [(l, p) for l, p in new
-                   if len(p) >= self.cache.min_tokens
-                   and not self.cache.contains(p)]
+                   if self.cache.wants(p) and not self.cache.contains(p)]
             if new:
                 snap = self.store.snapshot_rows(job.state,
                                                 [l.row for l, _ in new])

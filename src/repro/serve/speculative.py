@@ -55,7 +55,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.serve.sampling import sample, spec_accept
 from repro.serve.state import select_window
@@ -75,21 +74,25 @@ class SpecConfig:
     draft_stride: int = 2
 
 
-def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes, append_only=None):
+def make_spec_fn(cfg, plan, spec: SpecConfig, axes, append_only=None):
     """Build the one-dispatch speculative round.
 
     Returns ``spec_fn(params, state, last, pos, rng, temp, topk, topp) ->
     (tokens (B,K+1) i32, n_emit (B,) i32, new_state)`` where ``state`` is
     the engine's full B-slot decode state, ``last`` (B,) the slots' last
     sampled tokens, ``pos`` (B,) their per-slot positions, and
-    temp/topk/topp the per-slot sampling params.  ``axes`` is the store's
-    per-leaf slot-axis pytree (``StateStore.axes``) used to select each
-    slot's accepted-depth snapshot; ``append_only`` the matching bool
-    pytree (``StateStore.append_only``) marking leaves whose per-depth
-    snapshot is skipped — they are taken from the final verify step
-    instead (rollback via position masking).  ``append_only=None``
+    temp/topk/topp the per-slot sampling params.  ``plan`` is the
+    engine's :class:`~repro.distributed.plan.ParallelPlan` — its shard
+    context threads the mesh/rules through draft and verify steps, so
+    slot-partitioned state stays on its shards across the scans.  ``axes``
+    is the store's per-leaf slot-axis pytree (``StateStore.axes``) used to
+    select each slot's accepted-depth snapshot; ``append_only`` the
+    matching bool pytree (``StateStore.append_only``) marking leaves whose
+    per-depth snapshot is skipped — they are taken from the final verify
+    step instead (rollback via position masking).  ``append_only=None``
     snapshots every leaf (the pre-classification behaviour).
     """
+    shard_ctx = plan.shard_ctx()
     keep = lm.draft_layers(cfg, spec.draft_stride)
     K = spec.k
     if K < 1:
@@ -104,8 +107,7 @@ def make_spec_fn(cfg, mesh, rules, spec: SpecConfig, axes, append_only=None):
     rec_axes = tuple(ax_leaves[i] for i in rec_idx)
 
     def spec_fn(params, state, last, pos, rng, temp, topk, topp):
-        rt = lm.Runtime(shard=shd.ShardCtx(mesh, rules), rng=None,
-                        train=False)
+        rt = lm.Runtime(shard=shard_ctx, rng=None, train=False)
         pos = jnp.asarray(pos, jnp.int32)
         last = jnp.asarray(last, jnp.int32)
 

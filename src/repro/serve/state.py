@@ -228,28 +228,51 @@ class StateStore:
     Holds the canonical ``max_slots``-wide state and exposes slot-generic
     operations; ``fresh(n)`` allocates side states (prefill lane batches)
     with the same structure so ``adopt`` can move rows between them.
+
+    With a :class:`~repro.distributed.plan.ParallelPlan` the store is
+    **shard-aware**: the canonical state (and every ``fresh`` side state
+    whose slot count divides the plan's slot partition) is allocated as
+    ``NamedSharding``-typed arrays with the slot axis over the plan's data
+    axis, ``shardings`` exposes the per-leaf placement, and the jitted
+    ``adopt`` carries ``out_shardings`` so the canonical state never
+    drifts off-plan.  ``snapshot_rows``/``restore_rows`` address the
+    per-shard device slices transparently (``device_get`` gathers from the
+    owning shards; restore re-places rows through the committed ``dst``).
     """
 
-    def __init__(self, cfg, max_slots, max_len, dtype):
+    def __init__(self, cfg, max_slots, max_len, dtype, plan=None):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.dtype = dtype
+        self.plan = plan
         self.state = init_slots(cfg, max_slots, max_len, dtype)
         self.axes = slot_axes(cfg, self.state)
         self.append_only = append_only_mask(cfg, self.state)
+        if plan is not None and plan.mesh is not None:
+            self.shardings = plan.slot_shardings(self.state, self.axes)
+            self.state = jax.device_put(self.state, self.shardings)
+        else:
+            self.shardings = None
         # axes are static python ints: close over them so jit sees concrete
         # index tuples (retraces only per (m,) shape of rows/slots)
         self._adopt = jax.jit(lambda dst, src, rows, slots: adopt_slots(
-            dst, src, self.axes, rows, slots))
+            dst, src, self.axes, rows, slots),
+            out_shardings=self.shardings)
         self._gather = jax.jit(lambda st, slots: gather_slots(
             st, self.axes, slots))
 
     def fresh(self, n):
         """A zero-initialized n-slot state with this model's structure
         (same pytree, n instead of max_slots along every slot axis) —
-        used for prefill lane batches and speculative draft copies."""
-        return init_slots(self.cfg, n, self.max_len, self.dtype)
+        used for prefill lane batches and speculative draft copies.  On a
+        plan, slot-divisible widths come back sharded over the slot
+        partition (indivisible ones — e.g. 1-slot sequential-admission
+        lanes — replicate)."""
+        st = init_slots(self.cfg, n, self.max_len, self.dtype)
+        if self.plan is not None and self.plan.mesh is not None:
+            st = self.plan.place_state(st, self.axes)
+        return st
 
     def gather(self, slots):
         """An m-slot copy of the given slots' state: leaf shapes keep

@@ -1,0 +1,388 @@
+"""ParallelPlan: mesh-aware serving.
+
+Light tests (single device): plan construction/parsing, serving-rule
+resolution, lane-width padding, host-mesh validation, EngineConfig
+folding, the cache snapshot grain, and the benchmark plan stamp.
+
+Sharded-serving parity (slow, subprocess with a forced 8-device host
+platform): greedy tokens from a ``data=4`` plan — and ``data=2,model=2``
+with the expert partition for ``rom_mamba`` — must be **bit-identical**
+to ``ParallelPlan.single_device()`` per mixer pattern, composing with the
+prefix cache, speculative decoding and interleaved admission.  CI runs
+these in the dedicated 8-virtual-device job (see .github/workflows/ci.yml).
+"""
+import pytest
+
+from repro.distributed.plan import ParallelPlan
+
+
+# ---------------------------------------------------------------------------
+# plan construction (single device — no mesh required)
+# ---------------------------------------------------------------------------
+
+def test_single_device_plan_is_inert():
+    plan = ParallelPlan.single_device()
+    assert plan.mesh is None
+    assert plan.data_size == 1 and plan.expert_size == 1
+    assert plan.replicated() is None
+    assert plan.place_params({"x": 1}) == {"x": 1}
+    assert plan.shard_ctx().mesh is None
+    d = plan.describe()
+    assert d["mesh"] is None
+    assert d["slot_partition"] is None and d["expert_partition"] is None
+
+
+def test_parse_specs():
+    assert ParallelPlan.parse("").mesh is None
+    assert ParallelPlan.parse(None).mesh is None
+    assert ParallelPlan.parse("single").mesh is None
+    for bad in ("data=x", "slots=4", "data", "data=4;model=2"):
+        with pytest.raises(ValueError):
+            ParallelPlan.parse(bad)
+
+
+def test_parse_one_device_mesh_drops_partitions():
+    # on a 1-device host, data=1 builds a (1,1) mesh: partitions of size 1
+    # are dropped to None so shardings degenerate to replicated
+    plan = ParallelPlan.parse("data=1,model=1")
+    assert plan.mesh is not None
+    assert plan.slot_axis is None and plan.expert_axis is None
+    assert plan.data_size == 1
+
+
+def test_lane_width_pads_to_pow2_and_slot_partition():
+    import dataclasses
+
+    single = ParallelPlan.single_device()
+    assert [single.lane_width(n) for n in (1, 2, 3, 5)] == [1, 2, 4, 8]
+    assert single.round_slots(3) == 3
+
+    class _FakeMesh:           # lane_width/round_slots only read .shape
+        shape = {"data": 4, "model": 1}
+
+    plan4 = dataclasses.replace(single, mesh=_FakeMesh(), slot_axis="data")
+    assert plan4.data_size == 4
+    # pow2 first, then up to a multiple of the data-axis size
+    assert [plan4.lane_width(n) for n in (1, 3, 4, 5, 6)] == [4, 4, 4, 8, 8]
+    assert [plan4.round_slots(n) for n in (1, 4, 6)] == [4, 4, 8]
+
+    class _FakeMesh3:
+        shape = {"data": 3, "model": 1}
+
+    plan3 = dataclasses.replace(single, mesh=_FakeMesh3(), slot_axis="data")
+    assert plan3.lane_width(2) == 3 and plan3.round_slots(7) == 9
+
+
+def test_serving_rules_replicate_params_and_partition_experts():
+    from repro.distributed.plan import serving_rules
+    rd = serving_rules(None, "data", "model").as_dict()
+    assert rd["embed"] == (None,) and rd["inner"] == (None,)
+    assert rd["experts"] == ("model", None)
+    assert rd["experts_ep"] == ("model", None)
+    assert rd["act_experts"] == ("model", None)
+    assert rd["act_batch"] == ("data", None)
+    # partitions can be disabled independently
+    rd = serving_rules(None, None, None).as_dict()
+    assert rd["experts"] == (None,) and rd["act_batch"] == (None,)
+
+
+def test_make_host_mesh_validates_shape():
+    from repro.launch.mesh import make_host_mesh
+    m = make_host_mesh()                      # default: all devices on data
+    assert tuple(m.shape.keys()) == ("data", "model")
+    with pytest.raises(ValueError):
+        make_host_mesh((3, 5))                # 15 devices on a 1-dev host
+    with pytest.raises(ValueError):
+        make_host_mesh((0, 1))
+    with pytest.raises(ValueError):
+        make_host_mesh((1, 1, 1))
+
+
+def test_engine_rejects_mesh_kwarg_and_unknown_knobs():
+    from repro.serve import EngineConfig, ServeEngine
+    from repro.configs.base import MambaConfig, ModelConfig
+    cfg = ModelConfig(name="t", d_model=16, vocab_size=32,
+                      segments=((("mamba",), 1),),
+                      mamba=MambaConfig(d_state=4, chunk=8),
+                      dtype="float32")
+    from repro.models import lm
+    import jax
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(TypeError):
+        ServeEngine(cfg, params, mesh=None)
+    with pytest.raises(TypeError):
+        ServeEngine(cfg, params, rules=None)
+    with pytest.raises(TypeError):
+        ServeEngine(cfg, params, bogus=3)
+    # keyword knobs override EngineConfig fields
+    eng = ServeEngine(cfg, params, engine=EngineConfig(max_slots=2),
+                      max_len=32)
+    assert eng.max_slots == 2 and eng.max_len == 32
+    assert eng.engine_config == EngineConfig(max_slots=2, max_len=32)
+    assert eng.plan.mesh is None              # single-device default
+
+
+def test_cache_grain_bounds_published_boundaries():
+    from repro.serve import PrefixCache
+    cache = PrefixCache(budget_mb=1.0, grain=4)
+    calls = []
+
+    def snap(p):
+        return lambda: (calls.append(p) or {"h": __import__("numpy").zeros(2)})
+
+    assert not cache.insert(tuple(range(6)), snap(6))     # 6 % 4 != 0
+    assert cache.stats["grain_skips"] == 1
+    assert calls == []                                    # no device copy
+    assert cache.insert(tuple(range(8)), snap(8))
+    assert cache.insert(tuple(range(4)), snap(4))
+    assert not cache.insert(tuple(range(7)), snap(7))
+    assert len(cache) == 2
+    assert cache.peek_len(tuple(range(8)) + (99,)) == 8
+    assert cache.summary()["grain"] == 4
+    with pytest.raises(ValueError):
+        PrefixCache(grain=0)
+
+
+def test_engine_stamp_records_plan_and_grain():
+    import sys
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    try:
+        import serving as bench
+    finally:
+        sys.path.pop(0)
+    import jax
+    from repro.configs.base import MambaConfig, ModelConfig
+    from repro.models import lm
+    from repro.serve import PrefixCache, ServeEngine
+    cfg = ModelConfig(name="t", d_model=16, vocab_size=32,
+                      segments=((("mamba",), 1),),
+                      mamba=MambaConfig(d_state=4, chunk=8),
+                      dtype="float32")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=16,
+                      prefix_cache=PrefixCache(budget_mb=1.0, grain=8))
+    stamp = bench.engine_stamp(eng)
+    assert stamp["plan"] == {"mesh": None, "slot_partition": None,
+                             "expert_partition": None}
+    assert stamp["cache_grain"] == 8
+    assert stamp["schema_version"] == bench.SCHEMA_VERSION
+
+
+# ---------------------------------------------------------------------------
+# sharded-serving parity (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_COMMON = """
+import jax, numpy as np
+from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
+                                MambaConfig, ModelConfig, RGLRUConfig,
+                                RoMConfig, XLSTMConfig)
+from repro.distributed.plan import ParallelPlan
+from repro.models import lm
+from repro.serve import EngineConfig, Request, ServeEngine
+
+def full_cfg(segments, **kw):
+    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
+                d_ff=64,
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8),
+                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                              capacity_factor=8.0, impl="capacity"),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+def requests(cfg, lens, gen=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=(n,)).tolist(),
+                    max_new_tokens=gen)
+            for i, n in enumerate(lens)]
+
+def run(cfg, params, plan, ec, reqs, **engine_kw):
+    eng = ServeEngine(cfg, params, plan=plan, engine=ec, **engine_kw)
+    res = {r.id: (r.tokens, r.finish_reason) for r in eng.run(reqs)}
+    return eng, res
+"""
+
+PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
+            ("mlstm",), ("slstm",), ("rom_mamba", "mlp")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pattern", PATTERNS,
+                         ids=["+".join(p) for p in PATTERNS])
+def test_sharded_plan_greedy_bit_identical(subproc, pattern):
+    """data=4 plan == single_device, bit-identical greedy tokens, for every
+    mixer pattern — with the prefix cache and speculative decoding enabled
+    on the sharded engine (half the requests share a prefix so cache
+    restores actually happen); rom_mamba additionally under
+    data=2,model=2 (the expert partition routes tokens to expert
+    shards)."""
+    plans = 'plans = [ParallelPlan.host(data=4)]'
+    if "rom_mamba" in pattern:
+        plans += '\nplans.append(ParallelPlan.host(data=2, model=2))'
+    subproc(_COMMON + f"""
+from repro.serve import CachedSuffixFirst, PrefixCache
+cfg = full_cfg((({pattern!r}, 1),))
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+ec = EngineConfig(max_slots=4, max_len=32, seed=0, max_prefill_chunk=8)
+spec_ec = EngineConfig(max_slots=4, max_len=32, seed=0, max_prefill_chunk=8,
+                       speculative=2, draft_stride=2)
+shared = list(range(4, 12))                 # 8-token shared prefix
+def reqs():
+    rng = np.random.default_rng(3)
+    lens = [5, 11, 3, 7, 4, 6]
+    out = []
+    for i, n in enumerate(lens):
+        p = rng.integers(2, cfg.vocab_size, size=(n,)).tolist()
+        if i % 2 == 0:
+            p = shared + p[:3]              # half the batch shares a prefix
+        out.append(Request(id=i, prompt=p, max_new_tokens=5))
+    return out
+_, ref = run(cfg, params, ParallelPlan.single_device(), ec, reqs())
+{plans}
+for plan in plans:
+    cache = PrefixCache(budget_mb=16.0)
+    eng, got = run(cfg, params, plan, spec_ec, reqs(),
+                   prefix_cache=cache, scheduler=CachedSuffixFirst(cache))
+    leaf = jax.tree_util.tree_leaves(eng.store.state)[0]
+    # the canonical state's slot axis is actually sharded over the plan's
+    # slot partition (leading spec entry; other axes replicate)
+    assert leaf.sharding.spec[0] == plan.slot_axis, leaf.sharding
+    assert got == ref, (plan.describe(), got, ref)
+    assert eng.stats["spec_rounds"] > 0          # speculation actually ran
+    assert eng.stats["cache_hit_tokens"] > 0     # cache restores happened
+print("sharded parity OK:", {pattern!r})
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_sharded_plan_composes_with_cache_and_speculative(subproc):
+    """data=4 plan + prefix cache + speculative decoding + interleaved
+    admission together still emit bit-identical greedy tokens, and the
+    warm cache serves hits under the sharded store (host snapshots are
+    topology-portable)."""
+    subproc(_COMMON + """
+from repro.serve import CachedSuffixFirst, PrefixCache
+for pattern in [("mamba", "attn"), ("rom_mamba", "mlp")]:
+    cfg = full_cfg(((pattern, 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ec = EngineConfig(max_slots=4, max_len=48, seed=0, max_prefill_chunk=8,
+                      speculative=3, draft_stride=2)
+    shared = list(range(4, 20))              # 16-token shared prefix
+    def reqs():
+        rng = np.random.default_rng(9)
+        return [Request(id=i,
+                        prompt=shared + rng.integers(
+                            2, cfg.vocab_size, size=(n,)).tolist(),
+                        max_new_tokens=5)
+                for i, n in enumerate([5, 3, 7, 2, 4, 6])]
+    _, ref = run(cfg, params, ParallelPlan.single_device(),
+                 EngineConfig(max_slots=4, max_len=48, seed=0,
+                              max_prefill_chunk=8), reqs())
+    plan = ParallelPlan.host(data=4)
+    cache = PrefixCache(budget_mb=32.0, grain=8)
+    eng, got = run(cfg, params, plan, ec, reqs(),
+                   prefix_cache=cache, scheduler=CachedSuffixFirst(cache))
+    assert got == ref, (pattern, got, ref)
+    assert eng.stats["spec_rounds"] > 0
+    # warm pass: cached prefixes restore into the sharded lane state
+    eng2, got2 = run(cfg, params, plan, ec, reqs(),
+                     prefix_cache=cache, scheduler=CachedSuffixFirst(cache))
+    assert got2 == ref, pattern
+    assert eng2.stats["cache_hit_tokens"] > 0
+    for p, _n in cache.snapshot_prefixes():
+        assert len(p) % 8 == 0               # grain respected
+    print("compose OK:", pattern)
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_sharded_sequential_admission_matches(subproc):
+    """admission='sequential' (1-slot lane states replicate, canonical
+    state sharded) also matches single-device output under data=4."""
+    subproc(_COMMON + """
+cfg = full_cfg(((("mamba", "attn"), 1),))
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+ec = EngineConfig(max_slots=4, max_len=32, seed=0, max_prefill_chunk=8,
+                  admission="sequential")
+lens = [5, 11, 3, 7, 4]
+_, ref = run(cfg, params, ParallelPlan.single_device(), ec,
+             requests(cfg, lens))
+_, got = run(cfg, params, ParallelPlan.host(data=4), ec,
+             requests(cfg, lens))
+assert got == ref
+print("sequential sharded OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_expert_sharded_grouped_matmul_matches_oracle(subproc):
+    """The grouped-matmul path under the plan's expert partition
+    (shard_map over the model axis) computes exactly the capacity-einsum
+    oracle."""
+    subproc("""
+import jax, numpy as np
+from repro.core import moe_dispatch as md
+from repro.core import router as rtr
+from repro.distributed.plan import ParallelPlan
+
+plan = ParallelPlan.host(data=2, model=4)
+shard = plan.shard_ctx()
+G, g, D, F, E, K = 2, 16, 8, 12, 8, 2
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (G, g, D))
+w = jax.random.normal(jax.random.fold_in(key, 1), (E, D, F))
+wr = jax.random.normal(jax.random.fold_in(key, 2), (D, E)) * 0.1
+routing = rtr.route(wr, x, num_experts=E, top_k=K, jitter_eps=0.0,
+                    aux_loss_weight=0.0, rng=None, train=False)
+dsp = md.make_dispatch(routing, 8.0)
+buf = md.dispatch_tokens(dsp, x)
+assert md.expert_partition(shard, E) == "model"
+assert md.expert_partition(None, E) is None
+y_ref = md.expert_matmul(buf, w, dsp.group_sizes, "capacity")
+y_s = jax.jit(lambda b, w, gs: md.expert_matmul(
+    b, w, gs, "grouped", shard=shard))(buf, w, dsp.group_sizes)
+np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_ref),
+                           atol=1e-4, rtol=1e-4)
+print("expert-sharded grouped == capacity OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_prefill_lane_width_pads_to_data_axis(subproc):
+    """With 6 queued requests on a data=4 plan, the batched prefill job's
+    lane width pads past the power of two to a multiple of the data axis."""
+    subproc(_COMMON + """
+cfg = full_cfg(((("mamba",), 1),))
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+plan = ParallelPlan.host(data=4)
+eng = ServeEngine(cfg, params, plan=plan,
+                  engine=EngineConfig(max_slots=8, max_len=32, seed=0,
+                                      max_prefill_chunk=8))
+for r in requests(cfg, [5, 5, 5, 5, 5, 5]):
+    eng.submit(r)
+eng._admit()
+assert eng._job is not None and eng._job.width == 8, eng._job.width
+assert plan.lane_width(6) == 8 and plan.lane_width(1) == 4
+# indivisible max_slots is rejected loudly
+try:
+    ServeEngine(cfg, params, plan=plan,
+                engine=EngineConfig(max_slots=6, max_len=32))
+except ValueError as e:
+    assert "multiple" in str(e)
+else:
+    raise AssertionError("max_slots=6 should be rejected on data=4")
+while eng.busy():
+    eng.tick()
+print("lane width OK")
+""", n_devices=8)
