@@ -1,55 +1,56 @@
-"""Serving benchmark: parallel prefill vs per-token prefill, engine
-throughput, time-to-first-token, and a staggered-arrival load scenario
-comparing stall-free interleaved admission against sequential prefill;
-emits JSON.
+"""Serving benchmark: a registry of named scenarios sharing one runner.
 
-    PYTHONPATH=src python benchmarks/serving.py --smoke
+    PYTHONPATH=src python benchmarks/serving.py --smoke --out BENCH_serving.json
+    PYTHONPATH=src python benchmarks/serving.py --smoke --scenario kernels
     PYTHONPATH=src python benchmarks/serving.py --arch rom-mamba-115m \
-        --smoke --prompt-len 128 --gen 32 --out serving.json
+        --prompt-len 128 --gen 32 --scenario engine --scenario load
 
-Measures, on the same config and prompts:
+Each scenario is a ``@scenario("name")``-registered function taking the
+shared ``BenchContext`` (config, params, plan, prompts) and returning a
+JSON-ready dict; the runner selects scenarios via repeatable
+``--scenario`` flags (default: all) and writes one report whose
+``scenarios`` object holds each result.  The committed ``BENCH_serving.json``
+at the repo root is the perf trajectory CI diffs against
+(benchmarks/trajectory.py applies per-metric regression thresholds; see
+docs/serving.md "Benchmark trajectory").
 
-  prefill_parallel_tps   tokens/s prefilling via models/lm.prefill (the
-                         engine path: one training-style pass per
-                         power-of-two chunk)
-  prefill_pertoken_tps   tokens/s prefilling by stepping the jitted decode
-                         path one token at a time (the pre-engine baseline)
-  prefill_speedup        parallel / per-token
-  decode_tps             engine decode tokens/s (all slots)
-  ttft_mean_s            mean submit->first-token latency across requests
+Scenarios:
 
-  load.*                 staggered-arrival scenario: requests arrive in
-                         bursts while decode is active.  Per admission mode:
-                         decode tokens/s (counting mixed-step time),
-                         decode stall seconds, and TTFT p50/p95 — overall
-                         and for the mid-run arrivals.  ``baseline`` is the
-                         same initial batch with no arrivals (the
-                         no-admission decode rate the stall-free engine is
-                         held to).
-  speculative.*          self-speculative decoding scenario: the same
-                         requests decoded greedily with speculative=K
-                         (layer-skip draft + one-dispatch verify) vs
-                         speculative=off, reporting decode tokens/s for
-                         both, the draft acceptance rate, and tokens
-                         emitted per round.
-  prefix_cache.*         shared-system-prompt scenario: every request
-                         shares a long prefix; a warm PrefixCache serves
-                         the batch vs a cache-off baseline.  Reports the
-                         hit rate, prefill tokens computed (and the saved
-                         fraction — the O(prompt) -> O(uncached suffix)
-                         cost-model change), and TTFT p50/p95 both ways.
+  prefill        tokens/s prefilling via models/lm.prefill (the engine
+                 path: one training-style pass per power-of-two chunk) vs
+                 stepping the jitted decode path one token at a time (the
+                 pre-engine baseline), and their ratio.
+  engine         batch decode throughput + TTFT mean/p50/p95 through the
+                 full ServeEngine.
+  kernels        EngineConfig(kernels=...) A/B: decode tokens/s under the
+                 "ref" oracles vs the "pallas" fused decode fast path
+                 (single-timestep selective scan fused with gate/out-proj,
+                 routed top-k expert projection without dispatch
+                 machinery), plus a greedy token-identity check between
+                 the two.
+  load           staggered-arrival scenario: requests arrive in bursts
+                 while decode is active, under both admission modes plus a
+                 no-admission baseline; decode tokens/s, stall seconds,
+                 TTFT p50/p95 overall and for mid-run arrivals.
+  speculative    self-speculative decoding on vs off: decode tokens/s both
+                 ways, draft acceptance rate, tokens per round.
+  prefix_cache   shared-system-prompt workload against a warm PrefixCache
+                 vs cache-off: hit rate, prefill tokens saved, TTFT both
+                 ways.
 
 Every scenario dict carries an ``engine`` stamp built by the single
-``engine_stamp`` helper (schema_version, admission mode, speculative K,
-draft stride, slots, prefill chunk, prefix-cache budget, scheduler) so the
-per-PR ``serving-smoke`` artifacts are self-describing; the full JSON
+``engine_stamp`` helper (schema_version, plan, admission mode, speculative
+K, draft stride, slots, prefill chunk, prefix-cache budget, scheduler,
+kernels impl) so the per-PR artifacts are self-describing; the full JSON
 schema is documented in docs/serving.md.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,10 +66,102 @@ from repro.serve import EngineConfig, Request, ServeEngine
 
 
 def _best_of(fn, iters):
-    """Best-of-N timing: the minimum wall time is the least load-disturbed
-    sample (both timed regions here are short on the smoke config)."""
+    """Best-of-N timing: the best throughput sample is the least
+    load-disturbed one (both timed regions here are short on smoke)."""
     return max(fn() for _ in range(iters))
 
+
+#: Version of the benchmark JSON schema (stamped on every scenario via
+#: ``engine_stamp``).  Bump when scenario keys change shape or meaning so
+#: per-PR artifacts stay comparable across history.
+SCHEMA_VERSION = 3
+
+
+def engine_stamp(engine):
+    """The one engine-config stamp every scenario dict attaches, so each
+    benchmark artifact records exactly how it was produced.  Scenarios
+    must build their stamp here — never inline — so fields (and
+    ``schema_version``) stay consistent across the report.  ``plan``
+    records the ParallelPlan (mesh shape + slot/expert partitions), making
+    every perf artifact attributable to a topology."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "plan": engine.plan.describe(),
+        "admission": engine.admission,
+        "speculative_k": engine.spec.k if engine.spec else 0,
+        "draft_stride": engine.spec.draft_stride if engine.spec else 0,
+        "max_slots": engine.max_slots,
+        "max_prefill_chunk": engine.max_prefill_chunk,
+        "prefix_cache_mb": (round(engine.cache.budget_bytes / (1 << 20), 3)
+                            if engine.cache is not None else 0),
+        "cache_grain": (engine.cache.grain
+                        if engine.cache is not None else 0),
+        "scheduler": type(engine.scheduler).__name__,
+        "kernels": engine.engine_config.kernels or "auto",
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario registry: one decorator, one shared context, one runner
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Callable[["BenchContext"], dict]] = {}
+
+
+def scenario(name: str):
+    """Register a benchmark scenario under ``name`` (selectable with
+    ``--scenario name``; all registered scenarios run by default)."""
+    def deco(fn):
+        fn.scenario_name = name
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+@dataclasses.dataclass
+class BenchContext:
+    """Everything scenarios share: built once by the runner."""
+    cfg: Any
+    params: Any
+    plan: ParallelPlan
+    prompts: np.ndarray          # (batch, prompt_len) scenario prompts
+    load_prompts: np.ndarray     # (n_load, prompt_len) for the load burst
+    gen: int
+    max_len: int
+    chunk: int
+    seed: int
+    args: argparse.Namespace
+
+    def engine(self, **overrides):
+        """A ServeEngine on the shared config/params/plan with the
+        context's default knobs, any of which a scenario may override."""
+        kw = dict(max_slots=self.prompts.shape[0], max_len=self.max_len,
+                  seed=self.seed, max_prefill_chunk=self.chunk)
+        kw.update(overrides)
+        extra = {k: kw.pop(k) for k in ("prefix_cache", "scheduler")
+                 if k in kw}
+        return ServeEngine(self.cfg, self.params, plan=self.plan,
+                           engine=EngineConfig(**kw), **extra)
+
+    def requests(self, prompts=None, gen=None, id0=0):
+        prompts = self.prompts if prompts is None else prompts
+        return [Request(id=id0 + i, prompt=prompts[i].tolist(),
+                        max_new_tokens=gen or self.gen)
+                for i in range(prompts.shape[0])]
+
+
+def _decode_tps(stats):
+    return stats["decode_tokens"] / max(stats["decode_s"] + stats["mixed_s"],
+                                        1e-9)
+
+
+def _pct(xs, p):
+    return round(float(np.percentile(np.asarray(xs), p)), 4) if xs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# prefill: parallel chunked prefill vs per-token stepping
+# ---------------------------------------------------------------------------
 
 def pertoken_prefill_tps(cfg, params, prompts, max_len, iters=3):
     """The old serve path: prompts consumed one jitted decode step/token."""
@@ -111,89 +204,131 @@ def parallel_prefill_tps(cfg, params, prompts, max_len, chunk, iters=3):
     return _best_of(once, iters)
 
 
-#: Version of the benchmark JSON schema (stamped on every scenario via
-#: ``engine_stamp``).  Bump when scenario keys change shape or meaning so
-#: per-PR ``serving-smoke`` artifacts stay comparable across history.
-SCHEMA_VERSION = 3
-
-
-def engine_stamp(engine):
-    """The one engine-config stamp every scenario dict attaches, so each
-    serving-smoke artifact records exactly how it was produced.  Scenarios
-    must build their stamp here — never inline — so fields (and
-    ``schema_version``) stay consistent across the report.  ``plan``
-    records the ParallelPlan (mesh shape + slot/expert partitions), making
-    every perf artifact attributable to a topology."""
+@scenario("prefill")
+def prefill_metrics(ctx: BenchContext):
+    prompts = jnp.asarray(ctx.prompts)
+    par = parallel_prefill_tps(ctx.cfg, ctx.params, prompts, ctx.max_len,
+                               ctx.chunk)
+    per = pertoken_prefill_tps(ctx.cfg, ctx.params, prompts, ctx.max_len)
     return {
-        "schema_version": SCHEMA_VERSION,
-        "plan": engine.plan.describe(),
-        "admission": engine.admission,
-        "speculative_k": engine.spec.k if engine.spec else 0,
-        "draft_stride": engine.spec.draft_stride if engine.spec else 0,
-        "max_slots": engine.max_slots,
-        "max_prefill_chunk": engine.max_prefill_chunk,
-        "prefix_cache_mb": (round(engine.cache.budget_bytes / (1 << 20), 3)
-                            if engine.cache is not None else 0),
-        "cache_grain": (engine.cache.grain
-                        if engine.cache is not None else 0),
-        "scheduler": type(engine.scheduler).__name__,
+        "parallel_tps": round(par, 1),
+        "pertoken_tps": round(per, 1),
+        "speedup": round(par / per, 2),
+        "engine": engine_stamp(ctx.engine()),
     }
 
 
-def engine_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
-                   plan=None):
-    B = prompts.shape[0]
-    engine = ServeEngine(cfg, params, plan=plan,
-                         engine=EngineConfig(max_slots=B, max_len=max_len,
-                                             seed=seed,
-                                             max_prefill_chunk=chunk))
-    reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
-            for i in range(B)]
-    results = engine.run(reqs)
-    s = engine.stats
+# ---------------------------------------------------------------------------
+# engine: batch decode throughput + TTFT through the full ServeEngine
+# ---------------------------------------------------------------------------
+
+@scenario("engine")
+def engine_metrics(ctx: BenchContext):
+    engine = ctx.engine()
+    engine.run(ctx.requests())                  # compile + warm
+    engine.reset_stats()
+    results = engine.run(ctx.requests())
+    ttfts = [r.ttft_s for r in results]
     return {
-        "decode_tps": s["decode_tokens"] / max(s["decode_s"] + s["mixed_s"],
-                                               1e-9),
-        "ttft_mean_s": float(np.mean([r.ttft_s for r in results])),
-        "ttft_max_s": float(np.max([r.ttft_s for r in results])),
+        "decode_tps": round(_decode_tps(engine.stats), 1),
+        "ttft_mean_s": round(float(np.mean(ttfts)), 4),
+        "ttft_max_s": round(float(np.max(ttfts)), 4),
+        "ttft_p50_s": _pct(ttfts, 50),
+        "ttft_p95_s": _pct(ttfts, 95),
         "requests": len(results),
         "engine": engine_stamp(engine),
     }
 
 
 # ---------------------------------------------------------------------------
-# self-speculative decoding scenario
+# kernels: ref oracles vs the fused pallas decode fast path
 # ---------------------------------------------------------------------------
 
-def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
-                        k=3, stride=2, iters=3, plan=None):
+def _step_time_s(cfg, params, kernels, batch, max_len, iters=5, steps=100):
+    """Best-of jitted single-decode-step latency under an
+    ``ops.default_impl`` scope — jax-only, so the engine's Python loop
+    (identical across impls, and the dominant wall-clock term at smoke
+    scale) doesn't drown the kernel difference."""
+    from repro.kernels import ops as kernel_ops
+
+    rt = lm.Runtime(shard=ParallelPlan.single_device().shard_ctx(),
+                    rng=None, train=False)
+    st = lm.init_state(cfg, batch, max_len, jnp.dtype(cfg.dtype))
+    toks = jnp.full((batch, 1), 3, jnp.int32)
+    with kernel_ops.default_impl(kernels):
+        fn = jax.jit(lambda p, s, t: lm.decode_step(p, s, t, jnp.int32(0),
+                                                    cfg, rt))
+        logits, _ = fn(params, st, toks)
+        jax.block_until_ready(logits)                # compile outside timing
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            s = st
+            for _ in range(steps):
+                logits, s = fn(params, s, toks)
+            jax.block_until_ready(logits)
+            best = min(best, (time.perf_counter() - t0) / steps)
+    return best
+
+
+@scenario("kernels")
+def kernels_metrics(ctx: BenchContext, iters=3):
+    """EngineConfig(kernels=...) A/B on the same requests: "ref" decodes
+    through the jnp oracles (O(E×) dense experts for RoM), "pallas"
+    through the fused decode fast path (on TPU the Pallas kernels, off-TPU
+    their fused jnp composites — either way skipping the MoE dispatch
+    machinery per token).  Greedy outputs must be token-identical.  Each
+    impl carries two throughputs: ``decode_tps`` through the full engine
+    (end-to-end, includes the impl-independent host loop) and ``step_tps``
+    from a jitted decode-step microbenchmark (the kernel-level number —
+    its ratio is the enforceable "measurably faster" claim)."""
+    out = {}
+    toks = {}
+    for impl in ("ref", "pallas"):
+        eng = ctx.engine(kernels=impl)
+        results = eng.run(ctx.requests())            # compile + warm
+        toks[impl] = {r.id: r.tokens for r in results}
+        best = 0.0
+        for _ in range(iters):
+            eng.reset_stats()
+            eng.run(ctx.requests())
+            best = max(best, _decode_tps(eng.stats))
+        step_s = _step_time_s(ctx.cfg, ctx.params, impl,
+                              len(ctx.prompts), ctx.max_len)
+        out[impl] = {"decode_tps": round(best, 1),
+                     "step_us": round(step_s * 1e6, 1),
+                     "step_tps": round(len(ctx.prompts) / step_s, 1),
+                     "engine": engine_stamp(eng)}
+    for m in ("decode_tps", "step_tps"):
+        out[f"{m}_vs_ref"] = round(
+            out["pallas"][m] / max(out["ref"][m], 1e-9), 3)
+    out["greedy_identical"] = bool(toks["ref"] == toks["pallas"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# speculative: self-speculative decoding on vs off
+# ---------------------------------------------------------------------------
+
+@scenario("speculative")
+def speculative_metrics(ctx: BenchContext, iters=3):
     """Greedy decode of the same requests with speculative decoding on vs
     off: decode tokens/s for both, acceptance rate, tokens per round.
     Greedy outputs are bit-identical by construction (tested in
     tests/test_serve_engine.py); the benchmark records whether the draft is
     accurate enough for the K-token dispatches to win wall-clock."""
-    B = prompts.shape[0]
-    out = {"k": int(k), "draft_stride": int(stride), "gen": int(gen)}
+    k, stride = ctx.args.speculative_k, ctx.args.draft_stride
+    out = {"k": int(k), "draft_stride": int(stride), "gen": int(ctx.gen)}
 
     def run_once(spec_k):
-        eng = ServeEngine(cfg, params, plan=plan,
-                          engine=EngineConfig(max_slots=B, max_len=max_len,
-                                              seed=seed,
-                                              max_prefill_chunk=chunk,
-                                              speculative=spec_k,
-                                              draft_stride=stride))
-        reqs = [Request(id=i, prompt=prompts[i].tolist(), max_new_tokens=gen)
-                for i in range(B)]
-        eng.run(reqs)                                # compile + warm
+        eng = ctx.engine(speculative=spec_k, draft_stride=stride)
+        eng.run(ctx.requests())                      # compile + warm
         best = None
         for _ in range(iters):
             eng.reset_stats()
-            reqs = [Request(id=i, prompt=prompts[i].tolist(),
-                            max_new_tokens=gen) for i in range(B)]
-            eng.run(reqs)
+            eng.run(ctx.requests())
             s = dict(eng.stats)
-            tps = s["decode_tokens"] / max(s["decode_s"] + s["mixed_s"],
-                                           1e-9)
+            tps = _decode_tps(s)
             if best is None or tps > best[0]:
                 best = (tps, s, eng.spec_summary())
         return best + (engine_stamp(eng),)
@@ -214,12 +349,12 @@ def speculative_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
 
 
 # ---------------------------------------------------------------------------
-# prefix-cache scenario: shared-system-prompt workload
+# prefix_cache: shared-system-prompt workload
 # ---------------------------------------------------------------------------
 
-def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
-                         shared_len=48, tail_len=8, max_slots=4, chunk=16,
-                         budget_mb=64.0, iters=3, plan=None, grain=1):
+@scenario("prefix_cache")
+def prefix_cache_metrics(ctx: BenchContext, n_requests=6, tail_len=8,
+                         max_slots=4, chunk=16, iters=3):
     """The workload prefix caching unlocks: every request shares a long
     system prompt (multi-turn chat, few-shot headers) and differs only in a
     short tail.  A warm request populates the radix tree, then the same
@@ -229,9 +364,12 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
     tests/test_prefix_cache.py); the benchmark records how much prompt work
     the O(uncached suffix) cost model actually removes."""
     from repro.serve import CachedSuffixFirst, PrefixCache
-    if plan is not None:
-        # slots must shard evenly over the plan's slot partition
-        max_slots = plan.round_slots(max_slots)
+    cfg, params, plan, seed = ctx.cfg, ctx.params, ctx.plan, ctx.seed
+    budget_mb, grain = ctx.args.prefix_cache_mb, ctx.args.cache_grain
+    shared_len = min(48, ctx.prompts.shape[1])
+    max_len = shared_len + tail_len + ctx.gen + 1
+    # slots must shard evenly over the plan's slot partition
+    max_slots = plan.round_slots(max_slots)
     rng = np.random.default_rng(seed)
     shared = rng.integers(2, cfg.vocab_size, size=(shared_len,)).tolist()
 
@@ -239,19 +377,17 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
         return [Request(id=i,
                         prompt=shared + rng.integers(
                             2, cfg.vocab_size, size=(tail_len,)).tolist(),
-                        max_new_tokens=gen)
+                        max_new_tokens=ctx.gen)
                 for i in range(n_requests)]
 
     def run(cached):
         cache = (PrefixCache(budget_mb=budget_mb, grain=grain)
                  if cached else None)
-        eng = ServeEngine(cfg, params, plan=plan,
-                          engine=EngineConfig(max_slots=max_slots,
-                                              max_len=max_len, seed=seed,
-                                              max_prefill_chunk=chunk),
-                          prefix_cache=cache,
-                          scheduler=CachedSuffixFirst(cache) if cached
-                          else None)
+        eng = ctx.engine(max_slots=max_slots, max_len=max_len,
+                         max_prefill_chunk=chunk,
+                         prefix_cache=cache,
+                         scheduler=CachedSuffixFirst(cache) if cached
+                         else None)
         if cached:
             # one warm request plants the shared-prefix boundaries — the
             # steady state of a server that has seen the system prompt
@@ -293,7 +429,7 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
         return out
 
     out = {"shared_len": int(shared_len), "tail_len": int(tail_len),
-           "gen": int(gen), "max_slots": int(max_slots),
+           "gen": int(ctx.gen), "max_slots": int(max_slots),
            "chunk": int(chunk), "budget_mb": budget_mb,
            "baseline": run(False), "cached": run(True)}
     base_tok = max(out["baseline"]["prefill_tokens"], 1)
@@ -307,12 +443,8 @@ def prefix_cache_metrics(cfg, params, gen, max_len, seed=0, n_requests=6,
 
 
 # ---------------------------------------------------------------------------
-# staggered-arrival load scenario
+# load: staggered arrivals during active decode
 # ---------------------------------------------------------------------------
-
-def _pct(xs, p):
-    return round(float(np.percentile(np.asarray(xs), p)), 4) if xs else 0.0
-
 
 def _drive(engine, initial, arrivals):
     """Run a scenario: ``initial`` requests submitted up front, ``arrivals``
@@ -346,19 +478,19 @@ def _scenario_requests(prompts, gen, n_initial):
     return initial, arrivals
 
 
-def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
-                 max_slots=6, n_initial=4, plan=None):
+@scenario("load")
+def load_metrics(ctx: BenchContext, max_slots=6, n_initial=4, iters=5):
     """Staggered arrivals during active decode, run under both admission
     modes plus a no-admission baseline (warm-up pass first so jit
     compilation stays out of every timed region)."""
-    if plan is not None:
-        # slots must shard evenly over the plan's slot partition
-        max_slots = plan.round_slots(max_slots)
+    gen, plan = ctx.gen, ctx.plan
+    # slots must shard evenly over the plan's slot partition
+    max_slots = plan.round_slots(max_slots)
     # short prompts, two chunks each: enough to interleave admission with
     # decode (stall-freedom needs chunks, not many of them) without paying
     # one dispatch overhead per tiny chunk on the admission critical path
-    prompts = prompts[:, :min(prompts.shape[1], 32)]
-    chunk = max(8, min(chunk, prompts.shape[1] // 2))
+    prompts = ctx.load_prompts[:, :min(ctx.load_prompts.shape[1], 32)]
+    chunk = max(8, min(ctx.chunk, prompts.shape[1] // 2))
     n_burst = prompts.shape[0] - n_initial
     # the scenario's own parameters (they intentionally differ from the
     # top-level prompt_len/prefill-chunk args) ride in the report so the
@@ -366,13 +498,9 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
     out = {"prompt_len": int(prompts.shape[1]), "chunk": int(chunk),
            "gen": int(gen), "max_slots": int(max_slots),
            "n_initial": int(n_initial), "n_arrivals": int(n_burst)}
-    iters = 5                       # best-of-N: least load-disturbed run
     for mode in ("interleaved", "sequential"):
-        eng = ServeEngine(cfg, params, plan=plan,
-                          engine=EngineConfig(max_slots=max_slots,
-                                              max_len=max_len, seed=seed,
-                                              max_prefill_chunk=chunk,
-                                              admission=mode))
+        eng = ctx.engine(max_slots=max_slots, max_prefill_chunk=chunk,
+                         admission=mode)
         _drive(eng, *_scenario_requests(prompts, gen, n_initial))  # compile
         best = None
         for _ in range(iters):
@@ -387,8 +515,7 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
         ttft_arr = [r.ttft_s for r in results if r.id in arr_ids]
         out[mode] = {
             "requests": len(results),
-            "decode_tps": round(s["decode_tokens"] /
-                                max(s["decode_s"] + s["mixed_s"], 1e-9), 1),
+            "decode_tps": round(_decode_tps(s), 1),
             "decode_stall_s": round(s["stall_s"], 4),
             "mixed_steps": s["mixed_steps"],
             "wall_s": round(wall, 4),
@@ -405,9 +532,7 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
                 eng.reset_stats()
                 initial, _ = _scenario_requests(prompts, gen, n_initial)
                 _drive(eng, initial, [])
-                s = eng.stats
-                tps = max(tps, s["decode_tokens"] /
-                          max(s["decode_s"] + s["mixed_s"], 1e-9))
+                tps = max(tps, _decode_tps(eng.stats))
             out["baseline_decode_tps"] = round(tps, 1)
     out["decode_tps_vs_baseline"] = round(
         out["interleaved"]["decode_tps"] /
@@ -421,13 +546,61 @@ def load_metrics(cfg, params, prompts, gen, max_len, chunk, seed=0,
     return out
 
 
-def main():
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def build_context(args) -> BenchContext:
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if cfg.kind == "encoder":
+        raise SystemExit("encoder-only arch has no decode step")
+    plan = ParallelPlan.parse(args.mesh)
+    if args.batch % plan.data_size != 0:
+        raise SystemExit(f"--batch {args.batch} must be a multiple of the "
+                         f"plan's data axis ({plan.data_size})")
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    max_len = args.prompt_len + 2 * args.gen + 1
+    n_load = 6                      # 4 initial + one burst of 2 arrivals
+    corpus = corpus_for(cfg, args.prompt_len + 1,
+                        max(args.batch, n_load), args.seed)
+    all_prompts = np.asarray(corpus.batch_at(0)["tokens"])[:,
+                                                           :args.prompt_len]
+    return BenchContext(cfg=cfg, params=params, plan=plan,
+                        prompts=all_prompts[:args.batch],
+                        load_prompts=all_prompts[:n_load],
+                        gen=args.gen, max_len=max_len,
+                        chunk=args.prefill_chunk, seed=args.seed, args=args)
+
+
+def run_scenarios(args) -> dict:
+    names = args.scenarios or sorted(SCENARIOS)
+    unknown = sorted(set(names) - set(SCENARIOS))
+    if unknown:
+        raise SystemExit(f"unknown scenario(s) {unknown}; "
+                         f"registered: {sorted(SCENARIOS)}")
+    ctx = build_context(args)
+    return {
+        "arch": args.arch, "smoke": args.smoke,
+        "schema_version": SCHEMA_VERSION,
+        "plan": ctx.plan.describe(),
+        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+        "scenarios": {name: SCENARIOS[name](ctx) for name in names},
+    }
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rom-mamba-115m")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=128)
+    ap.add_argument("--scenario", action="append", dest="scenarios",
+                    metavar="NAME", default=None,
+                    help="run only this scenario (repeatable; default: "
+                         f"all of {sorted(SCENARIOS)})")
     ap.add_argument("--speculative-k", type=int, default=3,
                     help="draft window of the speculative scenario")
     ap.add_argument("--draft-stride", type=int, default=2,
@@ -446,59 +619,10 @@ def main():
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="",
-                    help="write JSON here (default: stdout)")
-    args = ap.parse_args()
+                    help="write JSON here (default: stdout only)")
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduce_for_smoke(cfg)
-    if cfg.kind == "encoder":
-        raise SystemExit("encoder-only arch has no decode step")
-    plan = ParallelPlan.parse(args.mesh)
-    if args.batch % plan.data_size != 0:
-        raise SystemExit(f"--batch {args.batch} must be a multiple of the "
-                         f"plan's data axis ({plan.data_size})")
-    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
-    max_len = args.prompt_len + 2 * args.gen + 1
-    n_load = 6                      # 4 initial + one burst of 2 arrivals
-    corpus = corpus_for(cfg, args.prompt_len + 1,
-                        max(args.batch, n_load), args.seed)
-    all_prompts = jnp.asarray(corpus.batch_at(0)["tokens"])[:,
-                                                            :args.prompt_len]
-    prompts = all_prompts[:args.batch]
-
-    par = parallel_prefill_tps(cfg, params, prompts, max_len,
-                               args.prefill_chunk)
-    per = pertoken_prefill_tps(cfg, params, prompts, max_len)
-    eng = engine_metrics(cfg, params, np.asarray(prompts), args.gen, max_len,
-                         args.prefill_chunk, args.seed, plan=plan)
-    load = load_metrics(cfg, params, np.asarray(all_prompts[:n_load]),
-                        args.gen, max_len, args.prefill_chunk, args.seed,
-                        plan=plan)
-    spec = speculative_metrics(cfg, params, np.asarray(prompts), args.gen,
-                               max_len, args.prefill_chunk, args.seed,
-                               k=args.speculative_k, stride=args.draft_stride,
-                               plan=plan)
-    pc_shared = min(48, args.prompt_len)
-    pc = prefix_cache_metrics(cfg, params, args.gen,
-                              pc_shared + 8 + args.gen + 1, args.seed,
-                              shared_len=pc_shared,
-                              budget_mb=args.prefix_cache_mb,
-                              plan=plan, grain=args.cache_grain)
-    report = {
-        "arch": args.arch, "smoke": args.smoke,
-        "schema_version": SCHEMA_VERSION,
-        "plan": plan.describe(),
-        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
-        "prefill_parallel_tps": round(par, 1),
-        "prefill_pertoken_tps": round(per, 1),
-        "prefill_speedup": round(par / per, 2),
-        **{k: (round(v, 4) if isinstance(v, float) else v)
-           for k, v in eng.items()},
-        "load": load,
-        "speculative": spec,
-        "prefix_cache": pc,
-    }
+    report = run_scenarios(args)
     text = json.dumps(report, indent=2)
     if args.out:
         with open(args.out, "w") as f:

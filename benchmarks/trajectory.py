@@ -1,0 +1,157 @@
+"""Perf-trajectory regression gate over BENCH_serving.json reports.
+
+    PYTHONPATH=src python benchmarks/trajectory.py \
+        --baseline BENCH_serving.json --current BENCH_serving.current.json
+    PYTHONPATH=src python benchmarks/trajectory.py --update \
+        --baseline BENCH_serving.json --current BENCH_serving.current.json
+
+Compares the current benchmark report against the committed trajectory
+with per-metric thresholds and exits non-zero on any regression, printing
+a metric-by-metric table.  Only metric keys matching the THRESHOLDS
+classification are gated; everything else in the report (engine stamps,
+scenario parameters, counters) is informational.
+
+Threshold classes (first match on the metric's dot-path wins):
+
+  throughput   *_tps                      higher is better; fail when the
+                                          current value drops more than 15%
+                                          below baseline
+  quality      acceptance_rate, hit_rate, higher is better; 25% relative
+               *_saved_frac, token_hit_*  drop allowed (these are discrete
+                                          ratios on smoke workloads)
+  latency      ttft_*_s, wall_s, *stall_s lower is better; 100% relative
+                                          growth allowed (absolute wall
+                                          times on shared CI runners are
+                                          noisy — the throughput gates are
+                                          the sharp ones)
+
+Ratios-of-throughputs (``*_vs_baseline``, ``*_vs_ref``, ``speedup``) are
+derived from gated quantities and CI-noisy in both numerator and
+denominator, so they are reported but not gated.
+
+``--update`` rewrites the baseline with the current report (the CI main
+branch does this after a green run, so the committed trajectory always
+reflects the current CI machine generation).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+
+#: (pattern over the metric dot-path, direction, allowed relative change)
+THRESHOLDS = [
+    (re.compile(r"(_vs_baseline|_vs_ref|_vs_sequential|\bspeedup)$"),
+     None, None),                           # derived ratios: report only
+    (re.compile(r"_tps$"), "higher", 0.15),
+    (re.compile(r"(acceptance_rate|hit_rate|_saved_frac|tokens_per_round)$"),
+     "higher", 0.25),
+    (re.compile(r"(ttft_\w*_s|wall_s|stall_s)$"), "lower", 1.00),
+]
+
+
+def classify(path: str):
+    for pat, direction, tol in THRESHOLDS:
+        if pat.search(path):
+            return direction, tol
+    return None, None
+
+
+def numeric_leaves(obj, prefix=""):
+    """Flatten nested dicts to {dot.path: number}; skips engine *stamps*
+    (config echoes, not metrics) — recognized by their schema_version
+    field, so the scenario named "engine" still contributes metrics."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if (k == "engine" and isinstance(v, dict)
+                    and "schema_version" in v):
+                continue
+            out.update(numeric_leaves(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def compare(baseline: dict, current: dict):
+    """Returns (rows, regressions): every gated metric present in both
+    reports, with its relative change and verdict."""
+    base = numeric_leaves(baseline.get("scenarios", baseline))
+    cur = numeric_leaves(current.get("scenarios", current))
+    rows, regressions = [], []
+    for path in sorted(set(base) & set(cur)):
+        direction, tol = classify(path)
+        if direction is None:
+            continue
+        b, c = base[path], cur[path]
+        if b == 0:
+            continue
+        rel = (c - b) / abs(b)
+        bad = (rel < -tol) if direction == "higher" else (rel > tol)
+        rows.append((path, b, c, rel, direction, tol, bad))
+        if bad:
+            regressions.append(rows[-1])
+    return rows, regressions
+
+
+def check_identity(current: dict):
+    """Hard functional gates carried inside the benchmark report: the
+    kernels scenario's greedy A/B must match token-for-token."""
+    failures = []
+    kern = current.get("scenarios", {}).get("kernels")
+    if kern is not None and kern.get("greedy_identical") is not True:
+        failures.append("scenarios.kernels.greedy_identical is not true: "
+                        "kernels='pallas' decode diverged from 'ref'")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed trajectory JSON (e.g. BENCH_serving.json)")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced report to gate")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the current report "
+                         "instead of gating (used on main after green CI)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"trajectory: refreshed {args.baseline} from {args.current}")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if baseline.get("schema_version") != current.get("schema_version"):
+        print(f"trajectory: schema_version changed "
+              f"({baseline.get('schema_version')} -> "
+              f"{current.get('schema_version')}); skipping metric gates "
+              f"(commit a fresh baseline)")
+        return 0
+
+    rows, regressions = compare(baseline, current)
+    failures = check_identity(current)
+    width = max((len(r[0]) for r in rows), default=20)
+    for path, b, c, rel, direction, tol, bad in rows:
+        mark = "REGRESSED" if bad else "ok"
+        print(f"{path:<{width}}  {b:>10.3f} -> {c:>10.3f}  "
+              f"{rel:+7.1%}  ({direction} better, tol {tol:.0%})  {mark}")
+    for msg in failures:
+        print(f"FUNCTIONAL GATE FAILED: {msg}")
+    if regressions or failures:
+        print(f"trajectory: {len(regressions)} metric regression(s), "
+              f"{len(failures)} functional failure(s)")
+        return 1
+    print(f"trajectory: {len(rows)} gated metrics within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import moe_dispatch as md
 from repro.core import router as rtr
+from repro.kernels import ops as kops
 from repro.nn import rglru as rgl
 from repro.nn import ssm
 from repro.nn import xlstm as xl
@@ -72,7 +73,14 @@ class SharedRouting:
             jitter_eps=rom.jitter_eps, aux_loss_weight=rom.aux_loss_weight,
             rng=rng, train=rt.train)
         self.impl = rom.impl
-        if self.impl == "dense":
+        # decode fast path: when an explicit kernel impl is active
+        # (EngineConfig.kernels via kernels.default_impl) and the batch is
+        # decode-shaped (S == 1, one token per slot), skip the capacity
+        # dispatch machinery entirely — every projection goes through
+        # ops.routed_matmul on the raw top-k (indices, weights), which at
+        # these token counts beats sort + offsets + capacity gathers
+        self.fast = kops.active_default() is not None and S == 1
+        if self.impl == "dense" or self.fast:
             self.lin = None
         else:
             dsp = md.make_dispatch(self.routing, rom.capacity_factor)
@@ -87,6 +95,14 @@ class SharedRouting:
     def proj(self, t, w, *, weighted: bool, tag: str):
         """t (B,S,Din) -> (B,S,Dout) through the routed experts w (E,Din,Dout)."""
         B, S, Din = t.shape
+        if self.fast:
+            T = self.G * self.g                      # = B*S decode tokens
+            K = self.routing.top_k
+            y = kops.routed_matmul(
+                t.reshape(T, Din), w,
+                self.routing.expert_idx.reshape(T, K),
+                self.routing.weights.reshape(T, K) if weighted else None)
+            return y.reshape(B, S, -1)
         tt = t.reshape(self.G, self.g, Din)
         if self.impl == "dense":
             y = md.dense_moe_linear(self.routing, tt, w, weighted=weighted)

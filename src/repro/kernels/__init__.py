@@ -1,3 +1,11 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# Impl-resolution registry (kernels/ops.py): the package-level names are
+# the public surface for choosing pallas/ref/fused/interpret globally.
+from repro.kernels.ops import (active_default, default_impl, registered_ops,
+                               resolve_impl, set_default_impl)
+
+__all__ = ["active_default", "default_impl", "registered_ops",
+           "resolve_impl", "set_default_impl"]

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: single-timestep selective-scan decode step.
+
+Decode advances every slot by one token, so the prefill kernel's
+sequence-chunk pipeline degenerates to a single VPU recurrence update per
+(batch, De-tile) cell.  The fused variant keeps going inside the same
+kernel: the SiLU-gated elementwise product and the output projection GEMM
+run on the state tile while it is still resident in VMEM, accumulating the
+(1, Dm) output row across De tiles in an f32 scratch — one kernel launch
+for the whole per-slot Mamba decode tail instead of scan + two elementwise
+passes + GEMM (cf. BlackMamba's fused MoE-SSM inference step).
+
+Grid: (batch, De tiles) — De tiles innermost/sequential for the fused
+variant (output-row accumulation), fully parallel otherwise.  Float
+composition matches ``kernels/ref.py::selective_scan_step`` + ``dense``
+term-for-term so the ref oracle is a bitwise gate at f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _step_tile(h_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, has_D):
+    """Shared recurrence update for one (1, TDe, N) state tile.
+
+    Returns (h', y) with h' (TDe, N) f32 and y (TDe,) f32, replicating the
+    ref oracle's cast order exactly (dt*u multiplied in io dtype before the
+    f32 cast; everything else accumulated in f32).
+    """
+    f32 = jnp.float32
+    dt32 = dt_ref[0].astype(f32)                          # (TDe,)
+    a = jnp.exp(dt32[:, None] * a_ref[...].astype(f32))   # (TDe, N)
+    du = (dt_ref[0] * u_ref[0]).astype(f32)               # io-dtype product
+    h = a * h_ref[0] + du[:, None] * b_ref[0].astype(f32)[None, :]
+    y = jnp.sum(h * c_ref[0].astype(f32)[None, :], axis=1)
+    if has_D:
+        y = y + u_ref[0].astype(f32) * d_ref[0].astype(f32)
+    return h, y
+
+
+def _kernel(h_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+            ho_ref, y_ref, *, has_D):
+    h, y = _step_tile(h_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                      has_D)
+    ho_ref[0] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def _fused_kernel(h_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                  g_ref, w_ref, ho_ref, o_ref, acc_ref, *, nde, has_D):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h, y = _step_tile(h_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                      has_D)
+    ho_ref[0] = h
+    # epilogue: out = dense(y.astype(io) * gate, w_out) — the projection
+    # contracts this De tile's slice of w_out while h is still in VMEM
+    z = y.astype(o_ref.dtype) * g_ref[0]
+    acc_ref[...] += jnp.dot(z[None, :], w_ref[...].astype(z.dtype),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(d == nde - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _prep(h, u_t, dt_t, A, B_t, C_t, D, de_tile):
+    Bsz, De, N = h.shape
+    de_tile = min(de_tile, De)
+    assert De % de_tile == 0, (De, de_tile)
+    has_D = D is not None
+    Dv = (D if has_D else jnp.zeros((De,), jnp.float32)).reshape(1, De)
+    return Bsz, De, N, de_tile, has_D, Dv
+
+
+@functools.partial(jax.jit, static_argnames=("de_tile", "interpret"))
+def decode_step_pallas(h, u_t, dt_t, A, B_t, C_t, D=None, *, de_tile=512,
+                       interpret=False):
+    """(h', y). h (B,De,N) f32; u_t,dt_t (B,De); A (De,N); B_t,C_t (B,N)."""
+    Bsz, De, N, de_tile, has_D, Dv = _prep(h, u_t, dt_t, A, B_t, C_t, D,
+                                           de_tile)
+    grid = (Bsz, De // de_tile)
+    hs, y = pl.pallas_call(
+        functools.partial(_kernel, has_D=has_D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((de_tile, N), lambda b, d: (d, 0)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (0, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, De, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, De), u_t.dtype),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(h, u_t, dt_t, A, B_t, C_t, Dv)
+    return hs, y
+
+
+@functools.partial(jax.jit, static_argnames=("de_tile", "interpret"))
+def decode_step_fused_pallas(h, u_t, dt_t, A, B_t, C_t, D, gate, w_out, *,
+                             de_tile=512, interpret=False):
+    """(h', out) with out (B,Dm) = dense(y * gate, w_out) fused in-kernel.
+    gate (B,De); w_out (De,Dm)."""
+    Bsz, De, N, de_tile, has_D, Dv = _prep(h, u_t, dt_t, A, B_t, C_t, D,
+                                           de_tile)
+    Dm = w_out.shape[-1]
+    nde = De // de_tile
+    grid = (Bsz, nde)
+    hs, out = pl.pallas_call(
+        functools.partial(_fused_kernel, nde=nde, has_D=has_D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((de_tile, N), lambda b, d: (d, 0)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (0, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((de_tile, Dm), lambda b, d: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, Dm), lambda b, d: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, De, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), u_t.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Dm), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(h, u_t, dt_t, A, B_t, C_t, Dv, gate, w_out)
+    return hs, out

@@ -1,32 +1,159 @@
-"""Jit'd kernel wrappers with platform dispatch.
+"""Jit'd kernel wrappers behind one impl-resolution registry.
 
-``impl`` resolution:
-  None      -> 'pallas' on TPU, 'ref' elsewhere (the dry-run therefore
-               compiles the mathematically identical jnp graphs, keeping XLA
-               cost_analysis meaningful; see DESIGN.md §3).
-  'ref'     -> pure-jnp oracle
-  'pallas'  -> compiled Pallas TPU kernel
-  'interpret' -> Pallas kernel body executed in interpret mode (CPU tests)
+Every op is registered with the set of implementations it offers and the
+off-TPU fallback of its compiled path; ``resolve_impl(name, impl)`` picks
+the implementation in a single place:
+
+  explicit ``impl=`` argument            (strongest)
+  > module-level default                 (``set_default_impl`` /
+                                          ``default_impl`` scope — how
+                                          ``EngineConfig.kernels`` threads
+                                          one choice through every jitted
+                                          serving step)
+  > backend auto                         ('pallas' on TPU, 'ref' elsewhere,
+                                          so the dry-run compiles the
+                                          mathematically identical jnp
+                                          graphs and XLA cost_analysis
+                                          stays meaningful; DESIGN.md §3)
+
+Implementation names:
+  'ref'       pure-jnp oracle (kernels/ref.py — the correctness gate; for
+              ``routed_matmul`` this is the honest O(E×) dense-expert path)
+  'pallas'    compiled Pallas TPU kernel.  Off-TPU (Mosaic cannot compile)
+              each op declares a fallback: the prefill ops fall back to
+              'ref'; the decode-step ops fall back to 'fused'
+  'fused'     fused jnp composite of the Pallas kernel's math — the
+              decode fast path on hosts without a TPU (top-k gathered
+              expert GEMM instead of the O(E×) oracle)
+  'interpret' Pallas kernel body executed in interpret mode (CPU tests)
+
+The pre-registry per-op ``impl=`` keywords keep working: they are now thin
+deprecation shims over ``resolve_impl`` (``_resolve`` remains as an alias
+for external callers of the old helper).
 """
 from __future__ import annotations
+
+import contextlib
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.decode_step import (decode_step_fused_pallas,
+                                       decode_step_pallas)
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.routed_matmul import routed_matmul_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
 
 
+# ---------------------------------------------------------------------------
+# impl resolution: one registry, one module-level default
+# ---------------------------------------------------------------------------
+
+class _OpSpec:
+    __slots__ = ("impls", "fallback")
+
+    def __init__(self, impls, fallback):
+        self.impls = frozenset(impls)
+        self.fallback = dict(fallback)   # off-TPU remap, e.g. pallas->fused
+
+
+_REGISTRY: Dict[str, _OpSpec] = {}
+
+#: module-level default implementation (None = backend auto)
+_DEFAULT_IMPL: Optional[str] = None
+
+
+def register_op(name: str, impls, fallback=()) -> None:
+    _REGISTRY[name] = _OpSpec(impls, fallback)
+
+
+def registered_ops():
+    """Registered op names (docs/tests introspection)."""
+    return sorted(_REGISTRY)
+
+
+def set_default_impl(impl: Optional[str]) -> Optional[str]:
+    """Set the module-level default implementation for every op whose call
+    site passes ``impl=None``; returns the previous default.  ``None``
+    restores backend auto-selection.  Re-exported as
+    ``repro.kernels.set_default_impl``."""
+    global _DEFAULT_IMPL
+    if impl is not None:
+        known = set().union(*(s.impls for s in _REGISTRY.values()))
+        if impl not in known:
+            raise ValueError(f"unknown kernel impl {impl!r}; "
+                             f"known: {sorted(known)}")
+    prev, _DEFAULT_IMPL = _DEFAULT_IMPL, impl
+    return prev
+
+
+def active_default() -> Optional[str]:
+    """The module-level default impl, or None under backend auto."""
+    return _DEFAULT_IMPL
+
+
+@contextlib.contextmanager
+def default_impl(impl: Optional[str]):
+    """Scope ``set_default_impl(impl)`` to a ``with`` block.  The serving
+    engine wraps each jitted step in this scope, so the choice is active
+    exactly while jax traces the step (``EngineConfig.kernels``)."""
+    prev = set_default_impl(impl)
+    try:
+        yield
+    finally:
+        set_default_impl(prev)
+
+
+def resolve_impl(name: str, impl: Optional[str] = None) -> str:
+    """Resolve the implementation for op ``name``: explicit ``impl`` >
+    module default > backend auto; then apply the op's off-TPU fallback
+    ('pallas' only compiles on TPU)."""
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise KeyError(f"unknown kernel op {name!r}; "
+                       f"registered: {registered_ops()}")
+    if impl is None:
+        impl = _DEFAULT_IMPL
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if jax.default_backend() != "tpu":
+        impl = spec.fallback.get(impl, impl)
+    if impl not in spec.impls:
+        raise ValueError(f"op {name!r} has no impl {impl!r}; "
+                         f"available: {sorted(spec.impls)}")
+    return impl
+
+
 def _resolve(impl):
+    """Deprecated pre-registry helper (use :func:`resolve_impl`): generic
+    explicit/default/backend resolution without an op's fallback table."""
+    if impl is None:
+        impl = _DEFAULT_IMPL
     if impl is None:
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
 
 
+register_op("selective_scan", ("ref", "pallas", "interpret"),
+            fallback={"pallas": "ref"})
+register_op("grouped_matmul", ("ref", "pallas", "interpret"),
+            fallback={"pallas": "ref"})
+register_op("selective_scan_step", ("ref", "fused", "pallas", "interpret"),
+            fallback={"pallas": "fused"})
+register_op("routed_matmul", ("ref", "fused", "pallas", "interpret"),
+            fallback={"pallas": "fused"})
+
+
+# ---------------------------------------------------------------------------
+# prefill / training ops (signatures unchanged — deprecation shims over the
+# registry)
+# ---------------------------------------------------------------------------
+
 def selective_scan(u, dt, A, Bm, Cm, D=None, *, chunk=128, impl=None,
                    acc_dtype="float32", h0=None, return_state=False):
-    impl = _resolve(impl)
+    impl = resolve_impl("selective_scan", impl)
     if h0 is not None or return_state:
         # stateful prefill path: only the ref oracle threads/returns the
         # recurrent state (the Pallas kernel computes outputs only)
@@ -45,8 +172,64 @@ def selective_scan(u, dt, A, Bm, Cm, D=None, *, chunk=128, impl=None,
 
 
 def grouped_matmul(x, w, group_sizes, *, impl=None, **tiles):
-    impl = _resolve(impl)
+    impl = resolve_impl("grouped_matmul", impl)
     if impl == "ref":
         return _ref.grouped_matmul_ref(x, w, group_sizes)
     return grouped_matmul_pallas(x, w, group_sizes,
                                  interpret=(impl == "interpret"), **tiles)
+
+
+# ---------------------------------------------------------------------------
+# decode-step ops (the per-slot hot path)
+# ---------------------------------------------------------------------------
+
+def selective_scan_step(h, u_t, dt_t, A, B_t, C_t, D=None, *, gate=None,
+                        w_out=None, impl=None):
+    """Single-timestep selective scan, optionally fused with the gating +
+    output projection epilogue.
+
+    h (B,De,N) f32; u_t, dt_t (B,De); A (De,N); B_t, C_t (B,N); D (De,).
+    Without an epilogue returns ``(h', y)`` with y (B,De).  With
+    ``gate`` (B,De) and ``w_out`` (De,Dm) returns ``(h', out)`` where
+    ``out = dense(y * gate, w_out)`` — one kernel for the whole per-slot
+    Mamba decode tail instead of scan + two elementwise passes + GEMM.
+    """
+    if (gate is None) != (w_out is None):
+        raise ValueError("gate and w_out must be supplied together")
+    impl = resolve_impl("selective_scan_step", impl)
+    if impl in ("pallas", "interpret"):
+        interp = impl == "interpret"
+        if gate is None:
+            return decode_step_pallas(h, u_t, dt_t, A, B_t, C_t, D,
+                                      interpret=interp)
+        return decode_step_fused_pallas(h, u_t, dt_t, A, B_t, C_t, D,
+                                        gate, w_out, interpret=interp)
+    # 'ref' and its off-TPU 'fused' alias share the oracle math exactly, so
+    # EngineConfig(kernels="pallas") stays greedy bit-identical to "ref" on
+    # hosts where the compiled kernel is unavailable.
+    h2, y = _ref.selective_scan_step(h, u_t, dt_t, A, B_t, C_t, D)
+    if gate is None:
+        return h2, y
+    from repro.nn.layers import dense
+    return h2, dense(y * gate, w_out)
+
+
+def routed_matmul(x, w, expert_idx, weights=None, *, impl=None):
+    """Routed expert projection for decode-shaped token counts.
+
+    x (T,D) tokens; w (E,D,F) expert weights; expert_idx (T,K) int32 top-k
+    choices; weights (T,K) f32 combine weights or None (unweighted sum).
+    Returns (T,F) = sum_k scale_k * (x_t @ w[expert_idx[t,k]]).
+
+    'ref' is the O(E×) dense-expert oracle (mirrors
+    ``moe_dispatch.dense_moe_linear``); 'fused'/'pallas' compute only the
+    selected experts — the decode fast path that skips the capacity
+    dispatch machinery (sort + offsets + gathers) entirely.
+    """
+    impl = resolve_impl("routed_matmul", impl)
+    if impl == "ref":
+        return _ref.routed_matmul_ref(x, w, expert_idx, weights)
+    if impl in ("pallas", "interpret"):
+        return routed_matmul_pallas(x, w, expert_idx, weights,
+                                    interpret=(impl == "interpret"))
+    return _ref.routed_matmul_fused(x, w, expert_idx, weights)

@@ -160,3 +160,38 @@ def grouped_matmul_ref(x, w, group_sizes):
                    preferred_element_type=jnp.float32).reshape(GE, C, -1)
     y = jnp.where(mask[..., None], y, 0.0)
     return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Routed expert projection (decode-shaped token counts).
+# x (T,D); w (E,D,F); expert_idx (T,K) int32; weights (T,K) f32 or None.
+# ---------------------------------------------------------------------------
+
+def routed_matmul_ref(x, w, expert_idx, weights=None):
+    """O(E×) dense-expert oracle: compute every expert for every token,
+    then mix with a one-hot (optionally weighted) selection.  Same float
+    composition as ``moe_dispatch.dense_moe_linear`` so it doubles as the
+    correctness gate for the capacity dispatch path."""
+    E = w.shape[0]
+    y_all = jnp.einsum("td,edf->tef", x, w.astype(x.dtype),
+                       preferred_element_type=jnp.float32)  # (T,E,F) f32
+    sel = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (T,K,E)
+    if weights is not None:
+        sel = sel * weights.astype(jnp.float32)[..., None]
+    mix = sel.sum(axis=1)                                   # (T,E)
+    return jnp.einsum("tef,te->tf", y_all, mix).astype(x.dtype)
+
+
+def routed_matmul_fused(x, w, expert_idx, weights=None):
+    """Top-k gathered composite — the decode fast path on hosts without a
+    TPU: gather only the K selected expert matrices per token and contract
+    once, skipping both the O(E×) oracle compute and the capacity dispatch
+    machinery (sort + offsets + scatter/gather)."""
+    T, K = expert_idx.shape
+    w_sel = jnp.take(w.astype(x.dtype), expert_idx.reshape(-1),
+                     axis=0).reshape(T, K, *w.shape[1:])     # (T,K,D,F)
+    y = jnp.einsum("td,tkdf->tkf", x, w_sel,
+                   preferred_element_type=jnp.float32)       # (T,K,F) f32
+    if weights is not None:
+        y = y * weights.astype(jnp.float32)[..., None]
+    return y.sum(axis=1).astype(x.dtype)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: routed top-k expert projection for decode.
+
+The prefill grouped GEMM blocks capacity-padded token tiles and maps each
+tile to its expert's weight block modulo E.  At decode there are only a
+handful of tokens (one per slot), so capacity buffers and the dispatch
+sort are pure overhead; instead the (token, top-k choice) pairs *are* the
+grid, and each cell streams exactly its selected expert's weight block —
+``expert_idx`` rides in scalar-prefetch SMEM and drives the weight
+BlockSpec index map directly, the same trick the prefill kernel plays
+with ``group_sizes``, applied per assignment instead of per tile.
+
+Grid: (tokens, F tiles, top-k, D tiles) — k and D innermost/sequential,
+accumulating the (1, tile_f) output row (scaled by the combine weight)
+in an f32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, wts_ref, x_ref, w_ref, o_ref, acc_ref, *, nk, nd):
+    t = pl.program_id(0)
+    k = pl.program_id(2)
+    d = pl.program_id(3)
+
+    @pl.when((k == 0) & (d == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    contrib = jnp.dot(x_ref[...].astype(jnp.float32),
+                      w_ref[0].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    acc_ref[...] += contrib * wts_ref[t, k]
+
+    @pl.when((k == nk - 1) & (d == nd - 1))
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_f", "tile_k", "interpret"))
+def routed_matmul_pallas(x, w, expert_idx, weights=None, *, tile_f=128,
+                         tile_k=128, interpret=False):
+    """x (T,D) @ w[expert_idx] -> (T,F), summed over the K choices.
+
+    expert_idx (T,K) int32; weights (T,K) f32 combine weights (None for an
+    unweighted sum — the x-side projections of SharedRouting).
+    """
+    T, D = x.shape
+    E, _, F = w.shape
+    K = expert_idx.shape[-1]
+    tile_f = min(tile_f, F)
+    tile_k = min(tile_k, D)
+
+    def pad_to(a, axis, mult):
+        r = (-a.shape[axis]) % mult
+        if r == 0:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[axis] = (0, r)
+        return jnp.pad(a, pads)
+
+    xp = pad_to(x, 1, tile_k)
+    wp = pad_to(pad_to(w, 1, tile_k), 2, tile_f)
+    Dp = xp.shape[1]
+    Fp = wp.shape[2]
+    nk, nd = K, Dp // tile_k
+    grid = (T, Fp // tile_f, K, nd)
+    if weights is None:
+        weights = jnp.ones((T, K), jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, nd=nd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tile_k),
+                             lambda t, j, k, d, idx, wts: (t, d)),
+                pl.BlockSpec((1, tile_k, tile_f),
+                             lambda t, j, k, d, idx, wts: (idx[t, k], d, j)),
+            ],
+            out_specs=pl.BlockSpec((1, tile_f),
+                                   lambda t, j, k, d, idx, wts: (t, j)),
+            scratch_shapes=[pltpu.VMEM((1, tile_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, Fp), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(expert_idx.astype(jnp.int32), weights.astype(jnp.float32), xp, wp)
+    return out[:, :F]

@@ -84,6 +84,12 @@ def main():
                          "'data=2,model=2' over this host's devices "
                          "(decode slots shard over data, expert weights "
                          "over model); empty = single device")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"],
+                    help="kernel impl for the jitted serving steps "
+                         "(EngineConfig.kernels): 'pallas' enables the "
+                         "fused decode fast path, 'ref' pins the jnp "
+                         "oracles, 'auto' picks by backend")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,10 +118,12 @@ def main():
         engine=EngineConfig(max_slots=args.batch, max_len=max_len,
                             seed=args.seed, admission=args.admission,
                             speculative=args.speculative,
-                            draft_stride=args.draft_stride),
+                            draft_stride=args.draft_stride,
+                            kernels=(None if args.kernels == "auto"
+                                     else args.kernels)),
         prefix_cache=cache, scheduler=scheduler)
 
-    print(f"plan: {plan.describe()}")
+    print(f"plan: {plan.describe()} | kernels: {args.kernels}")
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
     prompts = np.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]

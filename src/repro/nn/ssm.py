@@ -135,7 +135,12 @@ mamba_state_spec = batch_spec(mamba_init_state)
 
 
 def mamba_core_step(shared, h_t, state, cfg, rt: Runtime,
-                    *, x_proj_fn=None, dt_proj_fn=None):
+                    *, x_proj_fn=None, dt_proj_fn=None, gate=None,
+                    w_out=None):
+    """Decode core.  With ``gate`` (B,De) and ``w_out`` (De,Dm) the gating +
+    output projection epilogue is handed to ``ops.selective_scan_step`` so
+    the pallas impl fuses the whole tail into one kernel; the result is then
+    the projected output (B,Dm) instead of the scan output (B,De)."""
     de, dt_rank, n = mamba_dims(cfg)
     u, conv_buf = causal_conv1d_step(h_t, state["conv"], shared["conv_w"],
                                      shared["conv_b"])
@@ -145,9 +150,9 @@ def mamba_core_step(shared, h_t, state, cfg, rt: Runtime,
     dt_lin = (dt_proj_fn or (lambda t: dense(t, shared["w_dt"])))(dt_in)
     dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + shared["b_dt"])
     A = -jnp.exp(shared["A_log"])
-    from repro.kernels.ref import selective_scan_step
-    hs, y = selective_scan_step(state["h"], u, dt.astype(u.dtype), A, B_t,
-                                C_t, shared["D"])
+    hs, y = ops.selective_scan_step(state["h"], u, dt.astype(u.dtype), A,
+                                    B_t, C_t, shared["D"], gate=gate,
+                                    w_out=w_out)
     return y, {"h": hs, "conv": conv_buf}
 
 
@@ -155,9 +160,9 @@ def mamba_step(params, x_t, state, pos, cfg, rt: Runtime):
     """x_t (B,1,D) decode step."""
     xt = x_t[:, 0]
     h_t = dense(xt, params["w_in"])
-    y, state = mamba_core_step(params, h_t, state, cfg, rt)
     g = silu(dense(xt, params["w_gate"]))
-    out = dense(y * g, params["w_out"])
+    out, state = mamba_core_step(params, h_t, state, cfg, rt, gate=g,
+                                 w_out=params["w_out"])
     return out[:, None], state, {}
 
 

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.plan import ParallelPlan
+from repro.kernels import ops as kernel_ops
 from repro.models import lm
 from repro.serve.sampling import SamplingParams, sample
 from repro.serve.scheduler import FIFOScheduler
@@ -67,6 +68,14 @@ class EngineConfig:
         (default: max_slots).
     speculative: draft window K for self-speculative decoding (0 = off).
     draft_stride: layer-skip stride of the speculative draft model.
+    kernels: kernel implementation for the jitted serving steps — None
+        (backend auto), "ref" (jnp oracles), "pallas" (fused decode
+        kernels; off-TPU the decode ops fall back to their fused jnp
+        composites, still skipping the MoE dispatch machinery), or
+        "interpret" (Pallas bodies on CPU, for tests).  Applied as the
+        ``repro.kernels`` default-impl scope around every step dispatch,
+        so it threads through decode/mixed/spec tracing without per-op
+        plumbing.
     """
     max_slots: int = 4
     max_len: int = 128
@@ -76,6 +85,7 @@ class EngineConfig:
     prefill_lanes: Optional[int] = None
     speculative: int = 0
     draft_stride: int = 2
+    kernels: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -241,6 +251,9 @@ class ServeEngine:
         if ec.speculative < 0:
             raise ValueError(
                 f"speculative K must be >= 0, got {ec.speculative}")
+        if ec.kernels not in (None, "ref", "fused", "pallas", "interpret"):
+            raise ValueError(f"unknown kernels impl {ec.kernels!r}; choose "
+                             "None, 'ref', 'fused', 'pallas' or 'interpret'")
         self.plan = plan if plan is not None else ParallelPlan.single_device()
         if ec.max_slots % self.plan.data_size != 0:
             raise ValueError(
@@ -308,12 +321,25 @@ class ServeEngine:
                            out_shardings=(tuple(outs) if n_outs > 1
                                           else outs[0]))
 
-        self._prefill = jax.jit(prefill_fn)          # sequential admission
-        self._decode = sharded_jit(decode_core, state_arg=1,
-                                   state_outs=(1,), n_outs=2)
-        self._pf = jax.jit(pf_core)                  # prefill + first token
-        self._mixed = sharded_jit(mixed_fn, state_arg=1,
-                                  state_outs=(1,), n_outs=4)
+        def kscope(fn):
+            """Enter the engine's kernel-impl scope around a jitted step:
+            the scope is live while jax traces (first call per shape), so
+            ``ec.kernels`` reaches every ops.* resolution in the traced
+            graph; cached executions just pay a context-manager enter."""
+            if ec.kernels is None:
+                return fn
+
+            def call(*args):
+                with kernel_ops.default_impl(ec.kernels):
+                    return fn(*args)
+            return call
+
+        self._prefill = kscope(jax.jit(prefill_fn))  # sequential admission
+        self._decode = kscope(sharded_jit(decode_core, state_arg=1,
+                                          state_outs=(1,), n_outs=2))
+        self._pf = kscope(jax.jit(pf_core))          # prefill + first token
+        self._mixed = kscope(sharded_jit(mixed_fn, state_arg=1,
+                                         state_outs=(1,), n_outs=4))
 
         if self.spec is not None:
             spec_core = make_spec_fn(cfg, self.plan, self.spec,
@@ -331,10 +357,10 @@ class ServeEngine:
                                         rng_p, pf_temp, pf_topk, pf_topp)
                 return toks, n_emit, new_state, first, new_pf
 
-            self._spec = sharded_jit(spec_core, state_arg=1,
-                                     state_outs=(2,), n_outs=3)
-            self._spec_mixed = sharded_jit(spec_mixed_fn, state_arg=1,
-                                           state_outs=(2,), n_outs=5)
+            self._spec = kscope(sharded_jit(spec_core, state_arg=1,
+                                            state_outs=(2,), n_outs=3))
+            self._spec_mixed = kscope(sharded_jit(spec_mixed_fn, state_arg=1,
+                                                  state_outs=(2,), n_outs=5))
         else:
             self._spec = self._spec_mixed = None
         self._lanes: List[Optional[_Lane]] = [None] * max_slots

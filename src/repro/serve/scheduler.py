@@ -97,7 +97,13 @@ class CachedSuffixFirst:
 
     def _key(self, entry):
         order, req = entry
-        return (len(req.prompt) - self._cache.peek_len(req.prompt), order)
+        # Clamp the hit to len-1, exactly like admission's ``lookup``: a
+        # full-prompt snapshot still forces >= 1 token of prefill (the
+        # first sampled token needs fresh logits), so ranking by an
+        # unclamped hit would order/group lanes by a prefix length
+        # admission can never actually restore.
+        hit = min(self._cache.peek_len(req.prompt), len(req.prompt) - 1)
+        return (len(req.prompt) - max(hit, 0), order)
 
     def add(self, request) -> None:
         self._q.append((self._n, request))

@@ -1,0 +1,343 @@
+"""Decode fast path: the kernels/ops.py impl-resolution registry, the
+single-timestep selective-scan and routed-expert Pallas kernels (interpret
+mode) vs the kernels/ref.py oracles, and greedy identity of
+``EngineConfig(kernels="pallas")`` vs ``"ref"`` through the full engine
+across admission/speculative/cache modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
+                                MambaConfig, ModelConfig, RGLRUConfig,
+                                RoMConfig, XLSTMConfig)
+from repro.distributed.plan import ParallelPlan
+from repro.kernels import ops, ref
+from repro.kernels.decode_step import (decode_step_fused_pallas,
+                                       decode_step_pallas)
+from repro.kernels.routed_matmul import routed_matmul_pallas
+from repro.models import lm
+from repro.nn.layers import dense
+from repro.serve import EngineConfig, PrefixCache, Request, ServeEngine
+from repro.serve.engine import prefill_chunks  # noqa: F401  (docs parity)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_resolution_order_and_fallbacks():
+    # backend auto on CPU: everything resolves to ref
+    assert ops.active_default() is None
+    for name in ops.registered_ops():
+        assert ops.resolve_impl(name) == "ref"
+    # explicit impl wins; off-TPU 'pallas' falls back per-op
+    assert ops.resolve_impl("selective_scan", "pallas") == "ref"
+    assert ops.resolve_impl("grouped_matmul", "pallas") == "ref"
+    assert ops.resolve_impl("selective_scan_step", "pallas") == "fused"
+    assert ops.resolve_impl("routed_matmul", "pallas") == "fused"
+    # interpret never remaps (it is the CPU test path)
+    assert ops.resolve_impl("selective_scan", "interpret") == "interpret"
+    # module default fills in for impl=None, explicit still wins
+    with ops.default_impl("pallas"):
+        assert ops.resolve_impl("routed_matmul") == "fused"
+        assert ops.resolve_impl("routed_matmul", "ref") == "ref"
+        assert ops.active_default() == "pallas"
+    assert ops.active_default() is None
+    # nesting restores the outer scope
+    with ops.default_impl("ref"):
+        with ops.default_impl("pallas"):
+            assert ops.active_default() == "pallas"
+        assert ops.active_default() == "ref"
+
+
+def test_registry_rejects_unknown_names():
+    with pytest.raises(KeyError):
+        ops.resolve_impl("not_an_op")
+    with pytest.raises(ValueError):
+        ops.resolve_impl("selective_scan", "fused")   # not offered
+    with pytest.raises(ValueError):
+        ops.set_default_impl("cuda")
+    prev = ops.set_default_impl("ref")
+    assert prev is None
+    assert ops.set_default_impl(None) == "ref"
+
+
+def test_legacy_impl_kwarg_still_works():
+    """The pre-registry per-op ``impl=`` signatures are a working shim."""
+    u = jnp.ones((1, 8, 4))
+    dt = jnp.full((1, 8, 4), 0.1)
+    A = -jnp.ones((4, 2))
+    Bm = jnp.ones((1, 8, 2))
+    Cm = jnp.ones((1, 8, 2))
+    y_ref = ops.selective_scan(u, dt, A, Bm, Cm, chunk=4, impl="ref")
+    y_int = ops.selective_scan(u, dt, A, Bm, Cm, chunk=4, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    assert ops._resolve(None) == "ref"                # deprecated alias
+    assert ops._resolve("interpret") == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# decode-step kernel vs oracle (dtype sweep)
+# ---------------------------------------------------------------------------
+
+def _step_inputs(key, B, De, N, dtype):
+    ks = jax.random.split(key, 7)
+    h = jax.random.normal(ks[0], (B, De, N), jnp.float32)
+    u = jax.random.normal(ks[1], (B, De)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (B, De)) - 1.0).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[3], (De, N)) * 0.5)
+    Bt = jax.random.normal(ks[4], (B, N)).astype(dtype)
+    Ct = jax.random.normal(ks[5], (B, N)).astype(dtype)
+    D = jnp.ones((De,), jnp.float32) * 0.5
+    return h, u, dt, A, Bt, Ct, D
+
+
+@pytest.mark.parametrize("B,De,N,de_tile", [
+    (1, 8, 4, 8), (3, 16, 4, 8), (2, 32, 16, 32), (2, 24, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_step_pallas_vs_ref(B, De, N, de_tile, dtype):
+    h, u, dt, A, Bt, Ct, D = _step_inputs(jax.random.PRNGKey(0), B, De, N,
+                                          dtype)
+    h_ref, y_ref = ref.selective_scan_step(h, u, dt, A, Bt, Ct, D)
+    h_pal, y_pal = decode_step_pallas(h, u, dt, A, Bt, Ct, D,
+                                      de_tile=de_tile, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,De,N,Dm,de_tile", [
+    (2, 16, 4, 8, 16),
+    (2, 32, 8, 16, 8),     # multi-tile: out row accumulates across De tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_step_fused_epilogue_vs_ref(B, De, N, Dm, de_tile, dtype):
+    h, u, dt, A, Bt, Ct, D = _step_inputs(jax.random.PRNGKey(1), B, De, N,
+                                          dtype)
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    g = jax.random.normal(ks[0], (B, De)).astype(dtype)
+    w_out = (jax.random.normal(ks[1], (De, Dm)) * 0.1).astype(dtype)
+    h_ref, y_ref = ref.selective_scan_step(h, u, dt, A, Bt, Ct, D)
+    out_ref = dense(y_ref * g, w_out)
+    h_pal, out_pal = decode_step_fused_pallas(h, u, dt, A, Bt, Ct, D, g,
+                                              w_out, de_tile=de_tile,
+                                              interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(out_pal, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_step_without_skip_term():
+    h, u, dt, A, Bt, Ct, _ = _step_inputs(jax.random.PRNGKey(3), 2, 8, 4,
+                                          jnp.float32)
+    h_ref, y_ref = ref.selective_scan_step(h, u, dt, A, Bt, Ct, None)
+    h_pal, y_pal = decode_step_pallas(h, u, dt, A, Bt, Ct, None,
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_ops_step_requires_gate_and_wout_together():
+    h, u, dt, A, Bt, Ct, D = _step_inputs(jax.random.PRNGKey(4), 1, 8, 4,
+                                          jnp.float32)
+    with pytest.raises(ValueError):
+        ops.selective_scan_step(h, u, dt, A, Bt, Ct, D,
+                                gate=jnp.ones((1, 8)))
+
+
+def test_ops_step_ref_matches_legacy_composition():
+    """impl='ref' with the epilogue must equal the legacy unfused op order
+    bit-for-bit (this is what keeps kernels=None byte-stable)."""
+    h, u, dt, A, Bt, Ct, D = _step_inputs(jax.random.PRNGKey(5), 2, 16, 4,
+                                          jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(6), (2, 16))
+    w_out = jax.random.normal(jax.random.PRNGKey(7), (16, 8)) * 0.1
+    h_ref, y = ref.selective_scan_step(h, u, dt, A, Bt, Ct, D)
+    legacy = dense(y * g, w_out)
+    h2, out = ops.selective_scan_step(h, u, dt, A, Bt, Ct, D, gate=g,
+                                      w_out=w_out, impl="ref")
+    assert np.array_equal(np.asarray(out), np.asarray(legacy))
+    assert np.array_equal(np.asarray(h2), np.asarray(h_ref))
+
+
+# ---------------------------------------------------------------------------
+# routed expert projection vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,E,F,K", [
+    (4, 16, 4, 24, 2), (8, 32, 8, 16, 1), (2, 8, 2, 8, 2), (5, 24, 3, 40, 2),
+])
+@pytest.mark.parametrize("weighted", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_routed_matmul_impls_vs_ref(T, D, E, F, K, weighted, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (T, D)).astype(dtype)
+    w = (jax.random.normal(ks[1], (E, D, F)) * 0.1).astype(dtype)
+    idx = jax.random.randint(ks[2], (T, K), 0, E)
+    wts = (jax.nn.softmax(jax.random.normal(ks[3], (T, K)), axis=-1)
+           if weighted else None)
+    y_ref = ref.routed_matmul_ref(x, w, idx, wts)
+    y_fus = ref.routed_matmul_fused(x, w, idx, wts)
+    y_pal = routed_matmul_pallas(x, w, idx, wts, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    for got in (y_fus, y_pal):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+def test_routed_matmul_ref_matches_dense_moe_linear():
+    """The op's ref oracle and the dispatch layer's dense path are the same
+    float composition — one correctness gate for both."""
+    from repro.core import moe_dispatch as md
+    from repro.core.router import Routing
+    T, D, E, F, K = 6, 8, 4, 12, 2
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (T, D))
+    w = jax.random.normal(ks[1], (E, D, F)) * 0.1
+    idx = jax.random.randint(ks[2], (T, K), 0, E)
+    wts = jax.nn.softmax(jax.random.normal(ks[3], (T, K)), axis=-1)
+    routing = Routing(num_experts=E, top_k=K, weights=wts[None],
+                      expert_idx=idx[None], probs=None, metrics={})
+    y_dense = md.dense_moe_linear(routing, x[None], w, weighted=True)[0]
+    y_op = ref.routed_matmul_ref(x, w, idx, wts)
+    assert np.array_equal(np.asarray(y_dense), np.asarray(y_op))
+
+
+# ---------------------------------------------------------------------------
+# one decode step through every mixer pattern: ref vs pallas scope
+# ---------------------------------------------------------------------------
+
+def _full_cfg(segments, **kw):
+    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
+                d_ff=64,
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8),
+                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                              capacity_factor=8.0, impl="capacity"),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
+            ("mlstm",), ("slstm",), ("rom_mamba", "mlp"), ("rom_mamba2",),
+            ("rom_gdn",), ("rom_rglru",), ("rom_mlstm",)]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS,
+                         ids=["+".join(p) for p in PATTERNS])
+def test_decode_step_scope_identity_all_patterns(pattern):
+    """One jitted lm.decode_step under default_impl('ref') vs ('pallas'):
+    non-RoM patterns share the exact oracle graph (bitwise-equal logits);
+    RoM patterns swap the O(E×) dense mix for the top-k gathered fast path,
+    allowed ULP-level float drift but never an argmax change here."""
+    cfg = _full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    st = lm.init_state(cfg, 2, 16, jnp.dtype(cfg.dtype))
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    rt = lm.Runtime(shard=ParallelPlan.single_device().shard_ctx(),
+                    rng=None, train=False)
+
+    def f(p, s, t):
+        return lm.decode_step(p, s, t, jnp.int32(0), cfg, rt)
+
+    outs = {}
+    for impl in ("ref", "pallas"):
+        with ops.default_impl(impl):
+            logits, _ = jax.jit(f)(params, st, toks)
+        outs[impl] = np.asarray(logits)
+    if pattern[0].startswith("rom_"):
+        np.testing.assert_allclose(outs["pallas"], outs["ref"], atol=1e-6,
+                                   rtol=1e-6)
+        assert np.array_equal(outs["pallas"].argmax(-1),
+                              outs["ref"].argmax(-1))
+    else:
+        assert np.array_equal(outs["pallas"], outs["ref"])
+
+
+# ---------------------------------------------------------------------------
+# engine-level greedy identity: kernels="pallas" vs "ref"
+# ---------------------------------------------------------------------------
+
+def _engine_tokens(cfg, params, kernels, *, admission="interleaved",
+                   speculative=0, cache=None, scheduler=None):
+    eng = ServeEngine(cfg, params,
+                      engine=EngineConfig(max_slots=2, max_len=48, seed=0,
+                                          max_prefill_chunk=8,
+                                          admission=admission,
+                                          speculative=speculative,
+                                          kernels=kernels),
+                      prefix_cache=cache, scheduler=scheduler)
+    rng = np.random.default_rng(3)
+    reqs = [Request(id=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=(n,)).tolist(),
+                    max_new_tokens=6)
+            for i, n in enumerate([5, 11, 3, 7])]
+    res = eng.run(reqs)
+    return {r.id: (r.tokens, r.finish_reason) for r in res}
+
+
+@pytest.mark.parametrize("pattern", [("mamba", "attn"), ("rom_mamba", "mlp")],
+                         ids=["mamba+attn", "rom_mamba+mlp"])
+@pytest.mark.parametrize("mode", ["interleaved", "sequential", "speculative"])
+def test_engine_greedy_identity_pallas_vs_ref(pattern, mode):
+    """EngineConfig(kernels='pallas') must emit greedy tokens identical to
+    kernels='ref' through interleaved, sequential, and speculative serving
+    (4 mixed-length requests on 2 slots force admission mid-decode)."""
+    cfg = _full_cfg(((pattern, 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = (dict(speculative=3) if mode == "speculative"
+          else dict(admission=mode))
+    a = _engine_tokens(cfg, params, "ref", **kw)
+    b = _engine_tokens(cfg, params, "pallas", **kw)
+    assert a == b
+
+
+def test_engine_greedy_identity_with_prefix_cache_hits():
+    """Cache-hit admission (restored prefix snapshots, grouped lanes) under
+    kernels='pallas' vs 'ref': same greedy tokens, and the cache must
+    actually serve hits in both runs."""
+    from repro.serve import CachedSuffixFirst
+    cfg = _full_cfg((((("rom_mamba", "mlp")), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(2, cfg.vocab_size, size=(12,)).tolist()
+    outs = {}
+    for impl in ("ref", "pallas"):
+        cache = PrefixCache(budget_mb=8.0)
+        eng = ServeEngine(cfg, params,
+                          engine=EngineConfig(max_slots=2, max_len=48,
+                                              seed=0, max_prefill_chunk=4,
+                                              kernels=impl),
+                          prefix_cache=cache,
+                          scheduler=CachedSuffixFirst(cache))
+        eng.run([Request(id=-1, prompt=shared + [1], max_new_tokens=1)])
+        reqs = [Request(id=i, prompt=shared + [40 + i], max_new_tokens=6)
+                for i in range(3)]
+        res = eng.run(reqs)
+        assert eng.stats["cache_hit_tokens"] > 0, impl
+        outs[impl] = {r.id: r.tokens for r in res}
+    assert outs["ref"] == outs["pallas"]
+
+
+def test_engine_config_rejects_unknown_kernels():
+    cfg = _full_cfg(((("mamba",), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, engine=EngineConfig(kernels="cuda"))

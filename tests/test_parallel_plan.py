@@ -326,6 +326,33 @@ print("sequential sharded OK")
 
 
 @pytest.mark.slow
+def test_sharded_plan_kernels_pallas_matches_ref(subproc):
+    """EngineConfig(kernels='pallas') (fused decode fast path) under a
+    data=4 plan — and data=2,model=2 for the RoM pattern, where the routed
+    projection takes the top-k gathered path — emits the same greedy
+    tokens as kernels='ref' on a single device."""
+    subproc(_COMMON + """
+for pattern, plans in [
+        (("mamba", "attn"), [ParallelPlan.host(data=4)]),
+        (("rom_mamba", "mlp"), [ParallelPlan.host(data=4),
+                                ParallelPlan.host(data=2, model=2)]),
+]:
+    cfg = full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lens = [5, 11, 3, 7, 4, 6]
+    def ec(kernels):
+        return EngineConfig(max_slots=4, max_len=32, seed=0,
+                            max_prefill_chunk=8, kernels=kernels)
+    _, ref = run(cfg, params, ParallelPlan.single_device(), ec("ref"),
+                 requests(cfg, lens))
+    for plan in plans:
+        _, got = run(cfg, params, plan, ec("pallas"), requests(cfg, lens))
+        assert got == ref, (pattern, plan.describe(), got, ref)
+    print("sharded kernels parity OK:", pattern)
+""", n_devices=8)
+
+
+@pytest.mark.slow
 def test_expert_sharded_grouped_matmul_matches_oracle(subproc):
     """The grouped-matmul path under the plan's expert partition
     (shard_map over the model axis) computes exactly the capacity-einsum

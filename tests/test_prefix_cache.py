@@ -140,6 +140,33 @@ def test_cached_suffix_first_reranks_as_tree_fills():
     assert s.pop_next().id == 1                   # suffix now 1: re-ranked
 
 
+def test_cached_suffix_first_caps_hit_at_len_minus_one():
+    """Ranking must clamp the reported hit to len(prompt)-1, exactly like
+    admission's ``lookup``: a full-prompt snapshot still costs one token of
+    prefill (fresh logits for the first sampled token), so a cache that
+    reports a full-length hit must not let that request outrank an earlier
+    one whose *restorable* suffix is the same."""
+    class OverReportingCache:
+        version = 0
+
+        def peek_len(self, tokens):
+            # uncapped longest leading run of 7s (PrefixCache.peek_len
+            # itself caps; this models a cache that does not)
+            n = 0
+            for t in tokens:
+                if t != 7:
+                    break
+                n += 1
+            return n
+
+    s = CachedSuffixFirst(OverReportingCache())
+    s.add(Request(id=0, prompt=[7, 7, 1]))      # hit 2, suffix 1
+    s.add(Request(id=1, prompt=[7, 7]))         # reported 2 -> capped 1:
+    s.add(Request(id=2, prompt=[5, 6]))         # ties id=0, FIFO keeps it
+    assert s.peek_next().id == 0                # unclamped would pick id=1
+    assert [s.pop_next().id for _ in range(3)] == [0, 1, 2]
+
+
 # ---------------------------------------------------------------------------
 # snapshot / restore round-trip + leaf classification
 # ---------------------------------------------------------------------------
