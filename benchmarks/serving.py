@@ -1,9 +1,11 @@
 """Serving benchmark: a registry of named scenarios sharing one runner.
 
-    PYTHONPATH=src python benchmarks/serving.py --smoke --out BENCH_serving.json
+    PYTHONPATH=src python benchmarks/serving.py --smoke --mixer-sweep \
+        --out BENCH_serving.json
     PYTHONPATH=src python benchmarks/serving.py --smoke --scenario kernels
     PYTHONPATH=src python benchmarks/serving.py --arch rom-mamba-115m \
         --prompt-len 128 --gen 32 --scenario engine --scenario load
+    PYTHONPATH=src python benchmarks/serving.py --list
 
 Each scenario is a ``@scenario("name")``-registered function taking the
 shared ``BenchContext`` (config, params, plan, prompts) and returning a
@@ -24,10 +26,13 @@ Scenarios:
                  full ServeEngine.
   kernels        EngineConfig(kernels=...) A/B: decode tokens/s under the
                  "ref" oracles vs the "pallas" fused decode fast path
-                 (single-timestep selective scan fused with gate/out-proj,
-                 routed top-k expert projection without dispatch
-                 machinery), plus a greedy token-identity check between
-                 the two.
+                 (per-mixer single-timestep recurrence kernels fused with
+                 gate/out-proj, routed top-k expert projection without
+                 dispatch machinery, greedy argmax folded into the output
+                 projection), plus a greedy token-identity check between
+                 the two.  ``--mixer-sweep`` adds the same A/B per
+                 recurrent-mixer family (mamba2/gdn/rglru/mlstm/slstm) on
+                 one reduced arch each.
   load           staggered-arrival scenario: requests arrive in bursts
                  while decode is active, under both admission modes plus a
                  no-admission baseline; decode tokens/s, stall seconds,
@@ -39,10 +44,13 @@ Scenarios:
                  ways.
 
 Every scenario dict carries an ``engine`` stamp built by the single
-``engine_stamp`` helper (schema_version, plan, admission mode, speculative
-K, draft stride, slots, prefill chunk, prefix-cache budget, scheduler,
-kernels impl) so the per-PR artifacts are self-describing; the full JSON
-schema is documented in docs/serving.md.
+``engine_stamp`` helper (schema_version, jax/jaxlib versions, device
+kind, plan, admission mode, speculative K, draft stride, slots, prefill
+chunk, prefix-cache budget, scheduler, kernels impl) so the per-PR
+artifacts are self-describing; the full JSON schema is documented in
+docs/serving.md.  ``--kernels-impl interpret`` swaps the fast side of
+the kernels A/B to the real Pallas kernels under the interpreter — the
+CI identity gate (benchmarks/trajectory.py --identity-only).
 """
 from __future__ import annotations
 
@@ -74,7 +82,8 @@ def _best_of(fn, iters):
 #: Version of the benchmark JSON schema (stamped on every scenario via
 #: ``engine_stamp``).  Bump when scenario keys change shape or meaning so
 #: per-PR artifacts stay comparable across history.
-SCHEMA_VERSION = 3
+#: v4: jax/jaxlib/device_kind in the stamp, per-mixer kernels sweep.
+SCHEMA_VERSION = 4
 
 
 def engine_stamp(engine):
@@ -83,9 +92,16 @@ def engine_stamp(engine):
     must build their stamp here — never inline — so fields (and
     ``schema_version``) stay consistent across the report.  ``plan``
     records the ParallelPlan (mesh shape + slot/expert partitions), making
-    every perf artifact attributable to a topology."""
+    every perf artifact attributable to a topology; ``jax``/``jaxlib``/
+    ``device_kind`` pin the software and device generation the numbers
+    came from (trajectory.py warns — without failing — when the committed
+    baseline was produced on a different device kind)."""
+    import jaxlib
     return {
         "schema_version": SCHEMA_VERSION,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device_kind": jax.devices()[0].device_kind,
         "plan": engine.plan.describe(),
         "admission": engine.admission,
         "speculative_k": engine.spec.k if engine.spec else 0,
@@ -108,11 +124,15 @@ def engine_stamp(engine):
 SCENARIOS: Dict[str, Callable[["BenchContext"], dict]] = {}
 
 
-def scenario(name: str):
+def scenario(name: str, features=()):
     """Register a benchmark scenario under ``name`` (selectable with
-    ``--scenario name``; all registered scenarios run by default)."""
+    ``--scenario name``; all registered scenarios run by default).
+    ``features`` names the engine capabilities the scenario exercises —
+    ``--list`` prints them so a reader knows what each number measures
+    without opening the function."""
     def deco(fn):
         fn.scenario_name = name
+        fn.features = tuple(features)
         SCENARIOS[name] = fn
         return fn
     return deco
@@ -204,8 +224,10 @@ def parallel_prefill_tps(cfg, params, prompts, max_len, chunk, iters=3):
     return _best_of(once, iters)
 
 
-@scenario("prefill")
+@scenario("prefill", features=("chunked_prefill",))
 def prefill_metrics(ctx: BenchContext):
+    """Chunked parallel prefill tokens/s vs the token-by-token decode
+    baseline, and their ratio."""
     prompts = jnp.asarray(ctx.prompts)
     par = parallel_prefill_tps(ctx.cfg, ctx.params, prompts, ctx.max_len,
                                ctx.chunk)
@@ -222,8 +244,10 @@ def prefill_metrics(ctx: BenchContext):
 # engine: batch decode throughput + TTFT through the full ServeEngine
 # ---------------------------------------------------------------------------
 
-@scenario("engine")
+@scenario("engine", features=("continuous_batching",))
 def engine_metrics(ctx: BenchContext):
+    """Batch decode throughput + TTFT percentiles through the full
+    ServeEngine on the benchmark batch."""
     engine = ctx.engine()
     engine.run(ctx.requests())                  # compile + warm
     engine.reset_stats()
@@ -245,46 +269,133 @@ def engine_metrics(ctx: BenchContext):
 # ---------------------------------------------------------------------------
 
 def _step_time_s(cfg, params, kernels, batch, max_len, iters=5, steps=100):
-    """Best-of jitted single-decode-step latency under an
-    ``ops.default_impl`` scope — jax-only, so the engine's Python loop
-    (identical across impls, and the dominant wall-clock term at smoke
-    scale) doesn't drown the kernel difference."""
+    """Best-of greedy decode+sample step latency under an
+    ``ops.default_impl`` scope, measured as one jitted ``lax.scan`` over
+    ``steps`` steps — a single dispatch, so neither the engine's Python
+    loop nor per-call host dispatch (identical across impls, and the
+    dominant wall-clock terms at smoke scale) drowns the kernel
+    difference.  The step is composed exactly as the engine's
+    ``decode_core`` runs it: full logits + ``sample`` under "ref",
+    pre-logits hidden row + the fused sampling epilogue (argmax inside
+    the output projection, no softmax stats) under a kernel scope."""
     from repro.kernels import ops as kernel_ops
+    from repro.serve.sampling import sample, sample_fused
 
     rt = lm.Runtime(shard=ParallelPlan.single_device().shard_ctx(),
                     rng=None, train=False)
     st = lm.init_state(cfg, batch, max_len, jnp.dtype(cfg.dtype))
     toks = jnp.full((batch, 1), 3, jnp.int32)
+    rng = jax.random.PRNGKey(0)
+    temp = jnp.zeros((batch,), jnp.float32)
+    topk = jnp.zeros((batch,), jnp.int32)
+    topp = jnp.ones((batch,), jnp.float32)
+
+    def step_ref(p, s, t):
+        logits, s2 = lm.decode_step(p, s, t, jnp.int32(0), cfg, rt)
+        return sample(logits, rng, temp, topk, topp), s2
+
+    def step_fused(p, s, t):
+        hidden, s2 = lm.decode_step_hidden(p, s, t, jnp.int32(0), cfg, rt)
+        table = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+        nxt = sample_fused(
+            hidden[:, 0], table, cfg.tie_embeddings, cfg.logit_softcap,
+            lambda: lm.logits_fn(p, hidden, cfg, rt)[:, 0],
+            rng, temp, topk, topp)
+        return nxt, s2
+
     with kernel_ops.default_impl(kernels):
-        fn = jax.jit(lambda p, s, t: lm.decode_step(p, s, t, jnp.int32(0),
-                                                    cfg, rt))
-        logits, _ = fn(params, st, toks)
-        jax.block_until_ready(logits)                # compile outside timing
+        step = (step_ref if kernel_ops.active_default() is None
+                or kernels == "ref" else step_fused)
+
+        def body(s, _):
+            nxt, s2 = step(params, s, toks)
+            return s2, nxt
+
+        fn = jax.jit(lambda s: jax.lax.scan(body, s, None, length=steps)[1])
+        jax.block_until_ready(fn(st))                # compile outside timing
         best = float("inf")
         for _ in range(iters):
             t0 = time.perf_counter()
-            s = st
-            for _ in range(steps):
-                logits, s = fn(params, s, toks)
-            jax.block_until_ready(logits)
+            jax.block_until_ready(fn(st))
             best = min(best, (time.perf_counter() - t0) / steps)
     return best
 
 
-@scenario("kernels")
+#: mixer family -> (registered arch carrying the family's hyperparams,
+#: the layer kind the sweep stacks).  RoM variants where one exists, so
+#: the routed projection fast path rides along; plain slstm has no RoM
+#: form.  ``--mixer-sweep`` A/Bs each one.
+MIXER_ARCHS = {
+    "mamba2": ("mamba2-rom-353m", "rom_mamba2"),
+    "gdn": ("gdn-rom-343m", "rom_gdn"),
+    "rglru": ("rom-recurrentgemma-2b", "rom_rglru"),
+    "mlstm": ("rom-xlstm-350m", "rom_mlstm"),
+    "slstm": ("xlstm-350m", "slstm"),
+}
+
+
+def _mixer_ab(ctx: BenchContext, arch_name, kind, depth=4, prompt_len=16,
+              gen=6, batch=2, steps=25):
+    """One kernels A/B per mixer family: greedy token identity through the
+    engine plus the jitted decode-step microbenchmark under kernels='ref'
+    vs 'pallas'.  The model is a short pure stack of the family's layer
+    kind (hyperparams from its registered arch) — a mixed-pattern arch
+    would bury the mixer under the other layers, and a toy vocab would
+    bury the fused sampling epilogue (whose saving is vocab-proportional),
+    so the smoke reduction keeps a serving-sized vocab.  Workload is
+    deliberately small — each sweep entry compiles its own model twice,
+    and the step ratio (not the absolute number) is the signal."""
+    cfg = get_config(arch_name)
+    if ctx.args.smoke:
+        cfg = reduce_for_smoke(cfg).replace(vocab_size=4096)
+    cfg = cfg.replace(name=f"{cfg.name}-{kind}x{depth}",
+                      segments=(((kind,), depth),))
+    params = lm.init_params(jax.random.PRNGKey(ctx.seed), cfg)
+    max_len = prompt_len + gen + 1
+    rng = np.random.default_rng(ctx.seed)
+    prompts = rng.integers(2, cfg.vocab_size, size=(batch, prompt_len))
+    out = {"arch": cfg.name}
+    fast = ctx.args.kernels_impl
+    toks = {}
+    for impl in ("ref", fast):
+        eng = ServeEngine(cfg, params,
+                          engine=EngineConfig(max_slots=batch,
+                                              max_len=max_len, seed=ctx.seed,
+                                              max_prefill_chunk=8,
+                                              kernels=impl))
+        res = eng.run([Request(id=i, prompt=prompts[i].tolist(),
+                               max_new_tokens=gen) for i in range(batch)])
+        toks[impl] = {r.id: r.tokens for r in res}
+        step_s = _step_time_s(cfg, params, impl, batch, max_len, iters=3,
+                              steps=steps)
+        out[impl] = {"step_us": round(step_s * 1e6, 1),
+                     "step_tps": round(batch / step_s, 1),
+                     "engine": engine_stamp(eng)}
+    out["step_tps_vs_ref"] = round(
+        out[fast]["step_tps"] / max(out["ref"]["step_tps"], 1e-9), 3)
+    out["greedy_identical"] = bool(toks["ref"] == toks[fast])
+    return out
+
+
+@scenario("kernels", features=("kernels", "fused_sampling"))
 def kernels_metrics(ctx: BenchContext, iters=3):
     """EngineConfig(kernels=...) A/B on the same requests: "ref" decodes
     through the jnp oracles (O(E×) dense experts for RoM), "pallas"
     through the fused decode fast path (on TPU the Pallas kernels, off-TPU
     their fused jnp composites — either way skipping the MoE dispatch
-    machinery per token).  Greedy outputs must be token-identical.  Each
-    impl carries two throughputs: ``decode_tps`` through the full engine
+    machinery per token, and folding greedy sampling into the output
+    projection).  Greedy outputs must be token-identical.  Each impl
+    carries two throughputs: ``decode_tps`` through the full engine
     (end-to-end, includes the impl-independent host loop) and ``step_tps``
     from a jitted decode-step microbenchmark (the kernel-level number —
-    its ratio is the enforceable "measurably faster" claim)."""
-    out = {}
+    its ratio is the enforceable "measurably faster" claim).  With
+    ``--mixer-sweep``, ``mixers`` adds the same A/B per recurrent-mixer
+    family on its own arch (each with its own ``greedy_identical`` gate,
+    enforced recursively by trajectory.py)."""
+    out = {"arch": ctx.cfg.name}
+    fast = ctx.args.kernels_impl
     toks = {}
-    for impl in ("ref", "pallas"):
+    for impl in ("ref", fast):
         eng = ctx.engine(kernels=impl)
         results = eng.run(ctx.requests())            # compile + warm
         toks[impl] = {r.id: r.tokens for r in results}
@@ -301,8 +412,12 @@ def kernels_metrics(ctx: BenchContext, iters=3):
                      "engine": engine_stamp(eng)}
     for m in ("decode_tps", "step_tps"):
         out[f"{m}_vs_ref"] = round(
-            out["pallas"][m] / max(out["ref"][m], 1e-9), 3)
-    out["greedy_identical"] = bool(toks["ref"] == toks["pallas"])
+            out[fast][m] / max(out["ref"][m], 1e-9), 3)
+    out["greedy_identical"] = bool(toks["ref"] == toks[fast])
+    if ctx.args.mixer_sweep:
+        out["mixers"] = {name: _mixer_ab(ctx, arch, kind)
+                         for name, (arch, kind) in sorted(
+                             MIXER_ARCHS.items())}
     return out
 
 
@@ -310,7 +425,7 @@ def kernels_metrics(ctx: BenchContext, iters=3):
 # speculative: self-speculative decoding on vs off
 # ---------------------------------------------------------------------------
 
-@scenario("speculative")
+@scenario("speculative", features=("speculative", "draft_stride"))
 def speculative_metrics(ctx: BenchContext, iters=3):
     """Greedy decode of the same requests with speculative decoding on vs
     off: decode tokens/s for both, acceptance rate, tokens per round.
@@ -352,7 +467,7 @@ def speculative_metrics(ctx: BenchContext, iters=3):
 # prefix_cache: shared-system-prompt workload
 # ---------------------------------------------------------------------------
 
-@scenario("prefix_cache")
+@scenario("prefix_cache", features=("prefix_cache", "scheduler"))
 def prefix_cache_metrics(ctx: BenchContext, n_requests=6, tail_len=8,
                          max_slots=4, chunk=16, iters=3):
     """The workload prefix caching unlocks: every request shares a long
@@ -478,7 +593,7 @@ def _scenario_requests(prompts, gen, n_initial):
     return initial, arrivals
 
 
-@scenario("load")
+@scenario("load", features=("admission", "submit_tick"))
 def load_metrics(ctx: BenchContext, max_slots=6, n_initial=4, iters=5):
     """Staggered arrivals during active decode, run under both admission
     modes plus a no-admission baseline (warm-up pass first so jit
@@ -590,6 +705,21 @@ def run_scenarios(args) -> dict:
     }
 
 
+def list_scenarios() -> str:
+    """One line per registered scenario: name, required engine features,
+    first docstring sentence (what ``--list`` prints)."""
+    width = max(len(n) for n in SCENARIOS)
+    fwidth = max(len(",".join(f.features)) or 1
+                 for f in SCENARIOS.values())
+    lines = []
+    for name in sorted(SCENARIOS):
+        fn = SCENARIOS[name]
+        feats = ",".join(fn.features) or "-"
+        doc = (fn.__doc__ or "").strip().split("\n")[0]
+        lines.append(f"{name:<{width}}  {feats:<{fwidth}}  {doc}")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rom-mamba-115m")
@@ -601,6 +731,20 @@ def main(argv=None):
                     metavar="NAME", default=None,
                     help="run only this scenario (repeatable; default: "
                          f"all of {sorted(SCENARIOS)})")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered scenarios with the engine "
+                         "features each one exercises, then exit")
+    ap.add_argument("--mixer-sweep", action="store_true",
+                    help="extend the kernels scenario with a per-mixer "
+                         "fused-step A/B (one reduced arch per family: "
+                         f"{sorted(MIXER_ARCHS)})")
+    ap.add_argument("--kernels-impl", default="pallas",
+                    choices=("pallas", "interpret"),
+                    help="fast-path impl the kernels scenario A/Bs against "
+                         "'ref' — 'interpret' runs the actual Pallas "
+                         "kernels under the interpreter on CPU (the CI "
+                         "identity gate), 'pallas' takes the per-op "
+                         "backend resolution")
     ap.add_argument("--speculative-k", type=int, default=3,
                     help="draft window of the speculative scenario")
     ap.add_argument("--draft-stride", type=int, default=2,
@@ -621,6 +765,10 @@ def main(argv=None):
     ap.add_argument("--out", default="",
                     help="write JSON here (default: stdout only)")
     args = ap.parse_args(argv)
+
+    if args.list:
+        print(list_scenarios())
+        return
 
     report = run_scenarios(args)
     text = json.dumps(report, indent=2)

@@ -308,15 +308,11 @@ def rom_mamba2_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     xbc = silu(xbc)
     x_, B_t, C_t = jnp.split(xbc, [de, de + n], axis=-1)
     dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
-    a = jnp.exp(dt * -jnp.exp(params["A_log_h"]))
     xh = x_.reshape(-1, nh, hd).astype(jnp.float32)
-    h = (state["h"] * a[..., None, None] +
-         jnp.einsum("bhp,bn,bh->bhpn", xh, B_t.astype(jnp.float32), dt))
-    y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
-    y = y + xh * params["D_h"][:, None]
-    y = y.reshape(-1, de).astype(x_t.dtype)
-    from repro.nn.layers import rmsnorm
-    y = rmsnorm({"scale": params["scale_inner"]}, y * silu(z), cfg.norm_eps)
+    # core-only fused step (no w_out: the out-projection is routed below)
+    h, y = kops.mamba2_step(state["h"], xh, dt, params["A_log_h"], B_t, C_t,
+                            params["D_h"], z, params["scale_inner"],
+                            cfg.norm_eps)
     out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
     return out, {"h": h, "conv": conv_buf}, sr.metrics()
 
@@ -384,17 +380,9 @@ def rom_gdn_step(params, x_t, state, pos, cfg, rt: Runtime, ctx=None):
     a_in, b_in = jnp.split(ab, 2, axis=-1)
     a = jnp.exp(-jnp.exp(jnp.clip(a_in.astype(jnp.float32), -8, 3)))
     b = jax.nn.sigmoid(b_in.astype(jnp.float32))
-    S = state["S"]
-    f32 = jnp.float32
-    Sk = jnp.einsum("bhkv,bhk->bhv", S, k.astype(f32))
-    S = (S * a[..., None, None]
-         - jnp.einsum("bhk,bhv->bhkv", (k * (a * b)[..., None]).astype(f32), Sk)
-         + jnp.einsum("bhk,bhv->bhkv", (k * b[..., None]).astype(f32),
-                      v.astype(f32)))
-    y = jnp.einsum("bhkv,bhk->bhv", S, q.astype(f32)).reshape(B_, dv)
-    from repro.nn.layers import rmsnorm
-    y = rmsnorm({"scale": params["scale_inner"]},
-                y.astype(xt.dtype) * silu(z), cfg.norm_eps)
+    # core-only fused step (no w_out: the out-projection is routed below)
+    S, y = kops.gdn_step(state["S"], q, k, v, a, b, z,
+                         params["scale_inner"], cfg.norm_eps)
     out = sr.proj(y[:, None], params["e_w_out"], weighted=True, tag="y")
     return out, {"S": S, "conv": conv_buf}, sr.metrics()
 

@@ -1,0 +1,175 @@
+"""Tile-shape autotuner for the decode-step Pallas kernel family.
+
+Every fused-step kernel takes a tile size (channel / head / vocab tile);
+the right value depends on the device generation and the model's
+head/state dims.  Rather than hard-coding interpret-mode defaults, the
+kernels ask :func:`tile_for` at trace time:
+
+  * off TPU (CPU CI, interpret mode) -> the static default, always —
+    CPU timings say nothing about a TPU's VMEM/MXU tradeoffs, so the
+    table is never consulted or written there;
+  * on TPU -> look up the committed tuning table
+    (``kernels/tuning_table.json``) under the key
+    ``"{op}/{dtype}/{pow2-bucket(dim)}"``; on a miss, run the op's
+    registered sweep (synthetic shapes, best-of wall clock over the
+    candidate tiles) once, record the winner into the table, and use it
+    from then on.
+
+The table is committed: refresh it on a real device with
+
+    PYTHONPATH=src python -m repro.kernels.autotune
+
+which sweeps every registered op over the standard dim buckets and
+rewrites the JSON (it refuses to run off-TPU instead of recording
+garbage).  Buckets are powers of two so one sweep covers every model
+whose dim rounds to the same bucket.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+
+TABLE_PATH = pathlib.Path(__file__).with_name("tuning_table.json")
+
+_table: Optional[dict] = None
+
+#: op name -> sweep callable ``(dtype, dim) -> winning tile``
+_SWEEPS: Dict[str, Callable] = {}
+
+
+def bucket(n: int) -> int:
+    """Round a head/state/vocab dim up to its power-of-two bucket."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def table_key(op: str, dtype, dim: int) -> str:
+    import jax.numpy as jnp
+    return f"{op}/{jnp.dtype(dtype).name}/{bucket(dim)}"
+
+
+def _load() -> dict:
+    global _table
+    if _table is None:
+        try:
+            _table = json.loads(TABLE_PATH.read_text())
+        except (OSError, ValueError):
+            _table = {"version": 1, "entries": {}}
+    return _table
+
+
+def _clamp(tile: int, dim: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``tile`` (tiles must
+    divide the dim exactly; gcd keeps the pow2 structure)."""
+    return math.gcd(max(int(tile), 1), int(dim)) or int(dim)
+
+
+def tile_for(op: str, dtype, dim: int, default: int) -> int:
+    """Resolve the tile size for ``op`` at trace time.
+
+    Returns the clamped static ``default`` off-TPU; on TPU consults the
+    committed table and, on a miss, runs the op's registered sweep once
+    and records the winner.
+    """
+    default = _clamp(default, dim)
+    if jax.default_backend() != "tpu":
+        return default
+    entry = _load()["entries"].get(table_key(op, dtype, dim))
+    if entry is not None:
+        return _clamp(entry["tile"], dim)
+    sweep = _SWEEPS.get(op)
+    if sweep is None:
+        return default
+    tile = _clamp(sweep(dtype, dim), dim)
+    record(op, dtype, dim, tile)
+    return tile
+
+
+def record(op: str, dtype, dim: int, tile: int,
+           path: Optional[pathlib.Path] = None) -> None:
+    """Write one winner into the (in-memory and on-disk) tuning table."""
+    tab = _load()
+    tab["entries"][table_key(op, dtype, dim)] = {"tile": int(tile)}
+    target = path or TABLE_PATH
+    try:
+        target.write_text(json.dumps(tab, indent=2, sort_keys=True) + "\n")
+    except OSError:
+        pass                        # read-only checkout: keep the in-memory win
+
+
+def register_sweep(op: str):
+    """Decorator registering ``(dtype, dim) -> tile`` sweep for an op."""
+    def deco(fn):
+        _SWEEPS[op] = fn
+        return fn
+    return deco
+
+
+def time_candidates(run: Callable[[int], Callable[[], object]],
+                    candidates, *, iters: int = 10) -> int:
+    """Best-of wall-clock over candidate tiles.  ``run(tile)`` returns a
+    nullary compiled callable; the fastest tile wins."""
+    best_tile, best_t = None, float("inf")
+    for tile in candidates:
+        try:
+            fn = run(tile)
+            fn()                                    # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue                                # tile doesn't lower: skip
+        if dt < best_t:
+            best_tile, best_t = tile, dt
+    if best_tile is None:
+        raise RuntimeError("no candidate tile compiled")
+    return best_tile
+
+
+def pow2_divisors(dim: int, lo: int = 8):
+    """Power-of-two tile candidates dividing ``dim``."""
+    out = []
+    t = 1
+    while t <= dim:
+        if dim % t == 0 and t >= lo:
+            out.append(t)
+        t <<= 1
+    return out or [dim]
+
+
+def main(argv=None) -> int:
+    """Refresh the committed table on a real device (refuses off-TPU)."""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dims", type=int, nargs="*", default=[256, 512, 1024,
+                                                           2048, 4096],
+                    help="feature-dim buckets to sweep per op")
+    ap.add_argument("--dtypes", nargs="*", default=["float32", "bfloat16"])
+    args = ap.parse_args(argv)
+    if jax.default_backend() != "tpu":
+        print("autotune: no TPU backend — interpret/CPU runs use static "
+              "defaults; run this on a real device to refresh "
+              f"{TABLE_PATH.name}")
+        return 1
+    from repro.kernels import ops as _ops            # registers the sweeps
+    del _ops
+    for op, sweep in sorted(_SWEEPS.items()):
+        for dtype in args.dtypes:
+            for dim in args.dims:
+                tile = _clamp(sweep(dtype, dim), dim)
+                record(op, dtype, dim, tile)
+                print(f"{table_key(op, dtype, dim)} -> tile {tile}")
+    print(f"autotune: wrote {TABLE_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,495 @@
+"""Pallas TPU kernels: per-mixer single-timestep decode steps (phase 2).
+
+One kernel per recurrent mixer family — mamba2 (SSD scalar decay per
+head, flattened to per-channel like the mamba-1 kernel), gdn (delta
+rule), rglru, mlstm and slstm — each advancing the f32 carried state and
+folding the mixer's normalization / gating / output-projection tail into
+the same launch, mirroring ``kernels/decode_step.py``: grid
+(batch, feature tiles), tile axis sequential ("arbitrary") with the
+output row accumulated across tiles in f32 VMEM scratch.
+
+Mixers whose norm is *global* over the flattened feature dim (mamba2 and
+gdn rmsnorm over all heads at once) factor it: every tile accumulates
+its unnormalized gated row and a sum-of-squares scalar, and the last
+tile applies the global ``rsqrt`` — numerically equal to the oracle up
+to f32 rounding (gated allclose in interpret mode; engine-level greedy
+bit-identity rides on the off-TPU 'fused' impl, which shares the
+``kernels/ref.py`` math verbatim).  mlstm/slstm headnorms are per-head
+and therefore tile-local.
+
+Tile sizes default from ``kernels/autotune.py`` (committed tuning table
+on real devices, static defaults under interpret/CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+_DUMMY_SPEC = pl.BlockSpec((1, 1), lambda b, d: (0, 0))
+
+
+# ---------------------------------------------------------------------------
+# mamba2 — SSD scalar-decay step, flattened per-channel (decay/dt/D are
+# broadcast from per-head to per-channel by ops.py), + global rmsnorm of
+# the silu-gated output and optional out-projection.
+# ---------------------------------------------------------------------------
+
+def _mamba2_kernel(h_ref, x_ref, a_ref, dt_ref, b_ref, c_ref, d_ref,
+                   z_ref, s_ref, w_ref, ho_ref, o_ref, acc_ref, ss_ref,
+                   *, nde, de, eps, fused):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    f32 = jnp.float32
+    h = (a_ref[0][:, None] * h_ref[0]
+         + (x_ref[0] * dt_ref[0])[:, None] * b_ref[0].astype(f32)[None, :])
+    y = jnp.sum(h * c_ref[0].astype(f32)[None, :], axis=1)
+    y = y + x_ref[0] * d_ref[0]
+    ho_ref[0] = h
+    t = (y.astype(z_ref.dtype) * _silu(z_ref[0])).astype(f32)   # (TDe,)
+    ss_ref[...] += jnp.sum(t * t).reshape(1, 1)
+    ts = t * s_ref[0].astype(f32)
+    if fused:
+        acc_ref[...] += jnp.dot(ts[None, :], w_ref[...].astype(f32),
+                                preferred_element_type=f32)
+    else:
+        acc_ref[0, pl.ds(d * ts.shape[0], ts.shape[0])] = ts
+
+    @pl.when(d == nde - 1)
+    def _write():
+        r = jax.lax.rsqrt(ss_ref[0, 0] / de + eps)
+        o_ref[...] = (acc_ref[...] * r).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "de_tile", "interpret"))
+def mamba2_step_pallas(h, x, a, dt, B_t, C_t, D, z, scale, eps,
+                       w_out=None, *, de_tile=256, interpret=False):
+    """(h', out).  All per-channel (heads flattened): h (B,De,N) f32;
+    x, a, dt (B,De) f32; B_t, C_t (B,N); D (De,) f32; z (B,De) io;
+    scale (De,); w_out (De,Dm) or None (out is then the (B,De) normed y).
+    """
+    Bsz, De, N = h.shape
+    fused = w_out is not None
+    Dm = w_out.shape[-1] if fused else De
+    nde = De // de_tile
+    w = w_out if fused else jnp.zeros((1, 1), jnp.float32)
+    w_spec = (pl.BlockSpec((de_tile, Dm), lambda b, d: (d, 0)) if fused
+              else _DUMMY_SPEC)
+    hs, out = pl.pallas_call(
+        functools.partial(_mamba2_kernel, nde=nde, de=De, eps=eps,
+                          fused=fused),
+        grid=(Bsz, nde),
+        in_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, N), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (0, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, de_tile), lambda b, d: (0, d)),
+            w_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, de_tile, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, Dm), lambda b, d: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, De, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), z.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Dm), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(h, x, a, dt, B_t, C_t, D.reshape(1, De), z, scale.reshape(1, De), w)
+    return hs, out
+
+
+# ---------------------------------------------------------------------------
+# gdn — delta-rule state update per head tile + global rmsnorm / gate.
+# ---------------------------------------------------------------------------
+
+def _gdn_kernel(s_ref, q_ref, k_ref, v_ref, a_ref, b_ref, z_ref, g_ref,
+                w_ref, so_ref, o_ref, acc_ref, ss_ref,
+                *, nh_tiles, dv, eps, fused):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    f32 = jnp.float32
+    S = s_ref[0]                                          # (th,K,V) f32
+    a = a_ref[0]                                          # (th,) f32
+    b = b_ref[0]
+    k = k_ref[0]                                          # (th,K) io
+    Sk = jnp.einsum("hkv,hk->hv", S, k.astype(f32))
+    S = (S * a[..., None, None]
+         - jnp.einsum("hk,hv->hkv", (k * (a * b)[..., None]).astype(f32),
+                      Sk)
+         + jnp.einsum("hk,hv->hkv", (k * b[..., None]).astype(f32),
+                      v_ref[0].astype(f32)))
+    y = jnp.einsum("hkv,hk->hv", S, q_ref[0].astype(f32))  # (th,V)
+    so_ref[0] = S
+    t = (y.reshape(-1).astype(z_ref.dtype) * _silu(z_ref[0])).astype(f32)
+    ss_ref[...] += jnp.sum(t * t).reshape(1, 1)
+    ts = t * g_ref[0].astype(f32)
+    if fused:
+        acc_ref[...] += jnp.dot(ts[None, :], w_ref[...].astype(f32),
+                                preferred_element_type=f32)
+    else:
+        acc_ref[0, pl.ds(d * ts.shape[0], ts.shape[0])] = ts
+
+    @pl.when(d == nh_tiles - 1)
+    def _write():
+        r = jax.lax.rsqrt(ss_ref[0, 0] / dv + eps)
+        o_ref[...] = (acc_ref[...] * r).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "h_tile", "interpret"))
+def gdn_step_pallas(S, q, k, v, a, b, z, scale, eps, w_out=None, *,
+                    h_tile=2, interpret=False):
+    """(S', out).  S (B,H,K,V) f32; q, k (B,H,K) io; v (B,H,V) io;
+    a, b (B,H) f32; z (B,H*V) io; scale (H*V,); w_out (H*V,Dm) or None.
+    """
+    Bsz, H, K, V = S.shape
+    dv = H * V
+    fused = w_out is not None
+    Dm = w_out.shape[-1] if fused else dv
+    nt = H // h_tile
+    w = w_out if fused else jnp.zeros((1, 1), jnp.float32)
+    w_spec = (pl.BlockSpec((h_tile * V, Dm), lambda b_, d: (d, 0)) if fused
+              else _DUMMY_SPEC)
+    so, out = pl.pallas_call(
+        functools.partial(_gdn_kernel, nh_tiles=nt, dv=dv, eps=eps,
+                          fused=fused),
+        grid=(Bsz, nt),
+        in_specs=[
+            pl.BlockSpec((1, h_tile, K, V), lambda b_, d: (b_, d, 0, 0)),
+            pl.BlockSpec((1, h_tile, K), lambda b_, d: (b_, d, 0)),
+            pl.BlockSpec((1, h_tile, K), lambda b_, d: (b_, d, 0)),
+            pl.BlockSpec((1, h_tile, V), lambda b_, d: (b_, d, 0)),
+            pl.BlockSpec((1, h_tile), lambda b_, d: (b_, d)),
+            pl.BlockSpec((1, h_tile), lambda b_, d: (b_, d)),
+            pl.BlockSpec((1, h_tile * V), lambda b_, d: (b_, d)),
+            pl.BlockSpec((1, h_tile * V), lambda b_, d: (0, d)),
+            w_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h_tile, K, V), lambda b_, d: (b_, d, 0, 0)),
+            pl.BlockSpec((1, Dm), lambda b_, d: (b_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, K, V), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), z.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Dm), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(S, q, k, v, a, b, z, scale.reshape(1, dv), w)
+    return so, out
+
+
+# ---------------------------------------------------------------------------
+# rglru — elementwise gated linear recurrence + optional gelu-gate ×
+# out-projection epilogue (the closest mirror of decode_step._fused_kernel).
+# ---------------------------------------------------------------------------
+
+def _rglru_kernel(h_ref, u_ref, la_ref, i_ref, g_ref, w_ref, ho_ref,
+                  o_ref, acc_ref, *, nd, fused):
+    d = pl.program_id(1)
+    if fused:
+        @pl.when(d == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    f32 = jnp.float32
+    a = jnp.exp(la_ref[0])
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
+    h = a * h_ref[0] + mult * i_ref[0] * u_ref[0].astype(f32)
+    ho_ref[0] = h
+    y = h.astype(u_ref.dtype)
+    if not fused:
+        o_ref[0] = y
+        return
+    zz = y * g_ref[0]
+    acc_ref[...] += jnp.dot(zz[None, :], w_ref[...].astype(zz.dtype),
+                            preferred_element_type=f32)
+
+    @pl.when(d == nd - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def rglru_step_pallas(h, u, log_a, i_gate, gate=None, w_out=None, *,
+                      d_tile=512, interpret=False):
+    """(h', out).  h (B,D) f32; u (B,D) io; log_a, i_gate (B,D) f32;
+    gate (B,D) io + w_out (D,Dm) fold the gelu-gate × projection in.
+    """
+    Bsz, D = h.shape
+    fused = w_out is not None
+    Dm = w_out.shape[-1] if fused else D
+    nd = D // d_tile
+    g = gate if fused else jnp.zeros((1, 1), u.dtype)
+    w = w_out if fused else jnp.zeros((1, 1), jnp.float32)
+    g_spec = (pl.BlockSpec((1, d_tile), lambda b, d: (b, d)) if fused
+              else _DUMMY_SPEC)
+    w_spec = (pl.BlockSpec((d_tile, Dm), lambda b, d: (d, 0)) if fused
+              else _DUMMY_SPEC)
+    o_spec = (pl.BlockSpec((1, Dm), lambda b, d: (b, 0)) if fused
+              else pl.BlockSpec((1, d_tile), lambda b, d: (b, d)))
+    hs, out = pl.pallas_call(
+        functools.partial(_rglru_kernel, nd=nd, fused=fused),
+        grid=(Bsz, nd),
+        in_specs=[
+            pl.BlockSpec((1, d_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, d_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, d_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, d_tile), lambda b, d: (b, d)),
+            g_spec,
+            w_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_tile), lambda b, d: (b, d)),
+            o_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, D), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), u.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Dm), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(h, u, log_a, i_gate, g, w)
+    return hs, out
+
+
+# ---------------------------------------------------------------------------
+# mlstm — matrix-memory cell update per head tile; headnorm is per-head
+# (tile-local), so only the out-projection needs the accumulator.
+# ---------------------------------------------------------------------------
+
+def _mlstm_kernel(c_ref, n_ref, m_ref, q_ref, k_ref, v_ref, il_ref,
+                  fl_ref, z_ref, g_ref, w_ref, co_ref, no_ref, mo_ref,
+                  o_ref, acc_ref, *, nt, eps, fused):
+    d = pl.program_id(1)
+    if fused:
+        @pl.when(d == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    f32 = jnp.float32
+    il = il_ref[0]                                        # (th,) f32
+    fl = fl_ref[0]
+    m = m_ref[0]
+    k = k_ref[0]                                          # (th,K) f32
+    m_new = jnp.maximum(fl + m, il)
+    fpx = jnp.exp(fl + m - m_new)
+    ipx = jnp.exp(il - m_new)
+    C = (fpx[..., None, None] * c_ref[0]
+         + ipx[..., None, None] * (k[..., :, None] * v_ref[0][..., None, :]))
+    n = fpx[..., None] * n_ref[0] + ipx[..., None] * k
+    num = jnp.einsum("hkv,hk->hv", C, q_ref[0])
+    den = jnp.abs(jnp.einsum("hk,hk->h", n, q_ref[0]))
+    y = num / jnp.maximum(den, 1.0)[..., None]            # (th,V) f32
+    co_ref[0] = C
+    no_ref[0] = n
+    mo_ref[0] = m_new
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    yn = (y * jax.lax.rsqrt(var + eps)).reshape(-1)
+    t = (yn * g_ref[0].astype(f32)).astype(z_ref.dtype) * _silu(z_ref[0])
+    if not fused:
+        o_ref[0] = t
+        return
+    acc_ref[...] += jnp.dot(t[None, :], w_ref[...].astype(t.dtype),
+                            preferred_element_type=f32)
+
+    @pl.when(d == nt - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "h_tile", "interpret"))
+def mlstm_step_pallas(C, n, m, q, k, v, il, fl, z, gn_scale, eps,
+                      w_out=None, *, h_tile=2, interpret=False):
+    """(C', n', m', out).  C (B,H,K,V), n (B,H,K), m (B,H) f32 state;
+    q, k (B,H,K), v (B,H,V), il, fl (B,H) f32; z (B,H*V) io;
+    gn_scale (H*V,); w_out (H*V,Dm) or None.
+    """
+    Bsz, H, K, V = C.shape
+    inner = H * V
+    fused = w_out is not None
+    Dm = w_out.shape[-1] if fused else inner
+    nt = H // h_tile
+    w = w_out if fused else jnp.zeros((1, 1), jnp.float32)
+    w_spec = (pl.BlockSpec((h_tile * V, Dm), lambda b, d: (d, 0)) if fused
+              else _DUMMY_SPEC)
+    o_spec = (pl.BlockSpec((1, Dm), lambda b, d: (b, 0)) if fused
+              else pl.BlockSpec((1, h_tile * V), lambda b, d: (b, d)))
+    co, no, mo, out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, nt=nt, eps=eps, fused=fused),
+        grid=(Bsz, nt),
+        in_specs=[
+            pl.BlockSpec((1, h_tile, K, V), lambda b, d: (b, d, 0, 0)),
+            pl.BlockSpec((1, h_tile, K), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, h_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, h_tile, K), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, h_tile, K), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, h_tile, V), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, h_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, h_tile), lambda b, d: (b, d)),
+            pl.BlockSpec((1, h_tile * V), lambda b, d: (b, d)),
+            pl.BlockSpec((1, h_tile * V), lambda b, d: (0, d)),
+            w_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h_tile, K, V), lambda b, d: (b, d, 0, 0)),
+            pl.BlockSpec((1, h_tile, K), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, h_tile), lambda b, d: (b, d)),
+            o_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, K, V), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, K), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), z.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, Dm), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(C, n, m, q, k, v, il, fl, z, gn_scale.reshape(1, inner), w)
+    return co, no, mo, out
+
+
+# ---------------------------------------------------------------------------
+# slstm — scalar-memory cell update per head tile + headnorm, optionally
+# fused with the block's gated-FFN tail (two accumulators: up + gate
+# projections; the last tile contracts the down projection whole).
+# ---------------------------------------------------------------------------
+
+def _slstm_kernel(c_ref, n_ref, h_ref, m_ref, gx_ref, r_ref, b_ref,
+                  g_ref, wu_ref, wg_ref, wd_ref, co_ref, no_ref, ho_ref,
+                  mo_ref, o_ref, au_ref, ag_ref, *, nt, dh, eps, fused):
+    d = pl.program_id(1)
+    if fused:
+        @pl.when(d == 0)
+        def _init():
+            au_ref[...] = jnp.zeros_like(au_ref)
+            ag_ref[...] = jnp.zeros_like(ag_ref)
+
+    f32 = jnp.float32
+    h = h_ref[0]                                          # (th,dh) f32
+    rec = jnp.einsum("hd,hdg->hg", h, r_ref[...])         # (th,4dh)
+    th = h.shape[0]
+    g = gx_ref[0].reshape(th, 4 * dh).astype(f32) + rec + b_ref[...]
+    il, fp, zz, og = jnp.split(g, 4, axis=-1)             # (th,dh)
+    fl = -jax.nn.softplus(-fp)
+    m_new = jnp.maximum(fl + m_ref[0], il)
+    i = jnp.exp(il - m_new)
+    f = jnp.exp(fl + m_ref[0] - m_new)
+    c_new = f * c_ref[0] + i * jnp.tanh(zz)
+    n_new = f * n_ref[0] + i
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1.0)
+    co_ref[0] = c_new
+    no_ref[0] = n_new
+    ho_ref[0] = h_new
+    mo_ref[0] = m_new
+    var = jnp.mean(h_new * h_new, axis=-1, keepdims=True)
+    yn = (h_new * jax.lax.rsqrt(var + eps)).reshape(-1)
+    t = (yn * g_ref[0].astype(f32)).astype(gx_ref.dtype)  # (th*dh,) io
+    if not fused:
+        o_ref[0] = t
+        return
+    au_ref[...] += jnp.dot(t[None, :], wu_ref[...].astype(t.dtype),
+                           preferred_element_type=f32)
+    ag_ref[...] += jnp.dot(t[None, :], wg_ref[...].astype(t.dtype),
+                           preferred_element_type=f32)
+
+    @pl.when(d == nt - 1)
+    def _write():
+        io = o_ref.dtype
+        u = au_ref[...].astype(io) * _silu(ag_ref[...].astype(io))
+        o_ref[...] = jnp.dot(u, wd_ref[...].astype(io),
+                             preferred_element_type=f32).astype(io)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "h_tile", "interpret"))
+def slstm_step_pallas(c, n, h, m, gx, r_w, b, gn_scale, eps, w_up=None,
+                      w_gate=None, w_down=None, *, h_tile=2,
+                      interpret=False):
+    """(c', n', h', m', out).  c/n/h/m (B,H,Dh) f32 state; gx (B,4*H*Dh)
+    io pre-gates; r_w (H,Dh,4Dh) f32; b (H,4Dh) f32 (pre-reshaped by the
+    caller, preserving nn.xlstm's flat-bias layout); gn_scale (H*Dh,).
+    With w_up/w_gate (H*Dh,F) + w_down (F,Dm) the gated-FFN tail is
+    folded in; otherwise out is the (B,H*Dh) head-normed y.
+    """
+    Bsz, H, Dh = c.shape
+    inner = H * Dh
+    fused = w_up is not None
+    F = w_up.shape[-1] if fused else 1
+    Dm = w_down.shape[-1] if fused else inner
+    nt = H // h_tile
+    wu = w_up if fused else jnp.zeros((1, 1), jnp.float32)
+    wg = w_gate if fused else jnp.zeros((1, 1), jnp.float32)
+    wd = w_down if fused else jnp.zeros((1, 1), jnp.float32)
+    pw = pl.BlockSpec((h_tile * Dh, F), lambda b_, d: (d, 0))
+    wu_spec = pw if fused else _DUMMY_SPEC
+    wg_spec = pw if fused else _DUMMY_SPEC
+    wd_spec = (pl.BlockSpec((F, Dm), lambda b_, d: (0, 0)) if fused
+               else _DUMMY_SPEC)
+    o_spec = (pl.BlockSpec((1, Dm), lambda b_, d: (b_, 0)) if fused
+              else pl.BlockSpec((1, h_tile * Dh), lambda b_, d: (b_, d)))
+    st_spec = pl.BlockSpec((1, h_tile, Dh), lambda b_, d: (b_, d, 0))
+    co, no, ho, mo, out = pl.pallas_call(
+        functools.partial(_slstm_kernel, nt=nt, dh=Dh, eps=eps,
+                          fused=fused),
+        grid=(Bsz, nt),
+        in_specs=[
+            st_spec, st_spec, st_spec, st_spec,
+            pl.BlockSpec((1, h_tile * 4 * Dh), lambda b_, d: (b_, d)),
+            pl.BlockSpec((h_tile, Dh, 4 * Dh), lambda b_, d: (d, 0, 0)),
+            pl.BlockSpec((h_tile, 4 * Dh), lambda b_, d: (d, 0)),
+            pl.BlockSpec((1, h_tile * Dh), lambda b_, d: (0, d)),
+            wu_spec, wg_spec, wd_spec,
+        ],
+        out_specs=[st_spec, st_spec, st_spec, st_spec, o_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, Dm), gx.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, F), jnp.float32),
+                        pltpu.VMEM((1, F), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(c, n, h, m, gx, r_w, b, gn_scale.reshape(1, inner), wu, wg, wd)
+    return co, no, ho, mo, out

@@ -28,8 +28,7 @@ Implementation names:
   'interpret' Pallas kernel body executed in interpret mode (CPU tests)
 
 The pre-registry per-op ``impl=`` keywords keep working: they are now thin
-deprecation shims over ``resolve_impl`` (``_resolve`` remains as an alias
-for external callers of the old helper).
+deprecation shims over ``resolve_impl``.
 """
 from __future__ import annotations
 
@@ -39,11 +38,14 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
+from repro.kernels import mixer_steps as _mx
 from repro.kernels import ref as _ref
 from repro.kernels.decode_step import (decode_step_fused_pallas,
                                        decode_step_pallas)
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.kernels.routed_matmul import routed_matmul_pallas
+from repro.kernels.sampling_epilogue import logits_step_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
 
 
@@ -66,6 +68,11 @@ _DEFAULT_IMPL: Optional[str] = None
 
 
 def register_op(name: str, impls, fallback=()) -> None:
+    if name in _REGISTRY:
+        raise ValueError(
+            f"kernel op {name!r} is already registered; op names are "
+            f"global — pick a distinct name or deregister first "
+            f"(registered: {registered_ops()})")
     _REGISTRY[name] = _OpSpec(impls, fallback)
 
 
@@ -126,16 +133,6 @@ def resolve_impl(name: str, impl: Optional[str] = None) -> str:
     return impl
 
 
-def _resolve(impl):
-    """Deprecated pre-registry helper (use :func:`resolve_impl`): generic
-    explicit/default/backend resolution without an op's fallback table."""
-    if impl is None:
-        impl = _DEFAULT_IMPL
-    if impl is None:
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    return impl
-
-
 register_op("selective_scan", ("ref", "pallas", "interpret"),
             fallback={"pallas": "ref"})
 register_op("grouped_matmul", ("ref", "pallas", "interpret"),
@@ -144,6 +141,16 @@ register_op("selective_scan_step", ("ref", "fused", "pallas", "interpret"),
             fallback={"pallas": "fused"})
 register_op("routed_matmul", ("ref", "fused", "pallas", "interpret"),
             fallback={"pallas": "fused"})
+# phase-2 per-mixer fused decode steps + the sampling epilogue.  For all
+# of them 'ref' and the off-TPU 'fused' alias are the same oracle
+# composition, so EngineConfig(kernels="pallas") stays greedy
+# bit-identical to "ref" on hosts without a TPU (the CPU-visible fused
+# win comes from the RoM routed fast path these ops unlock, not from
+# divergent math).
+for _step_op in ("mamba2_step", "gdn_step", "rglru_step", "mlstm_step",
+                 "slstm_step", "logits_step"):
+    register_op(_step_op, ("ref", "fused", "pallas", "interpret"),
+                fallback={"pallas": "fused"})
 
 
 # ---------------------------------------------------------------------------
@@ -233,3 +240,204 @@ def routed_matmul(x, w, expert_idx, weights=None, *, impl=None):
         return routed_matmul_pallas(x, w, expert_idx, weights,
                                     interpret=(impl == "interpret"))
     return _ref.routed_matmul_fused(x, w, expert_idx, weights)
+
+
+# ---------------------------------------------------------------------------
+# per-mixer fused decode steps (phase 2).  Signatures mirror the oracles
+# in kernels/ref.py; 'ref' and 'fused' share that math verbatim (see the
+# registration comment), 'pallas'/'interpret' run kernels/mixer_steps.py
+# with tile sizes from kernels/autotune.py.
+# ---------------------------------------------------------------------------
+
+def mamba2_step(h, xh, dt, A_log_h, B_t, C_t, D_h, z, scale, eps, *,
+                w_out=None, impl=None):
+    """Mamba-2 SSD decode step + rmsnorm/gate (and out-proj with w_out).
+
+    h (B,H,P,N) f32; xh (B,H,P) f32; dt (B,H) f32; A_log_h, D_h (H,);
+    B_t, C_t (B,N); z (B,De) io; scale (De,).  Returns ``(h', y|out)``.
+    """
+    impl = resolve_impl("mamba2_step", impl)
+    if impl in ("pallas", "interpret"):
+        Bsz, H, P, N = h.shape
+        De = H * P
+        f32 = jnp.float32
+        # per-head scalars broadcast to per-channel so the kernel shares
+        # the mamba-1 (channel, state) tile structure
+        a = jnp.exp(dt * -jnp.exp(A_log_h))
+        a_ch = jnp.broadcast_to(a[..., None], (Bsz, H, P)).reshape(Bsz, De)
+        dt_ch = jnp.broadcast_to(dt[..., None], (Bsz, H, P)).reshape(Bsz, De)
+        D_ch = jnp.broadcast_to(D_h.astype(f32)[:, None], (H, P)).reshape(De)
+        tile = autotune.tile_for("mamba2_step", z.dtype, De, 256)
+        h2, out = _mx.mamba2_step_pallas(
+            h.reshape(Bsz, De, N), xh.reshape(Bsz, De), a_ch, dt_ch,
+            B_t, C_t, D_ch, z, scale, float(eps), w_out,
+            de_tile=tile, interpret=(impl == "interpret"))
+        return h2.reshape(Bsz, H, P, N), out
+    return _ref.mamba2_step(h, xh, dt, A_log_h, B_t, C_t, D_h, z, scale,
+                            eps, w_out=w_out)
+
+
+def gdn_step(S, q, k, v, a, b, z, scale, eps, *, w_out=None, impl=None):
+    """Gated-DeltaNet decode step + rmsnorm/gate (and out-proj).
+
+    S (B,H,K,V) f32; q, k (B,H,K) io; v (B,H,V) io; a, b (B,H) f32;
+    z (B,H*V) io; scale (H*V,).  Returns ``(S', y|out)``.
+    """
+    impl = resolve_impl("gdn_step", impl)
+    if impl in ("pallas", "interpret"):
+        H = S.shape[1]
+        tile = autotune.tile_for("gdn_step", z.dtype, H, 8)
+        return _mx.gdn_step_pallas(S, q, k, v, a, b, z, scale, float(eps),
+                                   w_out, h_tile=tile,
+                                   interpret=(impl == "interpret"))
+    return _ref.gdn_step(S, q, k, v, a, b, z, scale, eps, w_out=w_out)
+
+
+def rglru_step(h, u, log_a, i_gate, *, gate=None, w_out=None, impl=None):
+    """RG-LRU decode step, optionally fused with gelu-gate × out-proj.
+
+    h (B,D) f32; u (B,D) io; log_a, i_gate (B,D) f32; gate (B,D) io +
+    w_out (D,Dm) supplied together.  Returns ``(h', y|out)``.
+    """
+    if (gate is None) != (w_out is None):
+        raise ValueError("gate and w_out must be supplied together")
+    impl = resolve_impl("rglru_step", impl)
+    if impl in ("pallas", "interpret"):
+        tile = autotune.tile_for("rglru_step", u.dtype, h.shape[-1], 512)
+        return _mx.rglru_step_pallas(h, u, log_a, i_gate, gate, w_out,
+                                     d_tile=tile,
+                                     interpret=(impl == "interpret"))
+    return _ref.rglru_step(h, u, log_a, i_gate, gate=gate, w_out=w_out)
+
+
+def mlstm_step(C, n, m, q, k, v, il, fl, z, gn_scale, eps, *, w_out=None,
+               impl=None):
+    """mLSTM cell update + headnorm/gate (and out-proj).
+
+    C (B,H,K,V), n (B,H,K), m (B,H) f32; q, k (B,H,K), v (B,H,V),
+    il, fl (B,H) f32; z (B,H*V) io; gn_scale (H*V,).  Returns
+    ``(C', n', m', y|out)``.
+    """
+    impl = resolve_impl("mlstm_step", impl)
+    if impl in ("pallas", "interpret"):
+        H = C.shape[1]
+        tile = autotune.tile_for("mlstm_step", z.dtype, H, 4)
+        return _mx.mlstm_step_pallas(C, n, m, q, k, v, il, fl, z, gn_scale,
+                                     float(eps), w_out, h_tile=tile,
+                                     interpret=(impl == "interpret"))
+    return _ref.mlstm_step(C, n, m, q, k, v, il, fl, z, gn_scale, eps,
+                           w_out=w_out)
+
+
+def slstm_step(c, n, h, m, gx, r_w, b, gn_scale, eps, *, w_up=None,
+               w_gate=None, w_down=None, impl=None):
+    """sLSTM cell update + headnorm, optionally fused with the gated FFN.
+
+    c/n/h/m (B,H,Dh) f32; gx (B,4*inner) io; r_w (H,Dh,4Dh) f32; b the
+    *flat* (4*inner,) bias (nn.xlstm layout); gn_scale (inner,).
+    Returns ``(c', n', h', m', y|out)``.
+    """
+    ffn = (w_up is not None, w_gate is not None, w_down is not None)
+    if any(ffn) and not all(ffn):
+        raise ValueError("w_up, w_gate and w_down must be supplied together")
+    impl = resolve_impl("slstm_step", impl)
+    if impl in ("pallas", "interpret"):
+        H, Dh = c.shape[1], c.shape[2]
+        tile = autotune.tile_for("slstm_step", gx.dtype, H, 4)
+        return _mx.slstm_step_pallas(c, n, h, m, gx, r_w,
+                                     b.reshape(H, 4 * Dh), gn_scale,
+                                     float(eps), w_up, w_gate, w_down,
+                                     h_tile=tile,
+                                     interpret=(impl == "interpret"))
+    return _ref.slstm_step(c, n, h, m, gx, r_w, b, gn_scale, eps,
+                           w_up=w_up, w_gate=w_gate, w_down=w_down)
+
+
+def logits_step(hidden, table, *, tied, softcap=0.0, need_stats=True,
+                impl=None):
+    """Greedy argmax + (max, sum-exp) reductions over the final
+    projection, without materializing the (B,V) logits row off-chip.
+
+    hidden (B,D) io; table (V,D) when ``tied`` else (D,V).  Returns
+    ``(argmax i32, vmax f32, sumexp f32)``, each (B,) — the argmax
+    matches ``jnp.argmax`` over ``models.lm.logits_fn`` exactly
+    (first-occurrence ties included), which is what the engine's greedy
+    fast path rides on.  ``need_stats=False`` returns ``(argmax, None,
+    None)`` and lets the jnp fallback skip the max/sum-exp reductions —
+    on CPU the exp over the vocab row is real per-step cost the greedy
+    path never uses, while in-kernel the stats ride the same tile pass
+    for free.
+    """
+    impl = resolve_impl("logits_step", impl)
+    if impl in ("pallas", "interpret"):
+        V = table.shape[0] if tied else table.shape[1]
+        tile = autotune.tile_for("logits_step", hidden.dtype, V, 1024)
+        out = logits_step_pallas(hidden, table, tied=tied,
+                                 softcap=float(softcap or 0.0),
+                                 v_tile=tile,
+                                 interpret=(impl == "interpret"))
+        return out if need_stats else (out[0], None, None)
+    if need_stats:
+        return _ref.logits_step(hidden, table, tied=tied, softcap=softcap)
+    return (_ref.logits_step_greedy(hidden, table, tied=tied,
+                                    softcap=softcap), None, None)
+
+
+# ---------------------------------------------------------------------------
+# autotune sweeps — first real-device use of an op at an unseen
+# (dtype, dim bucket) times the candidate tiles on synthetic shapes and
+# commits the winner to kernels/tuning_table.json (no-ops off TPU).
+# ---------------------------------------------------------------------------
+
+def _sweep_batch():
+    return 8
+
+
+@autotune.register_sweep("mamba2_step")
+def _sweep_mamba2(dtype, dim):
+    B, N = _sweep_batch(), 128
+    key = jax.random.PRNGKey(0)
+    h = jnp.zeros((B, dim, N), jnp.float32)
+    x = jax.random.normal(key, (B, dim), jnp.float32)
+    z = x.astype(dtype)
+    w = jnp.ones((dim, dim), dtype)
+    one = jnp.ones((B, dim), jnp.float32)
+
+    def run(tile):
+        def f():
+            return _mx.mamba2_step_pallas(
+                h, x, one * 0.5, one, x[:, :N], x[:, :N], one[0], z,
+                one[0], 1e-6, w, de_tile=tile)[1]
+        return f
+    return autotune.time_candidates(run, autotune.pow2_divisors(dim, 64))
+
+
+@autotune.register_sweep("rglru_step")
+def _sweep_rglru(dtype, dim):
+    B = _sweep_batch()
+    key = jax.random.PRNGKey(0)
+    h = jnp.zeros((B, dim), jnp.float32)
+    u = jax.random.normal(key, (B, dim)).astype(dtype)
+    la = -jnp.ones((B, dim), jnp.float32)
+    w = jnp.ones((dim, dim), dtype)
+
+    def run(tile):
+        def f():
+            return _mx.rglru_step_pallas(h, u, la, -la, u, w,
+                                         d_tile=tile)[1]
+        return f
+    return autotune.time_candidates(run, autotune.pow2_divisors(dim, 64))
+
+
+@autotune.register_sweep("logits_step")
+def _sweep_logits(dtype, dim):
+    B, D = _sweep_batch(), 1024
+    key = jax.random.PRNGKey(0)
+    hdn = jax.random.normal(key, (B, D)).astype(dtype)
+    tab = jax.random.normal(key, (dim, D)).astype(dtype)
+
+    def run(tile):
+        def f():
+            return logits_step_pallas(hdn, tab, tied=True, v_tile=tile)[0]
+        return f
+    return autotune.time_candidates(run, autotune.pow2_divisors(dim, 128))

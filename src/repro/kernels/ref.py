@@ -182,6 +182,189 @@ def routed_matmul_ref(x, w, expert_idx, weights=None):
     return jnp.einsum("tef,te->tf", y_all, mix).astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Per-mixer single-timestep decode oracles (the phase-2 fused-step family).
+#
+# Each function is the exact float composition of the corresponding
+# ``nn/*`` step — same cast order term for term — factored out so the
+# Pallas kernels in kernels/mixer_steps.py have a bitwise gate, and so
+# the off-TPU 'fused' impl can share this math verbatim (greedy decode
+# stays bit-identical across EngineConfig kernels= choices on CPU).
+# Epilogue keywords fold the mixer's gate/out-projection tail into the
+# same op, mirroring ``selective_scan_step(gate=, w_out=)``.
+# ---------------------------------------------------------------------------
+
+def _headnorm(y, scale, eps):
+    """Per-head RMS norm then flatten — replicates ``nn.xlstm._headnorm``
+    (kept local: importing nn.xlstm here would cycle through ops.py)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + eps)
+    return yn.reshape(*y.shape[:-2], -1) * scale
+
+
+def mamba2_step(h, xh, dt, A_log_h, B_t, C_t, D_h, z, scale, eps, *,
+                w_out=None):
+    """Mamba-2 SSD decode step (scalar decay per head) + norm/gate tail.
+
+    h (B,H,P,N) f32 carried state; xh (B,H,P) f32 pre-split conv'd input;
+    dt (B,H) f32 softplus'd step; A_log_h (H,); B_t, C_t (B,N); D_h (H,);
+    z (B,De) io-dtype gate; scale (De,) inner-rmsnorm scale.  Returns
+    ``(h', y)`` with y (B,De) io, or ``(h', out)`` (B,Dm) when ``w_out``
+    (De,Dm) folds the output projection in.
+    """
+    from repro.nn.layers import dense, rmsnorm, silu
+    f32 = jnp.float32
+    a = jnp.exp(dt * -jnp.exp(A_log_h))                        # (B,H)
+    h = (h * a[..., None, None]
+         + jnp.einsum("bhp,bn,bh->bhpn", xh, B_t.astype(f32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(f32))
+    y = y + xh * D_h[:, None]
+    y = y.reshape(y.shape[0], -1).astype(z.dtype)
+    y = rmsnorm({"scale": scale}, y * silu(z), eps)
+    if w_out is None:
+        return h, y
+    return h, dense(y, w_out)
+
+
+def gdn_step(S, q, k, v, a, b, z, scale, eps, *, w_out=None):
+    """Gated DeltaNet decode step (delta-rule state update) + norm/gate.
+
+    S (B,H,K,V) f32 carried state; q, k (B,H,K) io L2-normalized; v (B,H,V)
+    io; a, b (B,H) f32 decay/write gates; z (B,Dv) io gate; scale (Dv,).
+    Returns ``(S', y)`` y (B,Dv) io, or ``(S', out)`` with ``w_out``.
+    """
+    from repro.nn.layers import dense, rmsnorm, silu
+    f32 = jnp.float32
+    Sk = jnp.einsum("bhkv,bhk->bhv", S, k.astype(f32))
+    S = (S * a[..., None, None]
+         - jnp.einsum("bhk,bhv->bhkv", (k * (a * b)[..., None]).astype(f32),
+                      Sk)
+         + jnp.einsum("bhk,bhv->bhkv", (k * b[..., None]).astype(f32),
+                      v.astype(f32)))
+    y = jnp.einsum("bhkv,bhk->bhv", S, q.astype(f32))
+    y = y.reshape(y.shape[0], -1)
+    y = rmsnorm({"scale": scale}, y.astype(z.dtype) * silu(z), eps)
+    if w_out is None:
+        return S, y
+    return S, dense(y, w_out)
+
+
+def rglru_step(h, u, log_a, i_gate, *, gate=None, w_out=None):
+    """RG-LRU decode step, optionally fused with the gelu-gate × out-proj.
+
+    h (B,D) f32 carried state; u (B,D) io conv'd input; log_a, i_gate
+    (B,D) f32 gates.  Returns ``(h', y)`` y (B,D) io, or ``(h', out)``
+    where ``out = dense(y * gate, w_out)`` (gate (B,D) io, w_out (D,Dm)).
+    """
+    if (gate is None) != (w_out is None):
+        raise ValueError("gate and w_out must be supplied together")
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
+    h = a * h + mult * i_gate * u.astype(jnp.float32)
+    y = h.astype(u.dtype)
+    if gate is None:
+        return h, y
+    from repro.nn.layers import dense
+    return h, dense(y * gate, w_out)
+
+
+def mlstm_step(C, n, m, q, k, v, il, fl, z, gn_scale, eps, *, w_out=None):
+    """mLSTM matrix-memory cell update + headnorm/gate tail.
+
+    C (B,H,K,V), n (B,H,K), m (B,H) f32 carried state; q, k (B,H,K) f32
+    (k pre-scaled by dqk**-0.5); v (B,H,V) f32; il, fl (B,H) f32 log
+    gates; z (B,inner) io gate; gn_scale (inner,).  Returns
+    ``(C', n', m', y)`` y (B,inner) io, or ``(C', n', m', out)``.
+    """
+    from repro.nn.layers import dense, silu
+    m_new = jnp.maximum(fl + m, il)
+    fpx = jnp.exp(fl + m - m_new)
+    ipx = jnp.exp(il - m_new)
+    C = (fpx[..., None, None] * C
+         + ipx[..., None, None] * (k[..., :, None] * v[..., None, :]))
+    n = fpx[..., None] * n + ipx[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    y = num / jnp.maximum(den, 1.0)[..., None]
+    y = _headnorm(y, gn_scale, eps).astype(z.dtype) * silu(z)
+    if w_out is None:
+        return C, n, m_new, y
+    return C, n, m_new, dense(y, w_out)
+
+
+def slstm_step(c, n, h, m, gx, r_w, b, gn_scale, eps, *, w_up=None,
+               w_gate=None, w_down=None):
+    """sLSTM scalar-memory cell update + headnorm, optionally fused with
+    the block's gated-FFN tail.
+
+    c, n, h, m (B,H,Dh) f32 carried state; gx (B,4*inner) io pre-gates;
+    r_w (H,Dh,4Dh) f32 recurrent weights; b (4*inner,) flat bias —
+    reshaped ``(H, 4*Dh)`` exactly like ``nn.xlstm._slstm_cell`` (the
+    historical layout quirk is the gated behaviour); gn_scale (inner,).
+    Returns ``(c', n', h', m', y)`` y (B,inner) io, or with all three of
+    ``w_up``/``w_gate``/``w_down`` the fused
+    ``dense(dense(y, w_up) * silu(dense(y, w_gate)), w_down)``.
+    """
+    from repro.nn.layers import dense, silu
+    ffn = (w_up is not None, w_gate is not None, w_down is not None)
+    if any(ffn) and not all(ffn):
+        raise ValueError("w_up, w_gate and w_down must be supplied together")
+    nh, dh = r_w.shape[0], r_w.shape[1]
+    rec = jnp.einsum("bhd,hdg->bhg", h, r_w)                   # (B,H,4Dh)
+    g = (gx.reshape(-1, nh, 4 * dh).astype(jnp.float32) + rec
+         + b.reshape(nh, 4 * dh))
+    il, fp, zz, o = jnp.split(g, 4, axis=-1)                   # (B,H,Dh)
+    fl = -jax.nn.softplus(-fp)
+    m_new = jnp.maximum(fl + m, il)
+    i = jnp.exp(il - m_new)
+    f = jnp.exp(fl + m - m_new)
+    c_new = f * c + i * jnp.tanh(zz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    y = _headnorm(h_new, gn_scale, eps).astype(gx.dtype)
+    if w_up is None:
+        return c_new, n_new, h_new, m_new, y
+    u = dense(y, w_up) * silu(dense(y, w_gate))
+    return c_new, n_new, h_new, m_new, dense(u, w_down)
+
+
+def _logits_f32(hidden, table, tied, softcap):
+    """The exact f32 logits row ``models.lm.logits_fn`` produces for one
+    decode position — same einsum *form* (singleton seq axis and all),
+    softcap, and cast order, so the result is bit-for-bit identical and
+    XLA compiles the identical dot (on CPU the 2-D ``bd,vd`` spelling of
+    the same contraction picks a ~2x slower emitter layout)."""
+    from repro.nn.layers import softcap as _softcap
+    eq = "bsd,vd->bsv" if tied else "bsd,dv->bsv"
+    logits = jnp.einsum(eq, hidden[:, None, :], table.astype(hidden.dtype),
+                        preferred_element_type=jnp.float32)[:, 0]
+    return _softcap(logits, softcap).astype(jnp.float32)
+
+
+def logits_step(hidden, table, *, tied, softcap=0.0):
+    """Greedy / temperature-ready reductions over the final projection.
+
+    hidden (B,D) io; table (V,D) when ``tied`` (embedding reused) else
+    (D,V).  Returns ``(argmax (B,) i32, vmax (B,) f32, sumexp (B,) f32)``
+    — the argmax matches ``sample()``'s unfiltered greedy branch over
+    ``models.lm.logits_fn`` bit-for-bit (same einsum/softcap/f32 casts,
+    same first-occurrence tie rule), and (vmax, sumexp) are the max /
+    sum-exp-shifted-by-max reductions a temperature path needs.
+    """
+    lf = _logits_f32(hidden, table, tied, softcap)
+    vmax = jnp.max(lf, axis=-1)
+    sumexp = jnp.sum(jnp.exp(lf - vmax[:, None]), axis=-1)
+    return jnp.argmax(lf, axis=-1).astype(jnp.int32), vmax, sumexp
+
+
+def logits_step_greedy(hidden, table, *, tied, softcap=0.0):
+    """Argmax-only variant of :func:`logits_step` — identical token, no
+    max/sum-exp reductions (the greedy fallback path's per-step saving)."""
+    lf = _logits_f32(hidden, table, tied, softcap)
+    return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+
 def routed_matmul_fused(x, w, expert_idx, weights=None):
     """Top-k gathered composite — the decode fast path on hosts without a
     TPU: gather only the K selected expert matrices per token and contract

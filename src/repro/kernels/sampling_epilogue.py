@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused sampling epilogue over the final projection.
+
+Greedy decode needs only ``argmax(logits)`` — materializing the full
+(B, V) logits row in HBM just to reduce it is wasted bandwidth at large
+vocab.  This kernel walks the vocabulary in tiles inside the projection
+itself: each (batch, vocab-tile) step contracts the hidden row against
+one tile of the embedding/lm-head table, applies the logit softcap, and
+combines into three running scalars per row — argmax index, max logit,
+and the max-shifted sum-of-exponentials (the pair a temperature path
+needs to normalize without a second pass).  Full logits never leave
+VMEM.
+
+The online argmax combine uses a strict ``>`` so ties keep the earliest
+vocab index — matching ``jnp.argmax``'s first-occurrence rule (and thus
+``serve.sampling.sample``'s greedy branch) exactly; the within-tile
+argmax is itself first-occurrence via an iota-min.  The running sum-exp
+is rescaled by ``exp(old_max - new_max)`` at every tile (classic online
+softmax).  Oracle: ``kernels/ref.py::logits_step``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softcap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def _kernel(h_ref, t_ref, idx_ref, max_ref, sum_ref, b_ref, s_ref, a_ref,
+            *, nv, v_tile, tied, cap):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        b_ref[...] = jnp.full_like(b_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    f32 = jnp.float32
+    hrow = h_ref[...]                                     # (1,D) io
+    tab = t_ref[...].astype(hrow.dtype)
+    if tied:
+        tab = tab.T                                       # (D, v_tile)
+    lt = _softcap(jnp.dot(hrow, tab, preferred_element_type=f32),
+                  cap).astype(f32)                        # (1, v_tile)
+    tmax = jnp.max(lt)
+    # first-occurrence within-tile argmax via iota-min (1D argmax needs a
+    # 2D iota on TPU anyway)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lt.shape, 1)
+    targ = jnp.min(jnp.where(lt == tmax, iota, v_tile))
+    best = b_ref[0, 0]
+    new_best = jnp.maximum(best, tmax)
+    a_ref[...] = jnp.where(tmax > best, d * v_tile + targ,
+                           a_ref[0, 0]).reshape(1, 1)
+    s_ref[...] = (s_ref[0, 0] * jnp.exp(best - new_best)
+                  + jnp.sum(jnp.exp(lt - new_best))).reshape(1, 1)
+    b_ref[...] = new_best.reshape(1, 1)
+
+    @pl.when(d == nv - 1)
+    def _write():
+        idx_ref[...] = a_ref[...]
+        max_ref[...] = b_ref[...]
+        sum_ref[...] = s_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tied", "softcap", "v_tile",
+                                    "interpret"))
+def logits_step_pallas(hidden, table, *, tied, softcap=0.0, v_tile=1024,
+                       interpret=False):
+    """(argmax (B,) i32, vmax (B,) f32, sumexp (B,) f32).
+
+    hidden (B,D) io; table (V,D) when ``tied`` (embedding reused as the
+    output head) else (D,V); ``softcap`` the static logit softcap.
+    """
+    Bsz, D = hidden.shape
+    V = table.shape[0] if tied else table.shape[1]
+    nv = V // v_tile
+    t_spec = (pl.BlockSpec((v_tile, D), lambda b, d: (d, 0)) if tied
+              else pl.BlockSpec((D, v_tile), lambda b, d: (0, d)))
+    idx, vmax, sumexp = pl.pallas_call(
+        functools.partial(_kernel, nv=nv, v_tile=v_tile, tied=tied,
+                          cap=softcap),
+        grid=(Bsz, nv),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, d: (b, 0)),
+            t_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, d: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, d: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Bsz, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(hidden, table)
+    return idx[:, 0], vmax[:, 0], sumexp[:, 0]

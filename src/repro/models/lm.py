@@ -359,9 +359,12 @@ def _block_step(pattern, cfg, bp, bst, x_t, pos, rt: Runtime):
     return x_t, new_st, aux
 
 
-def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime, keep=None):
+def decode_step_hidden(params, state, tokens_t, pos, cfg, rt: Runtime,
+                       keep=None):
     """tokens_t (B, 1) int32; pos scalar int32 or (B,) per-slot positions.
-    Returns (logits (B, V), new_state).
+    Returns (hidden (B, 1, D) post-final-norm, new_state) — the pre-logits
+    split of :func:`decode_step`, for callers that fold the output
+    projection into a fused sampling epilogue (``kernels.ops.logits_step``).
 
     ``keep`` (optional) is a per-segment tuple of per-repeat bools (see
     :func:`draft_layers`): blocks with ``False`` are skipped — the residual
@@ -408,8 +411,16 @@ def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime, keep=None):
                 new_segs.append(jax.tree_util.tree_map(
                     lambda full, sub: full.at[idx].set(sub), sst, sub_new))
     h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return h, {"segments": new_segs}
+
+
+def decode_step(params, state, tokens_t, pos, cfg, rt: Runtime, keep=None):
+    """tokens_t (B, 1) int32 -> (logits (B, V), new_state).  See
+    :func:`decode_step_hidden` for the pre-logits split."""
+    h, new_state = decode_step_hidden(params, state, tokens_t, pos, cfg, rt,
+                                      keep=keep)
     logits = logits_fn(params, h, cfg, rt)
-    return logits[:, 0], {"segments": new_segs}
+    return logits[:, 0], new_state
 
 
 # ---------------------------------------------------------------------------

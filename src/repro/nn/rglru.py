@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.kernels.ref import diag_recurrence
 from repro.nn.layers import Runtime, dense, dense_init
 from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
@@ -107,22 +108,24 @@ def rglru_init_state(cfg, batch, dtype):
 rglru_state_spec = batch_spec(rglru_init_state)
 
 
-def rglru_core_step(shared, u_t, state, cfg, rt: Runtime):
+def rglru_core_step(shared, u_t, state, cfg, rt: Runtime, *, gate=None,
+                    w_out=None):
+    """Decode core.  With ``gate`` (B,R) and ``w_out`` (R,Dm) the gelu-gate ×
+    output projection is handed to ``ops.rglru_step`` so the pallas impl
+    fuses the whole tail; the result is then (B,Dm) instead of (B,R)."""
     u, conv_buf = causal_conv1d_step(u_t, state["conv"], shared["conv_w"],
                                      shared["conv_b"])
     log_a, i = _gates(shared, u, cfg)
-    a = jnp.exp(log_a)
-    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
-    h = a * state["h"] + mult * i * u.astype(jnp.float32)
-    return h.astype(u_t.dtype), {"h": h, "conv": conv_buf}
+    h, y = ops.rglru_step(state["h"], u, log_a, i, gate=gate, w_out=w_out)
+    return y, {"h": h, "conv": conv_buf}
 
 
 def rglru_step(params, x_t, state, pos, cfg, rt: Runtime):
     xt = x_t[:, 0]
     u_t = dense(xt, params["w_rec_in"])
-    h, state = rglru_core_step(params, u_t, state, cfg, rt)
     gate = jax.nn.gelu(dense(xt, params["w_rec_gate"]))
-    out = dense(h * gate, params["w_out"])
+    out, state = rglru_core_step(params, u_t, state, cfg, rt, gate=gate,
+                                 w_out=params["w_out"])
     return out[:, None], state, {}
 
 

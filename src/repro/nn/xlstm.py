@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.nn.layers import Runtime, dense, dense_init, silu
 from repro.nn.ssm import (causal_conv1d, causal_conv1d_prefill,
                           causal_conv1d_step)
@@ -254,7 +255,10 @@ def mlstm_init_state(cfg, batch, dtype):
 mlstm_state_spec = batch_spec(mlstm_init_state)
 
 
-def mlstm_core_step(shared, h_t, z_t, state, cfg, rt: Runtime):
+def mlstm_core_step(shared, h_t, z_t, state, cfg, rt: Runtime, *, w_out=None):
+    """Decode core.  With ``w_out`` (inner,Dm) the headnorm/gate + output
+    projection tail runs inside ``ops.mlstm_step`` (fused on pallas); the
+    result is then (B,Dm) instead of (B,inner)."""
     inner, qk, nh, dqk, dv = mlstm_dims(cfg)
     B = h_t.shape[0]
     c, conv_buf = causal_conv1d_step(h_t, state["conv"], shared["conv_w"],
@@ -269,26 +273,18 @@ def mlstm_core_step(shared, h_t, z_t, state, cfg, rt: Runtime):
     if_ = dense(c, shared["w_if"]).astype(jnp.float32) + shared["b_if"]
     il, fp = jnp.split(if_, 2, axis=-1)
     fl = -jax.nn.softplus(-fp)
-    m_new = jnp.maximum(fl + state["m"], il)
-    fpx = jnp.exp(fl + state["m"] - m_new)
-    ipx = jnp.exp(il - m_new)
-    C = fpx[..., None, None] * state["C"] + ipx[..., None, None] * (
-        k[..., :, None] * v[..., None, :])
-    n = fpx[..., None] * state["n"] + ipx[..., None] * k
-    num = jnp.einsum("bhkv,bhk->bhv", C, q)
-    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
-    y = num / jnp.maximum(den, 1.0)[..., None]
-    y = _headnorm(y, shared["gn_scale"], cfg.norm_eps).astype(h_t.dtype)
-    new_state = {"C": C, "n": n, "m": m_new, "conv": conv_buf}
-    return y * silu(z_t), new_state
+    C, n, m, y = ops.mlstm_step(state["C"], state["n"], state["m"], q, k, v,
+                                il, fl, z_t, shared["gn_scale"],
+                                cfg.norm_eps, w_out=w_out)
+    return y, {"C": C, "n": n, "m": m, "conv": conv_buf}
 
 
 def mlstm_step(params, x_t, state, pos, cfg, rt: Runtime):
     xt = x_t[:, 0]
     h_t = dense(xt, params["w_in"])
     z_t = dense(xt, params["w_gate"])
-    y, state = mlstm_core_step(params, h_t, z_t, state, cfg, rt)
-    out = dense(y, params["w_out"])
+    out, state = mlstm_core_step(params, h_t, z_t, state, cfg, rt,
+                                 w_out=params["w_out"])
     return out[:, None], state, {}
 
 
@@ -409,12 +405,13 @@ slstm_state_spec = batch_spec(slstm_init_state)
 def slstm_step(params, x_t, state, pos, cfg, rt: Runtime):
     xt = x_t[:, 0]
     gx = dense(xt, params["w_slstm"])
-    carry = (state["c"], state["n"], state["h"], state["m"])
-    carry, h = _slstm_cell(params, gx, carry, cfg)
-    h = _headnorm(h, params["gn_scale"], cfg.norm_eps).astype(xt.dtype)
-    u = dense(h, params["w_up"]) * silu(dense(h, params["w_gate_ffn"]))
-    out = dense(u, params["w_down"])
-    return out[:, None], dict(zip(("c", "n", "h", "m"), carry)), {}
+    c, n, h, m, out = ops.slstm_step(state["c"], state["n"], state["h"],
+                                     state["m"], gx, params["r_slstm"],
+                                     params["b_slstm"], params["gn_scale"],
+                                     cfg.norm_eps, w_up=params["w_up"],
+                                     w_gate=params["w_gate_ffn"],
+                                     w_down=params["w_down"])
+    return out[:, None], {"c": c, "n": n, "h": h, "m": m}, {}
 
 
 def slstm_prefill(params, x, state, pos0, cfg, rt: Runtime):

@@ -48,7 +48,7 @@ import numpy as np
 from repro.distributed.plan import ParallelPlan
 from repro.kernels import ops as kernel_ops
 from repro.models import lm
-from repro.serve.sampling import SamplingParams, sample
+from repro.serve.sampling import SamplingParams, sample, sample_fused
 from repro.serve.scheduler import FIFOScheduler
 from repro.serve.speculative import SpecConfig, make_spec_fn
 from repro.serve.state import StateStore
@@ -286,9 +286,21 @@ class ServeEngine:
 
         def decode_core(params, state, toks, pos, rng, temp, topk, topp):
             rt = lm.Runtime(shard=shard_ctx, rng=None, train=False)
-            logits, new_state = lm.decode_step(params, state, toks, pos,
-                                               cfg, rt)
-            nxt = sample(logits, rng, temp, topk, topp)
+            if kernel_ops.active_default() is None:
+                logits, new_state = lm.decode_step(params, state, toks, pos,
+                                                   cfg, rt)
+                return sample(logits, rng, temp, topk, topp), new_state
+            # kernel scope active: stop at the pre-logits hidden row and let
+            # the sampling epilogue fold argmax into the output projection
+            # for all-greedy batches (full logits only when a slot samples)
+            hidden, new_state = lm.decode_step_hidden(params, state, toks,
+                                                      pos, cfg, rt)
+            table = (params["embed"] if cfg.tie_embeddings
+                     else params["lm_head"])
+            nxt = sample_fused(
+                hidden[:, 0], table, cfg.tie_embeddings, cfg.logit_softcap,
+                lambda: lm.logits_fn(params, hidden, cfg, rt)[:, 0],
+                rng, temp, topk, topp)
             return nxt, new_state
 
         def pf_core(params, pf_state, toks, pos0, rng, temp, topk, topp):

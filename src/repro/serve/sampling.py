@@ -76,6 +76,35 @@ def sample(logits, rng, temperature, top_k, top_p):
                      sampled).astype(jnp.int32)
 
 
+def sample_fused(hidden, table, tied, cap, full_logits_fn, rng,
+                 temperature, top_k, top_p):
+    """Sample the next token from the *pre-logits* hidden row.
+
+    hidden (B,D) post-final-norm; table the embedding/lm-head matrix;
+    ``full_logits_fn`` a nullary returning the full (B,V) logits row.
+
+    When every slot is greedy (temperature <= 0) the token comes from
+    ``kernels.ops.logits_step`` — argmax computed inside the output
+    projection, so the (B,V) logits row never materializes.  Its oracle
+    applies the identical f32 projection + softcap with first-occurrence
+    tie-breaking, so the result matches :func:`sample`'s unfiltered argmax
+    bit-for-bit.  A batch with any sampled slot falls back to
+    ``full_logits_fn()`` + :func:`sample` (today's exact path).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    def greedy_branch(_):
+        idx, _, _ = kernel_ops.logits_step(hidden, table, tied=tied,
+                                           softcap=cap, need_stats=False)
+        return idx
+
+    def full_branch(_):
+        return sample(full_logits_fn(), rng, temperature, top_k, top_p)
+
+    return jax.lax.cond(jnp.all(temperature <= 0.0), greedy_branch,
+                        full_branch, None)
+
+
 def _window_probs(logits, temperature, top_k, top_p):
     """Filtered softmax over a (B,S,V) window of logits, applying each
     slot's sampling params at every window position."""

@@ -74,8 +74,17 @@ def test_legacy_impl_kwarg_still_works():
     y_int = ops.selective_scan(u, dt, A, Bm, Cm, chunk=4, impl="interpret")
     np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
                                atol=1e-5, rtol=1e-5)
-    assert ops._resolve(None) == "ref"                # deprecated alias
-    assert ops._resolve("interpret") == "interpret"
+    # the deprecated module-level ``_resolve`` alias is gone for good
+    assert not hasattr(ops, "_resolve")
+
+
+def test_register_op_rejects_duplicate_names():
+    """Op names are global: re-registering must fail loudly, not silently
+    clobber another module's spec."""
+    with pytest.raises(ValueError, match="already registered"):
+        ops.register_op("selective_scan_step", ("ref",))
+    # the original spec survives the failed attempt
+    assert ops.resolve_impl("selective_scan_step", "pallas") == "fused"
 
 
 # ---------------------------------------------------------------------------

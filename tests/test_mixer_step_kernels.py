@@ -1,0 +1,409 @@
+"""Decode fast path, phase 2: per-mixer fused step kernels (interpret mode)
+vs the kernels/ref.py oracles, the in-kernel sampling epilogue, the tile
+autotuner plumbing, the registry resolution-order contract, and engine-level
+greedy identity of ``EngineConfig(kernels=...)`` for every recurrent mixer
+across admission / speculative / prefix-cache serving modes."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+from repro.models import lm
+from repro.serve import EngineConfig, PrefixCache, Request, ServeEngine
+from test_decode_kernels import _full_cfg
+
+
+# ---------------------------------------------------------------------------
+# per-mixer kernels vs oracle (interpret mode, dtype sweep, multi-tile)
+# ---------------------------------------------------------------------------
+
+def _tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+def _assert_close(got, want, dtype):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [False, True], ids=["core", "epilogue"])
+def test_mamba2_step_kernel_vs_ref(dtype, fused):
+    B, H, P, N, Dm = 2, 4, 16, 8, 24
+    De = H * P
+    ks = jax.random.split(jax.random.PRNGKey(0), 9)
+    h = jax.random.normal(ks[0], (B, H, P, N), jnp.float32)
+    xh = jax.random.normal(ks[1], (B, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (B, H), jnp.float32))
+    A_log = jax.random.normal(ks[3], (H,), jnp.float32) * 0.1
+    Bt = jax.random.normal(ks[4], (B, N)).astype(dtype)
+    Ct = jax.random.normal(ks[5], (B, N)).astype(dtype)
+    Dh = jax.random.normal(ks[6], (H,), jnp.float32)
+    z = jax.random.normal(ks[7], (B, De)).astype(dtype)
+    scale = jnp.ones((De,), jnp.float32)
+    w = ((jax.random.normal(ks[8], (De, Dm)) * 0.1).astype(dtype)
+         if fused else None)
+    h_r, y_r = ref.mamba2_step(h, xh, dt, A_log, Bt, Ct, Dh, z, scale, 1e-6,
+                               w_out=w)
+    # de_tile=16 forces a 4-tile sweep through the global-rmsnorm factoring
+    from repro.kernels.mixer_steps import mamba2_step_pallas
+    a = jnp.exp(dt * -jnp.exp(A_log))
+    a_ch = jnp.broadcast_to(a[..., None], (B, H, P)).reshape(B, De)
+    dt_ch = jnp.broadcast_to(dt[..., None], (B, H, P)).reshape(B, De)
+    D_ch = jnp.broadcast_to(Dh[:, None], (H, P)).reshape(De)
+    h_p, y_p = mamba2_step_pallas(h.reshape(B, De, N), xh.reshape(B, De),
+                                  a_ch, dt_ch, Bt, Ct, D_ch, z, scale, 1e-6,
+                                  w, de_tile=16, interpret=True)
+    _assert_close(h_p.reshape(B, H, P, N), h_r, dtype)
+    _assert_close(y_p, y_r, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [False, True], ids=["core", "epilogue"])
+def test_gdn_step_kernel_vs_ref(dtype, fused):
+    B, H, K, V, Dm = 2, 4, 8, 16, 24
+    ks = jax.random.split(jax.random.PRNGKey(1), 9)
+    S = jax.random.normal(ks[0], (B, H, K, V), jnp.float32)
+    q = jax.random.normal(ks[1], (B, H, K)).astype(dtype)
+    k = jax.random.normal(ks[2], (B, H, K)).astype(dtype)
+    v = jax.random.normal(ks[3], (B, H, V)).astype(dtype)
+    a = jax.nn.sigmoid(jax.random.normal(ks[4], (B, H), jnp.float32))
+    b = jax.nn.sigmoid(jax.random.normal(ks[5], (B, H), jnp.float32))
+    z = jax.random.normal(ks[6], (B, H * V)).astype(dtype)
+    scale = jnp.ones((H * V,), jnp.float32)
+    w = ((jax.random.normal(ks[7], (H * V, Dm)) * 0.1).astype(dtype)
+         if fused else None)
+    S_r, y_r = ref.gdn_step(S, q, k, v, a, b, z, scale, 1e-6, w_out=w)
+    # h_tile=2 forces a 2-tile head sweep through the global-rmsnorm
+    from repro.kernels.mixer_steps import gdn_step_pallas
+    S_p, y_p = gdn_step_pallas(S, q, k, v, a, b, z, scale, 1e-6, w,
+                               h_tile=2, interpret=True)
+    _assert_close(S_p, S_r, dtype)
+    _assert_close(y_p, y_r, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [False, True], ids=["core", "epilogue"])
+def test_rglru_step_kernel_vs_ref(dtype, fused):
+    B, D, Dm = 2, 64, 24
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    h = jax.random.normal(ks[0], (B, D), jnp.float32)
+    u = jax.random.normal(ks[1], (B, D)).astype(dtype)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[2], (B, D), jnp.float32))
+    ig = jax.nn.sigmoid(jax.random.normal(ks[3], (B, D), jnp.float32))
+    gate = jax.nn.gelu(u) if fused else None
+    w = ((jax.random.normal(ks[4], (D, Dm)) * 0.1).astype(dtype)
+         if fused else None)
+    h_r, y_r = ref.rglru_step(h, u, log_a, ig, gate=gate, w_out=w)
+    from repro.kernels.mixer_steps import rglru_step_pallas
+    h_p, y_p = rglru_step_pallas(h, u, log_a, ig, gate, w, d_tile=16,
+                                 interpret=True)
+    _assert_close(h_p, h_r, dtype)
+    _assert_close(y_p, y_r, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [False, True], ids=["core", "epilogue"])
+def test_mlstm_step_kernel_vs_ref(dtype, fused):
+    B, H, K, V, Dm = 2, 4, 8, 16, 24
+    ks = jax.random.split(jax.random.PRNGKey(3), 10)
+    C = jax.random.normal(ks[0], (B, H, K, V), jnp.float32)
+    n = jax.random.normal(ks[1], (B, H, K), jnp.float32)
+    m = jax.random.normal(ks[2], (B, H), jnp.float32) * 0.1
+    q = jax.random.normal(ks[3], (B, H, K), jnp.float32)
+    k = jax.random.normal(ks[4], (B, H, K), jnp.float32)
+    v = jax.random.normal(ks[5], (B, H, V), jnp.float32)
+    il = jax.random.normal(ks[6], (B, H), jnp.float32)
+    fl = -jax.nn.softplus(jax.random.normal(ks[7], (B, H), jnp.float32))
+    z = jax.random.normal(ks[8], (B, H * V)).astype(dtype)
+    gn = jnp.ones((H * V,), jnp.float32)
+    w = ((jax.random.normal(ks[9], (H * V, Dm)) * 0.1).astype(dtype)
+         if fused else None)
+    r = ref.mlstm_step(C, n, m, q, k, v, il, fl, z, gn, 1e-6, w_out=w)
+    from repro.kernels.mixer_steps import mlstm_step_pallas
+    p = mlstm_step_pallas(C, n, m, q, k, v, il, fl, z, gn, 1e-6, w,
+                          h_tile=2, interpret=True)
+    for got, want in zip(p, r):
+        _assert_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [False, True], ids=["core", "ffn"])
+def test_slstm_step_kernel_vs_ref(dtype, fused):
+    B, H, Dh, F, Dm = 2, 2, 16, 48, 24
+    inner = H * Dh
+    ks = jax.random.split(jax.random.PRNGKey(4), 10)
+    c = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+    n = jnp.abs(jax.random.normal(ks[1], (B, H, Dh), jnp.float32)) + 1.0
+    h = jax.random.normal(ks[2], (B, H, Dh), jnp.float32)
+    m = jax.random.normal(ks[3], (B, H, Dh), jnp.float32) * 0.1
+    gx = jax.random.normal(ks[4], (B, 4 * inner)).astype(dtype)
+    rw = jax.random.normal(ks[5], (H, Dh, 4 * Dh), jnp.float32) * 0.1
+    b = jax.random.normal(ks[6], (4 * inner,), jnp.float32) * 0.1
+    gn = jnp.ones((inner,), jnp.float32)
+    kw = {}
+    if fused:
+        kw = dict(
+            w_up=(jax.random.normal(ks[7], (inner, F)) * 0.1).astype(dtype),
+            w_gate=(jax.random.normal(ks[8], (inner, F)) * 0.1).astype(dtype),
+            w_down=(jax.random.normal(ks[9], (F, Dm)) * 0.1).astype(dtype))
+    r = ref.slstm_step(c, n, h, m, gx, rw, b, gn, 1e-6, **kw)
+    # h_tile=1 forces a 2-tile head sweep through the dual FFN accumulators
+    from repro.kernels.mixer_steps import slstm_step_pallas
+    p = slstm_step_pallas(c, n, h, m, gx, rw, b.reshape(H, 4 * Dh), gn,
+                          1e-6, **kw, h_tile=1, interpret=True)
+    for got, want in zip(p, r):
+        _assert_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("op", ["mamba2_step", "gdn_step", "rglru_step",
+                                "mlstm_step", "slstm_step", "logits_step"])
+def test_step_ops_offer_all_four_impls(op):
+    """Every new step op offers ref/fused/pallas/interpret, with off-TPU
+    'pallas' aliasing 'fused' (== the ref composition) — the invariant the
+    engine-level greedy bit-identity tests ride on."""
+    assert ops.resolve_impl(op, "pallas") == "fused"
+    assert ops.resolve_impl(op, "fused") == "fused"
+    assert ops.resolve_impl(op, "ref") == "ref"
+    # 'interpret' must never be remapped (it is the CPU kernel test path)
+    assert ops.resolve_impl(op, "interpret") == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# fused sampling epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tied", [True, False])
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_logits_step_kernel_vs_ref(tied, cap, dtype):
+    B, D, V = 3, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    hidden = jax.random.normal(ks[0], (B, D)).astype(dtype)
+    table = jax.random.normal(ks[1], (V, D)).astype(dtype)
+    t = table if tied else table.T
+    i_r, m_r, s_r = ref.logits_step(hidden, t, tied=tied, softcap=cap)
+    i_p, m_p, s_p = ops.logits_step(hidden, t, tied=tied, softcap=cap,
+                                    impl="interpret")
+    assert np.array_equal(np.asarray(i_p), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-4)
+
+
+def test_logits_step_tie_breaking_matches_argmax():
+    """Duplicated logit maxima across vocab tiles must keep the earliest
+    index — jnp.argmax's first-occurrence rule, which ``sample``'s greedy
+    branch (and therefore greedy bit-identity) depends on."""
+    B, D, V = 2, 8, 64
+    hidden = jnp.ones((B, D), jnp.float32)
+    # identical rows at 3, 19 and 40 -> tied maxima in different v-tiles
+    table = jnp.zeros((V, D), jnp.float32)
+    row = jnp.ones((D,), jnp.float32)
+    table = table.at[3].set(row).at[19].set(row).at[40].set(row)
+    i_r, _, _ = ref.logits_step(hidden, table, tied=True)
+    from repro.kernels.sampling_epilogue import logits_step_pallas
+    i_p, _, _ = logits_step_pallas(hidden, table, tied=True, v_tile=16,
+                                   interpret=True)
+    want = jnp.argmax(jnp.einsum("bd,vd->bv", hidden, table), axis=-1)
+    assert np.array_equal(np.asarray(i_r), np.asarray(want))
+    assert np.array_equal(np.asarray(i_p), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_logits_step_need_stats_false_same_token(impl):
+    """``need_stats=False`` (the greedy fast path) must return the same
+    argmax as the full call, with the stats slots as None — for both the
+    jnp fallback (which skips the max/sum-exp work) and the kernel (which
+    just drops them)."""
+    B, D, V = 3, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    hidden = jax.random.normal(ks[0], (B, D), jnp.float32)
+    table = jax.random.normal(ks[1], (V, D), jnp.float32)
+    i_full, _, _ = ops.logits_step(hidden, table, tied=True, impl=impl)
+    i_fast, vmax, sumexp = ops.logits_step(hidden, table, tied=True,
+                                           need_stats=False, impl=impl)
+    assert vmax is None and sumexp is None
+    assert np.array_equal(np.asarray(i_fast), np.asarray(i_full))
+
+
+def test_sample_fused_greedy_and_sampled_paths():
+    """All-greedy batches take the in-kernel argmax; any sampled slot falls
+    back to the full-logits path — both must agree with ``sample``."""
+    from repro.serve.sampling import sample, sample_fused
+    B, D, V = 2, 16, 64
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    hidden = jax.random.normal(ks[0], (B, D), jnp.float32)
+    table = jax.random.normal(ks[1], (V, D), jnp.float32)
+    logits = jnp.einsum("bd,vd->bv", hidden, table,
+                        preferred_element_type=jnp.float32)
+    topk = jnp.zeros((B,), jnp.int32)
+    topp = jnp.ones((B,), jnp.float32)
+    for temp in (jnp.zeros((B,)), jnp.full((B,), 0.8)):
+        want = sample(logits, ks[2], temp, topk, topp)
+        got = sample_fused(hidden, table, True, 0.0, lambda: logits,
+                           ks[2], temp, topk, topp)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), temp
+
+
+# ---------------------------------------------------------------------------
+# autotuner plumbing (off-TPU behavior + table round-trip)
+# ---------------------------------------------------------------------------
+
+def test_autotune_bucket_and_clamp():
+    assert autotune.bucket(1) == 1
+    assert autotune.bucket(129) == 256
+    assert autotune.bucket(1024) == 1024
+    assert autotune._clamp(512, 384) == 128       # largest pow2 divisor <= 512
+    assert autotune._clamp(7, 64) == 1
+    assert autotune.pow2_divisors(256, 64) == [64, 128, 256]
+    assert autotune.table_key("mamba2_step", jnp.bfloat16, 300) == \
+        "mamba2_step/bfloat16/512"
+
+
+def test_tile_for_returns_clamped_default_off_tpu():
+    """CPU/interpret runs never consult or write the table — they take the
+    static default, clamped to divide the dim."""
+    assert jax.default_backend() != "tpu"
+    assert autotune.tile_for("mamba2_step", jnp.float32, 128, 256) == 128
+    assert autotune.tile_for("rglru_step", jnp.float32, 96, 512) == 32
+
+
+def test_autotune_record_round_trip(tmp_path):
+    path = tmp_path / "table.json"
+    autotune.record("gdn_step", jnp.float32, 8, 4, path=path)
+    tab = json.loads(path.read_text())
+    assert tab["entries"]["gdn_step/float32/8"] == {"tile": 4}
+
+
+def test_autotune_cli_refuses_off_tpu(capsys):
+    assert autotune.main([]) == 1
+    assert "no TPU backend" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# registry resolution-order contract (satellite sweep over every op)
+# ---------------------------------------------------------------------------
+
+STEP_OPS = ("selective_scan_step", "routed_matmul", "mamba2_step",
+            "gdn_step", "rglru_step", "mlstm_step", "slstm_step",
+            "logits_step")
+
+
+@pytest.mark.parametrize("op", sorted(
+    ["selective_scan", "grouped_matmul", *STEP_OPS]))
+def test_resolution_order_per_op(op):
+    """explicit impl > default_impl context > backend auto > per-op
+    fallback, for every registered op; 'interpret' is never remapped."""
+    assert op in ops.registered_ops()
+    auto_fb = "fused" if op in STEP_OPS else "ref"
+    # backend auto on CPU
+    assert ops.resolve_impl(op) == "ref"
+    # context default applies, with the off-TPU per-op fallback
+    with ops.default_impl("pallas"):
+        assert ops.resolve_impl(op) == auto_fb
+        # explicit impl beats the context default
+        assert ops.resolve_impl(op, "ref") == "ref"
+        assert ops.resolve_impl(op, "interpret") == "interpret"
+        # nested contexts shadow and restore
+        with ops.default_impl("ref"):
+            assert ops.resolve_impl(op) == "ref"
+        assert ops.resolve_impl(op) == auto_fb
+    assert ops.active_default() is None
+    assert ops.resolve_impl(op, "pallas") == auto_fb
+    assert ops.resolve_impl(op, "interpret") == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# engine-level greedy identity per mixer: kernels='pallas' vs 'ref'
+# ---------------------------------------------------------------------------
+
+MIXER_PATTERNS = [("mamba2",), ("gdn",), ("rglru",), ("mlstm",), ("slstm",)]
+_IDS = [p[0] for p in MIXER_PATTERNS]
+
+
+def _run_tokens(cfg, params, kernels, *, admission="interleaved",
+                speculative=0, cache=None, scheduler=None):
+    eng = ServeEngine(cfg, params,
+                      engine=EngineConfig(max_slots=2, max_len=32, seed=0,
+                                          max_prefill_chunk=8,
+                                          admission=admission,
+                                          speculative=speculative,
+                                          kernels=kernels),
+                      prefix_cache=cache, scheduler=scheduler)
+    rng = np.random.default_rng(5)
+    reqs = [Request(id=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=(n,)).tolist(),
+                    max_new_tokens=4)
+            for i, n in enumerate([5, 9, 3])]
+    res = eng.run(reqs)
+    return {r.id: (r.tokens, r.finish_reason) for r in res}
+
+
+@pytest.mark.parametrize("mode", ["interleaved", "sequential", "speculative"])
+@pytest.mark.parametrize("pattern", MIXER_PATTERNS, ids=_IDS)
+def test_engine_greedy_identity_per_mixer(pattern, mode):
+    """Every fused recurrent mixer must emit greedy tokens bit-identical to
+    kernels='ref' through interleaved, sequential and speculative serving
+    (3 mixed-length requests on 2 slots force admission mid-decode).  The
+    'pallas' run also exercises the fused sampling epilogue via
+    decode_core's hidden-row path."""
+    cfg = _full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    kw = (dict(speculative=3) if mode == "speculative"
+          else dict(admission=mode))
+    a = _run_tokens(cfg, params, "ref", **kw)
+    b = _run_tokens(cfg, params, "pallas", **kw)
+    assert a == b
+
+
+@pytest.mark.parametrize("pattern", MIXER_PATTERNS, ids=_IDS)
+def test_engine_greedy_identity_per_mixer_cache_hits(pattern):
+    """Cache-hit admission (restored prefix snapshots) under each fused
+    mixer: same greedy tokens as kernels='ref', with the cache actually
+    serving hits in both runs."""
+    from repro.serve import CachedSuffixFirst
+    cfg = _full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(2, cfg.vocab_size, size=(10,)).tolist()
+    outs = {}
+    for impl in ("ref", "pallas"):
+        cache = PrefixCache(budget_mb=8.0)
+        eng = ServeEngine(cfg, params,
+                          engine=EngineConfig(max_slots=2, max_len=32,
+                                              seed=0, max_prefill_chunk=4,
+                                              kernels=impl),
+                          prefix_cache=cache,
+                          scheduler=CachedSuffixFirst(cache))
+        eng.run([Request(id=-1, prompt=shared + [1], max_new_tokens=1)])
+        res = eng.run([Request(id=i, prompt=shared + [40 + i],
+                               max_new_tokens=4) for i in range(2)])
+        assert eng.stats["cache_hit_tokens"] > 0, impl
+        outs[impl] = {r.id: r.tokens for r in res}
+    assert outs["ref"] == outs["pallas"]
+
+
+def test_engine_sampled_identity_under_kernels():
+    """temperature > 0 slots force sample_fused onto the full-logits branch;
+    with identical rng streams the sampled tokens must match kernels='ref'
+    exactly (fused == ref math keeps the logits bitwise equal)."""
+    from repro.serve.sampling import SamplingParams
+    cfg = _full_cfg((((("mamba2",)), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        eng = ServeEngine(cfg, params,
+                          engine=EngineConfig(max_slots=2, max_len=32,
+                                              seed=0, max_prefill_chunk=8,
+                                              kernels=impl))
+        res = eng.run([Request(id=i, prompt=[3 + i, 7, 11], max_new_tokens=4,
+                               sampling=SamplingParams(temperature=0.8,
+                                                       top_k=8))
+                       for i in range(2)])
+        outs[impl] = {r.id: r.tokens for r in res}
+    assert outs["ref"] == outs["pallas"]
