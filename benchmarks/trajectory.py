@@ -84,9 +84,24 @@ def numeric_leaves(obj, prefix=""):
     return out
 
 
+def missing_scenarios(baseline: dict, current: dict):
+    """Baseline scenarios absent from the current report.  Key
+    intersection alone would silently drop them — a scenario that stops
+    running (renamed, crashed, filtered out) would pass the gate exactly
+    like a healthy one — so the runner must fail loudly instead."""
+    base = baseline.get("scenarios", baseline)
+    cur = current.get("scenarios", current)
+    if not isinstance(base, dict) or not isinstance(cur, dict):
+        return []
+    return sorted(k for k, v in base.items()
+                  if isinstance(v, dict) and k not in cur)
+
+
 def compare(baseline: dict, current: dict):
     """Returns (rows, regressions): every gated metric present in both
-    reports, with its relative change and verdict."""
+    reports, with its relative change and verdict.  Scenario-level
+    disappearance is NOT tolerated here by omission — ``main`` gates it
+    via :func:`missing_scenarios`."""
     base = numeric_leaves(baseline.get("scenarios", baseline))
     cur = numeric_leaves(current.get("scenarios", current))
     rows, regressions = [], []
@@ -199,6 +214,12 @@ def main(argv=None):
         return 0
 
     warn_device_mismatch(baseline, current)
+    missing = missing_scenarios(baseline, current)
+    for name in missing:
+        print(f"MISSING SCENARIO: {name!r} is in the baseline but absent "
+              f"from the current report — it stopped running (renamed, "
+              f"crashed, or filtered out); rerun it or refresh the "
+              f"baseline with --update")
     rows, regressions = compare(baseline, current)
     failures = check_identity(current)
     width = max((len(r[0]) for r in rows), default=20)
@@ -208,9 +229,10 @@ def main(argv=None):
               f"{rel:+7.1%}  ({direction} better, tol {tol:.0%})  {mark}")
     for msg in failures:
         print(f"FUNCTIONAL GATE FAILED: {msg}")
-    if regressions or failures:
+    if regressions or failures or missing:
         print(f"trajectory: {len(regressions)} metric regression(s), "
-              f"{len(failures)} functional failure(s)")
+              f"{len(failures)} functional failure(s), "
+              f"{len(missing)} missing scenario(s)")
         return 1
     print(f"trajectory: {len(rows)} gated metrics within thresholds")
     return 0

@@ -321,3 +321,27 @@ def ragged_moe_linear(dsp: Dispatch, x: jnp.ndarray, w: jnp.ndarray, *,
         scale = dsp.routing.weights.reshape(n).astype(y.dtype)
     y = y * scale[:, None]
     return y.reshape(1, g, K, -1).sum(axis=2)
+
+def select_per_set(ys, sel: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot selection across per-expert-set projection outputs.
+
+    ``ys`` is a sequence of identically-shaped ``(B, S, F)`` arrays — one
+    per bound expert set, each produced by the *unmodified* single-set
+    projection path (serve/expert_library.py binds expert leaves as per-set
+    tuples) — and ``sel`` is ``(B,)`` int32 mapping each batch row (decode
+    slot) to its bound set.  Returns ``(B, S, F)`` where row ``b`` is taken
+    verbatim from ``ys[sel[b]]``.
+
+    Written as a ``where``-chain over sets rather than ``stack`` + gather:
+    rows of ``ys[i]`` pass through *bitwise* unchanged (the per-tenant
+    identity guarantee rides on this), and with a single bound set the
+    selection is the identity — the non-library trace.
+    """
+    ys = list(ys)
+    if len(ys) == 1:
+        return ys[0]
+    mask_shape = (-1,) + (1,) * (ys[0].ndim - 1)
+    out = ys[0]
+    for i in range(1, len(ys)):
+        out = jnp.where((sel == i).reshape(mask_shape), ys[i], out)
+    return out

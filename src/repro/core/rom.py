@@ -62,6 +62,22 @@ class SharedRouting:
     decision — Conv/Gate share the dispatched X buffer via the tag."""
 
     def __init__(self, w_router, x, rom, rt: Runtime, rng=None):
+        # Multi-tenant serving (serve/expert_library.py): the engine binds
+        # expert leaves as per-set tuples and a (B,) set index on
+        # ``rt.expert_sets``.  A tuple router fans out into one
+        # sub-SharedRouting per bound set — each running the *identical*
+        # single-set path below, at the identical shapes a dedicated
+        # single-set engine would trace, which is what makes per-tenant
+        # greedy decode bitwise identical — and ``proj`` selects each
+        # slot's bound set's output row.  One routed GEMM per live set.
+        if isinstance(w_router, tuple):
+            self.subs = tuple(SharedRouting(w, x, rom, rt, rng=rng)
+                              for w in w_router)
+            self.sel = jnp.asarray(rt.expert_sets, jnp.int32)
+            self.B, self.S = self.subs[0].B, self.subs[0].S
+            self.rom = rom
+            return
+        self.subs = None
         B, S, D = x.shape
         self.B, self.S = B, S
         self.G = num_groups(B, rt)
@@ -94,6 +110,14 @@ class SharedRouting:
 
     def proj(self, t, w, *, weighted: bool, tag: str):
         """t (B,S,Din) -> (B,S,Dout) through the routed experts w (E,Din,Dout)."""
+        if self.subs is not None:
+            # per-set fan-out: tuple weights pair up with the sub-routings;
+            # a plain array broadcasts (a leaf the library does not swap,
+            # e.g. the FFN-MoE reusing this routing via ctx)
+            ws = w if isinstance(w, tuple) else (w,) * len(self.subs)
+            ys = [sub.proj(t, wi, weighted=weighted, tag=tag)
+                  for sub, wi in zip(self.subs, ws)]
+            return md.select_per_set(ys, self.sel)
         B, S, Din = t.shape
         if self.fast:
             T = self.G * self.g                      # = B*S decode tokens
@@ -113,6 +137,11 @@ class SharedRouting:
         return y.reshape(B, S, -1)
 
     def metrics(self) -> dict:
+        if self.subs is not None:
+            # aux metrics are training-time diagnostics; serving never
+            # feeds them back into logits, so the first set's are
+            # representative enough for the stats stream
+            return self.subs[0].metrics()
         m = dict(self.routing.metrics)
         if self.lin is not None:
             m["drop_frac"] = self.lin.dsp.drop_frac

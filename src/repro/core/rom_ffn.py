@@ -65,6 +65,33 @@ def _swiglu_buffers(lin: md.SharedMoELinear, xt, wu, wg, wd):
     return md.combine_tokens(lin.dsp, y, weighted=True)
 
 
+def _ffn_routed(routing, x, params, moe, rt: Runtime):
+    """The expert-FFN body for one routing decision.  Returns
+    ``(y (B,S,D), drop_frac or None)``."""
+    B, S, D = x.shape
+    G = routing.expert_idx.shape[0]
+    xt = x.reshape(G, B * S // G, D)
+    wu = params["e_w_up"]
+    wg = params["e_w_gate_ffn"]
+    wd = params["e_w_down"]
+    if moe.impl == "dense":
+        # dense oracle computes hidden per expert; recompute exactly:
+        y_all = jnp.einsum("gtd,edf->gtef", xt, wu.astype(xt.dtype))
+        g_all = jnp.einsum("gtd,edf->gtef", xt, wg.astype(xt.dtype))
+        h_all = y_all * silu(g_all)
+        o_all = jnp.einsum("gtef,efd->gted", h_all, wd.astype(xt.dtype))
+        sel = jax.nn.one_hot(routing.expert_idx, moe.num_experts,
+                             dtype=jnp.float32)
+        mix = (sel * routing.weights[..., None]).sum(2)
+        y = jnp.einsum("gted,gte->gtd", o_all.astype(jnp.float32),
+                       mix).astype(x.dtype)
+        return y.reshape(B, S, D), None
+    dsp = md.make_dispatch(routing, moe.capacity_factor)
+    lin = md.SharedMoELinear(dsp, impl=moe.impl, shard=rt.shard)
+    y = _swiglu_buffers(lin, xt, wu, wg, wd)
+    return y.reshape(B, S, D), dsp.drop_frac
+
+
 def moe_ffn_apply(params, x, cfg, rt: Runtime, ctx=None):
     moe = cfg.moe
     if moe.impl == "ep":
@@ -73,6 +100,18 @@ def moe_ffn_apply(params, x, cfg, rt: Runtime, ctx=None):
 
     if moe.share_rom_router and ctx is not None and "rom_routing" in ctx:
         sr: SharedRouting = ctx["rom_routing"]        # Eq. 14-15
+        if sr.subs is not None:
+            # multi-tenant serving: the shared decision is per expert set
+            # (the rom block's router weights are tenant-swapped), so the
+            # FFN — whose own experts are NOT swapped — fans out once per
+            # bound set and selects per slot, mirroring SharedRouting.proj
+            ys = [_ffn_routed(sub.routing, x, params, moe, rt)[0]
+                  for sub in sr.subs]
+            out = md.select_per_set(ys, sr.sel)
+            if moe.num_shared_experts:
+                shared, _ = mlp_apply(params["shared"], x, cfg, rt)
+                out = out + shared
+            return out, {}
         routing = sr.routing
         metrics = {}
     else:
@@ -85,30 +124,9 @@ def moe_ffn_apply(params, x, cfg, rt: Runtime, ctx=None):
             train=rt.train)
         metrics = dict(routing.metrics)
 
-    G = routing.expert_idx.shape[0]
-    xt = x.reshape(G, B * S // G, D)
-    wu = params["e_w_up"]
-    wg = params["e_w_gate_ffn"]
-    wd = params["e_w_down"]
-    if moe.impl == "dense":
-        up = md.dense_moe_linear(routing, xt, wu, weighted=False)
-        gate = md.dense_moe_linear(routing, xt, wg, weighted=False)
-        # dense oracle computes hidden per expert; recompute exactly:
-        y_all = jnp.einsum("gtd,edf->gtef", xt, wu.astype(xt.dtype))
-        g_all = jnp.einsum("gtd,edf->gtef", xt, wg.astype(xt.dtype))
-        h_all = y_all * silu(g_all)
-        o_all = jnp.einsum("gtef,efd->gted", h_all, wd.astype(xt.dtype))
-        sel = jax.nn.one_hot(routing.expert_idx, moe.num_experts,
-                             dtype=jnp.float32)
-        mix = (sel * routing.weights[..., None]).sum(2)
-        y = jnp.einsum("gted,gte->gtd", o_all.astype(jnp.float32),
-                       mix).astype(x.dtype)
-    else:
-        dsp = md.make_dispatch(routing, moe.capacity_factor)
-        lin = md.SharedMoELinear(dsp, impl=moe.impl, shard=rt.shard)
-        y = _swiglu_buffers(lin, xt, wu, wg, wd)
-        metrics["drop_frac"] = dsp.drop_frac
-    out = y.reshape(B, S, D)
+    out, drop = _ffn_routed(routing, x, params, moe, rt)
+    if drop is not None:
+        metrics["drop_frac"] = drop
     if moe.num_shared_experts:
         shared, _ = mlp_apply(params["shared"], x, cfg, rt)
         out = out + shared

@@ -223,3 +223,16 @@ class ParallelPlan:
         if self.mesh is None:
             return params
         return jax.device_put(params, self.param_shardings(params))
+
+    def commit_params(self, params):
+        """Device-commit a param (sub)tree under this plan.  On a mesh this
+        is :meth:`place_params` — expert leaves shard their expert dim over
+        the expert partition, the rest replicates.  Off-mesh it still
+        performs the host->device transfer (plain ``jax.device_put``,
+        where :meth:`place_params` is an identity): the expert library
+        faults host-resident expert sets in through this, so a cold set
+        pays one transfer at admission instead of re-uploading from numpy
+        on every dispatch."""
+        if self.mesh is None:
+            return jax.device_put(params)
+        return jax.device_put(params, self.param_shardings(params))

@@ -34,8 +34,8 @@ from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
 from repro.distributed.plan import ParallelPlan
 from repro.models import lm
-from repro.serve import (CachedSuffixFirst, EngineConfig, PrefixCache,
-                         Request, SamplingParams, ServeEngine,
+from repro.serve import (CachedSuffixFirst, EngineConfig, ExpertLibrary,
+                         PrefixCache, Request, SamplingParams, ServeEngine,
                          ShortestPromptFirst)
 
 
@@ -79,6 +79,23 @@ def main():
                     help="prefix-cache snapshot alignment: only publish "
                          "boundaries at multiples of G tokens (bounds the "
                          "radix tree; 1 = every chunk boundary)")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="multi-tenant serving: register N extra expert "
+                         "sets (independently initialized RoM projections) "
+                         "in an ExpertLibrary and round-robin requests "
+                         "across them plus the base set (0 = single-tenant; "
+                         "requires an arch with RoM/MoE-Mamba blocks)")
+    ap.add_argument("--expert-budget-mb", type=float, default=256.0,
+                    metavar="MB",
+                    help="ExpertLibrary device-residency budget in MiB; "
+                         "unpinned LRU sets past it are evicted and fault "
+                         "back in on demand (advisory: bound sets always "
+                         "fit)")
+    ap.add_argument("--max-bound", type=int, default=2, metavar="R",
+                    help="expert-set binding rows per decode batch: how "
+                         "many distinct sets one jitted decode step serves "
+                         "simultaneously (more rows = fewer hot swaps, "
+                         "bigger routed GEMM fan-out)")
     ap.add_argument("--mesh", default="", metavar="SPEC",
                     help="ParallelPlan topology, e.g. 'data=4' or "
                          "'data=2,model=2' over this host's devices "
@@ -113,6 +130,16 @@ def main():
         scheduler = ShortestPromptFirst()
     else:
         scheduler = None                          # engine default: FIFO
+    library = None
+    tenant_names = [None]
+    if args.tenants > 0:
+        library = ExpertLibrary(cfg, params,
+                                budget_mb=args.expert_budget_mb,
+                                max_bound=args.max_bound, plan=plan)
+        for i in range(args.tenants):
+            library.add(f"tenant{i}", lm.init_params(
+                jax.random.PRNGKey(args.seed + 1000 + i), cfg))
+        tenant_names += [f"tenant{i}" for i in range(args.tenants)]
     engine = ServeEngine(
         cfg, params, plan=plan,
         engine=EngineConfig(max_slots=args.batch, max_len=max_len,
@@ -121,7 +148,7 @@ def main():
                             draft_stride=args.draft_stride,
                             kernels=(None if args.kernels == "auto"
                                      else args.kernels)),
-        prefix_cache=cache, scheduler=scheduler)
+        prefix_cache=cache, scheduler=scheduler, expert_library=library)
 
     print(f"plan: {plan.describe()} | kernels: {args.kernels}")
     n_req = args.requests or args.batch
@@ -130,7 +157,8 @@ def main():
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     reqs = [Request(id=i, prompt=prompts[i].tolist(),
-                    max_new_tokens=args.gen, sampling=sp)
+                    max_new_tokens=args.gen, sampling=sp,
+                    expert_set=tenant_names[i % len(tenant_names)])
             for i in range(n_req)]
 
     t0 = time.perf_counter()
@@ -163,6 +191,15 @@ def main():
               f"{cs['snapshots']} snapshots "
               f"({cs['bytes_used'] / 2 ** 20:.2f} MiB), "
               f"{cs['evictions']} evictions")
+    if library is not None:
+        ls = library.summary()
+        print(f"expert library ({args.expert_budget_mb:g} MiB, "
+              f"{args.max_bound} binding rows): {ls['sets']} sets, "
+              f"{ls['resident']} resident "
+              f"({ls['bytes_device'] / 2 ** 20:.2f} MiB), "
+              f"{s['expert_swaps']} swaps, {ls['faults']} faults, "
+              f"{ls['evictions']} evictions, "
+              f"residency hit rate {ls['residency_hit_rate']:.2%}")
     print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
           f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
           f"max {np.max(ttfts) * 1e3:.1f}ms")

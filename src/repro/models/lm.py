@@ -133,6 +133,28 @@ MIXERS: Dict[str, Mixer] = {
                         _noctx(attn_moe.switchhead_apply)),
 }
 
+#: Mixer kinds whose projection-expert leaves (``e_w_*``) and shared router
+#: (``w_router`` — including moemamba's nested per-projection routers) are
+#: hot-swappable at serve time through
+#: :class:`repro.serve.expert_library.ExpertLibrary`.  FFN-MoE (``moe``)
+#: experts are deliberately excluded: RoM's claim is about the projection
+#: experts, and the library swaps exactly those.
+EXPERT_SWAPPABLE = tuple(sorted(
+    [k for k in MIXERS if k.startswith("rom_")] + ["moemamba"]))
+
+
+def expert_block_keys(cfg):
+    """Block keys holding swappable expert leaves, per segment:
+    ``[(segment_index, "l{i}_{kind}"), ...]`` over ``cfg.segments``.  The
+    expert library's extraction/graft walk — and its congruence checks —
+    derive the swappable subtree of a param pytree from this."""
+    out = []
+    for si, (pattern, _repeats) in enumerate(cfg.segments):
+        for i, kind in enumerate(pattern):
+            if kind in EXPERT_SWAPPABLE:
+                out.append((si, f"l{i}_{kind}"))
+    return out
+
 
 # ---------------------------------------------------------------------------
 # init

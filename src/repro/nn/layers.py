@@ -17,6 +17,12 @@ class Runtime:
     rng: Optional[jax.Array] = None
     train: bool = False
     pos_offset: int = 0          # decode: absolute position of current token
+    # multi-tenant serving (serve/expert_library.py): (B,) int32 — which of
+    # the engine's bound expert sets each batch row (decode slot) uses.
+    # None everywhere except the library-aware jitted decode steps, where
+    # expert leaves arrive as per-set tuples and SharedRouting selects each
+    # row's bound set's output.
+    expert_sets: Optional[jax.Array] = None
 
     def with_rng(self, rng):
         return dataclasses.replace(self, rng=rng)

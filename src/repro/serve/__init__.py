@@ -41,9 +41,12 @@ from repro.serve.state import (StateSpec, StateStore, adopt_slots,
 
 _ENGINE_NAMES = ("EngineConfig", "Request", "RequestResult", "ServeEngine")
 _SPEC_NAMES = ("SpecConfig", "make_spec_fn")
+# lazy for the same reason as ``engine``: the library walks models/lm's
+# mixer registry to find the expert-swappable blocks
+_LIBRARY_NAMES = ("ExpertLibrary",)
 
-__all__ = ["EngineConfig", "Request", "RequestResult", "ServeEngine",
-           "SamplingParams",
+__all__ = ["EngineConfig", "ExpertLibrary", "Request", "RequestResult",
+           "ServeEngine", "SamplingParams",
            "sample", "spec_accept", "filtered_logits", "FIFOScheduler",
            "ShortestPromptFirst", "CachedSuffixFirst", "PrefixCache",
            "SpecConfig", "make_spec_fn", "StateSpec",
@@ -59,4 +62,7 @@ def __getattr__(name):
     if name in _SPEC_NAMES:
         from repro.serve import speculative
         return getattr(speculative, name)
+    if name in _LIBRARY_NAMES:
+        from repro.serve import expert_library
+        return getattr(expert_library, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -106,6 +106,13 @@ class PrefixCache:
         self.capture = capture
         self.grain = grain
         self._root = _Node(edge=(), depth=0, parent=None)
+        # namespaces (``ns=`` on queries/updates): decode-state snapshots
+        # depend on the weights that produced them, so a multi-tenant
+        # engine (serve/expert_library.py) keys each request's prefixes by
+        # its expert-set name — one radix tree per namespace, sharing this
+        # cache's byte budget, LRU clock, stats and version.  ``ns=None``
+        # (the default, and every non-library engine) is the original root.
+        self._ns_roots: Dict[Any, _Node] = {}
         self._snaps: set = set()        # nodes currently holding a snapshot
         self._bytes = 0
         self._clock = 0
@@ -127,11 +134,19 @@ class PrefixCache:
     def bytes_used(self) -> int:
         return self._bytes
 
-    def _walk_best(self, tokens: Sequence[int],
-                   cap: int) -> Optional[_Node]:
+    def _root_for(self, ns) -> _Node:
+        if ns is None:
+            return self._root
+        root = self._ns_roots.get(ns)
+        if root is None:
+            root = self._ns_roots[ns] = _Node(edge=(), depth=0, parent=None)
+        return root
+
+    def _walk_best(self, tokens: Sequence[int], cap: int,
+                   ns=None) -> Optional[_Node]:
         """Deepest snapshot-holding node spelling a prefix of ``tokens``
         no longer than ``cap``; None on a total miss."""
-        node, best, i = self._root, None, 0
+        node, best, i = self._root_for(ns), None, 0
         while True:
             if node.snap is not None and node.depth <= cap:
                 best = node
@@ -146,18 +161,18 @@ class PrefixCache:
             i += m
             node = nxt
 
-    def peek_len(self, tokens: Sequence[int]) -> int:
+    def peek_len(self, tokens: Sequence[int], ns=None) -> int:
         """Longest cached-prefix length for this prompt, side-effect free
         (no LRU touch, no stats) — for schedulers and admission grouping."""
-        best = self._walk_best(tokens, max(len(tokens) - 1, 0))
+        best = self._walk_best(tokens, max(len(tokens) - 1, 0), ns)
         return best.depth if best is not None else 0
 
-    def lookup(self, tokens: Sequence[int]) -> Tuple[int, Any]:
+    def lookup(self, tokens: Sequence[int], ns=None) -> Tuple[int, Any]:
         """Longest cached prefix strictly shorter than the prompt:
         ``(prefix_len, snapshot)``, or ``(0, None)`` on a miss.  Touches
         LRU and records hit/miss stats — call once per admitted request."""
         self.stats["lookup_tokens"] += len(tokens)
-        best = self._walk_best(tokens, max(len(tokens) - 1, 0))
+        best = self._walk_best(tokens, max(len(tokens) - 1, 0), ns)
         if best is None:
             self.stats["misses"] += 1
             return 0, None
@@ -167,9 +182,9 @@ class PrefixCache:
         self.stats["hit_tokens"] += best.depth
         return best.depth, best.snap
 
-    def contains(self, tokens: Sequence[int]) -> bool:
+    def contains(self, tokens: Sequence[int], ns=None) -> bool:
         """True iff exactly this prefix holds a snapshot."""
-        best = self._walk_best(tokens, len(tokens))
+        best = self._walk_best(tokens, len(tokens), ns)
         return best is not None and best.depth == len(tokens)
 
     # ------------------------------------------------------------- updates
@@ -189,7 +204,7 @@ class PrefixCache:
         return True
 
     def insert(self, tokens: Sequence[int],
-               snap_fn: Callable[[], Any]) -> bool:
+               snap_fn: Callable[[], Any], ns=None) -> bool:
         """Publish a boundary snapshot for ``tokens``.
 
         ``snap_fn`` produces the host-side snapshot and is only called if
@@ -199,7 +214,7 @@ class PrefixCache:
         """
         if not self.wants(tokens):
             return False
-        node = self._ensure_node(tuple(tokens))
+        node = self._ensure_node(tuple(tokens), self._root_for(ns))
         self._clock += 1
         node.used = self._clock
         if node.snap is not None:
@@ -219,9 +234,10 @@ class PrefixCache:
         self._evict_to_budget(keep=node)
         return True
 
-    def _ensure_node(self, tokens: Tuple[int, ...]) -> _Node:
+    def _ensure_node(self, tokens: Tuple[int, ...],
+                     root: Optional[_Node] = None) -> _Node:
         """Find-or-create the node spelling ``tokens``, splitting edges."""
-        node, i = self._root, 0
+        node, i = (root if root is not None else self._root), 0
         while i < len(tokens):
             nxt = node.children.get(tokens[i])
             if nxt is None:
@@ -285,13 +301,15 @@ class PrefixCache:
             "bytes_used": self._bytes,
             "budget_bytes": self.budget_bytes,
             "grain": self.grain,
+            "namespaces": 1 + len(self._ns_roots),
             "hit_rate": s["hits"] / max(lookups, 1),
             "token_hit_rate": s["hit_tokens"] / max(s["lookup_tokens"], 1),
             **s,
         }
 
     # introspection used by tests: every (prefix, nbytes) currently held
-    def snapshot_prefixes(self) -> List[Tuple[Tuple[int, ...], int]]:
+    # in one namespace's tree (default: the ``ns=None`` root)
+    def snapshot_prefixes(self, ns=None) -> List[Tuple[Tuple[int, ...], int]]:
         out = []
 
         def rec(node, prefix):
@@ -301,5 +319,5 @@ class PrefixCache:
             for c in node.children.values():
                 rec(c, prefix)
 
-        rec(self._root, ())
+        rec(self._root_for(ns), ())
         return sorted(out)

@@ -94,13 +94,17 @@ class Request:
 
     prompt: token ids (len < engine max_len); max_new_tokens: decode budget;
     sampling: per-request temperature/top-k/top-p applied inside the jitted
-    step; eos_id: optional stop token (kept in the output when hit).
+    step; eos_id: optional stop token (kept in the output when hit);
+    expert_set: name of the :class:`~repro.serve.expert_library.
+    ExpertLibrary` expert set this request decodes with (None = the
+    library's default set, and the only valid value without a library).
     """
     id: int
     prompt: Sequence[int]
     max_new_tokens: int = 16
     sampling: SamplingParams = SamplingParams()
     eos_id: Optional[int] = None
+    expert_set: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -131,6 +135,7 @@ class _PrefillLane:
     t_submit: float
     remaining: int                      # prompt tokens not yet prefilled
     done: bool = False
+    set_row: int = 0                    # expert-library binding row
 
 
 def prefill_chunks(n: int, max_chunk: int) -> List[int]:
@@ -160,12 +165,19 @@ class _PrefillJob:
     while longer lanes keep prefilling."""
 
     def __init__(self, lanes: List[_PrefillLane], width: int, state,
-                 max_chunk: int, pos0: int = 0):
+                 max_chunk: int, pos0: int = 0, ns=None, params=None):
         self.lanes = lanes
         self.width = width
         self.state = state
         self.pos = pos0
         self.max_chunk = max_chunk
+        # multi-tenant admission: all lanes of one job share an expert set
+        # (one prefill dispatch runs one set's weights).  ``ns`` is the
+        # request's raw ``expert_set`` — the prefix-cache namespace this
+        # job reads/publishes under; ``params`` the single-set graft the
+        # job's prefill dispatches run on (None = the engine's base params)
+        self.ns = ns
+        self.params = params
         self.prompts = {l.row: np.asarray(l.req.prompt, np.int32)
                         for l in lanes}
         self.temp = np.zeros((width,), np.float32)
@@ -230,7 +242,7 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, plan: Optional[ParallelPlan] = None,
                  engine: Optional[EngineConfig] = None, scheduler=None,
-                 prefix_cache=None, **knobs):
+                 prefix_cache=None, expert_library=None, **knobs):
         if "mesh" in knobs or "rules" in knobs:
             raise TypeError(
                 "ServeEngine no longer takes mesh=/rules= — resolve the "
@@ -277,6 +289,25 @@ class ServeEngine:
         self.params = self.plan.place_params(params)
         self.store = StateStore(cfg, max_slots, max_len, self.dtype,
                                 plan=self.plan)
+        # multi-tenant serving: an ExpertLibrary makes the swappable expert
+        # leaves a per-dispatch input.  The engine holds ``max_bound``
+        # *binding rows* — named set slots its jitted steps fan out over —
+        # all boot-bound (and pinned) to the library's default set;
+        # admission rebinds a free row when a request names a cold set.
+        # ``_graft_cache`` is the lazily rebuilt multi-set param tree the
+        # decode/spec dispatches run on (tuple expert leaves, one entry per
+        # *distinct* bound set so each dispatch pays one routed GEMM per
+        # live set).
+        self.library = expert_library
+        if self.library is not None:
+            if self.library.plan is None:
+                self.library.plan = self.plan
+            self._bound: List[str] = ([self.library.default]
+                                      * self.library.max_bound)
+            for name in self._bound:
+                self.library.acquire(name)
+            self._graft_cache = None
+            self._graft_names: Optional[List[str]] = None
         st_sh = self.store.shardings            # None on single_device()
         shard_ctx = self.plan.shard_ctx()
 
@@ -284,8 +315,13 @@ class ServeEngine:
         prefill_fn = tr.make_prefill_step_fn(cfg, self.plan.mesh,
                                              self.plan.rules)
 
-        def decode_core(params, state, toks, pos, rng, temp, topk, topp):
-            rt = lm.Runtime(shard=shard_ctx, rng=None, train=False)
+        def decode_core(params, state, toks, pos, rng, temp, topk, topp,
+                        sets=None):
+            # ``sets`` (B,) i32: per-slot expert-library binding rows —
+            # params then carry per-set tuple expert leaves and
+            # SharedRouting selects each slot's set; None without a library
+            rt = lm.Runtime(shard=shard_ctx, rng=None, train=False,
+                            expert_sets=sets)
             if kernel_ops.active_default() is None:
                 logits, new_state = lm.decode_step(params, state, toks, pos,
                                                    cfg, rt)
@@ -310,13 +346,17 @@ class ServeEngine:
 
         def mixed_fn(params, state, toks, pos, rng_d, temp, topk, topp,
                      pf_state, pf_toks, pf_pos, rng_p, pf_temp, pf_topk,
-                     pf_topp):
+                     pf_topp, sets=None, pf_params=None):
             """The mixed step: every decode slot + one prefill chunk, one
-            dispatch — admission costs no decode stall."""
+            dispatch — admission costs no decode stall.  With a library,
+            decode runs the multi-set graft (``params`` + ``sets``) while
+            the prefill half runs the job's single-set graft
+            (``pf_params``) — the prefill path stays plain-leaved."""
             nxt, new_state = decode_core(params, state, toks, pos, rng_d,
-                                         temp, topk, topp)
-            first, new_pf = pf_core(params, pf_state, pf_toks, pf_pos,
-                                    rng_p, pf_temp, pf_topk, pf_topp)
+                                         temp, topk, topp, sets)
+            first, new_pf = pf_core(
+                params if pf_params is None else pf_params,
+                pf_state, pf_toks, pf_pos, rng_p, pf_temp, pf_topk, pf_topp)
             return nxt, new_state, first, new_pf
 
         def sharded_jit(fn, state_arg=None, state_outs=(), n_outs=1):
@@ -360,13 +400,16 @@ class ServeEngine:
 
             def spec_mixed_fn(params, state, last, pos, rng_d, temp, topk,
                               topp, pf_state, pf_toks, pf_pos, rng_p,
-                              pf_temp, pf_topk, pf_topp):
+                              pf_temp, pf_topk, pf_topp, sets=None,
+                              pf_params=None):
                 """Speculative mixed step: one dispatch advances every
                 decode slot by up to K+1 tokens *and* one prefill chunk."""
                 toks, n_emit, new_state = spec_core(
-                    params, state, last, pos, rng_d, temp, topk, topp)
-                first, new_pf = pf_core(params, pf_state, pf_toks, pf_pos,
-                                        rng_p, pf_temp, pf_topk, pf_topp)
+                    params, state, last, pos, rng_d, temp, topk, topp, sets)
+                first, new_pf = pf_core(
+                    params if pf_params is None else pf_params,
+                    pf_state, pf_toks, pf_pos, rng_p, pf_temp, pf_topk,
+                    pf_topp)
                 return toks, n_emit, new_state, first, new_pf
 
             self._spec = kscope(sharded_jit(spec_core, state_arg=1,
@@ -411,6 +454,10 @@ class ServeEngine:
             # above counts only the uncached suffixes actually computed);
             # hit/miss/evict detail lives in ``PrefixCache.stats``
             "cache_hit_tokens": 0,
+            # expert library: binding-row rebinds (a request named a set
+            # no row currently holds); fault/hit/evict residency detail
+            # lives in ``ExpertLibrary.stats``
+            "expert_swaps": 0,
         }
 
     @property
@@ -435,6 +482,17 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.id}: prompt len {len(req.prompt)} >= "
                 f"engine max_len {self.max_len}")
+        if req.expert_set is not None:
+            if self.library is None:
+                raise ValueError(
+                    f"request {req.id} names expert_set "
+                    f"{req.expert_set!r} but the engine has no "
+                    "ExpertLibrary (pass expert_library=)")
+            if req.expert_set not in self.library:
+                raise KeyError(
+                    f"request {req.id}: unknown expert set "
+                    f"{req.expert_set!r}; library has "
+                    f"{self.library.names()}")
         self._submit_t[req.id] = time.perf_counter()
         self.scheduler.add(req)
 
@@ -490,17 +548,19 @@ class ServeEngine:
             c = job.next_chunk()
             toks = jnp.asarray(job.token_block(c))
             live = len(job.active())
+            dp, sets = self._decode_params()
             t0 = time.perf_counter()
             if active and self._spec is not None:
                 sp_toks, n_emit, self.state, first, job.state = \
                     self._spec_mixed(
-                        self.params, self.state, jnp.asarray(self._last),
+                        dp, self.state, jnp.asarray(self._last),
                         jnp.asarray(self._pos), self._next_rng(),
                         jnp.asarray(self._temp), jnp.asarray(self._topk),
                         jnp.asarray(self._topp),
                         job.state, toks, jnp.int32(job.pos),
                         self._next_rng(), jnp.asarray(job.temp),
-                        jnp.asarray(job.topk), jnp.asarray(job.topp))
+                        jnp.asarray(job.topk), jnp.asarray(job.topp),
+                        sets, job.params)
                 sp_toks = np.asarray(sp_toks)        # sync point
                 n_emit = np.asarray(n_emit)
                 first = np.asarray(first)
@@ -511,13 +571,13 @@ class ServeEngine:
                 self._apply_spec(sp_toks, n_emit, active)
             elif active:
                 nxt, self.state, first, job.state = self._mixed(
-                    self.params, self.state,
+                    dp, self.state,
                     jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
                     self._next_rng(), jnp.asarray(self._temp),
                     jnp.asarray(self._topk), jnp.asarray(self._topp),
                     job.state, toks, jnp.int32(job.pos), self._next_rng(),
                     jnp.asarray(job.temp), jnp.asarray(job.topk),
-                    jnp.asarray(job.topp))
+                    jnp.asarray(job.topp), sets, job.params)
                 nxt = np.asarray(nxt)                # sync point
                 first = np.asarray(first)
                 t1 = time.perf_counter()
@@ -528,7 +588,8 @@ class ServeEngine:
                 self._apply_decode(nxt, active)
             else:
                 first, job.state = self._pf(
-                    self.params, job.state, toks, jnp.int32(job.pos),
+                    self.params if job.params is None else job.params,
+                    job.state, toks, jnp.int32(job.pos),
                     self._next_rng(), jnp.asarray(job.temp),
                     jnp.asarray(job.topk), jnp.asarray(job.topp))
                 first = np.asarray(first)            # sync point
@@ -562,6 +623,57 @@ class ServeEngine:
         return [i for i, l in enumerate(self._lanes)
                 if l is None and i not in self._reserved]
 
+    # -------------------------------------------------- expert-library paths
+
+    def _decode_params(self):
+        """(params, sets) for the decode half of the next dispatch.
+
+        Without a library: the engine's base params and ``sets=None`` (the
+        jitted cores keep their non-tenant trace).  With one: the multi-set
+        graft over the *distinct* bound sets (tuple expert leaves, one
+        entry per live set, so each dispatch pays one routed GEMM per set —
+        duplicate binding rows collapse) plus the per-slot selector mapping
+        each slot's binding row through the distinct-set index.  The graft
+        is a host-side tree rebuild cached until a rebind changes the
+        distinct-name list; trace count is bounded by ``max_bound`` tuple
+        lengths."""
+        if self.library is None:
+            return self.params, None
+        uniq = list(dict.fromkeys(self._bound))
+        if self._graft_cache is None or self._graft_names != uniq:
+            self._graft_cache = self.library.graft(self.params, uniq)
+            self._graft_names = uniq
+        row2u = np.asarray([uniq.index(n) for n in self._bound], np.int32)
+        return self._graft_cache, jnp.asarray(row2u[self.store.expert_set])
+
+    def _bind_row(self, name: str) -> Optional[int]:
+        """Return a binding row serving expert set ``name``, rebinding a
+        free row (one no live decode lane or in-flight prefill lane still
+        reads) if needed.  None = every row is busy with other sets; the
+        caller stops admitting this tick — slots retire, rows free up, no
+        deadlock.  A rebind releases the old set's pin, faults in / pins
+        the new one, and invalidates the decode graft cache."""
+        if name in self._bound:
+            return self._bound.index(name)
+        used = {int(self.store.expert_set[b])
+                for b, l in enumerate(self._lanes) if l is not None}
+        if self._job is not None:
+            used.update(l.set_row for l in self._job.lanes if not l.done)
+        for r, old in enumerate(self._bound):
+            if r in used:
+                continue
+            self.library.release(old)
+            self.library.acquire(name)
+            self._bound[r] = name
+            self._graft_cache = None
+            self.stats["expert_swaps"] += 1
+            return r
+        return None
+
+    def _resolve_set(self, req: Request) -> str:
+        return (req.expert_set if req.expert_set is not None
+                else self.library.default)
+
     def _admit(self) -> None:
         if self.admission == "sequential":
             # PR-1 behaviour: full prefill per request, decode stalled
@@ -569,7 +681,9 @@ class ServeEngine:
                 free = self._free_slots()
                 if not free:
                     return
-                self._admit_sequential(free[0], self.scheduler.pop_next())
+                if not self._admit_sequential(free[0],
+                                              self.scheduler.pop_next()):
+                    return          # no free expert binding row this tick
             return
         if self._job is not None or not self.scheduler:
             return
@@ -581,19 +695,33 @@ class ServeEngine:
         # lockstep from one position, so with a prefix cache every admitted
         # request must share the same cached-prefix length — stop at the
         # first request whose hit length differs (it leads the next job).
-        # Cache-off keeps the plain pop loop (and the PR-2 scheduler
-        # protocol, which had no peek_next).
+        # With an expert library, one job's prefill dispatch runs one set's
+        # weights, so lanes must also share the request's *raw*
+        # ``expert_set`` (raw, not resolved: it doubles as the job's cache
+        # namespace, and None vs the default set's name are distinct
+        # namespaces).  Cache-off + library-off keeps the plain pop loop
+        # (and the PR-2 scheduler protocol, which had no peek_next).
         take: List[Request] = []
-        pos0 = 0
-        if self.cache is None:
+        pos0, ns0, set_row = 0, None, 0
+        if self.cache is None and self.library is None:
             take = [self.scheduler.pop_next() for _ in range(n)]
         else:
             while len(take) < n and self.scheduler:
                 req = self.scheduler.peek_next()
-                hit = self.cache.peek_len(req.prompt)
+                ns = req.expert_set
+                hit = (self.cache.peek_len(req.prompt, ns=ns)
+                       if self.cache is not None else 0)
                 if not take:
-                    pos0 = hit
-                elif hit != pos0:
+                    pos0, ns0 = hit, ns
+                    if self.library is not None:
+                        row = self._bind_row(self._resolve_set(req))
+                        if row is None:
+                            # every binding row is pinned under live lanes
+                            # or in-flight prefills: admit nothing this
+                            # tick — slots retire, rows free up
+                            return
+                        set_row = row
+                elif hit != pos0 or ns != ns0:
                     break
                 self.scheduler.pop_next()
                 take.append(req)
@@ -609,13 +737,13 @@ class ServeEngine:
             lanes.append(_PrefillLane(
                 req=req, slot=slot, row=row,
                 t_submit=self._submit_t.pop(req.id, t_now),
-                remaining=len(req.prompt) - pos0))
+                remaining=len(req.prompt) - pos0, set_row=set_row))
             self._reserved.add(slot)
         state = self.store.fresh(width)
         if self.cache is not None:
             rows, snaps = [], []
             for l in lanes:
-                hit, snap = self.cache.lookup(l.req.prompt)
+                hit, snap = self.cache.lookup(l.req.prompt, ns=ns0)
                 # grouping above guarantees hit == pos0 (tree unchanged
                 # since the peek); lanes may still hold *different*
                 # equal-length prefixes, hence one snapshot per lane
@@ -631,8 +759,15 @@ class ServeEngine:
                     lambda ax, *leaves: np.concatenate(leaves, axis=ax),
                     self.store.axes, *snaps)
                 state = self.store.restore_rows(state, src, rows)
+        # the job's prefill dispatches run a plain single-set graft — the
+        # prefill model code never sees tuple leaves; regenerated per job
+        # (never cached) so it cannot outlive the set's device residency
+        pf_params = (self.library.graft(self.params,
+                                        [self._bound[set_row]])
+                     if self.library is not None else None)
         self._job = _PrefillJob(lanes, width, state,
-                                self.max_prefill_chunk, pos0=pos0)
+                                self.max_prefill_chunk, pos0=pos0,
+                                ns=ns0, params=pf_params)
 
     def _advance_job(self, c: int, first: np.ndarray, t_done: float) -> None:
         job = self._job
@@ -656,9 +791,12 @@ class ServeEngine:
             new = [(l, tuple(l.req.prompt[:job.pos])) for l in crossed]
             # pre-filter (cache.wants: capture/min_tokens/grain, counting
             # grain refusals; plus dedup) so refused boundaries never pay
-            # the batched gather + device->host transfer below
+            # the batched gather + device->host transfer below.  Snapshots
+            # publish under the job's expert-set namespace: a prefix
+            # prefilled with tenant X's weights is only a hit for X.
             new = [(l, p) for l, p in new
-                   if self.cache.wants(p) and not self.cache.contains(p)]
+                   if self.cache.wants(p)
+                   and not self.cache.contains(p, ns=job.ns)]
             if new:
                 snap = self.store.snapshot_rows(job.state,
                                                 [l.row for l, _ in new])
@@ -666,7 +804,7 @@ class ServeEngine:
                     one = jax.tree_util.tree_map(
                         lambda ax, leaf, i=i: np.take(leaf, [i], axis=ax),
                         self.store.axes, snap)
-                    self.cache.insert(prefix, lambda s=one: s)
+                    self.cache.insert(prefix, lambda s=one: s, ns=job.ns)
         if finished:
             # adopt the finished lanes' terminal prefill state into their
             # slots; ``first`` holds each lane's token sampled from its last
@@ -676,6 +814,10 @@ class ServeEngine:
             for l in finished:
                 l.done = True
                 self._reserved.discard(l.slot)
+                # record the slot's expert-set binding row before the lane
+                # goes live: the next decode dispatch's ``sets`` selector
+                # reads it
+                self.store.expert_set[l.slot] = l.set_row
                 self._activate(l.slot, l.req, int(first[l.row]),
                                l.t_submit, t_done)
         if job.finished():
@@ -696,16 +838,30 @@ class ServeEngine:
         if reason:
             self._retire(slot, reason)
 
-    def _admit_sequential(self, slot: int, req: Request) -> None:
+    def _admit_sequential(self, slot: int, req: Request) -> bool:
         t0 = time.perf_counter()
         # TTFT counts queue wait: clock starts at submit, not admission
         t_submit = self._submit_t.pop(req.id, t0)
         prompt = np.asarray(req.prompt, np.int32)[None, :]       # (1,S)
         S = prompt.shape[1]
+        ns = req.expert_set
+        set_row = 0
+        pf_params = self.params
+        if self.library is not None:
+            row = self._bind_row(self._resolve_set(req))
+            if row is None:
+                # no free binding row: requeue and stall this admission
+                # until decode lanes retire
+                self._submit_t[req.id] = t_submit
+                self.scheduler.add(req)
+                return False
+            set_row = row
+            pf_params = self.library.graft(self.params,
+                                           [self._bound[set_row]])
         st = self.store.fresh(1)
         pos = 0
         if self.cache is not None:
-            hit, snap = self.cache.lookup(req.prompt)
+            hit, snap = self.cache.lookup(req.prompt, ns=ns)
             if snap is not None:
                 st = self.store.restore_rows(st, snap, [0])
                 pos = hit
@@ -713,14 +869,14 @@ class ServeEngine:
         pos0 = pos
         logits = None
         for c in prefill_chunks(S - pos0, self.max_prefill_chunk):
-            logits, st = self._prefill(self.params, st,
+            logits, st = self._prefill(pf_params, st,
                                        jnp.asarray(prompt[:, pos:pos + c]),
                                        jnp.int32(pos))
             pos += c
             if self.cache is not None and self.cache.capture:
                 self.cache.insert(
                     tuple(req.prompt[:pos]),
-                    lambda s=st: self.store.snapshot_rows(s, [0]))
+                    lambda s=st: self.store.snapshot_rows(s, [0]), ns=ns)
         sp = req.sampling
         first = sample(logits[:, -1], self._next_rng(),
                        jnp.full((1,), sp.temperature, jnp.float32),
@@ -735,7 +891,9 @@ class ServeEngine:
             # decode lanes sat idle for this whole prefill: that is the
             # stall the interleaved mixed step eliminates
             self.stats["stall_s"] += t1 - t0
+        self.store.expert_set[slot] = set_row
         self._activate(slot, req, first_tok, t_submit, t1)
+        return True
 
     def _finish_reason(self, slot: int) -> Optional[str]:
         lane = self._lanes[slot]
@@ -768,12 +926,13 @@ class ServeEngine:
                 self._retire(b, reason)
 
     def _decode_only(self, active: List[int]) -> None:
+        dp, sets = self._decode_params()
         t0 = time.perf_counter()
         nxt, self.state = self._decode(
-            self.params, self.state,
+            dp, self.state,
             jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
             self._next_rng(), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._topp))
+            jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
         nxt = np.asarray(nxt)                                    # sync point
         t1 = time.perf_counter()
         self.stats["decode_tokens"] += len(active)
@@ -785,12 +944,13 @@ class ServeEngine:
 
     def _spec_only(self, active: List[int]) -> None:
         """One speculative round (draft K + verify + commit), no prefill."""
+        dp, sets = self._decode_params()
         t0 = time.perf_counter()
         toks, n_emit, self.state = self._spec(
-            self.params, self.state,
+            dp, self.state,
             jnp.asarray(self._last), jnp.asarray(self._pos),
             self._next_rng(), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._topp))
+            jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
         toks = np.asarray(toks)                                  # sync point
         n_emit = np.asarray(n_emit)
         t1 = time.perf_counter()

@@ -1,0 +1,380 @@
+"""ExpertLibrary: named, hot-swappable RoM expert sets for multi-tenant
+serving.
+
+RoM expertizes the *projections* (paper Eq. 9-13), which makes the expert
+weights the one parameter subtree the serving stack already treats
+specially — :meth:`~repro.distributed.plan.ParallelPlan.place_params`
+shards their expert dim over the expert partition, and the routed-matmul
+decode fast path consumes them directly.  An :class:`ExpertLibrary` takes
+that one step further: it holds *named* expert sets (domain-adapted
+projection experts + their shared router, per swappable block — see
+``models/lm.py:EXPERT_SWAPPABLE``) and lets one
+:class:`~repro.serve.engine.ServeEngine` serve many tenants, each request
+selecting its set by name (``Request.expert_set``).
+
+An expert set is a **sparse mirror** of the model's param pytree: the same
+``{"segments": [...]}`` nesting, but only the swappable blocks' ``e_w_*``
+and ``w_router`` leaves (moemamba's nested per-projection router dicts
+included).  Keeping the nested structure — rather than flat keys — means
+the existing name-based sharding resolution
+(:func:`repro.distributed.sharding.param_shardings`) applies to a set
+verbatim, so a faulted-in set lands with the same ``model``-axis expert
+partition as the base weights.
+
+Residency is byte-budgeted LRU in the
+:class:`~repro.serve.cache.PrefixCache` mold, with two serving-driven
+differences: the host (numpy) copy of every set is always retained
+(eviction only frees device bytes — a set can always fault back in), and
+the budget is an *advisory floor* rather than a hard refusal — a set an
+engine binds is always admitted even if it alone exceeds the budget
+(counted in ``stats["overcommit"]``), because refusing would deadlock
+admission.  Bound sets are pinned (per engine binding row) and never
+evicted while any decode slot can still reference them.
+
+Library transforms derive new sets host-side: :meth:`merge` (a weighted
+average — model-soup style domain interpolation) and :meth:`subset`
+(selected expert rows from one set, the rest from another — e.g. keep a
+tenant's two specialist experts on top of the base generalists).
+
+The engine-side contract (``serve/engine.py``):
+
+  * ``graft(params, [name])`` returns params with plain swapped leaves —
+    the exact tree a dedicated single-set engine would hold; prefill jobs
+    run on this, so the prefill path needs no model-code awareness.
+  * ``graft(params, names)`` with several names returns per-set *tuple*
+    leaves; ``SharedRouting`` fans out over them (one routed GEMM per
+    bound set per dispatch) and selects per slot via
+    ``Runtime.expert_sets`` — each set tracing the identical single-set
+    code path, which is what makes per-tenant greedy decode bitwise
+    identical to a dedicated engine.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serve.state import state_nbytes
+
+
+def _leaf_wanted(name: str) -> bool:
+    return name.startswith("e_w_") or name == "w_router"
+
+
+def _extract_block(subtree) -> dict:
+    """Sparse copy of one block's swappable leaves, keeping nesting (the
+    moemamba per-projection ``*_router`` dicts stay dicts)."""
+    out = {}
+    for k, v in subtree.items():
+        if isinstance(v, dict):
+            sub = _extract_block(v)
+            if sub:
+                out[k] = sub
+        elif _leaf_wanted(k):
+            out[k] = v
+    return out
+
+
+def _overlay_block(dst: dict, mirrors: List[dict]) -> dict:
+    """``dst`` with every leaf present in the mirrors replaced — by the
+    single mirror's leaf, or by a per-set tuple when several are bound."""
+    out = dict(dst)
+    for k, v in mirrors[0].items():
+        if isinstance(v, dict):
+            out[k] = _overlay_block(dst[k], [m[k] for m in mirrors])
+        elif len(mirrors) == 1:
+            out[k] = v
+        else:
+            out[k] = tuple(m[k] for m in mirrors)
+    return out
+
+
+def _experts_axis(name: str, leaf) -> int:
+    """The expert dim of a swappable leaf: ``e_w_*`` are (E, din, dout)
+    (+1 leading ``layers`` axis when scan-stacked), ``w_router`` is
+    (d_model, E) (ditto)."""
+    return leaf.ndim - 1 if name == "w_router" else leaf.ndim - 3
+
+
+def _map_named(tree, fn):
+    """tree_map with the leaf's dict key: ``fn(name, leaf)`` (sets are
+    all-dict pytrees, so the innermost dict key is the leaf name)."""
+    if isinstance(tree, dict):
+        return {k: _map_named(v, fn) if isinstance(v, (dict, list))
+                else fn(k, v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_map_named(v, fn) for v in tree]
+    raise TypeError(f"unexpected expert-set node {type(tree)}")
+
+
+class ExpertLibrary:
+    """Named expert sets with byte-budgeted LRU device residency.
+
+    cfg: the model config (block layout decides which leaves swap).
+    base_params: full param pytree whose swappable leaves become the
+        ``default`` set (the engine's boot binding and the fallback for
+        requests that name no set).
+    budget_mb: advisory device-byte floor for resident sets; admission
+        past it evicts unpinned LRU sets, but never refuses (see module
+        docstring).
+    max_bound: engine binding rows — how many *distinct* sets one engine
+        can decode with concurrently (its jitted step carries one tuple
+        slot per row).
+    plan: :class:`~repro.distributed.plan.ParallelPlan` placing faulted-in
+        sets; the engine installs its own plan if left None.
+    """
+
+    def __init__(self, cfg, base_params, *, budget_mb: float = 256.0,
+                 max_bound: int = 4, default: str = "base", plan=None):
+        if budget_mb <= 0:
+            raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
+        if max_bound < 1:
+            raise ValueError(f"max_bound must be >= 1, got {max_bound}")
+        from repro.models import lm
+        self.cfg = cfg
+        self.plan = plan
+        self.budget_bytes = int(budget_mb * (1 << 20))
+        self.max_bound = max_bound
+        self.default = default
+        self._blocks = lm.expert_block_keys(cfg)
+        if not self._blocks:
+            raise ValueError(
+                "model has no swappable expert blocks (rom_*/moemamba) — "
+                f"segments: {cfg.segments}")
+        self._host: Dict[str, Any] = {}          # always-retained numpy trees
+        self._device: "OrderedDict[str, Any]" = OrderedDict()   # LRU order
+        self._pins: Dict[str, int] = {}
+        self._nbytes: Dict[str, int] = {}
+        self._ref_structure = None               # congruence check template
+        self.stats: Dict[str, int] = {
+            "hits": 0, "faults": 0, "evictions": 0, "overcommit": 0,
+        }
+        self.add(default, base_params)
+
+    # ------------------------------------------------------------ contents
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._host
+
+    def __len__(self) -> int:
+        return len(self._host)
+
+    def names(self) -> List[str]:
+        return sorted(self._host)
+
+    def nbytes(self, name: str) -> int:
+        return self._nbytes[name]
+
+    @property
+    def bytes_device(self) -> int:
+        return sum(self._nbytes[n] for n in self._device)
+
+    def resident(self) -> List[str]:
+        """Device-resident set names, least-recently-used first."""
+        return list(self._device)
+
+    # ------------------------------------------------------------ build
+
+    def extract(self, params) -> Any:
+        """The sparse expert-set mirror of a full param pytree: only the
+        swappable blocks' ``e_w_*``/``w_router`` leaves, same nesting."""
+        keys_by_seg: Dict[int, List[str]] = {}
+        for si, key in self._blocks:
+            keys_by_seg.setdefault(si, []).append(key)
+        segs = []
+        for si, seg in enumerate(params["segments"]):
+            keys = keys_by_seg.get(si, [])
+            if isinstance(seg, list):
+                segs.append([{k: _extract_block(bp[k]) for k in keys}
+                             for bp in seg])
+            else:
+                segs.append({k: _extract_block(seg[k]) for k in keys})
+        return {"segments": segs}
+
+    def add(self, name: str, source) -> None:
+        """Register a set: ``source`` is a full param pytree (extracted) or
+        an expert-set mirror (stored as-is).  Host numpy copies are kept
+        for the library's lifetime; the set faults onto the device on
+        first :meth:`acquire`.  Every set must be congruent with the
+        default — same tree structure, leaf shapes and dtypes — so the
+        engine's jitted steps never retrace on a swap."""
+        if self._pins.get(name, 0) > 0:
+            raise ValueError(
+                f"cannot replace expert set {name!r} while an engine "
+                "binding row pins it")
+        tree = source if (isinstance(source, dict)
+                          and set(source) == {"segments"}
+                          and self._is_mirror(source)) else None
+        if tree is None:
+            tree = self.extract(source)
+        tree = jax.device_get(tree)              # host numpy, detached
+        leaves, structure = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError(f"expert set {name!r} has no leaves")
+        sig = (structure, tuple((l.shape, np.dtype(l.dtype)) for l in leaves))
+        if self._ref_structure is None:
+            self._ref_structure = sig
+        elif sig != self._ref_structure:
+            raise ValueError(
+                f"expert set {name!r} is not congruent with {self.default!r}"
+                " (tree structure / leaf shapes / dtypes differ)")
+        self._host[name] = tree
+        self._nbytes[name] = state_nbytes(tree)
+        self._pins.setdefault(name, 0)
+        self._device.pop(name, None)             # stale residency, if any
+
+    def _is_mirror(self, source) -> bool:
+        """A segments-tree whose first swappable block holds only swapped
+        leaves is a mirror, not full params (full blocks carry e.g. conv
+        or A/D leaves too)."""
+        si, key = self._blocks[0]
+        seg = source["segments"][si]
+        block = (seg[0] if isinstance(seg, list) else seg).get(key)
+        if not isinstance(block, dict):
+            return False
+
+        def only_swapped(d):
+            return all(only_swapped(v) if isinstance(v, dict)
+                       else _leaf_wanted(k) for k, v in d.items())
+        return only_swapped(block)
+
+    # ------------------------------------------------------- transforms
+
+    def merge(self, name: str, sources: Sequence[str],
+              weights: Optional[Sequence[float]] = None) -> None:
+        """Register ``name`` as the weighted average of existing sets
+        (uniform by default) — model-soup style domain interpolation,
+        computed host-side in float32 and cast back per leaf."""
+        if not sources:
+            raise ValueError("merge needs at least one source set")
+        trees = [self._host[s] for s in sources]
+        if weights is None:
+            weights = [1.0 / len(sources)] * len(sources)
+        if len(weights) != len(sources):
+            raise ValueError("merge weights/sources length mismatch")
+        total = float(sum(weights))
+        ws = [float(w) / total for w in weights]
+
+        def avg(*ls):
+            acc = sum(w * l.astype(np.float32) for w, l in zip(ws, ls))
+            return acc.astype(ls[0].dtype)
+
+        self.add(name, jax.tree_util.tree_map(avg, *trees))
+
+    def subset(self, name: str, source: str, experts: Sequence[int],
+               fill: Optional[str] = None) -> None:
+        """Register ``name`` with the listed expert rows taken from
+        ``source`` and every other row from ``fill`` (default set when
+        None) — along each leaf's expert dim, router columns included, so
+        the derived set routes consistently with its weights."""
+        src = self._host[source]
+        base = self._host[fill if fill is not None else self.default]
+        idx = np.asarray(sorted(set(int(e) for e in experts)), np.int64)
+
+        def pick(path_name, pair):
+            s, b = pair
+            ax = _experts_axis(path_name, s)
+            if idx.size and (idx.min() < 0 or idx.max() >= s.shape[ax]):
+                raise ValueError(
+                    f"subset experts {idx.tolist()} out of range for "
+                    f"{path_name} with {s.shape[ax]} experts")
+            out = np.array(b)
+            sl = [slice(None)] * s.ndim
+            sl[ax] = idx
+            out[tuple(sl)] = s[tuple(sl)]
+            return out
+
+        paired = jax.tree_util.tree_map(lambda a, b: (a, b), src, base,
+                                        is_leaf=lambda x: isinstance(
+                                            x, np.ndarray))
+        self.add(name, _map_named(paired, pick))
+
+    # ------------------------------------------------------- residency
+
+    def acquire(self, name: str) -> None:
+        """Pin ``name`` for one engine binding row, faulting it onto the
+        device if cold (placed via the plan so the expert partition
+        applies) and evicting unpinned LRU sets past the budget.  The
+        requested set is always admitted — the budget is advisory."""
+        if name not in self._host:
+            raise KeyError(f"unknown expert set {name!r}; "
+                           f"have {self.names()}")
+        if name in self._device:
+            self._device.move_to_end(name)
+            self.stats["hits"] += 1
+        else:
+            host = self._host[name]
+            placed = (self.plan.commit_params(host) if self.plan is not None
+                      else jax.device_put(host))
+            self._device[name] = placed
+            self.stats["faults"] += 1
+            self._evict_to_budget(keep=name)
+        self._pins[name] += 1
+
+    def release(self, name: str) -> None:
+        """Drop one binding-row pin; a fully unpinned set becomes an LRU
+        eviction candidate (its host copy survives regardless)."""
+        if self._pins.get(name, 0) <= 0:
+            raise ValueError(f"release of unpinned expert set {name!r}")
+        self._pins[name] -= 1
+
+    def device_tree(self, name: str):
+        """The resident device tree for a bound set (acquire first)."""
+        return self._device[name]
+
+    def _evict_to_budget(self, keep: str) -> None:
+        while self.bytes_device > self.budget_bytes:
+            victim = next((n for n in self._device
+                           if n != keep and self._pins.get(n, 0) == 0), None)
+            if victim is None:
+                # every other resident set is pinned (or this set alone
+                # exceeds the budget): admit anyway — refusing a bound
+                # set would wedge admission — and record the overshoot
+                self.stats["overcommit"] += 1
+                return
+            del self._device[victim]
+            self.stats["evictions"] += 1
+
+    # ------------------------------------------------------------ graft
+
+    def graft(self, params, names: Sequence[str]):
+        """Params with the swappable leaves replaced by the named sets'.
+
+        One name grafts plain arrays — structurally the tree a dedicated
+        single-set engine holds (the prefill path).  Several names graft
+        per-set tuples for ``SharedRouting``'s fan-out (the multi-tenant
+        decode path); tuple order is binding-row order, matching the
+        engine's per-slot ``Runtime.expert_sets`` indices.  All named
+        sets must be device-resident (the engine holds a pin per bound
+        row, so bound sets always are)."""
+        sets = [self._device[n] for n in names]
+        segs = []
+        for si, seg in enumerate(params["segments"]):
+            mirrors = [s["segments"][si] for s in sets]
+            if isinstance(seg, list):
+                segs.append([_overlay_block(bp, [m[bi] for m in mirrors])
+                             for bi, bp in enumerate(seg)])
+            else:
+                segs.append(_overlay_block(seg, mirrors))
+        out = dict(params)
+        out["segments"] = segs
+        return out
+
+    # ------------------------------------------------------------ reports
+
+    def summary(self) -> Dict[str, Any]:
+        """Derived stats: residency hit rate over acquires, device bytes
+        vs budget, per-set pin counts."""
+        s = self.stats
+        acquires = s["hits"] + s["faults"]
+        return {
+            "sets": len(self),
+            "resident": self.resident(),
+            "bytes_device": self.bytes_device,
+            "budget_bytes": self.budget_bytes,
+            "residency_hit_rate": s["hits"] / max(acquires, 1),
+            "pinned": {n: c for n, c in sorted(self._pins.items()) if c},
+            **s,
+        }

@@ -101,8 +101,13 @@ class CachedSuffixFirst:
         # full-prompt snapshot still forces >= 1 token of prefill (the
         # first sampled token needs fresh logits), so ranking by an
         # unclamped hit would order/group lanes by a prefix length
-        # admission can never actually restore.
-        hit = min(self._cache.peek_len(req.prompt), len(req.prompt) - 1)
+        # admission can never actually restore.  Rank against the
+        # request's own cache namespace (its expert set, for multi-tenant
+        # engines): a prefix cached under another tenant's weights is not
+        # a hit this request can restore.
+        ns = getattr(req, "expert_set", None)
+        hit = min(self._cache.peek_len(req.prompt, ns=ns),
+                  len(req.prompt) - 1)
         return (len(req.prompt) - max(hit, 0), order)
 
     def add(self, request) -> None:

@@ -77,8 +77,9 @@ class SpecConfig:
 def make_spec_fn(cfg, plan, spec: SpecConfig, axes, append_only=None):
     """Build the one-dispatch speculative round.
 
-    Returns ``spec_fn(params, state, last, pos, rng, temp, topk, topp) ->
-    (tokens (B,K+1) i32, n_emit (B,) i32, new_state)`` where ``state`` is
+    Returns ``spec_fn(params, state, last, pos, rng, temp, topk, topp[,
+    sets]) -> (tokens (B,K+1) i32, n_emit (B,) i32, new_state)`` where
+    ``state`` is
     the engine's full B-slot decode state, ``last`` (B,) the slots' last
     sampled tokens, ``pos`` (B,) their per-slot positions, and
     temp/topk/topp the per-slot sampling params.  ``plan`` is the
@@ -106,8 +107,12 @@ def make_spec_fn(cfg, plan, spec: SpecConfig, axes, append_only=None):
     rec_idx = tuple(i for i, ao in enumerate(ao_leaves) if not ao)
     rec_axes = tuple(ax_leaves[i] for i in rec_idx)
 
-    def spec_fn(params, state, last, pos, rng, temp, topk, topp):
-        rt = lm.Runtime(shard=shard_ctx, rng=None, train=False)
+    def spec_fn(params, state, last, pos, rng, temp, topk, topp, sets=None):
+        # ``sets`` (B,) int32: per-slot expert-set binding rows when the
+        # engine serves through an ExpertLibrary (params then carry
+        # per-set tuple expert leaves); None otherwise
+        rt = lm.Runtime(shard=shard_ctx, rng=None, train=False,
+                        expert_sets=sets)
         pos = jnp.asarray(pos, jnp.int32)
         last = jnp.asarray(last, jnp.int32)
 

@@ -30,6 +30,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +250,13 @@ class StateStore:
         self.state = init_slots(cfg, max_slots, max_len, dtype)
         self.axes = slot_axes(cfg, self.state)
         self.append_only = append_only_mask(cfg, self.state)
+        # multi-tenant serving: which expert-library *binding row* each
+        # decode slot's tokens route through (serve/expert_library.py).
+        # Host-side like the engine's per-slot sampling params — written at
+        # slot adoption, read by the engine when assembling the per-slot
+        # set-selection vector for the jitted steps.  All-zero (the
+        # default/boot binding) when no library is attached.
+        self.expert_set = np.zeros((max_slots,), np.int32)
         if plan is not None and plan.mesh is not None:
             self.shardings = plan.slot_shardings(self.state, self.axes)
             self.state = jax.device_put(self.state, self.shardings)

@@ -1,0 +1,119 @@
+"""Line-coverage ratchet for the serving package (src/repro/serve/).
+
+    python -m pytest -q -m "not slow" tests/test_fuzz_serving.py \
+        tests/test_expert_library.py --cov=repro.serve \
+        --cov-report=json:coverage-serve.json
+    python tests/check_coverage.py --report coverage-serve.json \
+        --floors COVERAGE_serve.json
+    python tests/check_coverage.py --report ... --floors ... --update
+
+Reads a coverage.py JSON report (what ``pytest --cov-report=json:`` under
+pytest-cov emits) and compares per-file line coverage of every module
+under ``repro/serve/`` — plus the package TOTAL — against the committed
+floor file, failing on any file below its floor.  ``--update`` rewrites
+the floors from the report (floored to whole percents, so ordinary run-
+to-run jitter never manufactures a ratchet).  A missing report file is a
+clean skip (exit 0): pytest-cov is a CI-only dependency, local
+environments without it must not fail — the floors are enforced where
+the report exists.
+
+The gate is one-directional by design: coverage may rise freely (run
+``--update`` to bank it); it may not silently fall.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+#: suffix that marks a report entry as belonging to the gated package
+PACKAGE = os.path.join("repro", "serve") + os.sep
+
+
+def serve_coverage(report: dict) -> dict:
+    """{module-relative path or "TOTAL": percent covered} for every file
+    under repro/serve/ in a coverage.py JSON report."""
+    out = {}
+    n_cov = n_stmt = 0
+    for path, entry in report.get("files", {}).items():
+        norm = path.replace("/", os.sep)
+        if PACKAGE not in norm:
+            continue
+        rel = "repro/serve/" + norm.split(PACKAGE, 1)[1].replace(os.sep, "/")
+        s = entry["summary"]
+        out[rel] = float(s["percent_covered"])
+        n_cov += s["covered_lines"]
+        n_stmt += s["num_statements"]
+    out["TOTAL"] = 100.0 * n_cov / max(n_stmt, 1)
+    return out
+
+
+def check(cov: dict, floors: dict):
+    """(failures, lines): every floored entry must be present in the
+    report and at or above its floor — a module that vanishes from the
+    report (deleted, or no longer imported by the covered tests) is a
+    regression, not a pass."""
+    failures, lines = [], []
+    for name in sorted(floors):
+        floor = floors[name]
+        got = cov.get(name)
+        if got is None:
+            failures.append(name)
+            lines.append(f"{name:<40} floor {floor:5.1f}%  MISSING from "
+                         f"report")
+            continue
+        bad = got < floor
+        lines.append(f"{name:<40} floor {floor:5.1f}%  got {got:5.1f}%  "
+                     f"{'BELOW FLOOR' if bad else 'ok'}")
+        if bad:
+            failures.append(name)
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", required=True,
+                    help="coverage.py JSON report (pytest --cov-report=json)")
+    ap.add_argument("--floors", required=True,
+                    help="committed floor file (JSON: {'floors': {...}})")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the floors from the report (whole "
+                         "percents, rounded down) instead of gating")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.report):
+        print(f"coverage: no report at {args.report!r} — pytest-cov not "
+              f"installed here; skipping the floor gate (CI enforces it)")
+        return 0
+    with open(args.report) as f:
+        cov = serve_coverage(json.load(f))
+
+    if args.update:
+        with open(args.floors) as f:
+            doc = json.load(f)
+        doc["floors"] = {k: int(math.floor(v)) for k, v in sorted(
+            cov.items())}
+        with open(args.floors, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"coverage: floors refreshed in {args.floors} "
+              f"({len(doc['floors'])} entries)")
+        return 0
+
+    with open(args.floors) as f:
+        floors = json.load(f)["floors"]
+    failures, lines = check(cov, floors)
+    print("\n".join(lines))
+    if failures:
+        print(f"coverage: {len(failures)} file(s) below the committed "
+              f"floor — raise test coverage or (after review) refresh "
+              f"the floors with --update")
+        return 1
+    print(f"coverage: {len(floors)} floored entries all at or above floor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

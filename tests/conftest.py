@@ -7,6 +7,20 @@ import sys
 
 import pytest
 
+try:
+    # Deterministic, CI-friendly fuzzing profile.  The fuzz tests
+    # themselves run with or without hypothesis (each has a seeded
+    # stdlib-random fallback path); this only tunes the hypothesis side
+    # where it is installed.
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile("repro", settings(
+        max_examples=40, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow]))
+    settings.load_profile("repro")
+except ImportError:
+    pass
+
 
 @pytest.fixture(scope="session")
 def repo_src():

@@ -1,0 +1,108 @@
+"""Shared greedy bit-identity harness for the serving test suite.
+
+Four test modules (engine, prefix cache, decode kernels, mixer step
+kernels) assert the same property — a serving-stack feature must not
+change greedy outputs — and had each re-spelled the same scaffolding:
+the small hybrid config, the all-mixers config, the mixer-pattern sweep,
+and the isolated per-token greedy reference.  This module is the single
+spelling.  The per-tenant expert-library tests reuse it too: a shared
+multi-tenant engine must be bit-identical to a dedicated engine loaded
+with only that tenant's expert set, and ``dedicated_params`` builds
+exactly that dedicated tree.
+
+Importable as a plain module from any test file (pytest puts ``tests/``
+on ``sys.path`` for its rootdir imports): ``from identity import
+full_cfg, PATTERNS, greedy_reference``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.train as tr
+from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
+                                MambaConfig, ModelConfig, RGLRUConfig,
+                                RoMConfig, XLSTMConfig)
+from repro.models import lm
+
+#: Mixer-pattern sweep shared by the identity-style tests: one pattern per
+#: recurrence family plus a hybrid and a RoM block.
+PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
+            ("mlstm",), ("slstm",), ("rom_mamba", "mlp")]
+
+#: Expert-bearing patterns for the multi-tenant identity sweep: every
+#: swappable mixer family (rom_* share one projection scheme; moemamba
+#: carries nested per-projection routers).
+TENANT_PATTERNS = [("rom_mamba", "mlp"), ("moemamba",)]
+
+
+def small_cfg(**kw):
+    """The minimal hybrid config (mamba + attn) for fast engine tests."""
+    base = dict(name="t", d_model=32, vocab_size=64,
+                segments=((("mamba", "attn"), 1),),
+                mamba=MambaConfig(d_state=4, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def full_cfg(segments, window=None, **kw):
+    """A config with every mixer family parameterized, so any ``PATTERNS``
+    entry (or hybrid of them) builds.  RoM runs the deterministic capacity
+    path (jitter 0, generous capacity) so greedy decode is reproducible."""
+    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
+                d_ff=64,
+                mamba=MambaConfig(d_state=4, chunk=8),
+                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
+                gdn=GDNConfig(num_heads=2, head_dim=8),
+                rglru=RGLRUConfig(num_heads=2),
+                xlstm=XLSTMConfig(num_heads=2, chunk=8),
+                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                          head_dim=8, window=window),
+                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                              capacity_factor=8.0, impl="capacity"),
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def greedy_reference(cfg, params, prompt, gen, max_len):
+    """Isolated per-token greedy decode: the oracle every engine-level
+    feature (batching, chunked admission, caching, speculation, expert
+    swapping) must reproduce bit-exactly."""
+    serve = jax.jit(tr.make_serve_fn(cfg))
+    st = lm.init_state(cfg, 1, max_len, jnp.dtype(cfg.dtype))
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    for t in range(toks.shape[1]):
+        nxt, _, st = serve(params, st, toks[:, t:t + 1], jnp.int32(t))
+    out, pos = [int(nxt[0])], toks.shape[1]
+    while len(out) < gen:
+        nxt, _, st = serve(params, st, nxt[:, None], jnp.int32(pos))
+        out.append(int(nxt[0]))
+        pos += 1
+    return out
+
+
+def random_prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, size=(n,)).tolist()
+            for n in lens]
+
+
+def dedicated_params(cfg, base_params, tenant_params):
+    """The param tree a dedicated single-tenant engine would hold: the
+    base model with its swappable expert leaves (``e_w_*``/``w_router``
+    of rom_*/moemamba blocks) replaced by ``tenant_params``'s — i.e. a
+    host-side single-set graft.  The multi-tenant identity tests compare
+    a shared ExpertLibrary engine against an engine built on this."""
+    from repro.serve.expert_library import ExpertLibrary
+    lib = ExpertLibrary(cfg, base_params, max_bound=1)
+    lib.add("tenant", tenant_params)
+    lib.acquire("tenant")
+    return lib.graft(base_params, ["tenant"])
+
+
+def run_tokens(engine, requests):
+    """Drive an engine over ``requests`` and map id -> generated tokens."""
+    return {r.id: r.tokens for r in engine.run(requests)}

@@ -1,0 +1,86 @@
+"""The serve-package coverage ratchet (tests/check_coverage.py): floor
+comparison, missing-module detection, clean skip without a report, and
+--update banking.  Runs on synthetic coverage.py JSON so the gate logic
+is tested even where pytest-cov itself is not installed."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import check_coverage  # noqa: E402
+
+
+def _report(files):
+    """coverage.py JSON shape: files -> summary percent/covered/statements.
+    ``files`` maps a repro/serve-relative name to (covered, statements)."""
+    return {"files": {
+        f"src/repro/serve/{name}": {"summary": {
+            "percent_covered": 100.0 * cov / max(n, 1),
+            "covered_lines": cov, "num_statements": n}}
+        for name, (cov, n) in files.items()}}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+FILES = {"cache.py": (90, 100), "engine.py": (50, 100)}
+FLOORS = {"floors": {"repro/serve/cache.py": 80,
+                     "repro/serve/engine.py": 45, "TOTAL": 60}}
+
+
+def test_green_when_at_or_above_floor(tmp_path, capsys):
+    r = _write(tmp_path, "cov.json", _report(FILES))
+    f = _write(tmp_path, "floors.json", FLOORS)
+    assert check_coverage.main(["--report", r, "--floors", f]) == 0
+    assert "all at or above floor" in capsys.readouterr().out
+
+
+def test_regression_below_floor_fails(tmp_path, capsys):
+    dropped = dict(FILES, **{"cache.py": (70, 100)})   # 70% < floor 80
+    r = _write(tmp_path, "cov.json", _report(dropped))
+    f = _write(tmp_path, "floors.json", FLOORS)
+    assert check_coverage.main(["--report", r, "--floors", f]) == 1
+    assert "BELOW FLOOR" in capsys.readouterr().out
+
+
+def test_module_missing_from_report_fails(tmp_path, capsys):
+    """A floored module that vanishes from the report (deleted, or no
+    longer imported by the covered tests) is a regression, not a pass."""
+    r = _write(tmp_path, "cov.json", _report({"cache.py": (90, 100)}))
+    f = _write(tmp_path, "floors.json", FLOORS)
+    assert check_coverage.main(["--report", r, "--floors", f]) == 1
+    assert "MISSING from report" in capsys.readouterr().out
+
+
+def test_files_outside_serve_are_ignored():
+    rep = _report(FILES)
+    rep["files"]["src/repro/models/lm.py"] = {"summary": {
+        "percent_covered": 1.0, "covered_lines": 1, "num_statements": 100}}
+    cov = check_coverage.serve_coverage(rep)
+    assert set(cov) == {"repro/serve/cache.py", "repro/serve/engine.py",
+                        "TOTAL"}
+    assert cov["TOTAL"] == 70.0                     # (90+50)/(100+100)
+
+
+def test_missing_report_skips_cleanly(tmp_path, capsys):
+    """pytest-cov is CI-only: without its report the gate must exit 0
+    with a skip message, never fail a local run."""
+    f = _write(tmp_path, "floors.json", FLOORS)
+    missing = str(tmp_path / "nope.json")
+    assert check_coverage.main(["--report", missing, "--floors", f]) == 0
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_update_banks_current_coverage(tmp_path):
+    r = _write(tmp_path, "cov.json", _report(FILES))
+    f = _write(tmp_path, "floors.json", FLOORS)
+    assert check_coverage.main(["--report", r, "--floors", f,
+                                "--update"]) == 0
+    doc = json.loads(Path(f).read_text())
+    assert doc["floors"] == {"repro/serve/cache.py": 90,
+                             "repro/serve/engine.py": 50, "TOTAL": 70}
+    # banked floors gate green against the same report
+    assert check_coverage.main(["--report", r, "--floors", f]) == 0

@@ -8,9 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
-                                MambaConfig, ModelConfig, RGLRUConfig,
-                                RoMConfig, XLSTMConfig)
+from identity import full_cfg as _full_cfg
 from repro.distributed.plan import ParallelPlan
 from repro.kernels import ops, ref
 from repro.kernels.decode_step import (decode_step_fused_pallas,
@@ -226,26 +224,12 @@ def test_routed_matmul_ref_matches_dense_moe_linear():
 # one decode step through every mixer pattern: ref vs pallas scope
 # ---------------------------------------------------------------------------
 
-def _full_cfg(segments, **kw):
-    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
-                d_ff=64,
-                mamba=MambaConfig(d_state=4, chunk=8),
-                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
-                gdn=GDNConfig(num_heads=2, head_dim=8),
-                rglru=RGLRUConfig(num_heads=2),
-                xlstm=XLSTMConfig(num_heads=2, chunk=8),
-                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
-                                          head_dim=8),
-                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
-                              capacity_factor=8.0, impl="capacity"),
-                dtype="float32")
-    base.update(kw)
-    return ModelConfig(**base)
+# the identity harness's sweep, extended with every rom_* family (this
+# module exercises the routed-matmul decode fast path per family)
+from identity import PATTERNS as _BASE_PATTERNS  # noqa: E402
 
-
-PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
-            ("mlstm",), ("slstm",), ("rom_mamba", "mlp"), ("rom_mamba2",),
-            ("rom_gdn",), ("rom_rglru",), ("rom_mlstm",)]
+PATTERNS = _BASE_PATTERNS + [("rom_mamba2",), ("rom_gdn",), ("rom_rglru",),
+                             ("rom_mlstm",)]
 
 
 @pytest.mark.parametrize("pattern", PATTERNS,

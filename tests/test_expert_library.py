@@ -1,0 +1,414 @@
+"""ExpertLibrary: multi-tenant RoM serving with hot-swappable expert sets.
+
+The contract under test — the per-tenant greedy bit-identity: a shared
+engine serving tenant X through an :class:`~repro.serve.expert_library.
+ExpertLibrary` must emit tokens identical to a *dedicated* engine loaded
+with only X's expert set, including after hot-swap / evict / fault-in
+mid-run, composed with speculative decoding, prefix caching (per-set
+namespaces) and sequential admission, and (slow, subprocess) under a
+``data=2,model=2`` plan.  Plus the library's own unit semantics:
+extraction, mirror congruence, merge/subset transforms, and byte-budgeted
+LRU residency with binding-row pins.
+"""
+import jax
+import numpy as np
+import pytest
+
+from identity import (TENANT_PATTERNS, dedicated_params, full_cfg,
+                      random_prompts, run_tokens)
+from repro.models import lm
+from repro.serve import ExpertLibrary, PrefixCache, Request, ServeEngine
+from repro.serve.scheduler import CachedSuffixFirst
+
+
+def _library(cfg, params, names=("b",), seeds=(7,), **kw):
+    lib = ExpertLibrary(cfg, params, **kw)
+    for name, seed in zip(names, seeds):
+        lib.add(name, lm.init_params(jax.random.PRNGKey(seed), cfg))
+    return lib
+
+
+def _dedicated_tokens(cfg, params, tenant_seed, prompt, gen, **kw):
+    """Tokens from an engine holding ONLY this tenant's expert set."""
+    if tenant_seed is None:
+        ded = params
+    else:
+        ded = dedicated_params(
+            cfg, params, lm.init_params(jax.random.PRNGKey(tenant_seed), cfg))
+    eng = ServeEngine(cfg, ded, max_slots=2, max_len=48, seed=0, **kw)
+    return eng.run([Request(id=0, prompt=prompt, max_new_tokens=gen)])[0] \
+        .tokens
+
+
+# ---------------------------------------------------------------------------
+# library unit semantics
+# ---------------------------------------------------------------------------
+
+def test_extract_is_sparse_swappable_mirror():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = ExpertLibrary(cfg, params)
+    mirror = lib.extract(params)
+    names = set()
+
+    def walk(d):
+        for k, v in d.items():
+            if isinstance(v, dict):
+                walk(v)
+            else:
+                names.add(k)
+    walk(mirror["segments"][0][0]["l0_rom_mamba"])
+    assert all(n.startswith("e_w_") or n == "w_router" for n in names)
+    assert "w_router" in names and any(n.startswith("e_w_") for n in names)
+    # the mlp block carries no experts and is absent from the mirror
+    assert set(mirror["segments"][0][0]) == {"l0_rom_mamba"}
+    # extracted values are the base leaves themselves (same numbers)
+    base = params["segments"][0][0]["l0_rom_mamba"]["w_router"]
+    np.testing.assert_array_equal(
+        np.asarray(base), mirror["segments"][0][0]["l0_rom_mamba"]["w_router"])
+
+
+def test_moemamba_mirror_keeps_nested_routers():
+    cfg = full_cfg(((("moemamba",), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = ExpertLibrary(cfg, params)
+    blk = lib.extract(params)["segments"][0][0]["l0_moemamba"]
+    routers = [k for k, v in blk.items()
+               if isinstance(v, dict) and "w_router" in v]
+    assert routers, blk.keys()          # conv/gate/out router dicts survive
+
+
+def test_add_accepts_full_params_and_mirrors():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    alt = lm.init_params(jax.random.PRNGKey(1), cfg)
+    lib = ExpertLibrary(cfg, params)
+    lib.add("full", alt)                         # full tree: extracted
+    lib.add("mirror", lib.extract(alt))          # mirror: stored as-is
+    a = jax.tree_util.tree_leaves(lib._host["full"])
+    b = jax.tree_util.tree_leaves(lib._host["mirror"])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_add_rejects_incongruent_set():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    big = full_cfg(((("rom_mamba", "mlp"), 1),), d_model=64)
+    lib = ExpertLibrary(cfg, lm.init_params(jax.random.PRNGKey(0), cfg))
+    with pytest.raises(ValueError, match="congruent"):
+        lib.add("bad", lm.init_params(jax.random.PRNGKey(1), big))
+
+
+def test_library_requires_swappable_blocks():
+    cfg = full_cfg(((("mamba", "attn"), 1),))
+    with pytest.raises(ValueError, match="swappable"):
+        ExpertLibrary(cfg, lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def test_merge_is_weighted_average():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, names=("b",), seeds=(7,))
+    lib.merge("m", ["base", "b"], weights=[3.0, 1.0])
+    for base_l, b_l, m_l in zip(
+            jax.tree_util.tree_leaves(lib._host["base"]),
+            jax.tree_util.tree_leaves(lib._host["b"]),
+            jax.tree_util.tree_leaves(lib._host["m"])):
+        want = 0.75 * base_l.astype(np.float32) + 0.25 * b_l.astype(
+            np.float32)
+        np.testing.assert_allclose(m_l, want.astype(base_l.dtype), rtol=1e-6)
+
+
+def test_subset_takes_expert_rows_from_source():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params)
+    lib.subset("s", "b", [1, 3])
+
+    def leaves_named(tree):
+        out = {}
+
+        def walk(node, path):
+            items = (node.items() if isinstance(node, dict)
+                     else enumerate(node))
+            for k, v in items:
+                if isinstance(v, (dict, list)):
+                    walk(v, path + (k,))
+                else:
+                    out[path + (k,)] = v
+        walk(tree, ())
+        return out
+
+    base = leaves_named(lib._host["base"])
+    src = leaves_named(lib._host["b"])
+    got = leaves_named(lib._host["s"])
+    for key, leaf in got.items():
+        name = key[-1]
+        ax = leaf.ndim - 1 if name == "w_router" else leaf.ndim - 3
+        for e in range(leaf.shape[ax]):
+            sl = [slice(None)] * leaf.ndim
+            sl[ax] = e
+            want = src[key] if e in (1, 3) else base[key]
+            np.testing.assert_array_equal(leaf[tuple(sl)], want[tuple(sl)])
+    with pytest.raises(ValueError, match="out of range"):
+        lib.subset("oob", "b", [99])
+
+
+def test_residency_lru_budget_and_pins():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    one_set_mb = ExpertLibrary(cfg, params).nbytes("base") / (1 << 20)
+    # budget fits ~2 sets: acquiring a third evicts the unpinned LRU one
+    lib = _library(cfg, params, names=("b", "c"), seeds=(7, 11),
+                   budget_mb=2.5 * one_set_mb, max_bound=2)
+    lib.acquire("base")
+    lib.acquire("b")
+    lib.release("b")                    # unpinned: eviction candidate
+    lib.acquire("c")
+    assert "b" not in lib.resident()
+    assert lib.stats["evictions"] == 1
+    # host copy survives eviction: faulting back in works
+    lib.release("c")
+    lib.acquire("b")
+    assert "b" in lib.resident()
+    assert lib.stats["faults"] >= 3
+    # pinned sets are never evicted even over budget: overcommit instead
+    lib.acquire("c")
+    assert lib.bytes_device > lib.budget_bytes
+    assert lib.stats["overcommit"] >= 1
+    assert set(lib.resident()) == {"base", "b", "c"}
+    with pytest.raises(ValueError, match="unpinned"):
+        lib.release("b")
+        lib.release("b")
+    with pytest.raises(ValueError, match="pin"):
+        lib.add("base", params)         # replacing a pinned set refused
+    with pytest.raises(KeyError):
+        lib.acquire("missing")
+
+
+def test_graft_single_vs_tuple_leaves():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, max_bound=2)
+    lib.acquire("base")
+    lib.acquire("b")
+    single = lib.graft(params, ["b"])
+    blk = single["segments"][0][0]["l0_rom_mamba"]
+    assert not isinstance(blk["w_router"], tuple)
+    multi = lib.graft(params, ["base", "b"])
+    blk = multi["segments"][0][0]["l0_rom_mamba"]
+    assert isinstance(blk["w_router"], tuple) and len(blk["w_router"]) == 2
+    # non-swapped leaves stay the base arrays in both grafts
+    assert single["embed"] is params["embed"]
+    assert multi["embed"] is params["embed"]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: per-tenant greedy bit-identity
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_expert_set():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="no ExpertLibrary"):
+        eng.submit(Request(id=0, prompt=[1, 2], expert_set="b"))
+    lib = _library(cfg, params)
+    eng2 = ServeEngine(cfg, params, max_slots=1, max_len=16,
+                       expert_library=lib)
+    with pytest.raises(KeyError, match="unknown expert set"):
+        eng2.submit(Request(id=0, prompt=[1, 2], expert_set="nope"))
+
+
+@pytest.mark.parametrize("pattern", TENANT_PATTERNS,
+                         ids=["+".join(p) for p in TENANT_PATTERNS])
+def test_multi_tenant_greedy_identical_to_dedicated(pattern):
+    """The headline gate: a shared engine interleaving tenants through one
+    ExpertLibrary emits, for every request, exactly the tokens a dedicated
+    engine loaded with only that tenant's expert set emits — for every
+    swappable mixer family (rom_* projections; moemamba's nested
+    per-projection routers)."""
+    cfg = full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, max_bound=2)
+    prompts = random_prompts(cfg, [5, 9, 4, 7], seed=1)
+    tenants = [None, "b", "b", None]
+    shared = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                         expert_library=lib)
+    res = run_tokens(shared, [
+        Request(id=i, prompt=p, max_new_tokens=6, expert_set=t)
+        for i, (p, t) in enumerate(zip(prompts, tenants))])
+    for i, t in enumerate(tenants):
+        ref = _dedicated_tokens(cfg, params, 7 if t else None,
+                                prompts[i], 6)
+        assert res[i] == ref, (pattern, i, t)
+    assert shared.stats["expert_swaps"] >= 1
+    # the sets genuinely differ: tenant b's tokens != base on b's prompt
+    assert res[1] != _dedicated_tokens(cfg, params, None, prompts[1], 6)
+
+
+def test_hot_swap_evict_fault_in_mid_run_stays_identical():
+    """More tenants than binding rows + a budget of well under one set:
+    admission rebinds rows mid-run and the library evicts/faults sets
+    continuously — outputs must not change."""
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    seeds = {"t0": 3, "t1": 7, "t2": 11}
+    lib = _library(cfg, params, names=tuple(seeds), seeds=tuple(
+        seeds.values()), budget_mb=0.2, max_bound=2)
+    prompts = random_prompts(cfg, [4 + i % 5 for i in range(9)], seed=2)
+    tenants = [[None, "t0", "t1", "t2"][i % 4] for i in range(9)]
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      expert_library=lib)
+    res = run_tokens(eng, [
+        Request(id=i, prompt=p, max_new_tokens=5, expert_set=t)
+        for i, (p, t) in enumerate(zip(prompts, tenants))])
+    assert eng.stats["expert_swaps"] >= 3
+    assert lib.stats["evictions"] >= 1          # residency actually churned
+    assert lib.stats["faults"] > len(seeds) + 1  # sets faulted back in
+    for i, t in enumerate(tenants):
+        ref = _dedicated_tokens(cfg, params, seeds.get(t), prompts[i], 5)
+        assert res[i] == ref, (i, t)
+
+
+def test_tenant_identity_composes_with_speculative_and_sequential():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 2),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = random_prompts(cfg, [5, 9, 4], seed=4)
+    tenants = [None, "b", "b"]
+    for kw in (dict(speculative=2, draft_stride=2),
+               dict(admission="sequential")):
+        lib = _library(cfg, params, max_bound=2)
+        eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                          expert_library=lib, **kw)
+        res = run_tokens(eng, [
+            Request(id=i, prompt=p, max_new_tokens=5, expert_set=t)
+            for i, (p, t) in enumerate(zip(prompts, tenants))])
+        for i, t in enumerate(tenants):
+            ref = _dedicated_tokens(cfg, params, 7 if t else None,
+                                    prompts[i], 5)
+            assert res[i] == ref, (kw, i, t)
+
+
+def test_prefix_cache_namespaces_isolate_tenants():
+    """One prompt served under two tenants: snapshots must not cross
+    expert-set namespaces (a prefix prefilled with X's weights is wrong
+    for Y), while repeat requests within a tenant do hit."""
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, max_bound=2)
+    cache = PrefixCache(budget_mb=32.0, grain=4)
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      expert_library=lib, prefix_cache=cache,
+                      scheduler=CachedSuffixFirst(cache))
+    prompt = random_prompts(cfg, [12], seed=5)[0]
+    r0 = eng.run([Request(id=0, prompt=prompt, max_new_tokens=6)])[0]
+    r1 = eng.run([Request(id=1, prompt=prompt, max_new_tokens=6,
+                          expert_set="b")])[0]
+    r2 = eng.run([Request(id=2, prompt=prompt, max_new_tokens=6,
+                          expert_set="b")])[0]
+    assert cache.summary()["namespaces"] == 2
+    assert eng.stats["cache_hit_tokens"] > 0     # r2 hit r1's snapshots
+    assert r1.tokens == r2.tokens
+    ref_b = _dedicated_tokens(cfg, params, 7, prompt, 6)
+    assert r1.tokens == ref_b                   # incl. the cache-hit run
+    assert r0.tokens == _dedicated_tokens(cfg, params, None, prompt, 6)
+    assert r0.tokens != ref_b
+
+
+def test_derived_sets_serve_and_differ():
+    """merge/subset-derived sets are first-class tenants: they serve, and
+    a merged set's outputs differ from both parents (the weights really
+    are interpolated)."""
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, max_bound=2)
+    lib.merge("m", ["base", "b"])
+    prompt = random_prompts(cfg, [10], seed=6)[0]
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      expert_library=lib)
+    res = run_tokens(eng, [
+        Request(id=0, prompt=prompt, max_new_tokens=6, expert_set="m"),
+        Request(id=1, prompt=prompt, max_new_tokens=6),
+        Request(id=2, prompt=prompt, max_new_tokens=6, expert_set="b")])
+    assert res[0] != res[1] and res[0] != res[2]
+
+
+def test_merged_set_dedicated_identity():
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    lib = _library(cfg, params, max_bound=2)
+    lib.merge("m", ["base", "b"])
+    prompt = random_prompts(cfg, [10], seed=6)[0]
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      expert_library=lib)
+    got = eng.run([Request(id=0, prompt=prompt, max_new_tokens=6,
+                           expert_set="m")])[0].tokens
+    ref_lib = _library(cfg, params, max_bound=1)
+    ref_lib.merge("m", ["base", "b"])
+    ref_lib.acquire("m")
+    ded = ref_lib.graft(params, ["m"])
+    ref = ServeEngine(cfg, ded, max_slots=2, max_len=48, seed=0).run(
+        [Request(id=0, prompt=prompt, max_new_tokens=6)])[0].tokens
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# sharded: data=2,model=2 (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multi_tenant_sharded_identity(subproc):
+    """Per-tenant greedy identity under a ``data=2,model=2`` plan: slots
+    shard over data, expert leaves (all bound sets alike, via the
+    name-based sharding rules) over model — outputs still match the
+    dedicated single-device engines."""
+    subproc("""
+import jax, numpy as np
+from repro.configs.base import (AttentionConfig, MambaConfig, ModelConfig,
+                                RoMConfig)
+from repro.distributed.plan import ParallelPlan
+from repro.models import lm
+from repro.serve import ExpertLibrary, Request, ServeEngine
+
+cfg = ModelConfig(name="t", d_model=32, vocab_size=64,
+                  segments=((("rom_mamba", "mlp"), 1),), d_ff=64,
+                  mamba=MambaConfig(d_state=4, chunk=8),
+                  attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                            head_dim=8),
+                  rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
+                                capacity_factor=8.0, impl="capacity"),
+                  dtype="float32")
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+alt = lm.init_params(jax.random.PRNGKey(7), cfg)
+rng = np.random.default_rng(1)
+prompts = [rng.integers(2, cfg.vocab_size, size=(n,)).tolist()
+           for n in [5, 9, 4, 7]]
+tenants = [None, "b", "b", None]
+
+def tokens(engine, reqs):
+    return {r.id: r.tokens for r in engine.run(reqs)}
+
+plan = ParallelPlan.host(data=2, model=2)
+lib = ExpertLibrary(cfg, params, budget_mb=64.0, max_bound=2)
+lib.add("b", alt)
+eng = ServeEngine(cfg, params, plan=plan, max_slots=2, max_len=48, seed=0,
+                  expert_library=lib)
+res = tokens(eng, [Request(id=i, prompt=p, max_new_tokens=6, expert_set=t)
+                   for i, (p, t) in enumerate(zip(prompts, tenants))])
+assert eng.stats["expert_swaps"] >= 1
+# faulted-in sets landed with the plan's expert partition applied
+leaf = jax.tree_util.tree_leaves(lib.device_tree("b"))[0]
+assert leaf.sharding.spec != (None,) * leaf.ndim, leaf.sharding
+
+ref_lib = ExpertLibrary(cfg, params, budget_mb=64.0, max_bound=1)
+ref_lib.add("b", alt)
+ref_lib.acquire("b")
+ded_b = ref_lib.graft(params, ["b"])
+for i, t in enumerate(tenants):
+    ded = ServeEngine(cfg, params if t is None else ded_b, max_slots=2,
+                      max_len=48, seed=0)
+    ref = ded.run([Request(id=0, prompt=prompts[i], max_new_tokens=6)])[0]
+    assert res[i] == ref.tokens, (i, t, res[i], ref.tokens)
+print("sharded tenant identity OK")
+""", n_devices=8)

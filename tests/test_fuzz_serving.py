@@ -1,0 +1,402 @@
+"""Fuzz-hardening for the serving data structures (model-free: no jax).
+
+Two subjects, each checked against an executable reference model:
+
+* :class:`~repro.serve.cache.PrefixCache` vs a naive dict-of-prefixes —
+  same hits/misses/dedup/eviction order/stats after every operation, with
+  the radix-tree structural invariants re-verified each step.
+* The schedulers vs their documented rankings recomputed from scratch at
+  every pop, under randomized mid-run arrivals; ``peek_next`` must agree
+  with the subsequent ``pop_next``.
+
+Every property runs twice: through ``hypothesis`` when it is installed
+(the CI path — ``requirements-dev.txt`` pins it, ``conftest.py`` loads a
+deterministic profile), and always through a seeded stdlib-``random``
+driver, so the suite fuzzes even on environments without hypothesis.
+"""
+import dataclasses
+import random
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import pytest
+
+from repro.serve.cache import PrefixCache, _Node
+from repro.serve.scheduler import (CachedSuffixFirst, FIFOScheduler,
+                                   ShortestPromptFirst)
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache reference model: a flat dict of prefixes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Entry:
+    nbytes: int
+    used: int
+
+
+class DictCache:
+    """The naive spelling of PrefixCache's contract: a dict mapping
+    (namespace, prefix tuple) -> (nbytes, LRU stamp), with the same
+    budget/min_tokens/capture/grain gates, dedup, LRU eviction order and
+    stats counters.  No radix tree, no pruning — everything the tree
+    optimizes, done by linear scan."""
+
+    def __init__(self, budget_mb=64.0, min_tokens=1, capture=True, grain=1):
+        self.budget_bytes = int(budget_mb * (1 << 20))
+        self.min_tokens = min_tokens
+        self.capture = capture
+        self.grain = grain
+        self.entries: Dict[Tuple[Any, Tuple[int, ...]], _Entry] = {}
+        self.bytes = 0
+        self.clock = 0
+        self.stats = {k: 0 for k in (
+            "hits", "misses", "hit_tokens", "lookup_tokens", "inserts",
+            "dedup_skips", "evictions", "oversize", "grain_skips")}
+
+    def _best(self, tokens, cap, ns):
+        best = None
+        for (ens, p), e in self.entries.items():
+            if ens != ns or len(p) > cap:
+                continue
+            if tuple(tokens[:len(p)]) == p:
+                if best is None or len(p) > len(best[0]):
+                    best = (p, e)
+        return best
+
+    def peek_len(self, tokens, ns=None):
+        best = self._best(tokens, max(len(tokens) - 1, 0), ns)
+        return len(best[0]) if best else 0
+
+    def lookup(self, tokens, ns=None):
+        self.stats["lookup_tokens"] += len(tokens)
+        best = self._best(tokens, max(len(tokens) - 1, 0), ns)
+        if best is None:
+            self.stats["misses"] += 1
+            return 0
+        self.clock += 1
+        best[1].used = self.clock
+        self.stats["hits"] += 1
+        self.stats["hit_tokens"] += len(best[0])
+        return len(best[0])
+
+    def contains(self, tokens, ns=None):
+        return (ns, tuple(tokens)) in self.entries
+
+    def wants(self, tokens):
+        if not self.capture or len(tokens) < self.min_tokens:
+            return False
+        if len(tokens) % self.grain != 0:
+            self.stats["grain_skips"] += 1
+            return False
+        return True
+
+    def insert(self, tokens, nbytes, ns=None):
+        if not self.wants(tokens):
+            return False
+        key = (ns, tuple(tokens))
+        self.clock += 1
+        if key in self.entries:
+            self.entries[key].used = self.clock
+            self.stats["dedup_skips"] += 1
+            return False
+        if nbytes > self.budget_bytes:
+            self.stats["oversize"] += 1
+            return False
+        self.entries[key] = _Entry(nbytes=nbytes, used=self.clock)
+        self.bytes += nbytes
+        self.stats["inserts"] += 1
+        while self.bytes > self.budget_bytes:
+            victims = [k for k in self.entries if k != key]
+            if not victims:
+                break
+            victim = min(victims, key=lambda k: self.entries[k].used)
+            self.bytes -= self.entries.pop(victim).nbytes
+            self.stats["evictions"] += 1
+        return True
+
+    def prefixes(self, ns=None):
+        return sorted((p, e.nbytes) for (ens, p), e in self.entries.items()
+                      if ens == ns)
+
+
+def _check_tree_invariants(cache: PrefixCache):
+    """Radix structure: child keyed by its edge's first token, depth
+    consistent, no empty non-root edges, every snap-less non-root node has
+    >= 2 children (pruned/merged), byte/snap accounting exact."""
+    seen_bytes = 0
+    seen_snaps = 0
+    roots = [cache._root] + list(cache._ns_roots.values())
+
+    def rec(node: _Node):
+        nonlocal seen_bytes, seen_snaps
+        if node.parent is not None:
+            assert node.edge, "non-root node with empty edge"
+            assert node.depth == node.parent.depth + len(node.edge)
+            if node.snap is None:
+                assert len(node.children) >= 2, \
+                    "pass-through snap-less node survived pruning"
+        if node.snap is not None:
+            assert node in cache._snaps
+            seen_bytes += node.nbytes
+            seen_snaps += 1
+        else:
+            assert node.nbytes == 0
+        for tok, child in node.children.items():
+            assert child.edge[0] == tok
+            assert child.parent is node
+            rec(child)
+
+    for root in roots:
+        assert root.depth == 0 and root.parent is None
+        rec(root)
+    assert seen_bytes == cache.bytes_used
+    assert seen_snaps == len(cache._snaps) == len(cache)
+    assert cache.bytes_used <= cache.budget_bytes
+
+
+def _snap_of(nbytes):
+    return {"h": np.zeros((nbytes,), np.uint8)}
+
+
+def run_cache_ops(ops, budget_bytes=4096, min_tokens=1, grain=1):
+    """Drive the real cache and the dict reference through ``ops`` and
+    compare contents, stats and structure after every single step.
+
+    op := ("insert", tokens, nbytes, ns) | ("lookup", tokens, ns)
+        | ("peek", tokens, ns) | ("contains", tokens, ns)
+    """
+    mb = budget_bytes / (1 << 20)
+    real = PrefixCache(budget_mb=mb, min_tokens=min_tokens, grain=grain)
+    ref = DictCache(budget_mb=mb, min_tokens=min_tokens, grain=grain)
+    namespaces = {None}
+    for op in ops:
+        kind = op[0]
+        if kind == "insert":
+            _, tokens, nbytes, ns = op
+            got = real.insert(tokens, lambda n=nbytes: _snap_of(n), ns=ns)
+            want = ref.insert(tokens, nbytes, ns=ns)
+            assert got == want, op
+        elif kind == "lookup":
+            _, tokens, ns = op
+            got_len, got_snap = real.lookup(tokens, ns=ns)
+            want_len = ref.lookup(tokens, ns=ns)
+            assert got_len == want_len, op
+            assert (got_snap is not None) == (want_len > 0), op
+        elif kind == "peek":
+            _, tokens, ns = op
+            assert real.peek_len(tokens, ns=ns) == \
+                ref.peek_len(tokens, ns=ns), op
+        else:
+            _, tokens, ns = op
+            assert real.contains(tokens, ns=ns) == \
+                ref.contains(tokens, ns=ns), op
+        namespaces.add(op[-1])
+        for ns in namespaces:
+            assert real.snapshot_prefixes(ns=ns) == ref.prefixes(ns=ns), op
+        assert real.stats == ref.stats, op
+        assert real.bytes_used == ref.bytes
+        _check_tree_invariants(real)
+
+
+def _random_cache_ops(rng: random.Random, n_ops=120):
+    """Token sequences drawn from a tiny alphabet with shared prefixes
+    (extend-a-previous-prompt bias), so radix splits, mid-edge divergence,
+    dedup and eviction all actually trigger."""
+    ops = []
+    prompts: List[Tuple[int, ...]] = []
+    last_insert = None
+    for _ in range(n_ops):
+        if last_insert is not None and rng.random() < 0.15:
+            ops.append(last_insert)     # immediate re-insert -> dedup path
+            continue
+        ns = rng.choice([None, "a", "b"])
+        if prompts and rng.random() < 0.6:
+            base = list(rng.choice(prompts))
+            cut = rng.randint(0, len(base))
+            tokens = tuple(base[:cut]) + tuple(
+                rng.randrange(4) for _ in range(rng.randint(0, 6)))
+        else:
+            tokens = tuple(rng.randrange(4)
+                           for _ in range(rng.randint(1, 10)))
+        if not tokens:
+            tokens = (0,)
+        prompts.append(tokens)
+        kind = rng.choice(["insert", "insert", "lookup", "peek", "contains"])
+        if kind == "insert":
+            last_insert = ("insert", tokens, rng.choice([64, 256, 1024]), ns)
+            ops.append(last_insert)
+        else:
+            ops.append((kind, tokens, ns))
+    return ops
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(8))
+def test_cache_fuzz_stdlib(seed):
+    rng = random.Random(seed)
+    run_cache_ops(_random_cache_ops(rng),
+                  budget_bytes=rng.choice([1024, 2048, 4096]),
+                  min_tokens=rng.choice([1, 2]),
+                  grain=rng.choice([1, 2, 4]))
+
+
+def test_cache_fuzz_exercises_every_path():
+    """The stdlib fuzz corpus genuinely reaches dedup, eviction, grain
+    refusals and namespace isolation (guards against a corpus that decays
+    into no-ops)."""
+    totals = {k: 0 for k in ("inserts", "dedup_skips", "evictions",
+                             "grain_skips", "hits", "misses")}
+    for seed in range(8):
+        rng = random.Random(seed)
+        ops = _random_cache_ops(rng)
+        mb = rng.choice([1024, 2048, 4096]) / (1 << 20)
+        c = PrefixCache(budget_mb=mb, min_tokens=rng.choice([1, 2]),
+                        grain=rng.choice([1, 2, 4]))
+        for op in ops:
+            if op[0] == "insert":
+                c.insert(op[1], lambda n=op[2]: _snap_of(n), ns=op[3])
+            elif op[0] == "lookup":
+                c.lookup(op[1], ns=op[2])
+        for k in totals:
+            totals[k] += c.stats[k]
+    assert all(v > 0 for v in totals.values()), totals
+
+
+if HAVE_HYPOTHESIS:
+    _tokens_st = st.lists(st.integers(0, 3), min_size=1,
+                          max_size=10).map(tuple)
+    _ns_st = st.sampled_from([None, "a", "b"])
+    _op_st = st.one_of(
+        st.tuples(st.just("insert"), _tokens_st,
+                  st.sampled_from([64, 256, 1024]), _ns_st),
+        st.tuples(st.just("lookup"), _tokens_st, _ns_st),
+        st.tuples(st.just("peek"), _tokens_st, _ns_st),
+        st.tuples(st.just("contains"), _tokens_st, _ns_st),
+    )
+
+    @pytest.mark.fuzz
+    @given(ops=st.lists(_op_st, max_size=60),
+           budget=st.sampled_from([512, 2048, 8192]),
+           grain=st.sampled_from([1, 2, 3]))
+    def test_cache_fuzz_hypothesis(ops, budget, grain):
+        run_cache_ops(ops, budget_bytes=budget, grain=grain)
+
+
+# ---------------------------------------------------------------------------
+# scheduler pop-order property: documented ranking, recomputed from scratch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Req:
+    id: int
+    prompt: List[int]
+    expert_set: Optional[str] = None
+
+
+def _expected_next(kind, waiting, cache):
+    """The documented ranking, recomputed naively over everything waiting:
+    FIFO = arrival; SPF = (len, arrival); CachedSuffixFirst =
+    (len - clamped cached-prefix hit in the request's namespace,
+    arrival)."""
+    if kind == "fifo":
+        return min(waiting, key=lambda e: e[0])
+    if kind == "spf":
+        return min(waiting, key=lambda e: (len(e[1].prompt), e[0]))
+    def key(e):
+        order, req = e
+        hit = min(cache.peek_len(req.prompt, ns=req.expert_set),
+                  len(req.prompt) - 1)
+        return (len(req.prompt) - max(hit, 0), order)
+    return min(waiting, key=key)
+
+
+def run_scheduler_ops(kind, ops):
+    """ops := ("add", prompt, ns) | ("pop",) | ("insert", prefix, ns)
+    (cache mutation mid-run, exercising pop-time re-ranking)."""
+    cache = PrefixCache(budget_mb=1.0)
+    sched = {"fifo": FIFOScheduler, "spf": ShortestPromptFirst,
+             "csf": lambda: CachedSuffixFirst(cache)}[kind]()
+    waiting: List[Tuple[int, _Req]] = []
+    order = 0
+    for op in ops:
+        if op[0] == "add":
+            req = _Req(id=order, prompt=list(op[1]), expert_set=op[2])
+            sched.add(req)
+            waiting.append((order, req))
+            order += 1
+        elif op[0] == "insert":
+            cache.insert(op[1], lambda: _snap_of(16), ns=op[2])
+        else:
+            assert bool(sched) == bool(waiting)
+            assert len(sched) == len(waiting)
+            if not waiting:
+                assert sched.peek_next() is None
+                assert sched.pop_next() is None
+                continue
+            expect = _expected_next(kind, waiting, cache)[1]
+            peeked = sched.peek_next()
+            popped = sched.pop_next()
+            assert peeked is popped, (kind, op)
+            assert popped.id == expect.id, (kind, popped.id, expect.id)
+            waiting.remove(next(e for e in waiting if e[1] is popped))
+    # drain: full pop order must keep matching the from-scratch ranking
+    while waiting:
+        expect = _expected_next(kind, waiting, cache)[1]
+        peeked = sched.peek_next()
+        popped = sched.pop_next()
+        assert peeked is popped, kind
+        assert popped.id == expect.id, (kind, popped.id, expect.id)
+        waiting.remove(next(e for e in waiting if e[1] is popped))
+    assert sched.pop_next() is None
+
+
+def _random_sched_ops(rng: random.Random, n_ops=80):
+    ops = []
+    prefixes = [tuple(rng.randrange(4) for _ in range(rng.randint(2, 6)))
+                for _ in range(4)]
+    for _ in range(n_ops):
+        r = rng.random()
+        ns = rng.choice([None, "a"])
+        if r < 0.45:
+            base = rng.choice(prefixes) if rng.random() < 0.5 else ()
+            prompt = list(base) + [rng.randrange(4)
+                                   for _ in range(rng.randint(1, 5))]
+            ops.append(("add", prompt, ns))
+        elif r < 0.65:
+            ops.append(("insert", rng.choice(prefixes), ns))
+        else:
+            ops.append(("pop",))
+    return ops
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("kind", ["fifo", "spf", "csf"])
+@pytest.mark.parametrize("seed", range(6))
+def test_scheduler_fuzz_stdlib(kind, seed):
+    rng = random.Random(100 * seed + 17)
+    run_scheduler_ops(kind, _random_sched_ops(rng))
+
+
+if HAVE_HYPOTHESIS:
+    _prompt_st = st.lists(st.integers(0, 3), min_size=1, max_size=8)
+    _sched_op_st = st.one_of(
+        st.tuples(st.just("add"), _prompt_st, _ns_st),
+        st.tuples(st.just("insert"),
+                  st.lists(st.integers(0, 3), min_size=1,
+                           max_size=6).map(tuple), _ns_st),
+        st.tuples(st.just("pop")),
+    )
+
+    @pytest.mark.fuzz
+    @pytest.mark.parametrize("kind", ["fifo", "spf", "csf"])
+    @given(ops=st.lists(_sched_op_st, max_size=50))
+    def test_scheduler_fuzz_hypothesis(kind, ops):
+        run_scheduler_ops(kind, ops)

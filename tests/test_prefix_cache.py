@@ -7,9 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
-                                MambaConfig, ModelConfig, RGLRUConfig,
-                                RoMConfig, XLSTMConfig)
+from identity import PATTERNS, full_cfg as _full_cfg
 from repro.models import lm
 from repro.serve import (CachedSuffixFirst, PrefixCache, Request,
                          ServeEngine, StateStore, state_nbytes)
@@ -149,7 +147,7 @@ def test_cached_suffix_first_caps_hit_at_len_minus_one():
     class OverReportingCache:
         version = 0
 
-        def peek_len(self, tokens):
+        def peek_len(self, tokens, ns=None):
             # uncapped longest leading run of 7s (PrefixCache.peek_len
             # itself caps; this models a cache that does not)
             n = 0
@@ -170,23 +168,6 @@ def test_cached_suffix_first_caps_hit_at_len_minus_one():
 # ---------------------------------------------------------------------------
 # snapshot / restore round-trip + leaf classification
 # ---------------------------------------------------------------------------
-
-def _full_cfg(segments, window=None, **kw):
-    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
-                d_ff=64,
-                mamba=MambaConfig(d_state=4, chunk=8),
-                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
-                gdn=GDNConfig(num_heads=2, head_dim=8),
-                rglru=RGLRUConfig(num_heads=2),
-                xlstm=XLSTMConfig(num_heads=2, chunk=8),
-                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
-                                          head_dim=8, window=window),
-                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
-                              capacity_factor=8.0, impl="capacity"),
-                dtype="float32")
-    base.update(kw)
-    return ModelConfig(**base)
-
 
 def test_snapshot_restore_roundtrip_host_copy():
     cfg = _full_cfg(((("mamba", "attn"), 1), (("mamba",), 2)))
@@ -232,10 +213,6 @@ def test_append_only_mask_classifies_leaves():
 # ---------------------------------------------------------------------------
 # engine integration: cache-hit greedy decode is bit-identical to cold
 # ---------------------------------------------------------------------------
-
-PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
-            ("mlstm",), ("slstm",), ("rom_mamba", "mlp")]
-
 
 def _shared_prefix_requests(cfg, shared_len=12, tails=(3, 5, 4), seed=3):
     rng = np.random.default_rng(seed)

@@ -6,40 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.train as tr
-from repro.configs.base import (AttentionConfig, GDNConfig, Mamba2Config,
-                                MambaConfig, ModelConfig, RGLRUConfig,
-                                RoMConfig, XLSTMConfig)
+from identity import PATTERNS, full_cfg as _full_cfg, \
+    greedy_reference as _greedy_reference, small_cfg as _cfg
 from repro.models import lm
 from repro.serve import (FIFOScheduler, Request, SamplingParams, ServeEngine,
                          StateStore, sample)
 from repro.serve.engine import prefill_chunks
 from repro.serve.scheduler import ShortestPromptFirst
-
-
-def _cfg(**kw):
-    base = dict(name="t", d_model=32, vocab_size=64,
-                segments=((("mamba", "attn"), 1),),
-                mamba=MambaConfig(d_state=4, chunk=8),
-                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
-                                          head_dim=8),
-                dtype="float32")
-    base.update(kw)
-    return ModelConfig(**base)
-
-
-def _greedy_reference(cfg, params, prompt, gen, max_len):
-    serve = jax.jit(tr.make_serve_fn(cfg))
-    st = lm.init_state(cfg, 1, max_len, jnp.dtype(cfg.dtype))
-    toks = jnp.asarray(prompt, jnp.int32)[None, :]
-    for t in range(toks.shape[1]):
-        nxt, _, st = serve(params, st, toks[:, t:t + 1], jnp.int32(t))
-    out, pos = [int(nxt[0])], toks.shape[1]
-    while len(out) < gen:
-        nxt, _, st = serve(params, st, nxt[:, None], jnp.int32(pos))
-        out.append(int(nxt[0]))
-        pos += 1
-    return out
 
 
 def test_engine_continuous_batching_matches_pertoken_greedy():
@@ -207,27 +180,6 @@ def test_shortest_prompt_first_fifo_tiebreak():
 # ---------------------------------------------------------------------------
 # interleaved chunked prefill + slot-state store
 # ---------------------------------------------------------------------------
-
-def _full_cfg(segments, **kw):
-    base = dict(name="t", d_model=32, vocab_size=64, segments=segments,
-                d_ff=64,
-                mamba=MambaConfig(d_state=4, chunk=8),
-                mamba2=Mamba2Config(d_state=8, head_dim=16, chunk=8),
-                gdn=GDNConfig(num_heads=2, head_dim=8),
-                rglru=RGLRUConfig(num_heads=2),
-                xlstm=XLSTMConfig(num_heads=2, chunk=8),
-                attention=AttentionConfig(num_heads=4, num_kv_heads=2,
-                                          head_dim=8),
-                rom=RoMConfig(num_experts=4, top_k=2, jitter_eps=0.0,
-                              capacity_factor=8.0, impl="capacity"),
-                dtype="float32")
-    base.update(kw)
-    return ModelConfig(**base)
-
-
-PATTERNS = [("mamba", "attn"), ("mamba2",), ("gdn",), ("rglru",),
-            ("mlstm",), ("slstm",), ("rom_mamba", "mlp")]
-
 
 @pytest.mark.parametrize("pattern", PATTERNS,
                          ids=["+".join(p) for p in PATTERNS])

@@ -1,0 +1,88 @@
+"""Trajectory gate semantics (benchmarks/trajectory.py): threshold
+classes, identity gates, and — the regression this file pins — a baseline
+scenario missing from the current report must fail the gate loudly, not
+silently pass through the key intersection."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+import trajectory  # noqa: E402
+
+
+def _report(scenarios, schema=1):
+    return {"schema_version": schema, "scenarios": scenarios}
+
+
+def _write(tmp_path, name, report):
+    p = tmp_path / name
+    p.write_text(json.dumps(report))
+    return str(p)
+
+
+BASE = {
+    "decode": {"decode_tps": 100.0, "wall_s": 2.0},
+    "expert_library": {"decode_tps": 80.0, "greedy_identical": True},
+}
+
+
+def test_green_when_reports_match(tmp_path):
+    b = _write(tmp_path, "base.json", _report(BASE))
+    c = _write(tmp_path, "cur.json", _report(BASE))
+    assert trajectory.main(["--baseline", b, "--current", c]) == 0
+
+
+def test_missing_scenario_fails_loudly(tmp_path, capsys):
+    """A scenario present in the committed baseline but absent from the
+    fresh report (renamed / crashed / filtered out) must fail the gate
+    with a message naming it — previously the key intersection silently
+    passed."""
+    b = _write(tmp_path, "base.json", _report(BASE))
+    cur = {"decode": BASE["decode"]}            # expert_library vanished
+    c = _write(tmp_path, "cur.json", _report(cur))
+    assert trajectory.main(["--baseline", b, "--current", c]) == 1
+    out = capsys.readouterr().out
+    assert "MISSING SCENARIO" in out
+    assert "expert_library" in out
+
+
+def test_missing_scenarios_helper_ignores_extra_current():
+    """New scenarios in the current report are fine (the next --update
+    adopts them); only baseline scenarios can go missing."""
+    extra = dict(BASE, brand_new={"decode_tps": 5.0})
+    assert trajectory.missing_scenarios(_report(BASE), _report(extra)) == []
+    assert trajectory.missing_scenarios(
+        _report(extra), _report(BASE)) == ["brand_new"]
+    # non-dict scenario values (stray counters) are not scenarios
+    weird = dict(BASE, n_runs=3)
+    assert trajectory.missing_scenarios(_report(weird), _report(BASE)) == []
+
+
+def test_throughput_regression_still_fails(tmp_path):
+    cur = {"decode": {"decode_tps": 50.0, "wall_s": 2.0},
+           "expert_library": BASE["expert_library"]}
+    b = _write(tmp_path, "base.json", _report(BASE))
+    c = _write(tmp_path, "cur.json", _report(cur))
+    assert trajectory.main(["--baseline", b, "--current", c]) == 1
+
+
+def test_identity_gate_is_hard(tmp_path):
+    cur = {"decode": BASE["decode"],
+           "expert_library": {"decode_tps": 80.0, "greedy_identical": False}}
+    b = _write(tmp_path, "base.json", _report(BASE))
+    c = _write(tmp_path, "cur.json", _report(cur))
+    assert trajectory.main(["--baseline", b, "--current", c]) == 1
+    assert trajectory.main(["--identity-only", "--current", c]) == 1
+    ok = _write(tmp_path, "ok.json", _report(BASE))
+    assert trajectory.main(["--identity-only", "--current", ok]) == 0
+
+
+def test_schema_change_skips_metric_gates(tmp_path):
+    """A schema bump skips metric gating (fresh baseline required) — and
+    also the missing-scenario gate, which compares across the bump."""
+    b = _write(tmp_path, "base.json", _report(BASE, schema=1))
+    c = _write(tmp_path, "cur.json", _report({"decode": BASE["decode"]},
+                                             schema=2))
+    assert trajectory.main(["--baseline", b, "--current", c]) == 0
