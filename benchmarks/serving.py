@@ -48,11 +48,24 @@ Scenarios:
   prefix_cache   shared-system-prompt workload against a warm PrefixCache
                  vs cache-off: hit rate, prefill tokens saved, TTFT both
                  ways.
+  observability  telemetry overhead A/B: the same requests through an
+                 engine with full telemetry (metrics + request tracing)
+                 on vs ``Telemetry(enabled=False)``; end-to-end tokens/s
+                 both ways, their ratio (gated >= 0.95 functionally by
+                 trajectory.py), a greedy token-identity check, and the
+                 exporter outputs (Prometheus lines, trace events) —
+                 written as CI artifacts via ``--telemetry-artifacts``.
+
+Latency percentiles (TTFT/ITL/e2e) are derived from the telemetry
+histograms over a registry ``snapshot()``/``delta()`` window spanning
+exactly the timed run — the same log-spaced buckets a live server
+exports — not from ad-hoc per-result lists.
 
 Every scenario dict carries an ``engine`` stamp built by the single
 ``engine_stamp`` helper (schema_version, jax/jaxlib versions, device
 kind, plan, admission mode, speculative K, draft stride, slots, prefill
-chunk, prefix-cache budget, scheduler, kernels impl) so the per-PR
+chunk, prefix-cache budget, scheduler, kernels impl, telemetry
+config) so the per-PR
 artifacts are self-describing; the full JSON schema is documented in
 docs/serving.md.  ``--kernels-impl interpret`` swaps the fast side of
 the kernels A/B to the real Pallas kernels under the interpreter — the
@@ -76,7 +89,8 @@ from repro.configs.base import get_config
 from repro.data.pipeline import corpus_for
 from repro.distributed.plan import ParallelPlan
 from repro.models import lm
-from repro.serve import EngineConfig, Request, ServeEngine
+from repro.serve import (EngineConfig, Request, ServeEngine, Telemetry,
+                         hist_mean, hist_quantile)
 
 
 def _best_of(fn, iters):
@@ -89,7 +103,9 @@ def _best_of(fn, iters):
 #: ``engine_stamp``).  Bump when scenario keys change shape or meaning so
 #: per-PR artifacts stay comparable across history.
 #: v4: jax/jaxlib/device_kind in the stamp, per-mixer kernels sweep.
-SCHEMA_VERSION = 4
+#: v5: telemetry config in the stamp, observability scenario, latency
+#: percentiles (ttft/itl/e2e) derived from telemetry histograms.
+SCHEMA_VERSION = 5
 
 
 def engine_stamp(engine):
@@ -120,6 +136,7 @@ def engine_stamp(engine):
                         if engine.cache is not None else 0),
         "scheduler": type(engine.scheduler).__name__,
         "kernels": engine.engine_config.kernels or "auto",
+        "telemetry": engine.telemetry.describe(),
     }
 
 
@@ -165,7 +182,8 @@ class BenchContext:
                   seed=self.seed, max_prefill_chunk=self.chunk)
         kw.update(overrides)
         extra = {k: kw.pop(k)
-                 for k in ("prefix_cache", "scheduler", "expert_library")
+                 for k in ("prefix_cache", "scheduler", "expert_library",
+                           "telemetry")
                  if k in kw}
         return ServeEngine(self.cfg, self.params, plan=self.plan,
                            engine=EngineConfig(**kw), **extra)
@@ -184,6 +202,24 @@ def _decode_tps(stats):
 
 def _pct(xs, p):
     return round(float(np.percentile(np.asarray(xs), p)), 4) if xs else 0.0
+
+
+def _hist_latency(delta, name, prefix):
+    """mean/p50/p95 of one latency histogram out of a registry delta:
+    bucket-interpolated quantiles over exactly the timed window, the
+    same numbers a live server's exporter would show."""
+    h = delta[name]
+    return {f"{prefix}_mean_s": round(hist_mean(h), 4),
+            f"{prefix}_p50_s": round(hist_quantile(h, 0.50), 4),
+            f"{prefix}_p95_s": round(hist_quantile(h, 0.95), 4)}
+
+
+def _counter_window(delta, stat_counters):
+    """Legacy-keyed counter readings from a registry ``delta`` — the
+    windowed replacement for the old ``pre = dict(x.stats)`` arithmetic
+    (``stat_counters`` is a component's legacy-key -> instrument map)."""
+    return {key: delta.get(name, {}).get("value", 0)
+            for key, (name, _) in stat_counters.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -253,22 +289,25 @@ def prefill_metrics(ctx: BenchContext):
 
 @scenario("engine", features=("continuous_batching",))
 def engine_metrics(ctx: BenchContext):
-    """Batch decode throughput + TTFT percentiles through the full
-    ServeEngine on the benchmark batch."""
+    """Batch decode throughput + TTFT/ITL/e2e percentiles through the
+    full ServeEngine, read from the telemetry histograms over a registry
+    delta spanning exactly the timed run (the warm/compile pass stays in
+    the cumulative registry but out of the window)."""
     engine = ctx.engine()
     engine.run(ctx.requests())                  # compile + warm
     engine.reset_stats()
+    pre = engine.telemetry.registry.snapshot()
     results = engine.run(ctx.requests())
-    ttfts = [r.ttft_s for r in results]
-    return {
+    d = engine.telemetry.registry.delta(pre)
+    out = {
         "decode_tps": round(_decode_tps(engine.stats), 1),
-        "ttft_mean_s": round(float(np.mean(ttfts)), 4),
-        "ttft_max_s": round(float(np.max(ttfts)), 4),
-        "ttft_p50_s": _pct(ttfts, 50),
-        "ttft_p95_s": _pct(ttfts, 95),
         "requests": len(results),
-        "engine": engine_stamp(engine),
     }
+    out.update(_hist_latency(d, "serve_ttft_seconds", "ttft"))
+    out.update(_hist_latency(d, "serve_decode_step_seconds", "itl"))
+    out.update(_hist_latency(d, "serve_e2e_seconds", "e2e"))
+    out["engine"] = engine_stamp(engine)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -486,6 +525,7 @@ def prefix_cache_metrics(ctx: BenchContext, n_requests=6, tail_len=8,
     tests/test_prefix_cache.py); the benchmark records how much prompt work
     the O(uncached suffix) cost model actually removes."""
     from repro.serve import CachedSuffixFirst, PrefixCache
+    from repro.serve.cache import _STAT_COUNTERS as _CACHE_COUNTERS
     cfg, params, plan, seed = ctx.cfg, ctx.params, ctx.plan, ctx.seed
     budget_mb, grain = ctx.args.prefix_cache_mb, ctx.args.cache_grain
     shared_len = min(48, ctx.prompts.shape[1])
@@ -503,11 +543,15 @@ def prefix_cache_metrics(ctx: BenchContext, n_requests=6, tail_len=8,
                 for i in range(n_requests)]
 
     def run(cached):
-        cache = (PrefixCache(budget_mb=budget_mb, grain=grain)
+        # one registry across engine + cache + scheduler: engine latency
+        # histograms and cache counters come out of the same delta window
+        telem = Telemetry()
+        cache = (PrefixCache(budget_mb=budget_mb, grain=grain,
+                             registry=telem.registry)
                  if cached else None)
         eng = ctx.engine(max_slots=max_slots, max_len=max_len,
                          max_prefill_chunk=chunk,
-                         prefix_cache=cache,
+                         prefix_cache=cache, telemetry=telem,
                          scheduler=CachedSuffixFirst(cache) if cached
                          else None)
         if cached:
@@ -516,33 +560,32 @@ def prefix_cache_metrics(ctx: BenchContext, n_requests=6, tail_len=8,
             eng.run([Request(id=-1, prompt=shared + [1],
                              max_new_tokens=1)])
         eng.run(requests())                        # compile + warm timings
-        # cache.stats is cumulative over the cache's lifetime; the
+        # the registry is cumulative over the stack's lifetime; the
         # reported counters must cover exactly the kept (best) iteration
         # — not the warm-up/compile runs, and not all iterations summed —
-        # so they stay consistent with the engine counters beside them
+        # so each iteration reads a snapshot()/delta() window
         best = None
         for _ in range(iters):
             eng.reset_stats()
-            pre = dict(cache.stats) if cached else None
-            results = eng.run(requests())
-            ttfts = [r.ttft_s for r in results]
+            pre = telem.registry.snapshot()
+            eng.run(requests())
+            d = telem.registry.delta(pre)
             s = dict(eng.stats)
-            d = ({k: cache.stats[k] - pre[k] for k in pre}
-                 if cached else None)
-            if best is None or np.median(ttfts) < np.median(best[0]):
-                best = (ttfts, s, d)
-        ttfts, s, d = best
+            if best is None or (hist_quantile(d["serve_ttft_seconds"], 0.5)
+                                < hist_quantile(
+                                    best[0]["serve_ttft_seconds"], 0.5)):
+                best = (d, s)
+        d, s = best
         out = {
             "requests": n_requests,
             "prefill_tokens": s["prefill_tokens"],
             "cache_hit_tokens": s["cache_hit_tokens"],
-            "ttft_p50_s": _pct(ttfts, 50),
-            "ttft_p95_s": _pct(ttfts, 95),
+            **_hist_latency(d, "serve_ttft_seconds", "ttft"),
             "engine": engine_stamp(eng),
         }
         if cached:
             cs = cache.summary()                   # snapshots/bytes: state
-            cs.update(d)
+            cs.update(_counter_window(d, _CACHE_COUNTERS))
             cs["hit_rate"] = cs["hits"] / max(cs["hits"] + cs["misses"], 1)
             cs["token_hit_rate"] = (cs["hit_tokens"] /
                                     max(cs["lookup_tokens"], 1))
@@ -582,10 +625,15 @@ def expert_library_metrics(ctx: BenchContext, n_tenants=2, max_bound=2,
     single-set engine running that tenant's grafted params — the
     multi-tenant batch buys throughput, never output drift."""
     from repro.serve import ExpertLibrary
+    from repro.serve.expert_library import _STAT_COUNTERS as _LIB_COUNTERS
     cfg = ctx.cfg
+    # engine and library on one registry, so the library's residency
+    # counters window with the same snapshot/delta as the engine metrics
+    telem = Telemetry()
     library = ExpertLibrary(cfg, ctx.params,
                             budget_mb=ctx.args.expert_budget_mb,
-                            max_bound=max_bound, plan=ctx.plan)
+                            max_bound=max_bound, plan=ctx.plan,
+                            registry=telem.registry)
     for i in range(n_tenants):
         library.add(f"tenant{i}", lm.init_params(
             jax.random.PRNGKey(ctx.seed + 1000 + i), cfg))
@@ -598,7 +646,7 @@ def expert_library_metrics(ctx: BenchContext, n_tenants=2, max_bound=2,
                         expert_set=sets[i % len(sets)])
                 for i in range(n_req)]
 
-    eng = ctx.engine(expert_library=library)
+    eng = ctx.engine(expert_library=library, telemetry=telem)
     results = eng.run(tenant_requests())            # compile + warm
     toks = {r.id: r.tokens for r in results}
 
@@ -621,7 +669,7 @@ def expert_library_metrics(ctx: BenchContext, n_tenants=2, max_bound=2,
                                max_new_tokens=ctx.gen) for i in ids])
         identical &= all(toks[r.id] == r.tokens for r in res)
 
-    pre = dict(library.stats)
+    pre = telem.registry.snapshot()       # window: all timed iterations
     best = None
     for _ in range(iters):
         eng.reset_stats()
@@ -631,7 +679,7 @@ def expert_library_metrics(ctx: BenchContext, n_tenants=2, max_bound=2,
         if best is None or tps > best[0]:
             best = (tps, s)
     tps_mt, s = best
-    d = {k: library.stats[k] - pre[k] for k in pre}
+    d = _counter_window(telem.registry.delta(pre), _LIB_COUNTERS)
     acq = d["hits"] + d["faults"]
 
     base_eng = ctx.engine()
@@ -770,6 +818,73 @@ def load_metrics(ctx: BenchContext, max_slots=6, n_initial=4, iters=5):
 
 
 # ---------------------------------------------------------------------------
+# observability: telemetry overhead A/B + exporter artifacts
+# ---------------------------------------------------------------------------
+
+@scenario("observability", features=("telemetry",))
+def observability_metrics(ctx: BenchContext, iters=10):
+    """Telemetry overhead A/B: the same requests through an engine with
+    full telemetry (metrics registry + per-request span tracing) vs
+    ``Telemetry(enabled=False)`` (shared no-op instruments, no spans).
+    Both arms are timed identically — wall clock around ``run()`` over
+    generated-token counts — because the off arm has no engine counters
+    to read (its ``stats`` view is all zeros by design).  The timed runs
+    are **paired**: both engines are warmed first, then each iteration
+    times one on-run immediately followed by one off-run, best-of over
+    all pairs — a smoke run is ~60 ms, so machine drift (frequency,
+    noisy neighbours) between unpaired arms would otherwise dwarf the
+    real overhead.  ``telemetry_tps_ratio`` (on/off) is the enforceable
+    overhead claim: trajectory.py gates it functionally at >=
+    MIN_TELEMETRY_RATIO with no baseline needed.  Greedy tokens must be
+    identical both ways — telemetry is host-side only and never enters
+    jitted computation.  The on arm also drives every exporter (registry
+    snapshot, Prometheus text, Chrome trace events) and, under
+    ``--telemetry-artifacts PREFIX``, writes ``PREFIX.prom`` /
+    ``PREFIX.trace.json`` for CI artifact upload."""
+    telem_on = Telemetry(enabled=True)
+    eng_on = ctx.engine(telemetry=telem_on)
+    eng_off = ctx.engine(telemetry=Telemetry(enabled=False))
+    toks_on = {r.id: r.tokens for r in eng_on.run(ctx.requests())}   # warm
+    toks_off = {r.id: r.tokens for r in eng_off.run(ctx.requests())}
+
+    def timed(eng):
+        t0 = time.perf_counter()
+        results = eng.run(ctx.requests())
+        wall = time.perf_counter() - t0
+        return sum(len(r.tokens) for r in results) / max(wall, 1e-9)
+
+    tps_on = tps_off = 0.0
+    for _ in range(iters):
+        tps_on = max(tps_on, timed(eng_on))
+        tps_off = max(tps_off, timed(eng_off))
+
+    snap = telem_on.registry.snapshot()
+    prom = telem_on.registry.to_prometheus(snap)
+    trace = telem_on.tracer.chrome_trace()
+    out = {
+        "requests": int(ctx.prompts.shape[0]), "gen": int(ctx.gen),
+        "iters": int(iters),
+        "greedy_identical": bool(toks_on == toks_off),
+        "on": {"e2e_tps": round(tps_on, 1),
+               "instruments": len(snap),
+               "prometheus_lines": prom.count("\n"),
+               "trace_events": len(trace["traceEvents"]),
+               "timelines": len(telem_on.tracer.timelines()),
+               "engine": engine_stamp(eng_on)},
+        "off": {"e2e_tps": round(tps_off, 1)},
+        "telemetry_tps_ratio": round(tps_on / max(tps_off, 1e-9), 3),
+    }
+    prefix = ctx.args.telemetry_artifacts
+    if prefix:
+        with open(prefix + ".prom", "w") as f:
+            f.write(prom)
+        with open(prefix + ".trace.json", "w") as f:
+            json.dump(trace, f)
+        out["artifacts"] = [prefix + ".prom", prefix + ".trace.json"]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
 
@@ -865,6 +980,11 @@ def main(argv=None):
     ap.add_argument("--cache-grain", type=int, default=1,
                     help="prefix-cache snapshot alignment (publish only "
                          "multiples of G tokens; bounds radix-tree size)")
+    ap.add_argument("--telemetry-artifacts", default="", metavar="PREFIX",
+                    help="write the observability scenario's exporter "
+                         "outputs to PREFIX.prom (Prometheus text) and "
+                         "PREFIX.trace.json (Chrome trace events, "
+                         "Perfetto-loadable) — what CI uploads")
     ap.add_argument("--mesh", default="",
                     help="ParallelPlan topology over this host's devices, "
                          "e.g. 'data=4' or 'data=2,model=2' (decode slots "

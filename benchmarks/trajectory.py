@@ -26,15 +26,20 @@ Threshold classes (first match on the metric's dot-path wins):
   quality      acceptance_rate, hit_rate, higher is better; 25% relative
                *_saved_frac, token_hit_*  drop allowed (these are discrete
                                           ratios on smoke workloads)
-  latency      ttft_*_s, wall_s, *stall_s lower is better; 100% relative
-                                          growth allowed (absolute wall
+  latency      ttft/itl/e2e_*_s, wall_s,  lower is better; 100% relative
+               *stall_s                   growth allowed (absolute wall
                                           times on shared CI runners are
                                           noisy — the throughput gates are
                                           the sharp ones)
 
 Ratios-of-throughputs (``*_vs_baseline``, ``*_vs_ref``, ``speedup``) are
 derived from gated quantities and CI-noisy in both numerator and
-denominator, so they are reported but not gated.
+denominator, so they are reported but not gated.  One more hard
+functional gate rides with the identity flags: the observability
+scenario's ``telemetry_tps_ratio`` (decode throughput with full
+telemetry on vs off) must stay >= ``MIN_TELEMETRY_RATIO`` — telemetry
+is supposed to be near-free, and this catches an instrumentation change
+that puts real work on the hot path.
 
 ``--update`` rewrites the baseline with the current report (the CI main
 branch does this after a green run, so the committed trajectory always
@@ -55,8 +60,13 @@ THRESHOLDS = [
     (re.compile(r"_tps$"), "higher", 0.15),
     (re.compile(r"(acceptance_rate|hit_rate|_saved_frac|tokens_per_round)$"),
      "higher", 0.25),
-    (re.compile(r"(ttft_\w*_s|wall_s|stall_s)$"), "lower", 1.00),
+    (re.compile(r"((ttft|itl|e2e)_\w*_s|wall_s|stall_s)$"), "lower", 1.00),
 ]
+
+#: Floor on observability.telemetry_tps_ratio (throughput with full
+#: telemetry enabled over disabled): a functional gate like the identity
+#: flags — no baseline needed, telemetry may cost at most 5% throughput.
+MIN_TELEMETRY_RATIO = 0.95
 
 
 def classify(path: str):
@@ -143,6 +153,23 @@ def check_identity(current: dict):
     return failures
 
 
+def check_telemetry_ratio(current):
+    """The observability scenario's overhead floor: full telemetry must
+    keep >= MIN_TELEMETRY_RATIO of the telemetry-off throughput.  Like
+    the identity gates this needs no baseline — absent scenario, no
+    gate (the smoke report may be filtered to other scenarios)."""
+    scen = current.get("scenarios", {})
+    obs = scen.get("observability") if isinstance(scen, dict) else None
+    if not isinstance(obs, dict):
+        return []
+    r = obs.get("telemetry_tps_ratio")
+    if isinstance(r, (int, float)) and r < MIN_TELEMETRY_RATIO:
+        return [f"scenarios.observability.telemetry_tps_ratio {r} < "
+                f"{MIN_TELEMETRY_RATIO}: full telemetry costs more than "
+                f"{1 - MIN_TELEMETRY_RATIO:.0%} of decode throughput"]
+    return []
+
+
 def first_stamp(obj):
     """The first engine stamp (dict with a schema_version) found in a
     report — every scenario attaches one, so any is representative of the
@@ -190,7 +217,7 @@ def main(argv=None):
     with open(args.current) as f:
         current = json.load(f)
     if args.identity_only:
-        failures = check_identity(current)
+        failures = check_identity(current) + check_telemetry_ratio(current)
         for msg in failures:
             print(f"FUNCTIONAL GATE FAILED: {msg}")
         if failures:
@@ -207,11 +234,16 @@ def main(argv=None):
         baseline = json.load(f)
 
     if baseline.get("schema_version") != current.get("schema_version"):
+        # the functional gates carry no baseline dependency, so a schema
+        # bump must not waive them — only the metric diffs are skipped
+        failures = check_identity(current) + check_telemetry_ratio(current)
+        for msg in failures:
+            print(f"FUNCTIONAL GATE FAILED: {msg}")
         print(f"trajectory: schema_version changed "
               f"({baseline.get('schema_version')} -> "
               f"{current.get('schema_version')}); skipping metric gates "
               f"(commit a fresh baseline)")
-        return 0
+        return 1 if failures else 0
 
     warn_device_mismatch(baseline, current)
     missing = missing_scenarios(baseline, current)
@@ -221,7 +253,7 @@ def main(argv=None):
               f"crashed, or filtered out); rerun it or refresh the "
               f"baseline with --update")
     rows, regressions = compare(baseline, current)
-    failures = check_identity(current)
+    failures = check_identity(current) + check_telemetry_ratio(current)
     width = max((len(r[0]) for r in rows), default=20)
     for path, b, c, rel, direction, tol, bad in rows:
         mark = "REGRESSED" if bad else "ok"

@@ -24,6 +24,7 @@ default is single-device.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -36,7 +37,7 @@ from repro.distributed.plan import ParallelPlan
 from repro.models import lm
 from repro.serve import (CachedSuffixFirst, EngineConfig, ExpertLibrary,
                          PrefixCache, Request, SamplingParams, ServeEngine,
-                         ShortestPromptFirst)
+                         ShortestPromptFirst, Telemetry)
 
 
 def main():
@@ -107,6 +108,24 @@ def main():
                          "(EngineConfig.kernels): 'pallas' enables the "
                          "fused decode fast path, 'ref' pins the jnp "
                          "oracles, 'auto' picks by backend")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the final telemetry registry snapshot: "
+                         "Prometheus text format when PATH ends in .prom, "
+                         "structured JSON otherwise")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    metavar="S",
+                    help="print a registry-delta stats line every S "
+                         "seconds while serving (0 = only the final "
+                         "summary)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write per-request span timelines as Chrome "
+                         "trace_event JSON — load in Perfetto "
+                         "(ui.perfetto.dev) or chrome://tracing")
+    ap.add_argument("--trace-dir", default="", metavar="DIR",
+                    help="capture a jax.profiler trace of the run into "
+                         "DIR (TensorBoard/Perfetto-loadable), with "
+                         "TraceAnnotation markers around the engine's "
+                         "jitted serving dispatches")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -118,8 +137,12 @@ def main():
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.prompt_len + args.gen
+    # one Telemetry bundle for the whole stack: cache/library/scheduler
+    # report into the engine's registry, so --metrics-out is one unified
+    # snapshot and the trace timeline covers every subsystem
+    telem = Telemetry(profiler=bool(args.trace_dir))
     cache = (PrefixCache(budget_mb=args.prefix_cache_mb,
-                         grain=args.cache_grain)
+                         grain=args.cache_grain, registry=telem.registry)
              if args.prefix_cache_mb > 0 else None)
     if args.cache_policy == "cached-suffix":
         if cache is None:
@@ -135,7 +158,8 @@ def main():
     if args.tenants > 0:
         library = ExpertLibrary(cfg, params,
                                 budget_mb=args.expert_budget_mb,
-                                max_bound=args.max_bound, plan=plan)
+                                max_bound=args.max_bound, plan=plan,
+                                registry=telem.registry)
         for i in range(args.tenants):
             library.add(f"tenant{i}", lm.init_params(
                 jax.random.PRNGKey(args.seed + 1000 + i), cfg))
@@ -148,7 +172,8 @@ def main():
                             draft_stride=args.draft_stride,
                             kernels=(None if args.kernels == "auto"
                                      else args.kernels)),
-        prefix_cache=cache, scheduler=scheduler, expert_library=library)
+        prefix_cache=cache, scheduler=scheduler, expert_library=library,
+        telemetry=telem)
 
     print(f"plan: {plan.describe()} | kernels: {args.kernels}")
     n_req = args.requests or args.batch
@@ -161,9 +186,44 @@ def main():
                     expert_set=tenant_names[i % len(tenant_names)])
             for i in range(n_req)]
 
+    if args.trace_dir:
+        jax.profiler.start_trace(args.trace_dir)
     t0 = time.perf_counter()
-    results = engine.run(reqs)
+    if args.metrics_interval > 0:
+        # drive tick-by-tick so a periodic registry-delta line can land
+        # between dispatches (the engine itself never prints)
+        for r in reqs:
+            engine.submit(r)
+        results = []
+        reg = telem.registry
+        win = reg.snapshot()
+        t_next = t0 + args.metrics_interval
+        while engine.busy():
+            results.extend(engine.tick())
+            now = time.perf_counter()
+            if now >= t_next:
+                d = reg.delta(win)
+
+                def rate(name, n=now - t_next + args.metrics_interval):
+                    return d[name]["value"] / max(n, 1e-9) \
+                        if name in d else 0.0
+                print(f"[t+{now - t0:6.1f}s] "
+                      f"decode {rate('serve_decode_tokens_total'):8.1f} "
+                      f"tok/s | prefill "
+                      f"{rate('serve_prefill_tokens_total'):8.1f} tok/s | "
+                      f"active {reg.value('serve_active_slots')} slots | "
+                      f"queue {reg.value('sched_queue_depth')} | "
+                      f"finished {reg.value('serve_requests_finished_total')}"
+                      f"/{reg.value('serve_requests_submitted_total')}")
+                win = reg.snapshot()
+                t_next = now + args.metrics_interval
+        results.extend(engine._drain())
+    else:
+        results = engine.run(reqs)
     wall = time.perf_counter() - t0
+    if args.trace_dir:
+        jax.profiler.stop_trace()
+        print(f"jax.profiler trace written to {args.trace_dir}")
 
     s = engine.stats
     gen_tok = sum(len(r.tokens) for r in results)
@@ -206,6 +266,20 @@ def main():
     by_id = {r.id: r for r in results}
     print("sample generations:",
           [by_id[i].tokens[:16] for i in range(min(2, n_req))])
+
+    if args.metrics_out:
+        if args.metrics_out.endswith(".prom"):
+            body = telem.registry.to_prometheus()
+        else:
+            body = json.dumps(telem.registry.snapshot(), indent=2)
+        with open(args.metrics_out, "w") as f:
+            f.write(body)
+        print(f"metrics snapshot written to {args.metrics_out}")
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            json.dump(telem.tracer.chrome_trace(), f)
+        print(f"request trace ({len(telem.tracer.timelines())} timelines) "
+              f"written to {args.trace_out} — load in ui.perfetto.dev")
 
 
 if __name__ == "__main__":

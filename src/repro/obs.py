@@ -1,0 +1,24 @@
+"""``repro.obs`` — the observability surface of the serving stack.
+
+A thin, stable re-export of :mod:`repro.serve.telemetry` so tools
+(dashboards, exporters, notebooks) depend on ``repro.obs`` rather than
+on serving internals::
+
+    from repro import obs
+
+    telem = obs.Telemetry()                 # registry + tracer bundle
+    ...   # build engine/cache/library against telem (see docs)
+    print(telem.registry.to_prometheus())
+    json_blob = telem.tracer.chrome_trace()   # Perfetto-loadable
+
+See docs/observability.md for the full reference.
+"""
+from repro.serve.telemetry import (LATENCY_BUCKETS_S, Counter,
+                                   EngineInstruments, Gauge, Histogram,
+                                   MetricsRegistry, Span, Telemetry,
+                                   Timeline, Tracer, hist_mean,
+                                   hist_quantile, log_buckets)
+
+__all__ = ["LATENCY_BUCKETS_S", "Counter", "EngineInstruments", "Gauge",
+           "Histogram", "MetricsRegistry", "Span", "Telemetry", "Timeline",
+           "Tracer", "hist_mean", "hist_quantile", "log_buckets"]

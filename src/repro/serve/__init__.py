@@ -16,6 +16,16 @@ prefill for shared prompt prefixes: a radix tree of chunk-boundary state
 snapshots (``repro.serve.cache``) turns prefill cost from O(prompt) into
 O(uncached suffix), with byte-budgeted LRU eviction.
 
+Telemetry (``repro.serve.telemetry``, re-exported as ``repro.obs``)
+unifies observability: a :class:`~repro.serve.telemetry.MetricsRegistry`
+of typed instruments shared across engine / cache / library / scheduler
+(legacy ``stats`` dicts remain as derived views), a per-request span
+:class:`~repro.serve.telemetry.Tracer` (queued → admitted → prefill
+chunks → decode/spec rounds → finish), and exporters: JSON
+snapshot/delta, Prometheus text, Chrome ``trace_event`` (Perfetto), and
+an opt-in ``jax.profiler`` annotation hook.  See
+``docs/observability.md``.
+
 Device placement is resolved **once** by a
 :class:`~repro.distributed.plan.ParallelPlan` passed as
 ``ServeEngine(cfg, params, plan=...)`` (default: single device): it shards
@@ -38,6 +48,10 @@ from repro.serve.state import (StateSpec, StateStore, adopt_slots,
                                append_only_mask, gather_slots, init_slots,
                                insert_slots, restore_slots, select_window,
                                slot_axes, snapshot_slots, state_nbytes)
+from repro.serve.telemetry import (Counter, Gauge, Histogram,
+                                   MetricsRegistry, Span, Telemetry,
+                                   Tracer, hist_mean, hist_quantile,
+                                   log_buckets)
 
 _ENGINE_NAMES = ("EngineConfig", "Request", "RequestResult", "ServeEngine")
 _SPEC_NAMES = ("SpecConfig", "make_spec_fn")
@@ -52,7 +66,10 @@ __all__ = ["EngineConfig", "ExpertLibrary", "Request", "RequestResult",
            "SpecConfig", "make_spec_fn", "StateSpec",
            "StateStore", "adopt_slots", "append_only_mask", "gather_slots",
            "init_slots", "insert_slots", "restore_slots", "select_window",
-           "slot_axes", "snapshot_slots", "state_nbytes"]
+           "slot_axes", "snapshot_slots", "state_nbytes",
+           "Counter", "Gauge", "Histogram", "MetricsRegistry", "Span",
+           "Telemetry", "Tracer", "hist_mean", "hist_quantile",
+           "log_buckets"]
 
 
 def __getattr__(name):

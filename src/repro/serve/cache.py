@@ -45,6 +45,25 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.serve.state import state_nbytes
+from repro.serve.telemetry import MetricsRegistry
+
+#: legacy ``PrefixCache.stats`` key -> (registry counter name, help)
+_STAT_COUNTERS = {
+    "hits": ("cache_hits_total", "lookups that restored a snapshot"),
+    "misses": ("cache_misses_total", "lookups with no cached prefix"),
+    "hit_tokens": ("cache_hit_tokens_total",
+                   "prefix tokens served from snapshots"),
+    "lookup_tokens": ("cache_lookup_tokens_total",
+                      "prompt tokens presented to lookup()"),
+    "inserts": ("cache_inserts_total", "new boundary snapshots stored"),
+    "dedup_skips": ("cache_dedup_skips_total",
+                    "inserts skipped because the prefix was cached"),
+    "evictions": ("cache_evictions_total", "snapshots evicted (LRU)"),
+    "oversize": ("cache_oversize_total",
+                 "snapshots refused: larger than the whole budget"),
+    "grain_skips": ("cache_grain_skips_total",
+                    "boundaries refused by grain alignment"),
+}
 
 
 @dataclasses.dataclass(eq=False)      # identity hash: nodes live in sets
@@ -96,7 +115,8 @@ class PrefixCache:
     """
 
     def __init__(self, budget_mb: float = 64.0, min_tokens: int = 1,
-                 capture: bool = True, grain: int = 1):
+                 capture: bool = True, grain: int = 1,
+                 registry: Optional[MetricsRegistry] = None):
         if budget_mb <= 0:
             raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
         if grain < 1:
@@ -119,11 +139,27 @@ class PrefixCache:
         #: bumped on every snapshot attach/evict; rankings derived from the
         #: tree (CachedSuffixFirst's peek memo) are valid while it holds
         self.version = 0
-        self.stats: Dict[str, int] = {
-            "hits": 0, "misses": 0, "hit_tokens": 0, "lookup_tokens": 0,
-            "inserts": 0, "dedup_skips": 0, "evictions": 0, "oversize": 0,
-            "grain_skips": 0,
-        }
+        # telemetry: counters back the legacy ``stats`` dict (a derived
+        # view); pass ``registry=`` to report into a shared serving-stack
+        # registry (one cache per shared registry — instrument names are
+        # not namespaced per instance), default is a private one.  The
+        # registry is cumulative; window it with snapshot()/delta().
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        self._m = {key: self.registry.counter(name, help)
+                   for key, (name, help) in _STAT_COUNTERS.items()}
+        self._g_bytes = self.registry.gauge(
+            "cache_bytes_used", "bytes of snapshots currently held")
+        self._g_snaps = self.registry.gauge(
+            "cache_snapshots", "snapshots currently held")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counters view, derived from the telemetry registry
+        (cumulative over the cache's lifetime; all zeros when the shared
+        registry is disabled)."""
+        return {key: int(self.registry.value(name))
+                for key, (name, _) in _STAT_COUNTERS.items()}
 
     # ------------------------------------------------------------- queries
 
@@ -171,15 +207,15 @@ class PrefixCache:
         """Longest cached prefix strictly shorter than the prompt:
         ``(prefix_len, snapshot)``, or ``(0, None)`` on a miss.  Touches
         LRU and records hit/miss stats — call once per admitted request."""
-        self.stats["lookup_tokens"] += len(tokens)
+        self._m["lookup_tokens"].inc(len(tokens))
         best = self._walk_best(tokens, max(len(tokens) - 1, 0), ns)
         if best is None:
-            self.stats["misses"] += 1
+            self._m["misses"].inc()
             return 0, None
         self._clock += 1
         best.used = self._clock
-        self.stats["hits"] += 1
-        self.stats["hit_tokens"] += best.depth
+        self._m["hits"].inc()
+        self._m["hit_tokens"].inc(best.depth)
         return best.depth, best.snap
 
     def contains(self, tokens: Sequence[int], ns=None) -> bool:
@@ -199,7 +235,7 @@ class PrefixCache:
         if not self.capture or len(tokens) < self.min_tokens:
             return False
         if len(tokens) % self.grain != 0:
-            self.stats["grain_skips"] += 1
+            self._m["grain_skips"].inc()
             return False
         return True
 
@@ -218,20 +254,22 @@ class PrefixCache:
         self._clock += 1
         node.used = self._clock
         if node.snap is not None:
-            self.stats["dedup_skips"] += 1
+            self._m["dedup_skips"].inc()
             return False
         snap = snap_fn()
         nbytes = state_nbytes(snap)
         if nbytes > self.budget_bytes:
-            self.stats["oversize"] += 1
+            self._m["oversize"].inc()
             self._prune(node)
             return False
         node.snap, node.nbytes = snap, nbytes
         self._snaps.add(node)
         self._bytes += nbytes
         self.version += 1
-        self.stats["inserts"] += 1
+        self._m["inserts"].inc()
         self._evict_to_budget(keep=node)
+        self._g_bytes.set(self._bytes)
+        self._g_snaps.set(len(self._snaps))
         return True
 
     def _ensure_node(self, tokens: Tuple[int, ...],
@@ -271,7 +309,9 @@ class PrefixCache:
         node.snap, node.nbytes = None, 0
         self._snaps.discard(node)
         self.version += 1
-        self.stats["evictions"] += 1
+        self._m["evictions"].inc()
+        self._g_bytes.set(self._bytes)
+        self._g_snaps.set(len(self._snaps))
         self._prune(node)
 
     def _prune(self, node: _Node) -> None:

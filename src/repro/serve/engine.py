@@ -52,6 +52,7 @@ from repro.serve.sampling import SamplingParams, sample, sample_fused
 from repro.serve.scheduler import FIFOScheduler
 from repro.serve.speculative import SpecConfig, make_spec_fn
 from repro.serve.state import StateStore
+from repro.serve.telemetry import EngineInstruments, Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,7 +243,8 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, plan: Optional[ParallelPlan] = None,
                  engine: Optional[EngineConfig] = None, scheduler=None,
-                 prefix_cache=None, expert_library=None, **knobs):
+                 prefix_cache=None, expert_library=None,
+                 telemetry: Optional[Telemetry] = None, **knobs):
         if "mesh" in knobs or "rules" in knobs:
             raise TypeError(
                 "ServeEngine no longer takes mesh=/rules= — resolve the "
@@ -431,34 +433,23 @@ class ServeEngine:
         self._finished: List[RequestResult] = []
         self._submit_t: Dict[int, float] = {}
         self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
-        self.stats: Dict[str, Any] = {
-            "prefill_tokens": 0, "prefill_s": 0.0,
-            "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0,
-            "mixed_steps": 0, "mixed_s": 0.0,
-            # stall accounting: ``active_ticks`` counts ticks that began
-            # with live decode lanes; ``stall_s`` accumulates time those
-            # lanes spent NOT advancing (sequential admission's prefills,
-            # plus any tick whose dispatch skipped decode).  The stall-free
-            # property is the invariant active_ticks == decode_steps with
-            # stall_s == 0 — measured, not true by construction.
-            "active_ticks": 0, "stall_s": 0.0,
-            # speculative decoding: drafted counts K per live slot per
-            # round; accepted counts drafts that survived verification;
-            # emitted counts tokens actually appended host-side (accepted
-            # prefix + the full-model correction/bonus token, truncated at
-            # EOS / max-tokens / max_len).  acceptance = accepted / drafted.
-            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
-            "spec_emitted": 0,
-            # prefix cache: prompt tokens whose prefill was skipped by
-            # restoring a cached boundary snapshot (``prefill_tokens``
-            # above counts only the uncached suffixes actually computed);
-            # hit/miss/evict detail lives in ``PrefixCache.stats``
-            "cache_hit_tokens": 0,
-            # expert library: binding-row rebinds (a request named a set
-            # no row currently holds); fault/hit/evict residency detail
-            # lives in ``ExpertLibrary.stats``
-            "expert_swaps": 0,
-        }
+        # telemetry: one registry of typed instruments (the semantics that
+        # used to live as comments on the old ad-hoc ``stats`` dict are now
+        # the instruments' help strings in serve/telemetry.py) plus the
+        # per-request span tracer.  ``self.stats`` remains as a
+        # compatibility view derived from the registry.  Disabled telemetry
+        # hands out shared no-op instruments, so every instrumentation
+        # site below is unconditional.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._metrics = EngineInstruments(self.telemetry.registry)
+        self._tracer = self.telemetry.tracer
+        self._stats_base: Dict[str, Any] = {}
+        # share the engine's registry with a scheduler that can report
+        # queue metrics (no-op for schedulers without bind_registry, and
+        # for schedulers the caller already bound to another registry)
+        bind = getattr(self.scheduler, "bind_registry", None)
+        if bind is not None:
+            bind(self.telemetry.registry)
 
     @property
     def state(self):
@@ -493,16 +484,35 @@ class ServeEngine:
                     f"request {req.id}: unknown expert set "
                     f"{req.expert_set!r}; library has "
                     f"{self.library.names()}")
-        self._submit_t[req.id] = time.perf_counter()
+        t = time.perf_counter()
+        self._submit_t[req.id] = t
+        self._metrics.submitted.inc()
+        self._tracer.begin(req.id, t, prompt_len=len(req.prompt),
+                           expert_set=req.expert_set)
         self.scheduler.add(req)
 
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Legacy counters view, derived from the telemetry registry: each
+        key is its registry counter minus the value it had at the last
+        :meth:`reset_stats` (so existing callers keep their re-timing
+        semantics), with the historical int/float typing preserved.  All
+        zeros when telemetry is disabled.  The registry itself
+        (``engine.telemetry.registry``) is cumulative and never resets —
+        windowed readings come from ``snapshot()``/``delta(prev)``."""
+        return self._metrics.stats_view(self._stats_base)
+
     def reset_stats(self) -> None:
-        """Zero every counter in ``stats`` (benchmark iterations re-time a
-        warm engine).  The prefix cache's own stats are cumulative over its
-        lifetime and are deliberately not touched — reset the cache by
-        constructing a new one."""
-        for k, v in self.stats.items():
-            self.stats[k] = type(v)()
+        """Re-baseline the ``stats`` view (benchmark iterations re-time a
+        warm engine): subsequent reads report only activity after this
+        call.  The underlying registry stays cumulative — this never
+        zeroes an instrument, it just moves the subtraction baseline.
+        Cache/library/scheduler metrics (their own ``stats`` dicts, and
+        their instruments when they share this registry) are cumulative
+        over component lifetime and deliberately untouched — window them
+        with ``registry.snapshot()`` before / ``registry.delta(prev)``
+        after the timed region, as benchmarks/serving.py does."""
+        self._stats_base = self._metrics.stats_base()
 
     def spec_summary(self) -> Dict[str, float]:
         """Derived speculative-decoding stats: ``acceptance_rate`` =
@@ -541,8 +551,10 @@ class ServeEngine:
         the in-flight admission job.  Returns newly finished requests."""
         self._admit()
         active = [b for b, l in enumerate(self._lanes) if l is not None]
+        m = self._metrics
+        m.active_slots.set(len(active))
         if active:
-            self.stats["active_ticks"] += 1
+            m.active_ticks.inc()
         job = self._job
         if job is not None:
             c = job.next_chunk()
@@ -551,57 +563,69 @@ class ServeEngine:
             dp, sets = self._decode_params()
             t0 = time.perf_counter()
             if active and self._spec is not None:
-                sp_toks, n_emit, self.state, first, job.state = \
-                    self._spec_mixed(
-                        dp, self.state, jnp.asarray(self._last),
-                        jnp.asarray(self._pos), self._next_rng(),
-                        jnp.asarray(self._temp), jnp.asarray(self._topk),
-                        jnp.asarray(self._topp),
-                        job.state, toks, jnp.int32(job.pos),
-                        self._next_rng(), jnp.asarray(job.temp),
-                        jnp.asarray(job.topk), jnp.asarray(job.topp),
-                        sets, job.params)
-                sp_toks = np.asarray(sp_toks)        # sync point
-                n_emit = np.asarray(n_emit)
-                first = np.asarray(first)
+                with self.telemetry.annotate("serve/spec_mixed_step"):
+                    sp_toks, n_emit, self.state, first, job.state = \
+                        self._spec_mixed(
+                            dp, self.state, jnp.asarray(self._last),
+                            jnp.asarray(self._pos), self._next_rng(),
+                            jnp.asarray(self._temp), jnp.asarray(self._topk),
+                            jnp.asarray(self._topp),
+                            job.state, toks, jnp.int32(job.pos),
+                            self._next_rng(), jnp.asarray(job.temp),
+                            jnp.asarray(job.topk), jnp.asarray(job.topp),
+                            sets, job.params)
+                    sp_toks = np.asarray(sp_toks)    # sync point
+                    n_emit = np.asarray(n_emit)
+                    first = np.asarray(first)
                 t1 = time.perf_counter()
-                self.stats["mixed_steps"] += 1
-                self.stats["mixed_s"] += t1 - t0
-                self.stats["decode_steps"] += 1
-                self._apply_spec(sp_toks, n_emit, active)
+                m.mixed_steps.inc()
+                m.mixed_s.inc(t1 - t0)
+                m.decode_steps.inc()
+                m.decode_step_s.observe(t1 - t0)
+                self._apply_spec(sp_toks, n_emit, active, t0, t1)
             elif active:
-                nxt, self.state, first, job.state = self._mixed(
-                    dp, self.state,
-                    jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
-                    self._next_rng(), jnp.asarray(self._temp),
-                    jnp.asarray(self._topk), jnp.asarray(self._topp),
-                    job.state, toks, jnp.int32(job.pos), self._next_rng(),
-                    jnp.asarray(job.temp), jnp.asarray(job.topk),
-                    jnp.asarray(job.topp), sets, job.params)
-                nxt = np.asarray(nxt)                # sync point
-                first = np.asarray(first)
+                with self.telemetry.annotate("serve/mixed_step"):
+                    nxt, self.state, first, job.state = self._mixed(
+                        dp, self.state,
+                        jnp.asarray(self._last)[:, None],
+                        jnp.asarray(self._pos),
+                        self._next_rng(), jnp.asarray(self._temp),
+                        jnp.asarray(self._topk), jnp.asarray(self._topp),
+                        job.state, toks, jnp.int32(job.pos),
+                        self._next_rng(),
+                        jnp.asarray(job.temp), jnp.asarray(job.topk),
+                        jnp.asarray(job.topp), sets, job.params)
+                    nxt = np.asarray(nxt)            # sync point
+                    first = np.asarray(first)
                 t1 = time.perf_counter()
-                self.stats["mixed_steps"] += 1
-                self.stats["mixed_s"] += t1 - t0
-                self.stats["decode_steps"] += 1
-                self.stats["decode_tokens"] += len(active)
+                m.mixed_steps.inc()
+                m.mixed_s.inc(t1 - t0)
+                m.decode_steps.inc()
+                m.decode_step_s.observe(t1 - t0)
+                m.decode_tokens.inc(len(active))
+                if self._tracer.enabled:
+                    for b in active:
+                        self._tracer.add(self._lanes[b].req.id, "decode",
+                                         t0, t1, pos=int(self._pos[b]))
                 self._apply_decode(nxt, active)
             else:
-                first, job.state = self._pf(
-                    self.params if job.params is None else job.params,
-                    job.state, toks, jnp.int32(job.pos),
-                    self._next_rng(), jnp.asarray(job.temp),
-                    jnp.asarray(job.topk), jnp.asarray(job.topp))
-                first = np.asarray(first)            # sync point
+                with self.telemetry.annotate("serve/prefill_chunk"):
+                    first, job.state = self._pf(
+                        self.params if job.params is None else job.params,
+                        job.state, toks, jnp.int32(job.pos),
+                        self._next_rng(), jnp.asarray(job.temp),
+                        jnp.asarray(job.topk), jnp.asarray(job.topp))
+                    first = np.asarray(first)        # sync point
                 t1 = time.perf_counter()
-                self.stats["prefill_s"] += t1 - t0
+                m.prefill_s.inc(t1 - t0)
                 if active:
                     # a prefill-only dispatch while decode lanes are live
                     # is exactly a stall (never taken by the current
                     # scheduler; counted so regressions surface in stats)
-                    self.stats["stall_s"] += t1 - t0
-            self.stats["prefill_tokens"] += live * c
-            self._advance_job(c, first, t1)
+                    m.stall_s.inc(t1 - t0)
+            m.prefill_tokens.inc(live * c)
+            m.prefill_chunk_s.observe(t1 - t0)
+            self._advance_job(c, first, t1, t0)
         elif active:
             if self._spec is not None:
                 self._spec_only(active)
@@ -666,7 +690,7 @@ class ServeEngine:
             self.library.acquire(name)
             self._bound[r] = name
             self._graft_cache = None
-            self.stats["expert_swaps"] += 1
+            self._metrics.expert_swaps.inc()
             return r
         return None
 
@@ -703,6 +727,7 @@ class ServeEngine:
         # (and the PR-2 scheduler protocol, which had no peek_next).
         take: List[Request] = []
         pos0, ns0, set_row = 0, None, 0
+        t_admit0 = time.perf_counter()
         if self.cache is None and self.library is None:
             take = [self.scheduler.pop_next() for _ in range(n)]
         else:
@@ -714,7 +739,12 @@ class ServeEngine:
                 if not take:
                     pos0, ns0 = hit, ns
                     if self.library is not None:
-                        row = self._bind_row(self._resolve_set(req))
+                        name = self._resolve_set(req)
+                        cold = name not in self._bound
+                        row = self._bind_row(name)
+                        if row is not None and cold:
+                            self._tracer.event(req.id, "expert_swap",
+                                               set=name, row=row)
                         if row is None:
                             # every binding row is pinned under live lanes
                             # or in-flight prefills: admit nothing this
@@ -750,7 +780,7 @@ class ServeEngine:
                 if snap is not None:
                     rows.append(l.row)
                     snaps.append(snap)
-                    self.stats["cache_hit_tokens"] += hit
+                    self._metrics.cache_hit_tokens.inc(hit)
             if rows:
                 # one host->device transfer + one insert for the whole
                 # job: concatenate the 1-slot snapshots along each leaf's
@@ -768,8 +798,15 @@ class ServeEngine:
         self._job = _PrefillJob(lanes, width, state,
                                 self.max_prefill_chunk, pos0=pos0,
                                 ns=ns0, params=pf_params)
+        if self._tracer.enabled:
+            t_admit1 = time.perf_counter()
+            for l in lanes:
+                self._tracer.admitted(l.req.id, t_admit0, t_admit1,
+                                      hit=pos0, ns=ns0,
+                                      mode="interleaved", slot=l.slot)
 
-    def _advance_job(self, c: int, first: np.ndarray, t_done: float) -> None:
+    def _advance_job(self, c: int, first: np.ndarray, t_done: float,
+                     t_start: float) -> None:
         job = self._job
         job.pos += c
         finished = []
@@ -781,6 +818,10 @@ class ServeEngine:
             l.remaining -= c
             if l.remaining == 0:
                 finished.append(l)
+        if self._tracer.enabled:
+            for l in crossed:
+                self._tracer.add(l.req.id, "prefill_chunk", t_start, t_done,
+                                 tokens=c, pos=job.pos)
         if self.cache is not None and self.cache.capture:
             # publish this boundary's snapshots: each crossing lane's state
             # row is the exact decode state for prompt[:job.pos] (full
@@ -826,6 +867,8 @@ class ServeEngine:
     def _activate(self, slot: int, req: Request, first_tok: int,
                   t_submit: float, t_first: float) -> None:
         sp = req.sampling
+        self._metrics.ttft.observe(t_first - t_submit)
+        self._tracer.event(req.id, "first_token", t_first)
         self._lanes[slot] = _Lane(req=req, tokens=[first_tok],
                                   t_submit=t_submit, t_first=t_first)
         self._pos[slot] = len(req.prompt)
@@ -848,13 +891,17 @@ class ServeEngine:
         set_row = 0
         pf_params = self.params
         if self.library is not None:
-            row = self._bind_row(self._resolve_set(req))
+            name = self._resolve_set(req)
+            cold = name not in self._bound
+            row = self._bind_row(name)
             if row is None:
                 # no free binding row: requeue and stall this admission
                 # until decode lanes retire
                 self._submit_t[req.id] = t_submit
                 self.scheduler.add(req)
                 return False
+            if cold:
+                self._tracer.event(req.id, "expert_swap", set=name, row=row)
             set_row = row
             pf_params = self.library.graft(self.params,
                                            [self._bound[set_row]])
@@ -865,14 +912,22 @@ class ServeEngine:
             if snap is not None:
                 st = self.store.restore_rows(st, snap, [0])
                 pos = hit
-                self.stats["cache_hit_tokens"] += hit
+                self._metrics.cache_hit_tokens.inc(hit)
         pos0 = pos
+        self._tracer.admitted(req.id, t0, time.perf_counter(),
+                              hit=pos0, ns=ns, mode="sequential", slot=slot)
         logits = None
         for c in prefill_chunks(S - pos0, self.max_prefill_chunk):
-            logits, st = self._prefill(pf_params, st,
-                                       jnp.asarray(prompt[:, pos:pos + c]),
-                                       jnp.int32(pos))
+            t_c0 = time.perf_counter()
+            with self.telemetry.annotate("serve/prefill"):
+                logits, st = self._prefill(
+                    pf_params, st, jnp.asarray(prompt[:, pos:pos + c]),
+                    jnp.int32(pos))
             pos += c
+            # dispatch-timed (no device sync per chunk in sequential mode);
+            # the final sync lands in the first-token sample below
+            self._tracer.add(req.id, "prefill_chunk", t_c0,
+                             time.perf_counter(), tokens=c, pos=pos)
             if self.cache is not None and self.cache.capture:
                 self.cache.insert(
                     tuple(req.prompt[:pos]),
@@ -885,12 +940,12 @@ class ServeEngine:
         first_tok = int(np.asarray(first)[0])                    # sync point
         t1 = time.perf_counter()
         self.store.adopt(st, [0], [slot])
-        self.stats["prefill_tokens"] += S - pos0
-        self.stats["prefill_s"] += t1 - t0
+        self._metrics.prefill_tokens.inc(S - pos0)
+        self._metrics.prefill_s.inc(t1 - t0)
         if any(l is not None for l in self._lanes):
             # decode lanes sat idle for this whole prefill: that is the
             # stall the interleaved mixed step eliminates
-            self.stats["stall_s"] += t1 - t0
+            self._metrics.stall_s.inc(t1 - t0)
         self.store.expert_set[slot] = set_row
         self._activate(slot, req, first_tok, t_submit, t1)
         return True
@@ -913,6 +968,13 @@ class ServeEngine:
             tokens=list(lane.tokens), finish_reason=reason,
             ttft_s=lane.t_first - lane.t_submit,
             latency_s=now - lane.t_submit))
+        self._metrics.e2e.observe(now - lane.t_submit)
+        self._metrics.finished.inc()
+        self._tracer.finish(lane.req.id, reason, now)
+        # a request admitted straight from submit() had its entry popped at
+        # admission; evictions and requeue races leave one behind — clean
+        # up here so a long-running server's _submit_t cannot grow
+        self._submit_t.pop(lane.req.id, None)
         self._lanes[slot] = None
 
     def _apply_decode(self, nxt: np.ndarray, active: List[int]) -> None:
@@ -928,16 +990,23 @@ class ServeEngine:
     def _decode_only(self, active: List[int]) -> None:
         dp, sets = self._decode_params()
         t0 = time.perf_counter()
-        nxt, self.state = self._decode(
-            dp, self.state,
-            jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
-            self._next_rng(), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
-        nxt = np.asarray(nxt)                                    # sync point
+        with self.telemetry.annotate("serve/decode_step"):
+            nxt, self.state = self._decode(
+                dp, self.state,
+                jnp.asarray(self._last)[:, None], jnp.asarray(self._pos),
+                self._next_rng(), jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
+            nxt = np.asarray(nxt)                                # sync point
         t1 = time.perf_counter()
-        self.stats["decode_tokens"] += len(active)
-        self.stats["decode_s"] += t1 - t0
-        self.stats["decode_steps"] += 1
+        m = self._metrics
+        m.decode_tokens.inc(len(active))
+        m.decode_s.inc(t1 - t0)
+        m.decode_steps.inc()
+        m.decode_step_s.observe(t1 - t0)
+        if self._tracer.enabled:
+            for b in active:
+                self._tracer.add(self._lanes[b].req.id, "decode",
+                                 t0, t1, pos=int(self._pos[b]))
         self._apply_decode(nxt, active)
 
     # -------------------------------------------------- speculative decoding
@@ -946,38 +1015,55 @@ class ServeEngine:
         """One speculative round (draft K + verify + commit), no prefill."""
         dp, sets = self._decode_params()
         t0 = time.perf_counter()
-        toks, n_emit, self.state = self._spec(
-            dp, self.state,
-            jnp.asarray(self._last), jnp.asarray(self._pos),
-            self._next_rng(), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
-        toks = np.asarray(toks)                                  # sync point
-        n_emit = np.asarray(n_emit)
+        with self.telemetry.annotate("serve/spec_step"):
+            toks, n_emit, self.state = self._spec(
+                dp, self.state,
+                jnp.asarray(self._last), jnp.asarray(self._pos),
+                self._next_rng(), jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._topp), sets)
+            toks = np.asarray(toks)                              # sync point
+            n_emit = np.asarray(n_emit)
         t1 = time.perf_counter()
-        self.stats["decode_s"] += t1 - t0
-        self.stats["decode_steps"] += 1
-        self._apply_spec(toks, n_emit, active)
+        self._metrics.decode_s.inc(t1 - t0)
+        self._metrics.decode_steps.inc()
+        self._metrics.decode_step_s.observe(t1 - t0)
+        self._apply_spec(toks, n_emit, active, t0, t1)
 
     def _apply_spec(self, toks: np.ndarray, n_emit: np.ndarray,
-                    active: List[int]) -> None:
+                    active: List[int], t0: float, t1: float) -> None:
         """Apply one speculative round's tokens: up to ``n_emit[b]`` tokens
         per slot, re-checking finish conditions after every token so EOS /
         max-tokens / max_len inside the window truncate emission (the
         rejected or post-finish suffix of the window is simply dropped —
-        the slot retires and its committed state is never read again)."""
+        the slot retires and its committed state is never read again).
+        ``t0``/``t1`` bound the round's dispatch — the per-slot
+        ``spec_round`` trace spans reuse them (no extra clock reads)."""
         k = self.spec.k
-        self.stats["spec_rounds"] += 1
-        self.stats["spec_drafted"] += k * len(active)
+        m = self._metrics
+        m.spec_rounds.inc()
+        m.spec_drafted.inc(k * len(active))
         for b in active:
-            self.stats["spec_accepted"] += int(n_emit[b]) - 1
+            accepted = int(n_emit[b]) - 1
+            m.spec_accepted.inc(accepted)
+            req_id = self._lanes[b].req.id
+            emitted = 0
+            finish = None
             for j in range(int(n_emit[b])):
                 tok = int(toks[b, j])
                 self._pos[b] += 1
                 self._last[b] = tok
                 self._lanes[b].tokens.append(tok)
-                self.stats["spec_emitted"] += 1
-                self.stats["decode_tokens"] += 1
-                reason = self._finish_reason(b)
-                if reason:
-                    self._retire(b, reason)
+                emitted += 1
+                finish = self._finish_reason(b)
+                if finish:
                     break
+            m.spec_emitted.inc(emitted)
+            m.decode_tokens.inc(emitted)
+            if self._tracer.enabled:
+                # span before any retire, so a request finishing inside
+                # the window still records its last spec_round
+                self._tracer.add(req_id, "spec_round", t0, t1,
+                                 drafted=k, accepted=accepted,
+                                 emitted=emitted)
+            if finish:
+                self._retire(b, finish)

@@ -57,6 +57,18 @@ import jax
 import numpy as np
 
 from repro.serve.state import state_nbytes
+from repro.serve.telemetry import MetricsRegistry
+
+#: legacy ``ExpertLibrary.stats`` key -> (registry counter name, help)
+_STAT_COUNTERS = {
+    "hits": ("lib_hits_total", "acquires served by a resident set"),
+    "faults": ("lib_faults_total", "acquires that faulted a set onto "
+                                   "the device"),
+    "evictions": ("lib_evictions_total",
+                  "unpinned sets evicted from device residency"),
+    "overcommit": ("lib_overcommit_total",
+                   "admissions past the budget with no evictable set"),
+}
 
 
 def _leaf_wanted(name: str) -> bool:
@@ -127,7 +139,8 @@ class ExpertLibrary:
     """
 
     def __init__(self, cfg, base_params, *, budget_mb: float = 256.0,
-                 max_bound: int = 4, default: str = "base", plan=None):
+                 max_bound: int = 4, default: str = "base", plan=None,
+                 registry: Optional[MetricsRegistry] = None):
         if budget_mb <= 0:
             raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
         if max_bound < 1:
@@ -148,10 +161,24 @@ class ExpertLibrary:
         self._pins: Dict[str, int] = {}
         self._nbytes: Dict[str, int] = {}
         self._ref_structure = None               # congruence check template
-        self.stats: Dict[str, int] = {
-            "hits": 0, "faults": 0, "evictions": 0, "overcommit": 0,
-        }
+        # telemetry: counters back the legacy ``stats`` dict (a derived
+        # view); pass ``registry=`` to report into a shared serving-stack
+        # registry (one library per shared registry), default is private.
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        self._m = {key: self.registry.counter(name, help)
+                   for key, (name, help) in _STAT_COUNTERS.items()}
+        self._g_bytes = self.registry.gauge(
+            "lib_bytes_device", "bytes of device-resident expert sets")
         self.add(default, base_params)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counters view, derived from the telemetry registry
+        (cumulative over the library's lifetime; all zeros when the shared
+        registry is disabled)."""
+        return {key: int(self.registry.value(name))
+                for key, (name, _) in _STAT_COUNTERS.items()}
 
     # ------------------------------------------------------------ contents
 
@@ -303,14 +330,15 @@ class ExpertLibrary:
                            f"have {self.names()}")
         if name in self._device:
             self._device.move_to_end(name)
-            self.stats["hits"] += 1
+            self._m["hits"].inc()
         else:
             host = self._host[name]
             placed = (self.plan.commit_params(host) if self.plan is not None
                       else jax.device_put(host))
             self._device[name] = placed
-            self.stats["faults"] += 1
+            self._m["faults"].inc()
             self._evict_to_budget(keep=name)
+            self._g_bytes.set(self.bytes_device)
         self._pins[name] += 1
 
     def release(self, name: str) -> None:
@@ -332,10 +360,11 @@ class ExpertLibrary:
                 # every other resident set is pinned (or this set alone
                 # exceeds the budget): admit anyway — refusing a bound
                 # set would wedge admission — and record the overshoot
-                self.stats["overcommit"] += 1
+                self._m["overcommit"].inc()
                 return
             del self._device[victim]
-            self.stats["evictions"] += 1
+            self._m["evictions"].inc()
+            self._g_bytes.set(self.bytes_device)
 
     # ------------------------------------------------------------ graft
 

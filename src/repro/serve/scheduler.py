@@ -16,27 +16,71 @@ TTFT under mixed prompt lengths (shorter prefills first);
 ``CachedSuffixFirst`` is prefix-cache-aware — it ranks by *uncached suffix*
 length, so a long prompt whose prefix is already cached admits before a
 short cold one.
+
+Every scheduler reports queue telemetry through a
+:class:`~repro.serve.telemetry.MetricsRegistry` once one is bound
+(``bind_registry``; the engine binds its own registry at construction
+unless the caller bound another first): ``sched_added_total`` /
+``sched_popped_total`` counters and the ``sched_queue_depth`` gauge.
+Unbound schedulers drive no-op instruments — zero behaviour change.
 """
 from __future__ import annotations
 
 import heapq
 from collections import deque
 
+from repro.serve.telemetry import MetricsRegistry
 
-class FIFOScheduler:
+_UNBOUND = MetricsRegistry(enabled=False)      # shared no-op instruments
+
+
+class _SchedulerMetrics:
+    """Queue-depth/add/pop instruments, no-op until ``bind_registry``."""
+
+    def __init__(self):
+        self._registry = None
+        self._wire(_UNBOUND)
+
+    def _wire(self, reg: MetricsRegistry) -> None:
+        self._m_added = reg.counter("sched_added_total",
+                                    "requests enqueued to the scheduler")
+        self._m_popped = reg.counter("sched_popped_total",
+                                     "requests popped for admission")
+        self._m_depth = reg.gauge("sched_queue_depth",
+                                  "requests currently waiting")
+
+    def bind_registry(self, registry: MetricsRegistry) -> None:
+        """Adopt ``registry`` for queue metrics.  First binding wins — the
+        engine binds its registry at construction, but a caller that bound
+        another one beforehand keeps it."""
+        if self._registry is not None:
+            return
+        self._registry = registry
+        self._wire(registry)
+
+
+class FIFOScheduler(_SchedulerMetrics):
     """First-in-first-out admission."""
 
     def __init__(self):
+        super().__init__()
         self._q = deque()
 
     def add(self, request) -> None:
         self._q.append(request)
+        self._m_added.inc()
+        self._m_depth.set(len(self._q))
 
     def peek_next(self):
         return self._q[0] if self._q else None
 
     def pop_next(self):
-        return self._q.popleft() if self._q else None
+        if not self._q:
+            return None
+        self._m_popped.inc()
+        req = self._q.popleft()
+        self._m_depth.set(len(self._q))
+        return req
 
     def __len__(self) -> int:
         return len(self._q)
@@ -45,7 +89,7 @@ class FIFOScheduler:
         return bool(self._q)
 
 
-class ShortestPromptFirst:
+class ShortestPromptFirst(_SchedulerMetrics):
     """Admit the waiting request with the shortest prompt (min mean TTFT).
 
     Backed by a heap keyed on (prompt length, arrival order): a request
@@ -55,18 +99,26 @@ class ShortestPromptFirst:
     """
 
     def __init__(self):
+        super().__init__()
         self._h = []
         self._n = 0                     # arrival counter: stable tiebreak
 
     def add(self, request) -> None:
         heapq.heappush(self._h, (len(request.prompt), self._n, request))
         self._n += 1
+        self._m_added.inc()
+        self._m_depth.set(len(self._h))
 
     def peek_next(self):
         return self._h[0][2] if self._h else None
 
     def pop_next(self):
-        return heapq.heappop(self._h)[2] if self._h else None
+        if not self._h:
+            return None
+        self._m_popped.inc()
+        req = heapq.heappop(self._h)[2]
+        self._m_depth.set(len(self._h))
+        return req
 
     def __len__(self) -> int:
         return len(self._h)
@@ -75,7 +127,7 @@ class ShortestPromptFirst:
         return bool(self._h)
 
 
-class CachedSuffixFirst:
+class CachedSuffixFirst(_SchedulerMetrics):
     """Admit the request with the shortest *uncached* prompt suffix.
 
     Prefix-cache-aware ShortestPromptFirst: the effective prefill cost of a
@@ -90,10 +142,17 @@ class CachedSuffixFirst:
     """
 
     def __init__(self, cache):
+        super().__init__()
         self._cache = cache
         self._q = []
         self._n = 0
         self._peeked = None             # memo: (entry, cache.version)
+
+    def _wire(self, reg: MetricsRegistry) -> None:
+        super()._wire(reg)
+        self._m_memo_hits = reg.counter(
+            "sched_peek_memo_hits_total",
+            "pops that reused the preceding peek's ranking scan")
 
     def _key(self, entry):
         order, req = entry
@@ -114,6 +173,8 @@ class CachedSuffixFirst:
         self._q.append((self._n, request))
         self._n += 1
         self._peeked = None             # new arrival may outrank the memo
+        self._m_added.inc()
+        self._m_depth.set(len(self._q))
 
     def peek_next(self):
         if not self._q:
@@ -134,10 +195,13 @@ class CachedSuffixFirst:
         if (self._peeked is not None
                 and self._peeked[1] == self._cache.version):
             entry = self._peeked[0]
+            self._m_memo_hits.inc()
         else:
             entry = min(self._q, key=self._key)
         self._peeked = None
         self._q.remove(entry)
+        self._m_popped.inc()
+        self._m_depth.set(len(self._q))
         return entry[1]
 
     def __len__(self) -> int:

@@ -1,0 +1,635 @@
+"""Telemetry for the serving stack: one metrics registry, one per-request
+trace timeline, and the exporters the serving tools ship them through.
+
+Two complementary views of the same engine:
+
+  * **Metrics** (:class:`MetricsRegistry`) answer *how much / how fast in
+    aggregate*: typed :class:`Counter` / :class:`Gauge` /
+    :class:`Histogram` instruments registered by name.  Histograms use
+    fixed log-spaced latency buckets (:data:`LATENCY_BUCKETS_S`) so two
+    snapshots are always mergeable/diffable bucket-by-bucket.  The
+    registry is **cumulative** for its lifetime; windowed readings are
+    derived, never destructive: ``snapshot()`` captures the current
+    values and ``delta(prev)`` subtracts a previous snapshot (counters
+    and histogram buckets subtract; gauges and min/max are
+    point-in-time and pass through).  That is the contract
+    ``ServeEngine.reset_stats()`` and the benchmark timed iterations are
+    built on — nothing ever zeroes the registry.
+  * **Traces** (:class:`Tracer`) answer *what happened to request 17*:
+    every request owns a timeline of spans — ``request`` (root) ⊃
+    ``queued`` → ``admitted`` (cache-restore hit length + namespace) →
+    ``prefill_chunk``* → ``decode``/``spec_round``* → terminal
+    ``finish`` — with monotonic ``time.perf_counter`` timestamps and
+    parent/child nesting.  Finished timelines are kept in a bounded
+    deque (``max_traces``) so a long-running server never grows without
+    bound.
+
+Both are **host-side only**: no instrument or span ever enters jitted
+computation, which is why greedy decode tokens are bit-identical with
+telemetry enabled or disabled (tested in tests/test_telemetry.py).
+Disabled instruments (``MetricsRegistry(enabled=False)``) are shared
+no-op singletons — a disabled registry costs one attribute load and a
+no-op call per instrumentation site.
+
+Exporters:
+
+  * ``registry.snapshot()`` / ``registry.delta(prev)`` — structured
+    JSON-ready dicts (what ``--metrics-out`` writes).
+  * ``registry.to_prometheus()`` — Prometheus text exposition format
+    (counter/gauge/histogram with cumulative ``_bucket{le=...}`` lines).
+  * ``tracer.chrome_trace()`` — Chrome ``trace_event`` JSON: one trace
+    thread per request, one complete (``"ph": "X"``) event per span —
+    load the file in Perfetto (https://ui.perfetto.dev) or
+    ``chrome://tracing``.
+  * :meth:`Telemetry.annotate` — opt-in ``jax.profiler.TraceAnnotation``
+    context around the engine's jitted dispatches, so a
+    ``jax.profiler`` capture (``--trace-dir``) shows named
+    decode/mixed/spec/prefill regions on the host timeline.
+
+See docs/observability.md for the full reference.
+"""
+from __future__ import annotations
+
+import bisect
+import contextlib
+import time
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+def log_buckets(lo: float, hi: float, per_decade: int = 3) -> Tuple[float, ...]:
+    """Fixed log-spaced histogram boundaries from ``lo`` to >= ``hi``
+    with ``per_decade`` buckets per decade.  Deterministic for given
+    arguments, so snapshots taken by different processes line up."""
+    if lo <= 0 or hi <= lo:
+        raise ValueError(f"need 0 < lo < hi, got lo={lo} hi={hi}")
+    out, k = [], 0
+    while True:
+        b = lo * 10.0 ** (k / per_decade)
+        out.append(float(f"{b:.6g}"))            # stable repr across runs
+        if b >= hi:
+            return tuple(out)
+        k += 1
+
+
+#: The default latency buckets: 10 microseconds to 100 seconds, three per
+#: decade (22 finite buckets + the implicit +Inf).  Fixed — every latency
+#: histogram in the serving stack shares them, so cross-metric and
+#: cross-run bucket arithmetic is always aligned.
+LATENCY_BUCKETS_S = log_buckets(1e-5, 100.0, per_decade=3)
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` with ints keeps the value an int
+    (token/step counts); float increments make it a float (seconds)."""
+    __slots__ = ("name", "help", "value")
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self.value = 0
+
+    def inc(self, v=1) -> None:
+        self.value += v
+
+    def snap(self) -> dict:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """Point-in-time value (queue depth, live slots, resident bytes)."""
+    __slots__ = ("name", "help", "value")
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def inc(self, v=1) -> None:
+        self.value += v
+
+    def snap(self) -> dict:
+        return {"type": "gauge", "value": self.value}
+
+
+class Histogram:
+    """Fixed-bucket histogram (log-spaced latency buckets by default).
+
+    ``counts[i]`` counts observations <= ``buckets[i]`` and > the
+    previous boundary; ``counts[-1]`` is the +Inf overflow bucket.  Also
+    tracks count/sum (means) and lifetime min/max (quantile clamping)."""
+    __slots__ = ("name", "help", "buckets", "counts", "count", "sum",
+                 "min", "max")
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Sequence[float] = LATENCY_BUCKETS_S):
+        self.name, self.help = name, help
+        self.buckets = tuple(buckets)
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.count += 1
+        self.sum += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+
+    def snap(self) -> dict:
+        return {"type": "histogram", "buckets": list(self.buckets),
+                "counts": list(self.counts), "count": self.count,
+                "sum": self.sum, "min": self.min, "max": self.max}
+
+
+class _Null:
+    """Shared no-op instrument: what a disabled registry hands out."""
+    __slots__ = ()
+
+    def inc(self, v=1):
+        pass
+
+    def set(self, v):
+        pass
+
+    def observe(self, v):
+        pass
+
+
+_NULL = _Null()
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Named, typed instruments with snapshot/delta and exporters.
+
+    Instrument getters are find-or-create and idempotent: asking twice
+    for the same name returns the same instrument (asking with a
+    different kind raises).  ``enabled=False`` makes every getter return
+    a shared no-op — the cheap-off switch for code instrumented
+    unconditionally.  The registry itself is cumulative; see the module
+    docstring for the snapshot/delta windowing contract."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._instruments: "OrderedDict[str, Any]" = OrderedDict()
+
+    def _get(self, kind: str, name: str, help: str, **kw):
+        if not self.enabled:
+            return _NULL
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = self._instruments[name] = _KINDS[kind](name, help, **kw)
+        elif inst.kind != kind:
+            raise ValueError(f"instrument {name!r} already registered as "
+                             f"{inst.kind}, not {kind}")
+        return inst
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get("counter", name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get("gauge", name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = LATENCY_BUCKETS_S) -> Histogram:
+        return self._get("histogram", name, help, buckets=buckets)
+
+    def value(self, name: str, default=0):
+        """Current scalar value of a counter/gauge (0 when absent or
+        disabled) — how compatibility ``stats`` views read the registry."""
+        inst = self._instruments.get(name)
+        return default if inst is None else inst.value
+
+    # ---------------------------------------------------------- snapshots
+
+    def snapshot(self) -> Dict[str, dict]:
+        """JSON-ready cumulative state of every instrument."""
+        return {name: inst.snap()
+                for name, inst in self._instruments.items()}
+
+    def delta(self, prev: Dict[str, dict]) -> Dict[str, dict]:
+        """Current snapshot minus ``prev``: counters and histogram
+        counts/count/sum subtract; gauges (point-in-time) and histogram
+        min/max (lifetime extremes) pass through from the current state.
+        Instruments born after ``prev`` delta against zero."""
+        out = {}
+        for name, cur in self.snapshot().items():
+            p = prev.get(name)
+            if p is None or cur["type"] == "gauge":
+                out[name] = cur
+            elif cur["type"] == "counter":
+                out[name] = {"type": "counter",
+                             "value": cur["value"] - p["value"]}
+            else:
+                out[name] = {
+                    "type": "histogram", "buckets": cur["buckets"],
+                    "counts": [c - q for c, q in zip(cur["counts"],
+                                                     p["counts"])],
+                    "count": cur["count"] - p["count"],
+                    "sum": cur["sum"] - p["sum"],
+                    "min": cur["min"], "max": cur["max"],
+                }
+        return out
+
+    # ---------------------------------------------------------- exporters
+
+    def to_prometheus(self, snap: Optional[Dict[str, dict]] = None) -> str:
+        """Prometheus text exposition format.  ``snap`` defaults to the
+        live cumulative state; pass a ``delta`` for windowed exposition
+        (unusual for Prometheus, which expects cumulative counters, but
+        useful for per-benchmark-iteration dumps)."""
+        snap = self.snapshot() if snap is None else snap
+        helps = {n: i.help for n, i in self._instruments.items()}
+        lines: List[str] = []
+        for name, s in snap.items():
+            if helps.get(name):
+                lines.append(f"# HELP {name} {helps[name]}")
+            lines.append(f"# TYPE {name} {s['type']}")
+            if s["type"] in ("counter", "gauge"):
+                lines.append(f"{name} {_fmt(s['value'])}")
+                continue
+            cum = 0
+            for le, c in zip(s["buckets"], s["counts"]):
+                cum += c
+                lines.append(f'{name}_bucket{{le="{_fmt(le)}"}} {cum}')
+            cum += s["counts"][-1]
+            lines.append(f'{name}_bucket{{le="+Inf"}} {cum}')
+            lines.append(f"{name}_sum {_fmt(s['sum'])}")
+            lines.append(f"{name}_count {s['count']}")
+        return "\n".join(lines) + "\n"
+
+
+def _fmt(v) -> str:
+    return repr(v) if isinstance(v, float) else str(v)
+
+
+def hist_quantile(h: dict, q: float) -> float:
+    """Quantile estimate from a histogram snapshot/delta entry: find the
+    bucket holding the q-th observation and interpolate linearly inside
+    it (clamped to the recorded min/max where available, so single-value
+    distributions don't smear across a log bucket).  0.0 when empty."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    total = h["count"]
+    if total <= 0:
+        return 0.0
+    rank = q * total
+    cum, lo = 0.0, 0.0
+    bounds = list(h["buckets"]) + [h["buckets"][-1]]   # overflow: clamp
+    for le, c in zip(bounds, h["counts"]):
+        if cum + c >= rank and c > 0:
+            frac = (rank - cum) / c
+            v = lo + frac * (le - lo)
+            break
+        cum += c
+        lo = le
+    else:
+        v = bounds[-1]
+    if h.get("min") is not None:
+        v = min(max(v, h["min"]), h["max"])
+    return v
+
+
+def hist_mean(h: dict) -> float:
+    """Mean of a histogram snapshot/delta entry (exact: sum/count)."""
+    return h["sum"] / h["count"] if h["count"] else 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-request trace timelines
+# ---------------------------------------------------------------------------
+
+
+class Span:
+    """One timeline interval: ``[t0, t1]`` (``perf_counter`` seconds),
+    nested under ``parent`` (a span id; None for the root)."""
+    __slots__ = ("name", "req", "sid", "parent", "t0", "t1", "attrs")
+
+    def __init__(self, name, req, sid, parent, t0, t1=None, attrs=None):
+        self.name, self.req, self.sid = name, req, sid
+        self.parent, self.t0, self.t1 = parent, t0, t1
+        self.attrs = attrs
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "req": self.req, "sid": self.sid,
+                "parent": self.parent, "t0": self.t0, "t1": self.t1,
+                "attrs": self.attrs or {}}
+
+
+class Timeline:
+    """All spans of one request, root first.  ``open`` maps span name ->
+    still-open span (the engine keeps at most ``request`` + ``queued``
+    open at any instant)."""
+    __slots__ = ("req", "spans", "open")
+
+    def __init__(self, req):
+        self.req = req
+        self.spans: List[Span] = []
+        self.open: Dict[str, Span] = {}
+
+    @property
+    def root(self) -> Span:
+        return self.spans[0]
+
+    def terminal(self) -> Optional[Span]:
+        """The ``finish`` span, if the request reached one."""
+        for s in reversed(self.spans):
+            if s.name == "finish":
+                return s
+        return None
+
+
+class Tracer:
+    """Per-request span timelines with bounded retention.
+
+    The engine drives the semantic helpers (``begin`` / ``admitted`` /
+    ``add`` / ``event`` / ``finish``); generic ``start``/``end`` exist
+    for other span shapes.  All methods no-op when disabled.  Finished
+    timelines land in :attr:`finished` (a deque capped at
+    ``max_traces`` — old requests fall off a long-running server).
+    Timestamps are ``time.perf_counter`` seconds; callers that already
+    timed a region pass its endpoints so tracing adds no clock reads on
+    the hot path."""
+
+    def __init__(self, enabled: bool = True, max_traces: int = 1024):
+        self.enabled = enabled
+        self.max_traces = max_traces
+        self._live: Dict[Any, Timeline] = {}
+        self._sid = 0
+        self.finished: "deque[Timeline]" = deque(maxlen=max_traces)
+        self.dropped = 0                 # re-begun ids whose trace was lost
+
+    # ------------------------------------------------------------- plumbing
+
+    def _next_sid(self) -> int:
+        self._sid += 1
+        return self._sid
+
+    def _span(self, tl: Timeline, name, parent, t0, t1=None, attrs=None):
+        s = Span(name, tl.req, self._next_sid(), parent, t0, t1, attrs)
+        tl.spans.append(s)
+        return s
+
+    def live(self) -> List[Any]:
+        return list(self._live)
+
+    def timelines(self) -> List[Timeline]:
+        """Finished timelines, oldest first (bounded by ``max_traces``)."""
+        return list(self.finished)
+
+    # ------------------------------------------------------------ semantics
+
+    def begin(self, req, t: Optional[float] = None, **attrs) -> None:
+        """Open a request timeline: root ``request`` span plus its
+        ``queued`` child (a request is queued from submit until
+        admission).  Re-beginning a live id drops the old timeline."""
+        if not self.enabled:
+            return
+        t = time.perf_counter() if t is None else t
+        if req in self._live:
+            self.dropped += 1
+        tl = self._live[req] = Timeline(req)
+        root = self._span(tl, "request", None, t, attrs=attrs or None)
+        q = self._span(tl, "queued", root.sid, t)
+        tl.open["request"] = root
+        tl.open["queued"] = q
+
+    def admitted(self, req, t0: float, t1: float, **attrs) -> None:
+        """Close ``queued`` at ``t0`` and record the ``admitted`` span
+        over the admission work itself (cache lookup/restore, expert-set
+        binding, lane setup).  ``attrs`` carry the cache-restore facts:
+        ``hit`` (restored prefix length), ``ns`` (cache namespace),
+        ``mode``, ``expert_set``."""
+        tl = self._live.get(req)
+        if tl is None:
+            return
+        q = tl.open.pop("queued", None)
+        if q is not None:
+            q.t1 = t0
+        self._span(tl, "admitted", tl.root.sid, t0, t1, attrs or None)
+
+    def add(self, req, name: str, t0: float, t1: float, **attrs) -> None:
+        """Record a completed child span (``prefill_chunk``, ``decode``,
+        ``spec_round``) under the request root — the hot-path call."""
+        tl = self._live.get(req)
+        if tl is not None:
+            self._span(tl, name, tl.root.sid, t0, t1, attrs or None)
+
+    def event(self, req, name: str, t: Optional[float] = None,
+              **attrs) -> None:
+        """Zero-duration marker (``first_token``, ``expert_swap``)."""
+        tl = self._live.get(req)
+        if tl is not None:
+            t = time.perf_counter() if t is None else t
+            self._span(tl, name, tl.root.sid, t, t, attrs or None)
+
+    def start(self, req, name: str, t: Optional[float] = None,
+              **attrs) -> None:
+        """Generic open span by name (closed by :meth:`end`)."""
+        tl = self._live.get(req)
+        if tl is not None:
+            t = time.perf_counter() if t is None else t
+            tl.open[name] = self._span(tl, name, tl.root.sid, t,
+                                       attrs=attrs or None)
+
+    def end(self, req, name: str, t: Optional[float] = None) -> None:
+        tl = self._live.get(req)
+        if tl is None:
+            return
+        s = tl.open.pop(name, None)
+        if s is not None:
+            s.t1 = time.perf_counter() if t is None else t
+
+    def finish(self, req, reason: str, t: Optional[float] = None) -> None:
+        """Terminal span: close every open span and the root at ``t``,
+        append a ``finish`` marker carrying ``reason`` (eos / length /
+        max_len / evicted), and retire the timeline to ``finished``."""
+        tl = self._live.pop(req, None)
+        if tl is None:
+            return
+        t = time.perf_counter() if t is None else t
+        for s in tl.open.values():
+            s.t1 = t
+        tl.open.clear()
+        self._span(tl, "finish", tl.root.sid, t, t, {"reason": reason})
+        self.finished.append(tl)
+
+    # ------------------------------------------------------------ exporter
+
+    def chrome_trace(self) -> dict:
+        """Chrome ``trace_event`` JSON of every finished (and still-live)
+        timeline: one trace thread per request, one complete event per
+        span, microsecond timestamps normalized to the earliest root.
+        Load in Perfetto or ``chrome://tracing``."""
+        tls = self.timelines() + [self._live[r] for r in self._live]
+        events: List[dict] = []
+        if not tls:
+            return {"traceEvents": [], "displayTimeUnit": "ms"}
+        t_origin = min(tl.root.t0 for tl in tls)
+        for tl in tls:
+            events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                           "tid": tl.req,
+                           "args": {"name": f"request {tl.req}"}})
+            for s in tl.spans:
+                t1 = s.t1 if s.t1 is not None else tl.root.t1 or s.t0
+                events.append({
+                    "ph": "X", "pid": 0, "tid": tl.req, "name": s.name,
+                    "ts": (s.t0 - t_origin) * 1e6,
+                    "dur": max(t1 - s.t0, 0.0) * 1e6,
+                    "args": dict(s.attrs) if s.attrs else {},
+                })
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------------------
+# the bundle the engine threads through
+# ---------------------------------------------------------------------------
+
+_NULL_CTX = contextlib.nullcontext()
+
+
+class Telemetry:
+    """The telemetry bundle one serving stack shares.
+
+    enabled: master switch — False makes the registry hand out no-op
+        instruments and the tracer drop everything (true zero-cost off;
+        the engine's ``stats`` view then reads all zeros).
+    trace: per-request span timelines (default: follows ``enabled``).
+        Metrics keep working with ``trace=False`` — the cheap mode for
+        latency-critical serving.
+    max_traces: finished timelines retained (bounded memory).
+    profiler: wrap the engine's jitted dispatches in
+        ``jax.profiler.TraceAnnotation`` so a profiler capture shows
+        named decode/mixed/spec/prefill regions (off by default: the
+        annotations cost a context manager per dispatch).
+    registry: share an existing :class:`MetricsRegistry` (one registry
+        across engine + cache + library + scheduler gives one unified
+        export); default is a fresh one.
+    """
+
+    def __init__(self, enabled: bool = True, trace: Optional[bool] = None,
+                 max_traces: int = 1024, profiler: bool = False,
+                 registry: Optional[MetricsRegistry] = None):
+        self.enabled = enabled
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry(enabled=enabled))
+        self.tracer = Tracer(enabled=enabled and (trace is None or trace),
+                             max_traces=max_traces)
+        self.profiler = profiler and enabled
+
+    def annotate(self, name: str):
+        """Context manager naming a host region in ``jax.profiler``
+        captures; a shared no-op unless ``profiler=True``."""
+        if not self.profiler:
+            return _NULL_CTX
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+
+    def describe(self) -> Dict[str, Any]:
+        """The engine-stamp view: how telemetry was configured (so
+        benchmark artifacts stay apples-to-apples across PRs)."""
+        return {"enabled": self.enabled, "trace": self.tracer.enabled,
+                "profiler": self.profiler}
+
+
+# ---------------------------------------------------------------------------
+# engine instrument bundle (names + help strings live here, not in engine.py)
+# ---------------------------------------------------------------------------
+
+
+class EngineInstruments:
+    """Every instrument ``ServeEngine`` drives, created against one
+    registry.  Counter names are the single source of truth for the
+    engine's legacy ``stats`` compatibility view (``STAT_COUNTERS``)."""
+
+    #: legacy ``ServeEngine.stats`` key -> (registry counter, int-valued)
+    STAT_COUNTERS = {
+        "prefill_tokens": ("serve_prefill_tokens_total", True),
+        "prefill_s": ("serve_prefill_seconds_total", False),
+        "decode_tokens": ("serve_decode_tokens_total", True),
+        "decode_s": ("serve_decode_seconds_total", False),
+        "decode_steps": ("serve_decode_steps_total", True),
+        "mixed_steps": ("serve_mixed_steps_total", True),
+        "mixed_s": ("serve_mixed_seconds_total", False),
+        "active_ticks": ("serve_active_ticks_total", True),
+        "stall_s": ("serve_stall_seconds_total", False),
+        "spec_rounds": ("serve_spec_rounds_total", True),
+        "spec_drafted": ("serve_spec_drafted_total", True),
+        "spec_accepted": ("serve_spec_accepted_total", True),
+        "spec_emitted": ("serve_spec_emitted_total", True),
+        "cache_hit_tokens": ("serve_cache_hit_tokens_total", True),
+        "expert_swaps": ("serve_expert_swaps_total", True),
+    }
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        c, g, h = registry.counter, registry.gauge, registry.histogram
+        self.prefill_tokens = c("serve_prefill_tokens_total",
+                                "prompt tokens prefilled (uncached suffixes)")
+        self.prefill_s = c("serve_prefill_seconds_total",
+                           "seconds in prefill-only dispatches")
+        self.decode_tokens = c("serve_decode_tokens_total",
+                               "tokens emitted by decode slots")
+        self.decode_s = c("serve_decode_seconds_total",
+                          "seconds in decode-only dispatches")
+        self.decode_steps = c("serve_decode_steps_total",
+                              "dispatches that advanced decode slots")
+        self.mixed_steps = c("serve_mixed_steps_total",
+                             "mixed decode+prefill dispatches")
+        self.mixed_s = c("serve_mixed_seconds_total",
+                         "seconds in mixed dispatches")
+        self.active_ticks = c("serve_active_ticks_total",
+                              "ticks that began with live decode lanes")
+        self.stall_s = c("serve_stall_seconds_total",
+                         "seconds live decode lanes spent not advancing")
+        self.spec_rounds = c("serve_spec_rounds_total",
+                             "speculative draft+verify rounds")
+        self.spec_drafted = c("serve_spec_drafted_total",
+                              "tokens drafted by the layer-skip model")
+        self.spec_accepted = c("serve_spec_accepted_total",
+                               "drafted tokens surviving verification")
+        self.spec_emitted = c("serve_spec_emitted_total",
+                              "tokens emitted by speculative rounds")
+        self.cache_hit_tokens = c("serve_cache_hit_tokens_total",
+                                  "prompt tokens skipped via cache restore")
+        self.expert_swaps = c("serve_expert_swaps_total",
+                              "expert-set binding-row rebinds")
+        self.submitted = c("serve_requests_submitted_total",
+                           "requests accepted by submit()")
+        self.finished = c("serve_requests_finished_total",
+                          "requests that reached a terminal state")
+        self.active_slots = g("serve_active_slots",
+                              "decode lanes live at the last tick")
+        self.ttft = h("serve_ttft_seconds",
+                      "submit -> first token, per request")
+        self.e2e = h("serve_e2e_seconds",
+                     "submit -> finish, per request")
+        self.decode_step_s = h("serve_decode_step_seconds",
+                               "latency of decode-advancing dispatches "
+                               "(the inter-token latency per slot)")
+        self.prefill_chunk_s = h("serve_prefill_chunk_seconds",
+                                 "latency of prefill chunk dispatches")
+
+    def stats_view(self, base: Dict[str, Any]) -> Dict[str, Any]:
+        """The legacy ``ServeEngine.stats`` dict, derived from the
+        registry: each counter minus its value at the last
+        ``reset_stats()`` (``base``), with the historical int/float
+        typing preserved."""
+        v = self.registry.value
+        return {key: (int if is_int else float)(v(name) - base.get(key, 0))
+                for key, (name, is_int) in self.STAT_COUNTERS.items()}
+
+    def stats_base(self) -> Dict[str, Any]:
+        """Raw counter values keyed by legacy stat name — what
+        ``reset_stats()`` stores as the subtraction baseline."""
+        return {key: self.registry.value(name)
+                for key, (name, _) in self.STAT_COUNTERS.items()}

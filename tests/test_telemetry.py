@@ -1,0 +1,417 @@
+"""Telemetry subsystem: registry/tracer units, exporters, and the
+engine-integration invariants the observability PR promises —
+
+* every admitted request reaches a terminal ``finish`` span, with spans
+  nested inside the request root and timestamps monotonic, across
+  interleaved / sequential / speculative / cache-hit / multi-tenant
+  serving modes;
+* the legacy ``ServeEngine.stats`` dict is a pure view of the registry
+  (parity per key, ``reset_stats`` re-baselines without zeroing);
+* greedy decode tokens are bit-identical with telemetry on vs off
+  (telemetry is host-side only);
+* ``_submit_t`` bookkeeping drains at finish/evict (no per-request leak).
+"""
+import contextlib
+import json
+
+import jax
+import pytest
+
+from identity import TENANT_PATTERNS, full_cfg as _full_cfg, \
+    random_prompts, run_tokens, small_cfg as _cfg
+from repro import obs
+from repro.models import lm
+from repro.serve import (MetricsRegistry, PrefixCache, Request, ServeEngine,
+                         Telemetry, Tracer, hist_mean, hist_quantile,
+                         log_buckets)
+from repro.serve.telemetry import LATENCY_BUCKETS_S, EngineInstruments, _NULL
+
+
+# ---------------------------------------------------------------------------
+# registry units (model-free)
+# ---------------------------------------------------------------------------
+
+def test_log_buckets_shape_and_determinism():
+    b = log_buckets(1e-5, 100.0, per_decade=3)
+    assert b == LATENCY_BUCKETS_S
+    assert b[0] == 1e-5 and b[-1] >= 100.0
+    assert all(x < y for x, y in zip(b, b[1:]))
+    assert len(b) == 22
+    with pytest.raises(ValueError):
+        log_buckets(0.0, 1.0)
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 1.0)
+
+
+def test_counter_int_typing_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("toks", "help")
+    c.inc(3)
+    c.inc()
+    assert c.value == 4 and isinstance(c.value, int)
+    s = reg.counter("secs")
+    s.inc(0.5)
+    assert isinstance(s.value, float)
+    g = reg.gauge("depth")
+    g.set(7)
+    g.inc(-2)
+    assert g.value == 5
+
+
+def test_histogram_counts_and_overflow():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in (1e-6, 2e-4, 0.5, 1e5):        # underflow bucket .. overflow
+        h.observe(v)
+    assert h.count == 4 == sum(h.counts)
+    assert h.counts[-1] == 1                # 1e5 > last finite boundary
+    assert h.min == 1e-6 and h.max == 1e5
+    assert len(h.counts) == len(h.buckets) + 1
+
+
+def test_registry_find_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+    assert reg.value("x") == 0
+    assert reg.value("missing", default=3) == 3
+
+
+def test_disabled_registry_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    assert c is _NULL is reg.histogram("y") is reg.gauge("z")
+    c.inc(5)
+    reg.histogram("y").observe(1.0)
+    assert reg.value("x") == 0
+    assert reg.snapshot() == {}
+
+
+def test_snapshot_delta_algebra():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(2)
+    reg.histogram("h").observe(0.01)
+    pre = reg.snapshot()
+    reg.counter("c").inc(3)
+    reg.gauge("g").set(9)
+    reg.histogram("h").observe(0.01)
+    reg.histogram("h").observe(10.0)
+    reg.counter("born_late").inc(1)
+    d = reg.delta(pre)
+    assert d["c"]["value"] == 3
+    assert d["g"]["value"] == 9              # gauges pass through
+    assert d["h"]["count"] == 2
+    assert sum(d["h"]["counts"]) == 2
+    assert d["born_late"]["value"] == 1      # absent from prev -> vs zero
+    # delta + prev reconstructs the current cumulative state
+    cur = reg.snapshot()
+    assert cur["c"]["value"] == pre["c"]["value"] + d["c"]["value"]
+    assert cur["h"]["count"] == pre["h"]["count"] + d["h"]["count"]
+    # immediately-taken delta is all-zero for counters/histograms
+    z = reg.delta(reg.snapshot())
+    assert z["c"]["value"] == 0 and z["h"]["count"] == 0
+
+
+def test_hist_quantile_properties():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    assert hist_quantile(h.snap(), 0.5) == 0.0      # empty
+    for _ in range(10):
+        h.observe(0.25)
+    snap = h.snap()
+    # single-valued distribution: min/max clamp defeats bucket smearing
+    assert hist_quantile(snap, 0.0) == 0.25
+    assert hist_quantile(snap, 0.5) == 0.25
+    assert hist_quantile(snap, 1.0) == 0.25
+    assert hist_mean(snap) == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        hist_quantile(snap, 1.5)
+    h2 = reg.histogram("h2")
+    for v in (0.001, 0.01, 0.1, 1.0, 10.0):
+        h2.observe(v)
+    s2 = h2.snap()
+    qs = [hist_quantile(s2, q) for q in (0.1, 0.5, 0.9, 1.0)]
+    assert qs == sorted(qs)                         # monotone in q
+    assert 0.001 <= qs[0] and qs[-1] <= 10.0        # clamped to extremes
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("serve_toks_total", "tokens").inc(7)
+    reg.gauge("serve_depth").set(3)
+    h = reg.histogram("serve_lat_seconds", "latency")
+    h.observe(2e-5)
+    h.observe(1e9)
+    text = reg.to_prometheus()
+    lines = text.splitlines()
+    assert "# HELP serve_toks_total tokens" in lines
+    assert "# TYPE serve_toks_total counter" in lines
+    assert "serve_toks_total 7" in lines
+    assert "serve_depth 3" in lines
+    # bucket lines are cumulative and end at +Inf == count
+    cums = [int(ln.rsplit(" ", 1)[1]) for ln in lines
+            if ln.startswith("serve_lat_seconds_bucket")]
+    assert cums == sorted(cums)
+    assert cums[-1] == 2
+    assert 'serve_lat_seconds_bucket{le="+Inf"} 2' in lines
+    assert "serve_lat_seconds_count 2" in lines
+
+
+# ---------------------------------------------------------------------------
+# tracer units (model-free)
+# ---------------------------------------------------------------------------
+
+def test_tracer_lifecycle_and_invariants():
+    tr = Tracer()
+    tr.begin(1, 10.0, prompt_len=4)
+    tr.admitted(1, 11.0, 11.5, hit=0, mode="interleaved")
+    tr.add(1, "prefill_chunk", 11.0, 11.5, tokens=4)
+    tr.event(1, "first_token", 11.5)
+    tr.add(1, "decode", 11.5, 12.0, pos=5)
+    assert tr.live() == [1]
+    tr.finish(1, "length", 12.5)
+    assert tr.live() == []
+    (tl,) = tr.timelines()
+    names = [s.name for s in tl.spans]
+    assert names[0] == "request"
+    assert names.index("queued") < names.index("admitted")
+    assert tl.terminal().attrs == {"reason": "length"}
+    assert not tl.open
+    root = tl.root
+    assert root.t1 == 12.5
+    for s in tl.spans:
+        assert s.t1 is not None and root.t0 <= s.t0 <= s.t1 <= root.t1
+        assert s.parent is None or s.parent == root.sid
+    q = next(s for s in tl.spans if s.name == "queued")
+    assert q.t1 == 11.0                     # closed where admitted began
+
+
+def test_tracer_rebegin_drops_and_deque_bounds():
+    tr = Tracer(max_traces=2)
+    tr.begin(7, 1.0)
+    tr.begin(7, 2.0)                         # same id re-begun
+    assert tr.dropped == 1
+    for rid in ("a", "b", "c"):
+        tr.begin(rid, 1.0)
+        tr.finish(rid, "eos", 2.0)
+    assert len(tr.timelines()) == 2          # bounded retention
+    assert [tl.req for tl in tr.timelines()] == ["b", "c"]
+
+
+def test_tracer_disabled_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.begin(1)
+    tr.add(1, "decode", 0.0, 1.0)
+    tr.finish(1, "eos")
+    assert tr.live() == [] and tr.timelines() == []
+
+
+def test_chrome_trace_structure():
+    tr = Tracer()
+    tr.begin("req-a", 5.0)
+    tr.admitted("req-a", 5.1, 5.2)
+    tr.finish("req-a", "eos", 6.0)
+    out = tr.chrome_trace()
+    json.dumps(out)                          # must be JSON-serializable
+    evs = out["traceEvents"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert len(metas) == 1 and metas[0]["args"]["name"] == "request req-a"
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in spans)
+    assert {e["name"] for e in spans} >= {"request", "queued", "admitted",
+                                          "finish"}
+    assert tr.chrome_trace()["traceEvents"] is not evs  # fresh each call
+
+
+def test_telemetry_bundle_flags():
+    t = Telemetry()
+    assert t.enabled and t.tracer.enabled and not t.profiler
+    assert t.annotate("x") is t.annotate("y")         # shared no-op ctx
+    with t.annotate("x"):
+        pass
+    off = Telemetry(enabled=False)
+    assert not off.tracer.enabled and not off.registry.enabled
+    metrics_only = Telemetry(trace=False)
+    assert metrics_only.registry.enabled
+    assert not metrics_only.tracer.enabled
+    assert Telemetry(profiler=True).describe() == {
+        "enabled": True, "trace": True, "profiler": True}
+    # profiler annotations are real context managers
+    ann = Telemetry(profiler=True).annotate("region")
+    assert not isinstance(ann, contextlib.nullcontext)
+    with ann:
+        pass
+    # repro.obs re-exports the same objects
+    assert obs.Telemetry is Telemetry
+    assert obs.LATENCY_BUCKETS_S == LATENCY_BUCKETS_S
+
+
+# ---------------------------------------------------------------------------
+# engine integration: span invariants across serving modes
+# ---------------------------------------------------------------------------
+
+def _check_timelines(tracer, req_ids):
+    """The tentpole invariants: every admitted request reaches a terminal
+    span; spans nest under the request root; timestamps are monotonic and
+    contained in the root interval; nothing is left open."""
+    tls = {tl.req: tl for tl in tracer.timelines()}
+    assert set(req_ids) <= set(tls)
+    for rid in req_ids:
+        tl = tls[rid]
+        names = [s.name for s in tl.spans]
+        assert names[0] == "request"
+        assert "queued" in names and "admitted" in names
+        assert tl.terminal() is not None
+        assert not tl.open
+        root = tl.root
+        assert root.t1 is not None
+        for s in tl.spans:
+            assert s.t1 is not None
+            assert root.t0 <= s.t0 <= s.t1 <= root.t1
+            assert s.parent is None or s.parent == root.sid
+        q = next(s for s in tl.spans if s.name == "queued")
+        a = next(s for s in tl.spans if s.name == "admitted")
+        assert q.t1 == a.t0
+        assert names.index("admitted") < names.index("finish")
+    return tls
+
+
+@pytest.mark.parametrize("admission", ["interleaved", "sequential"])
+def test_timelines_and_stats_parity(admission):
+    """4 requests on 2 slots (forces queueing + slot reuse) under both
+    admission modes: span invariants hold, the admitted span records its
+    mode, and the legacy stats dict is key-for-key a registry view."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    telem = Telemetry()
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=32, seed=0,
+                      max_prefill_chunk=8, admission=admission,
+                      telemetry=telem)
+    prompts = random_prompts(cfg, [4, 7, 5, 9])
+    reqs = [Request(id=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert len(results) == 4
+    tls = _check_timelines(telem.tracer, range(4))
+    for rid, tl in tls.items():
+        a = next(s for s in tl.spans if s.name == "admitted")
+        assert a.attrs["mode"] == admission
+        names = [s.name for s in tl.spans]
+        assert "prefill_chunk" in names
+        assert "first_token" in names
+    # stats parity: every legacy key is exactly its registry counter
+    s = eng.stats
+    reg = telem.registry
+    for key, (name, is_int) in EngineInstruments.STAT_COUNTERS.items():
+        assert s[key] == reg.value(name), key
+        assert isinstance(s[key], int if is_int else float), key
+    assert reg.value("serve_requests_submitted_total") == 4
+    assert reg.value("serve_requests_finished_total") == 4
+    snap = reg.snapshot()
+    assert snap["serve_ttft_seconds"]["count"] == 4
+    assert snap["serve_e2e_seconds"]["count"] == 4
+    # reset_stats re-baselines the view without touching the registry
+    eng.reset_stats()
+    assert all(v == 0 for v in eng.stats.values())
+    assert reg.value("serve_requests_finished_total") == 4
+    # satellite: per-request submit bookkeeping drains at finish
+    assert eng._submit_t == {}
+
+
+def test_greedy_identity_and_true_zero_off():
+    """Bit-identical greedy tokens with telemetry on vs off — telemetry
+    never enters jitted computation — and the off engine reads all-zero
+    stats with no retained timelines."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = random_prompts(cfg, [5, 8, 3])
+    def reqs():
+        return [Request(id=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+    on = ServeEngine(cfg, params, max_slots=2, max_len=32, seed=0,
+                     max_prefill_chunk=8, telemetry=Telemetry())
+    off_t = Telemetry(enabled=False)
+    off = ServeEngine(cfg, params, max_slots=2, max_len=32, seed=0,
+                      max_prefill_chunk=8, telemetry=off_t)
+    assert run_tokens(on, reqs()) == run_tokens(off, reqs())
+    assert all(v == 0 for v in off.stats.values())
+    assert off_t.tracer.timelines() == []
+    assert off_t.registry.snapshot() == {}
+    assert off._submit_t == {}
+
+
+def test_speculative_timeline_spans():
+    """Speculative decoding: spec_round spans carry drafted/accepted/
+    emitted attrs with accepted <= drafted, and the spec registry
+    counters agree with the span attributes."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    telem = Telemetry()
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      max_prefill_chunk=8, speculative=2,
+                      telemetry=telem)
+    prompts = random_prompts(cfg, [4, 6])
+    eng.run([Request(id=i, prompt=p, max_new_tokens=6)
+             for i, p in enumerate(prompts)])
+    tls = _check_timelines(telem.tracer, range(2))
+    rounds = [s for tl in tls.values() for s in tl.spans
+              if s.name == "spec_round"]
+    assert rounds
+    for s in rounds:
+        assert 0 <= s.attrs["accepted"] <= s.attrs["drafted"]
+        assert s.attrs["emitted"] >= 0
+    emitted = sum(s.attrs["emitted"] for s in rounds)
+    assert emitted == telem.registry.value("serve_spec_emitted_total")
+    assert telem.registry.value("serve_spec_rounds_total") > 0
+
+
+def test_cache_hit_recorded_in_admitted_span():
+    """A warm PrefixCache sharing the engine's registry: the second run's
+    admitted spans carry the restored prefix length, and cache counters
+    land in the same registry as the engine's."""
+    cfg = _cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    telem = Telemetry()
+    cache = PrefixCache(budget_mb=8.0, registry=telem.registry)
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=48, seed=0,
+                      max_prefill_chunk=8, prefix_cache=cache,
+                      telemetry=telem)
+    shared = random_prompts(cfg, [16])[0]
+    eng.run([Request(id=0, prompt=shared + [7], max_new_tokens=2)])  # warm
+    eng.run([Request(id=1, prompt=shared + [9, 11], max_new_tokens=3)])
+    tls = _check_timelines(telem.tracer, [1])
+    a = next(s for s in tls[1].spans if s.name == "admitted")
+    assert a.attrs["hit"] > 0
+    assert telem.registry.value("cache_hits_total") > 0
+    assert telem.registry.value("serve_cache_hit_tokens_total") == \
+        eng.stats["cache_hit_tokens"] > 0
+
+
+def test_multi_tenant_swap_events_in_timeline():
+    """Two tenants on one binding row force hot swaps: expert_swap events
+    appear in the swapping requests' timelines, and the library's fault
+    counters flow into the shared registry."""
+    from repro.serve import ExpertLibrary
+    cfg = _full_cfg(((TENANT_PATTERNS[0], 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    telem = Telemetry()
+    lib = ExpertLibrary(cfg, params, max_bound=1, registry=telem.registry)
+    lib.add("t0", lm.init_params(jax.random.PRNGKey(1), cfg))
+    lib.add("t1", lm.init_params(jax.random.PRNGKey(2), cfg))
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=24, seed=0,
+                      max_prefill_chunk=8, expert_library=lib,
+                      admission="sequential", telemetry=telem)
+    prompts = random_prompts(cfg, [4, 5, 4])
+    sets = [None, "t0", "t1"]
+    eng.run([Request(id=i, prompt=p, max_new_tokens=2, expert_set=sets[i])
+             for i, p in enumerate(prompts)])
+    tls = _check_timelines(telem.tracer, range(3))
+    swaps = [s for tl in tls.values() for s in tl.spans
+             if s.name == "expert_swap"]
+    assert swaps
+    assert {s.attrs["set"] for s in swaps} >= {"t0", "t1"}
+    assert telem.registry.value("serve_expert_swaps_total") == \
+        eng.stats["expert_swaps"] >= 2
+    assert telem.registry.value("lib_faults_total") >= 2
