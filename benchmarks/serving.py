@@ -885,6 +885,97 @@ def observability_metrics(ctx: BenchContext, iters=10):
 
 
 # ---------------------------------------------------------------------------
+# fleet: disaggregated prefill/decode vs the monolithic engine
+# ---------------------------------------------------------------------------
+
+@scenario("fleet", features=("disaggregation", "snapshot_codec",
+                             "cache_tier"))
+def fleet_metrics(ctx: BenchContext, n_decode=2, iters=3):
+    """Disaggregated serving A/B (serve/fleet/): the same requests through
+    one monolithic engine vs a fleet of 1 prefill + ``n_decode`` decode
+    replicas connected only by codec-serialized snapshots, routed by the
+    FleetRouter over a shared prefix-cache tier.  Reports both arms'
+    end-to-end tokens/s, the fleet's aggregate decode tokens/s, snapshot
+    transfer volume, and router queue / snapshot transfer latency
+    quantiles out of the ``fleet_*`` histograms (windowed over exactly
+    the timed iterations).  The hard gate: fleet greedy tokens must be
+    bit-identical to the monolithic engine — disaggregation moves state
+    between processes, never changes it."""
+    from repro.serve import PrefixCache, fleet
+
+    cfg, n_req = ctx.cfg, ctx.prompts.shape[0]
+    telem = Telemetry()
+    peng = ctx.engine(prefix_cache=PrefixCache(budget_mb=16.0,
+                                               registry=telem.registry),
+                      telemetry=telem)
+    codec = fleet.SnapshotCodec.for_store(peng.store)
+    tier = fleet.SharedCacheTier(budget_mb=32.0, registry=telem.registry)
+    peng.cache.attach_tier(tier, codec)
+    pw = fleet.PrefillWorker("prefill0", peng, codec,
+                             registry=telem.registry)
+    dws = [fleet.DecodeWorker(f"decode{i}",
+                              ctx.engine(telemetry=telem), codec,
+                              registry=telem.registry)
+           for i in range(n_decode)]
+    router = fleet.FleetRouter([pw], dws, telemetry=telem)
+
+    mono = ctx.engine()
+    toks_mono = {r.id: r.tokens for r in mono.run(ctx.requests())}  # warm
+    toks_fleet = {r.id: r.tokens for r in router.run(ctx.requests())}
+
+    def timed_mono():
+        t0 = time.perf_counter()
+        results = mono.run(ctx.requests())
+        return sum(len(r.tokens) for r in results) / max(
+            time.perf_counter() - t0, 1e-9)
+
+    def timed_fleet():
+        t0 = time.perf_counter()
+        results = router.run(ctx.requests())
+        return sum(len(r.tokens) for r in results) / max(
+            time.perf_counter() - t0, 1e-9)
+
+    pre = telem.registry.snapshot()       # window: all timed iterations
+    for w in dws:
+        w.engine.reset_stats()
+    tps_mono = tps_fleet = 0.0
+    for _ in range(iters):                # paired, best-of (drift-robust)
+        tps_mono = max(tps_mono, timed_mono())
+        tps_fleet = max(tps_fleet, timed_fleet())
+    d = telem.registry.delta(pre)
+    dec_tokens = sum(w.engine.stats["decode_tokens"] for w in dws)
+    dec_s = sum(w.engine.stats["decode_s"] + w.engine.stats["mixed_s"]
+                for w in dws)
+    v = lambda name: int(d.get(name, {}).get("value", 0))
+
+    return {
+        "requests": int(n_req), "gen": int(ctx.gen),
+        "prefill_workers": 1, "decode_workers": int(n_decode),
+        "iters": int(iters),
+        "greedy_identical": bool(toks_fleet == toks_mono),
+        "mono": {"e2e_tps": round(tps_mono, 1),
+                 "engine": engine_stamp(mono)},
+        "fleet": {
+            "e2e_tps": round(tps_fleet, 1),
+            "decode_tps": round(dec_tokens / max(dec_s, 1e-9), 1),
+            "snapshot_admissions": v("fleet_admits_total"),
+            "snapshot_transfer_bytes": v("fleet_snapshot_bytes_total"),
+            "requeues": v("fleet_requeues_total"),
+            "tier": {"entries": len(tier),
+                     "bytes_used": tier.bytes_used,
+                     "inserts": v("fleet_tier_inserts_total"),
+                     "hits": v("fleet_tier_hits_total")},
+            **_hist_latency(d, "fleet_router_queue_seconds",
+                            "router_queue"),
+            **_hist_latency(d, "fleet_transfer_seconds",
+                            "snapshot_transfer"),
+            "engine": engine_stamp(peng),
+        },
+        "e2e_tps_vs_mono": round(tps_fleet / max(tps_mono, 1e-9), 3),
+    }
+
+
+# ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
 

@@ -32,7 +32,8 @@ Threshold classes (first match on the metric's dot-path wins):
                                           noisy — the throughput gates are
                                           the sharp ones)
 
-Ratios-of-throughputs (``*_vs_baseline``, ``*_vs_ref``, ``speedup``) are
+Ratios-of-throughputs (``*_vs_baseline``, ``*_vs_ref``, ``*_vs_mono``,
+``speedup``) are
 derived from gated quantities and CI-noisy in both numerator and
 denominator, so they are reported but not gated.  One more hard
 functional gate rides with the identity flags: the observability
@@ -55,7 +56,7 @@ import sys
 
 #: (pattern over the metric dot-path, direction, allowed relative change)
 THRESHOLDS = [
-    (re.compile(r"(_vs_baseline|_vs_ref|_vs_sequential|\bspeedup)$"),
+    (re.compile(r"(_vs_baseline|_vs_ref|_vs_sequential|_vs_mono|\bspeedup)$"),
      None, None),                           # derived ratios: report only
     (re.compile(r"_tps$"), "higher", 0.15),
     (re.compile(r"(acceptance_rate|hit_rate|_saved_frac|tokens_per_round)$"),

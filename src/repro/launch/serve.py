@@ -38,6 +38,7 @@ from repro.models import lm
 from repro.serve import (CachedSuffixFirst, EngineConfig, ExpertLibrary,
                          PrefixCache, Request, SamplingParams, ServeEngine,
                          ShortestPromptFirst, Telemetry)
+from repro.serve import fleet
 
 
 def main():
@@ -126,6 +127,34 @@ def main():
                          "DIR (TensorBoard/Perfetto-loadable), with "
                          "TraceAnnotation markers around the engine's "
                          "jitted serving dispatches")
+    ap.add_argument("--role", default="mono",
+                    choices=("mono", "prefill", "decode", "router"),
+                    help="serving role (serve/fleet/): 'mono' is the "
+                         "monolithic engine; 'prefill' prefills prompts "
+                         "and writes admit messages to --snapshots-out; "
+                         "'decode' admits purely from --snapshots-in "
+                         "messages; 'router' runs an in-process fleet "
+                         "(1 prefill + --fleet-decode decode replicas)")
+    ap.add_argument("--fleet-decode", type=int, default=2, metavar="N",
+                    help="decode replicas in the --role router fleet")
+    ap.add_argument("--snapshots-out", default="", metavar="DIR",
+                    help="--role prefill: write one admit message "
+                         "(request meta + encoded snapshot) per request "
+                         "into DIR")
+    ap.add_argument("--snapshots-in", default="", metavar="DIR",
+                    help="--role decode: admit every *.msg file in DIR "
+                         "(a --snapshots-out directory, possibly produced "
+                         "on a different mesh)")
+    ap.add_argument("--cache-save", default="", metavar="PATH",
+                    help="after serving, persist the prefix cache (all "
+                         "namespaces, codec-encoded) to PATH")
+    ap.add_argument("--cache-load", default="", metavar="PATH",
+                    help="before serving, load a --cache-save file into "
+                         "the prefix cache (fingerprint-checked; a warm "
+                         "cache survives restarts and topology changes)")
+    ap.add_argument("--assert-cache-hit", action="store_true",
+                    help="exit non-zero unless the run served at least "
+                         "one prefix-cache hit (CI gate for --cache-load)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -164,18 +193,22 @@ def main():
             library.add(f"tenant{i}", lm.init_params(
                 jax.random.PRNGKey(args.seed + 1000 + i), cfg))
         tenant_names += [f"tenant{i}" for i in range(args.tenants)]
+    if args.role in ("decode", "router") and args.cache_policy != "fifo":
+        raise SystemExit(f"--cache-policy only applies to the prefill "
+                         f"side, not --role {args.role}")
+    engine_cfg = EngineConfig(max_slots=args.batch, max_len=max_len,
+                              seed=args.seed, admission=args.admission,
+                              speculative=args.speculative,
+                              draft_stride=args.draft_stride,
+                              kernels=(None if args.kernels == "auto"
+                                       else args.kernels))
     engine = ServeEngine(
-        cfg, params, plan=plan,
-        engine=EngineConfig(max_slots=args.batch, max_len=max_len,
-                            seed=args.seed, admission=args.admission,
-                            speculative=args.speculative,
-                            draft_stride=args.draft_stride,
-                            kernels=(None if args.kernels == "auto"
-                                     else args.kernels)),
-        prefix_cache=cache, scheduler=scheduler, expert_library=library,
-        telemetry=telem)
+        cfg, params, plan=plan, engine=engine_cfg,
+        prefix_cache=cache if args.role != "decode" else None,
+        scheduler=scheduler, expert_library=library, telemetry=telem)
 
-    print(f"plan: {plan.describe()} | kernels: {args.kernels}")
+    print(f"plan: {plan.describe()} | kernels: {args.kernels} | "
+          f"role: {args.role}")
     n_req = args.requests or args.batch
     corpus = corpus_for(cfg, args.prompt_len + 1, n_req, args.seed)
     prompts = np.asarray(corpus.batch_at(0)["tokens"])[:, :args.prompt_len]
@@ -186,6 +219,42 @@ def main():
                     expert_set=tenant_names[i % len(tenant_names)])
             for i in range(n_req)]
 
+    codec = fleet.SnapshotCodec.for_store(engine.store)
+    if args.cache_load:
+        if cache is None:
+            raise SystemExit("--cache-load needs --prefix-cache-mb > 0")
+        n = fleet.load_prefix_cache(cache, codec, args.cache_load)
+        print(f"prefix cache: loaded {n} snapshots from {args.cache_load}")
+
+    # everything from here serves traffic; exporter writes live in the
+    # finally so an interrupted or crashed run still produces artifacts
+    try:
+        if args.role == "mono":
+            out = _run_mono(args, engine, telem, reqs)
+        else:
+            out = _run_fleet_role(args, engine, engine_cfg, codec,
+                                  telem, reqs, cfg, params, plan,
+                                  library)
+        if out is not None:
+            results, wall = out
+            _report(args, engine, cache, library, results, wall)
+        if args.cache_save:
+            if cache is None:
+                raise SystemExit("--cache-save needs --prefix-cache-mb > 0")
+            n = fleet.save_prefix_cache(cache, codec, args.cache_save)
+            print(f"prefix cache: saved {n} snapshots to {args.cache_save}")
+        if args.assert_cache_hit:
+            hits = int(telem.registry.value("cache_hits_total"))
+            print(f"cache hits served: {hits}")
+            if hits == 0:
+                raise SystemExit("--assert-cache-hit: the run served "
+                                 "zero prefix-cache hits")
+    finally:
+        _write_exports(args, telem)
+
+
+def _run_mono(args, engine, telem, reqs):
+    """The monolithic serving loop (the original driver path)."""
     if args.trace_dir:
         jax.profiler.start_trace(args.trace_dir)
     t0 = time.perf_counter()
@@ -224,7 +293,87 @@ def main():
     if args.trace_dir:
         jax.profiler.stop_trace()
         print(f"jax.profiler trace written to {args.trace_dir}")
+    return results, wall
 
+
+def _run_fleet_role(args, engine, engine_cfg, codec, telem, reqs, cfg,
+                    params, plan, library):
+    """The disaggregated roles (serve/fleet/).  ``engine`` plays the
+    prefill side (router/prefill roles) or the decode side (decode
+    role); extra decode replicas get their own engines."""
+    import collections
+    import glob
+    import os
+
+    if args.role == "prefill":
+        if not args.snapshots_out:
+            raise SystemExit("--role prefill needs --snapshots-out DIR")
+        os.makedirs(args.snapshots_out, exist_ok=True)
+        worker = fleet.PrefillWorker("prefill0", engine, codec,
+                                     registry=telem.registry)
+        total = 0
+        for req in reqs:
+            admit = worker.process(fleet.encode_request(req))
+            path = os.path.join(args.snapshots_out, f"admit_{req.id:05d}.msg")
+            with open(path, "wb") as f:
+                f.write(admit)
+            total += len(admit)
+        print(f"prefilled {len(reqs)} prompts -> {len(reqs)} admit "
+              f"messages ({total / 2 ** 20:.2f} MiB) in "
+              f"{args.snapshots_out}")
+        return None
+
+    if args.role == "decode":
+        if not args.snapshots_in:
+            raise SystemExit("--role decode needs --snapshots-in DIR")
+        paths = sorted(glob.glob(os.path.join(args.snapshots_in, "*.msg")))
+        if not paths:
+            raise SystemExit(f"no *.msg admit messages in "
+                             f"{args.snapshots_in}")
+        worker = fleet.DecodeWorker("decode0", engine, codec,
+                                    registry=telem.registry)
+        pending = collections.deque()
+        for p in paths:
+            with open(p, "rb") as f:
+                pending.append(f.read())
+        t0 = time.perf_counter()
+        results = []
+        while pending or worker.busy():
+            while pending and worker.try_admit(pending[0]):
+                pending.popleft()
+            for msg in worker.step():
+                results.append(fleet.decode_result(msg))
+        print(f"admitted {len(paths)} snapshots from {args.snapshots_in} "
+              "(no prefill ran on this replica)")
+        return results, time.perf_counter() - t0
+
+    # router: in-process fleet — this engine prefills, N fresh engines
+    # decode, a shared tier keeps the fleet's prefix cache warm
+    if engine.cache is not None:
+        tier = fleet.SharedCacheTier(budget_mb=args.prefix_cache_mb,
+                                     registry=telem.registry)
+        engine.cache.attach_tier(tier, codec)
+    pw = fleet.PrefillWorker("prefill0", engine, codec,
+                             registry=telem.registry)
+    dws = []
+    for i in range(max(args.fleet_decode, 1)):
+        deng = ServeEngine(cfg, params, plan=plan, engine=engine_cfg,
+                           expert_library=library, telemetry=telem)
+        dws.append(fleet.DecodeWorker(f"decode{i}", deng, codec,
+                                      registry=telem.registry))
+    router = fleet.FleetRouter([pw], dws, telemetry=telem)
+    t0 = time.perf_counter()
+    results = router.run(reqs)
+    wall = time.perf_counter() - t0
+    v = telem.registry.value
+    print(f"fleet: 1 prefill + {len(dws)} decode replicas | "
+          f"{int(v('fleet_admits_total'))} snapshot admissions, "
+          f"{int(v('fleet_snapshot_bytes_total')) / 2 ** 20:.2f} MiB "
+          f"transferred, {int(v('fleet_requeues_total'))} requeues")
+    return results, wall
+
+
+def _report(args, engine, cache, library, results, wall):
     s = engine.stats
     gen_tok = sum(len(r.tokens) for r in results)
     ttfts = [r.ttft_s for r in results]
@@ -260,13 +409,19 @@ def main():
               f"{s['expert_swaps']} swaps, {ls['faults']} faults, "
               f"{ls['evictions']} evictions, "
               f"residency hit rate {ls['residency_hit_rate']:.2%}")
-    print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
-          f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
-          f"max {np.max(ttfts) * 1e3:.1f}ms")
+    if ttfts:
+        print(f"TTFT mean {np.mean(ttfts) * 1e3:.1f}ms "
+              f"p50 {np.percentile(ttfts, 50) * 1e3:.1f}ms "
+              f"max {np.max(ttfts) * 1e3:.1f}ms")
     by_id = {r.id: r for r in results}
     print("sample generations:",
-          [by_id[i].tokens[:16] for i in range(min(2, n_req))])
+          [by_id[i].tokens[:16] for i in sorted(by_id)[:2]])
 
+
+def _write_exports(args, telem):
+    """Exporter flush — runs in a ``finally`` so KeyboardInterrupt and
+    crashes still leave the --metrics-out/--trace-out artifacts behind
+    (an interrupted run is exactly the one worth inspecting)."""
     if args.metrics_out:
         if args.metrics_out.endswith(".prom"):
             body = telem.registry.to_prometheus()

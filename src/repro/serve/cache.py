@@ -152,6 +152,29 @@ class PrefixCache:
             "cache_bytes_used", "bytes of snapshots currently held")
         self._g_snaps = self.registry.gauge(
             "cache_snapshots", "snapshots currently held")
+        # per-namespace gauges (multi-tenant operators see node/byte
+        # counts per expert-set namespace, not just the aggregate);
+        # created lazily as namespaces appear, refreshed on every
+        # insert/evict — the radix trees are small, a full walk is cheap
+        self._ns_gauges: Dict[str, Any] = {}
+        # optional shared tier (fleet serving): a second, process-shareable
+        # store of *encoded* snapshots this cache falls through to on
+        # local misses and publishes fresh boundaries into
+        self._tier = None
+        self._tier_codec = None
+
+    def attach_tier(self, tier, codec) -> None:
+        """Attach a :class:`~repro.serve.fleet.cache_tier.SharedCacheTier`.
+
+        ``codec`` (a :class:`~repro.serve.fleet.codec.SnapshotCodec`)
+        translates between this cache's live host pytrees and the tier's
+        validated blobs; its fingerprint is what keeps a shared tier from
+        ever serving a snapshot across incompatible engine configs.
+        Afterwards: ``lookup``/``peek_len`` consult the tier past the
+        local radix tree (tier hits decode + promote into the tree) and
+        ``insert`` publishes every newly stored boundary back."""
+        self._tier = tier
+        self._tier_codec = codec
 
     @property
     def stats(self) -> Dict[str, int]:
@@ -199,16 +222,40 @@ class PrefixCache:
 
     def peek_len(self, tokens: Sequence[int], ns=None) -> int:
         """Longest cached-prefix length for this prompt, side-effect free
-        (no LRU touch, no stats) — for schedulers and admission grouping."""
-        best = self._walk_best(tokens, max(len(tokens) - 1, 0), ns)
-        return best.depth if best is not None else 0
+        (no LRU touch, no stats) — for schedulers and admission grouping.
+        With a tier attached this includes tier-only prefixes: admission
+        groups by the length a subsequent :meth:`lookup` will actually
+        restore, wherever the snapshot currently lives."""
+        cap = max(len(tokens) - 1, 0)
+        best = self._walk_best(tokens, cap, ns)
+        local = best.depth if best is not None else 0
+        if self._tier is not None:
+            return max(local, self._tier.peek_len(tokens, cap, ns=ns))
+        return local
 
     def lookup(self, tokens: Sequence[int], ns=None) -> Tuple[int, Any]:
         """Longest cached prefix strictly shorter than the prompt:
         ``(prefix_len, snapshot)``, or ``(0, None)`` on a miss.  Touches
-        LRU and records hit/miss stats — call once per admitted request."""
+        LRU and records hit/miss stats — call once per admitted request.
+
+        With a tier attached, a local miss (or a shorter local hit) falls
+        through: the tier's longest stored prefix is decoded and promoted
+        into the local radix tree, so the next lookup is a pure local
+        hit.  Tier decode failures never mis-restore — a corrupt or
+        mismatched blob raises out of the codec."""
+        cap = max(len(tokens) - 1, 0)
         self._m["lookup_tokens"].inc(len(tokens))
-        best = self._walk_best(tokens, max(len(tokens) - 1, 0), ns)
+        best = self._walk_best(tokens, cap, ns)
+        local = best.depth if best is not None else 0
+        if self._tier is not None and \
+                self._tier.peek_len(tokens, cap, ns=ns) > local:
+            depth, blob = self._tier.longest_prefix(tokens, cap, ns=ns)
+            if blob is not None:        # racy tier: entry may have evicted
+                snap = self._tier_codec.decode(blob)
+                self.adopt_snapshot(tuple(tokens[:depth]), snap, ns=ns)
+                self._m["hits"].inc()
+                self._m["hit_tokens"].inc(depth)
+                return depth, snap
         if best is None:
             self._m["misses"].inc()
             return 0, None
@@ -270,6 +317,38 @@ class PrefixCache:
         self._evict_to_budget(keep=node)
         self._g_bytes.set(self._bytes)
         self._g_snaps.set(len(self._snaps))
+        self._refresh_ns_gauges()
+        if self._tier is not None:
+            # publish the fresh boundary fleet-wide (encoded through the
+            # codec — the tier never holds a live Python object)
+            self._tier.put(tuple(tokens), self._tier_codec.encode(snap),
+                           ns=ns)
+        return True
+
+    def adopt_snapshot(self, tokens: Sequence[int], snap, ns=None) -> bool:
+        """Store an *externally produced* snapshot (a tier promotion or a
+        persistence load): bypasses the capture/min_tokens/grain gates —
+        the publishing cache already applied its own — and never
+        republishes to the tier (the entry came from there).  True iff
+        newly stored locally."""
+        node = self._ensure_node(tuple(tokens), self._root_for(ns))
+        self._clock += 1
+        node.used = self._clock
+        if node.snap is not None:
+            return False
+        nbytes = state_nbytes(snap)
+        if nbytes > self.budget_bytes:
+            self._m["oversize"].inc()
+            self._prune(node)
+            return False
+        node.snap, node.nbytes = snap, nbytes
+        self._snaps.add(node)
+        self._bytes += nbytes
+        self.version += 1
+        self._evict_to_budget(keep=node)
+        self._g_bytes.set(self._bytes)
+        self._g_snaps.set(len(self._snaps))
+        self._refresh_ns_gauges()
         return True
 
     def _ensure_node(self, tokens: Tuple[int, ...],
@@ -313,6 +392,7 @@ class PrefixCache:
         self._g_bytes.set(self._bytes)
         self._g_snaps.set(len(self._snaps))
         self._prune(node)
+        self._refresh_ns_gauges()
 
     def _prune(self, node: _Node) -> None:
         """Drop snapshot-less leaf chains and merge pass-through nodes so
@@ -331,9 +411,50 @@ class PrefixCache:
 
     # ------------------------------------------------------------- reports
 
+    def _ns_stats(self, ns) -> Dict[str, int]:
+        """One namespace tree's node / snapshot / byte counts (root node
+        excluded from the node count — it spells the empty prefix)."""
+        row = {"nodes": 0, "snapshots": 0, "bytes_used": 0}
+
+        def rec(node):
+            if node.parent is not None:
+                row["nodes"] += 1
+            if node.snap is not None:
+                row["snapshots"] += 1
+                row["bytes_used"] += node.nbytes
+            for c in node.children.values():
+                rec(c)
+
+        rec(self._root_for(ns))
+        return row
+
+    def per_namespace(self) -> Dict[str, Dict[str, int]]:
+        """Per-namespace node/snapshot/byte counts (the ``ns=None`` root
+        reports as ``"default"``) — multi-tenant operators see where the
+        budget actually sits, not just the aggregate."""
+        return {("default" if ns is None else str(ns)): self._ns_stats(ns)
+                for ns in self.namespaces()}
+
+    def _refresh_ns_gauges(self) -> None:
+        for key, row in self.per_namespace().items():
+            gauges = self._ns_gauges.get(key)
+            if gauges is None:
+                safe = "".join(ch if ch.isalnum() or ch == "_" else "_"
+                               for ch in key)
+                gauges = self._ns_gauges[key] = (
+                    self.registry.gauge(
+                        f"cache_ns_snapshots_{safe}",
+                        f"snapshots held in cache namespace {key!r}"),
+                    self.registry.gauge(
+                        f"cache_ns_bytes_used_{safe}",
+                        f"snapshot bytes held in cache namespace {key!r}"))
+            gauges[0].set(row["snapshots"])
+            gauges[1].set(row["bytes_used"])
+
     def summary(self) -> Dict[str, Any]:
         """Derived stats: ``hit_rate`` over lookups, ``token_hit_rate``
-        (cached prefix tokens / prompt tokens looked up), byte usage."""
+        (cached prefix tokens / prompt tokens looked up), byte usage,
+        plus ``per_namespace`` node/byte counts."""
         s = self.stats
         lookups = s["hits"] + s["misses"]
         return {
@@ -342,22 +463,33 @@ class PrefixCache:
             "budget_bytes": self.budget_bytes,
             "grain": self.grain,
             "namespaces": 1 + len(self._ns_roots),
+            "per_namespace": self.per_namespace(),
             "hit_rate": s["hits"] / max(lookups, 1),
             "token_hit_rate": s["hit_tokens"] / max(s["lookup_tokens"], 1),
             **s,
         }
 
+    def namespaces(self) -> List[Any]:
+        """Every namespace key with a tree (``None`` first — the default
+        root always exists, even when empty)."""
+        return [None] + list(self._ns_roots)
+
     # introspection used by tests: every (prefix, nbytes) currently held
     # in one namespace's tree (default: the ``ns=None`` root)
     def snapshot_prefixes(self, ns=None) -> List[Tuple[Tuple[int, ...], int]]:
+        return [(p, state_nbytes(s)) for p, s in self.snapshot_items(ns)]
+
+    def snapshot_items(self, ns=None) -> List[Tuple[Tuple[int, ...], Any]]:
+        """Every (prefix, snapshot) currently held in one namespace's
+        tree, sorted by prefix — the persistence walk."""
         out = []
 
         def rec(node, prefix):
             prefix = prefix + node.edge
             if node.snap is not None:
-                out.append((prefix, node.nbytes))
+                out.append((prefix, node.snap))
             for c in node.children.values():
                 rec(c, prefix)
 
         rec(self._root_for(ns), ())
-        return sorted(out)
+        return sorted(out, key=lambda kv: kv[0])

@@ -633,6 +633,120 @@ class ServeEngine:
                 self._decode_only(active)
         return self._drain()
 
+    # ------------------------------------------- disaggregated fleet API
+
+    def prefill_to_snapshot(self, req: Request):
+        """Run one request's prefill to completion and return
+        ``(first_token, snapshot)`` — the prefill half of disaggregated
+        serving (``serve/fleet/``), never touching a decode slot.
+
+        The snapshot is the host-side 1-slot decode state for the *full*
+        prompt and ``first_token`` is sampled from the last prompt logit,
+        exactly as monolithic admission does — so a decode replica that
+        restores the pair continues bit-identically to a monolithic
+        engine.  Cache-assisted like every admission: the longest cached
+        prefix (local or shared tier) is restored first and new chunk
+        boundaries publish back."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt len {len(req.prompt)} >= "
+                f"engine max_len {self.max_len}")
+        t0 = time.perf_counter()
+        prompt = np.asarray(req.prompt, np.int32)[None, :]       # (1,S)
+        S = prompt.shape[1]
+        ns = req.expert_set
+        pf_params = self.params
+        acquired = None
+        if self.library is not None:
+            name = self._resolve_set(req)
+            self.library.acquire(name)
+            acquired = name
+            pf_params = self.library.graft(self.params, [name])
+        try:
+            st = self.store.fresh(1)
+            pos = 0
+            if self.cache is not None:
+                hit, snap = self.cache.lookup(req.prompt, ns=ns)
+                if snap is not None:
+                    st = self.store.restore_rows(st, snap, [0])
+                    pos = hit
+                    self._metrics.cache_hit_tokens.inc(hit)
+            pos0 = pos
+            logits = None
+            for c in prefill_chunks(S - pos0, self.max_prefill_chunk):
+                with self.telemetry.annotate("serve/fleet_prefill"):
+                    logits, st = self._prefill(
+                        pf_params, st, jnp.asarray(prompt[:, pos:pos + c]),
+                        jnp.int32(pos))
+                pos += c
+                if self.cache is not None and self.cache.capture:
+                    self.cache.insert(
+                        tuple(req.prompt[:pos]),
+                        lambda s=st: self.store.snapshot_rows(s, [0]),
+                        ns=ns)
+            sp = req.sampling
+            first = sample(logits[:, -1], self._next_rng(),
+                           jnp.full((1,), sp.temperature, jnp.float32),
+                           jnp.full((1,), sp.top_k, jnp.int32),
+                           jnp.full((1,), sp.top_p, jnp.float32))
+            first_tok = int(np.asarray(first)[0])                # sync point
+            snapshot = self.store.snapshot_rows(st, [0])
+        finally:
+            if acquired is not None:
+                self.library.release(acquired)
+        self._metrics.prefill_tokens.inc(S - pos0)
+        self._metrics.prefill_s.inc(time.perf_counter() - t0)
+        return first_tok, snapshot
+
+    def admit_from_snapshot(self, req: Request, snap, first_token: int,
+                            t_submit: Optional[float] = None) -> bool:
+        """Admit a request whose prefill already happened elsewhere: the
+        decode half of disaggregated serving.  ``snap`` is a 1-slot host
+        snapshot of the full-prompt decode state and ``first_token`` the
+        token its producer sampled from the last prompt logit — together
+        the pair a :meth:`prefill_to_snapshot` call (possibly on another
+        mesh, shipped through the fleet codec) produced.
+
+        Returns False — admit nothing, caller requeues — when no decode
+        slot is free or (multi-tenant) every expert binding row is
+        pinned; True once the slot is live.  This engine never runs
+        prefill for the request: admission is purely a state transfer,
+        which is what keeps decode replicas stall-free."""
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt len {len(req.prompt)} >= "
+                f"engine max_len {self.max_len}")
+        if req.expert_set is not None and (
+                self.library is None or req.expert_set not in self.library):
+            raise KeyError(
+                f"request {req.id}: unknown expert set {req.expert_set!r} "
+                "on this decode replica")
+        free = self._free_slots()
+        if not free:
+            return False
+        set_row = 0
+        if self.library is not None:
+            row = self._bind_row(self._resolve_set(req))
+            if row is None:
+                return False
+            set_row = row
+        slot = free[0]
+        now = time.perf_counter()
+        t_submit = self._submit_t.pop(req.id, t_submit)
+        if t_submit is None:
+            t_submit = now
+        self.store.restore_slot(slot, snap)
+        self.store.expert_set[slot] = set_row
+        self._tracer.begin(req.id, t_submit, prompt_len=len(req.prompt),
+                           expert_set=req.expert_set)
+        self._tracer.admitted(req.id, now, time.perf_counter(),
+                              hit=len(req.prompt), ns=req.expert_set,
+                              mode="snapshot", slot=slot)
+        self._activate(slot, req, int(first_token), t_submit, now)
+        return True
+
     # ------------------------------------------------------------- internals
 
     def _next_rng(self):

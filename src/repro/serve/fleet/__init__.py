@@ -1,0 +1,30 @@
+"""Disaggregated prefill/decode serving (the "fleet" subsystem).
+
+Prefill workers and decode workers are separate roles connected only by
+serialized artifacts: ``codec.py`` defines the versioned snapshot wire
+format, ``cache_tier.py`` the shared (and persistable) prefix-cache
+tier, ``worker.py`` the two worker roles, ``router.py`` the fleet
+router.  ``python -m repro.serve.fleet.inspect <file>`` prints any fleet
+artifact.  See docs/serving.md (Disaggregated serving)."""
+from repro.serve.fleet.cache_tier import (SharedCacheTier, load_prefix_cache,
+                                          save_prefix_cache)
+from repro.serve.fleet.codec import (CODEC_VERSION, CodecError, CorruptError,
+                                     FingerprintError, SchemaError,
+                                     SnapshotCodec, config_fingerprint,
+                                     pack_message, read_header,
+                                     unpack_message)
+from repro.serve.fleet.router import FleetRouter
+from repro.serve.fleet.worker import (DecodeWorker, PrefillWorker,
+                                      WorkerDrained, decode_result,
+                                      encode_request, encode_result,
+                                      request_from_meta, request_meta)
+
+__all__ = [
+    "CODEC_VERSION", "CodecError", "CorruptError", "DecodeWorker",
+    "FingerprintError", "FleetRouter", "PrefillWorker", "SchemaError",
+    "SharedCacheTier", "SnapshotCodec", "WorkerDrained",
+    "config_fingerprint", "decode_result", "encode_request",
+    "encode_result", "load_prefix_cache", "pack_message", "read_header",
+    "request_from_meta", "request_meta", "save_prefix_cache",
+    "unpack_message",
+]

@@ -1,0 +1,276 @@
+"""SharedCacheTier: a fleet-wide second tier under the radix prefix cache.
+
+The :class:`~repro.serve.cache.PrefixCache` is per-engine: its snapshots
+are live host pytrees addressed by a radix tree.  A fleet of replicas
+wants one *shared* warm set — prefill worker A publishes a boundary,
+decode worker B admits from it, and a restarted replica reattaches to
+yesterday's cache.  The tier provides exactly that, holding **encoded**
+snapshots (``fleet/codec.py`` blobs) keyed by ``(namespace, token
+prefix)``:
+
+  * attached caches fall through on lookup — local radix miss (or a
+    shorter local hit) -> tier probe -> decode + promote into the local
+    tree — and publish freshly captured boundaries back;
+  * entries are opaque validated bytes, so the tier is trivially
+    process-shareable and persistable: :meth:`save` / :meth:`load` write
+    one ``b"RMCT"``-framed file (header: version + fingerprint + entry
+    table; payload: concatenated blobs) and a load onto a different mesh
+    still serves hits, because the blobs inside are topology-portable
+    host snapshots;
+  * eviction is byte-budgeted LRU over blob sizes, independent of any
+    attached cache's budget.
+
+Probing is by descending prefix length (one dict hit per candidate
+length, capped at ``len(prompt) - 1`` like the radix walk), which keeps
+the tier a plain ordered dict instead of a second radix tree — exactness
+over the same boundary grain the caches publish.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serve.fleet.codec import (CACHE_MAGIC, CODEC_VERSION, CorruptError,
+                                     FingerprintError, SchemaError, _frame,
+                                     _unframe)
+from repro.serve.telemetry import MetricsRegistry
+
+
+class SharedCacheTier:
+    """Byte-budgeted LRU store of encoded snapshots, shared across caches.
+
+    budget_mb: blob byte budget; inserting past it evicts least-recently
+        used entries (an entry larger than the whole budget is refused).
+    registry: optional shared :class:`MetricsRegistry` for the
+        ``fleet_tier_*`` instruments (default: a private one).
+    """
+
+    def __init__(self, budget_mb: float = 128.0,
+                 registry: Optional[MetricsRegistry] = None):
+        if budget_mb <= 0:
+            raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
+        self.budget_bytes = int(budget_mb * (1 << 20))
+        # (ns, tokens tuple) -> encoded snapshot; order = LRU (oldest first)
+        self._d: "collections.OrderedDict[Tuple[Any, Tuple[int, ...]], bytes]"
+        self._d = collections.OrderedDict()
+        self._bytes = 0
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        c, g = self.registry.counter, self.registry.gauge
+        self._c_hits = c("fleet_tier_hits_total",
+                         "tier probes that returned a blob")
+        self._c_misses = c("fleet_tier_misses_total",
+                           "tier probes with no stored prefix")
+        self._c_inserts = c("fleet_tier_inserts_total",
+                            "new blobs stored in the tier")
+        self._c_dedup = c("fleet_tier_dedup_skips_total",
+                          "puts skipped because the prefix was stored")
+        self._c_evict = c("fleet_tier_evictions_total",
+                          "blobs evicted (LRU)")
+        self._c_oversize = c("fleet_tier_oversize_total",
+                             "blobs refused: larger than the whole budget")
+        self._g_bytes = g("fleet_tier_bytes_used",
+                          "encoded snapshot bytes currently held")
+        self._g_entries = g("fleet_tier_entries",
+                            "snapshots currently held in the tier")
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def get(self, tokens, ns=None) -> Optional[bytes]:
+        """Exact-prefix probe; LRU-touches on hit."""
+        key = (ns, tuple(tokens))
+        blob = self._d.get(key)
+        if blob is None:
+            self._c_misses.inc()
+            return None
+        self._d.move_to_end(key)
+        self._c_hits.inc()
+        return blob
+
+    def longest_prefix(self, tokens, cap: Optional[int] = None,
+                       ns=None) -> Tuple[int, Optional[bytes]]:
+        """Longest stored prefix of ``tokens`` no longer than ``cap``
+        (default ``len(tokens) - 1``, the admission cap):
+        ``(prefix_len, blob)`` or ``(0, None)``.  LRU-touches the hit."""
+        cap = self._cap(tokens, cap)
+        for n in range(cap, 0, -1):
+            key = (ns, tuple(tokens[:n]))
+            if key in self._d:
+                self._d.move_to_end(key)
+                self._c_hits.inc()
+                return n, self._d[key]
+        self._c_misses.inc()
+        return 0, None
+
+    def peek_len(self, tokens, cap: Optional[int] = None, ns=None) -> int:
+        """Longest stored prefix length, side-effect free (no LRU touch,
+        no stats) — for schedulers and admission grouping."""
+        cap = self._cap(tokens, cap)
+        for n in range(cap, 0, -1):
+            if (ns, tuple(tokens[:n])) in self._d:
+                return n
+        return 0
+
+    @staticmethod
+    def _cap(tokens, cap: Optional[int]) -> int:
+        return max(len(tokens) - 1, 0) if cap is None else min(
+            cap, len(tokens))
+
+    # ------------------------------------------------------------- updates
+
+    def put(self, tokens, blob: bytes, ns=None) -> bool:
+        """Store one encoded snapshot; True iff newly stored (existing
+        entries are LRU-touched, never overwritten — a prefix's snapshot
+        is deterministic for a fingerprint, so first write wins)."""
+        key = (ns, tuple(tokens))
+        if key in self._d:
+            self._d.move_to_end(key)
+            self._c_dedup.inc()
+            return False
+        if len(blob) > self.budget_bytes:
+            self._c_oversize.inc()
+            return False
+        self._d[key] = blob
+        self._bytes += len(blob)
+        self._c_inserts.inc()
+        while self._bytes > self.budget_bytes and len(self._d) > 1:
+            _, old = self._d.popitem(last=False)
+            self._bytes -= len(old)
+            self._c_evict.inc()
+        self._g_bytes.set(self._bytes)
+        self._g_entries.set(len(self._d))
+        return True
+
+    # ------------------------------------------------------------- reports
+
+    def summary(self) -> Dict[str, Any]:
+        per_ns: Dict[str, Dict[str, int]] = {}
+        for (ns, _tokens), blob in self._d.items():
+            row = per_ns.setdefault("default" if ns is None else str(ns),
+                                    {"entries": 0, "bytes_used": 0})
+            row["entries"] += 1
+            row["bytes_used"] += len(blob)
+        v = self.registry.value
+        return {
+            "entries": len(self._d),
+            "bytes_used": self._bytes,
+            "budget_bytes": self.budget_bytes,
+            "per_namespace": per_ns,
+            "hits": int(v("fleet_tier_hits_total")),
+            "misses": int(v("fleet_tier_misses_total")),
+            "inserts": int(v("fleet_tier_inserts_total")),
+            "evictions": int(v("fleet_tier_evictions_total")),
+        }
+
+    def items(self) -> List[Tuple[Any, Tuple[int, ...], bytes]]:
+        """Every (ns, prefix, blob) held, LRU order (oldest first)."""
+        return [(ns, tokens, blob)
+                for (ns, tokens), blob in self._d.items()]
+
+    # --------------------------------------------------------- persistence
+
+    def save(self, path: str, fingerprint: str) -> int:
+        """Write the tier to one file (atomic rename); returns the entry
+        count.  ``fingerprint`` pins the engine configuration the blobs
+        belong to — :meth:`load` refuses files from a different one."""
+        entries, payloads = [], []
+        for (ns, tokens), blob in self._d.items():
+            if ns is not None and not isinstance(ns, str):
+                raise CorruptError(
+                    "cache-tier namespaces must be None or str to "
+                    f"persist, got {type(ns).__name__} ({ns!r})")
+            entries.append({"ns": ns, "tokens": list(tokens),
+                            "nbytes": len(blob),
+                            "crc32": zlib.crc32(blob)})
+            payloads.append(blob)
+        header = {"version": CODEC_VERSION, "fingerprint": fingerprint,
+                  "entries": entries}
+        data = _frame(CACHE_MAGIC, header, b"".join(payloads))
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+        return len(entries)
+
+    def load(self, path: str, fingerprint: Optional[str] = None) -> int:
+        """Load a :meth:`save` file into this tier (existing entries kept;
+        duplicates dedup-skipped), validating framing, version, per-entry
+        crc and — when ``fingerprint`` is given — the configuration pin.
+        Returns the number of entries newly stored."""
+        with open(path, "rb") as f:
+            data = f.read()
+        header, payload = _unframe(CACHE_MAGIC, data, "cache file")
+        if header.get("version") != CODEC_VERSION:
+            raise SchemaError(f"cache file schema version "
+                              f"{header.get('version')!r} != {CODEC_VERSION}")
+        if fingerprint is not None and header.get("fingerprint") != \
+                fingerprint:
+            raise FingerprintError(
+                f"cache file fingerprint {header.get('fingerprint')!r} "
+                f"does not match this engine's {fingerprint!r}")
+        entries = header.get("entries")
+        if not isinstance(entries, list):
+            raise CorruptError("cache file header has no entry table")
+        total = sum(int(e.get("nbytes", -1)) for e in entries)
+        if total != len(payload) or any(
+                int(e.get("nbytes", -1)) < 0 for e in entries):
+            raise CorruptError(f"cache file payload length {len(payload)} "
+                               f"!= entry table total {total}")
+        loaded, off = 0, 0
+        for e in entries:
+            n = int(e["nbytes"])
+            blob = payload[off:off + n]
+            off += n
+            if zlib.crc32(blob) != e.get("crc32"):
+                raise CorruptError(
+                    f"cache file entry {e.get('tokens')!r}: crc mismatch")
+            tokens = e.get("tokens")
+            if not isinstance(tokens, list):
+                raise CorruptError("cache file entry has no token prefix")
+            if self.put(tuple(int(t) for t in tokens), blob,
+                        ns=e.get("ns")):
+                loaded += 1
+        return loaded
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache persistence (``--cache-save`` / ``--cache-load``): the cache's
+# live snapshots travel through the codec into one tier file and back —
+# the same wire format the shared tier persists, so a saved mono cache can
+# later seed a fleet tier (and vice versa).
+# ---------------------------------------------------------------------------
+
+def save_prefix_cache(cache, codec, path: str) -> int:
+    """Serialize every snapshot a :class:`PrefixCache` holds (all
+    namespaces) into one cache-tier file; returns the entry count."""
+    staging = SharedCacheTier(
+        budget_mb=max(1.0, 2.0 * cache.bytes_used / (1 << 20) + 1.0))
+    for ns in cache.namespaces():
+        for prefix, snap in cache.snapshot_items(ns):
+            staging.put(prefix, codec.encode(snap), ns=ns)
+    staging.save(path, codec.fingerprint)
+    return len(staging)
+
+
+def load_prefix_cache(cache, codec, path: str) -> int:
+    """Load a saved cache file into a :class:`PrefixCache` (entries decode
+    through ``codec`` — wrong fingerprints are rejected before any
+    restore).  The cache's own byte budget still governs; returns the
+    number of snapshots adopted."""
+    staging = SharedCacheTier(
+        budget_mb=max(1.0, 2.0 * os.path.getsize(path) / (1 << 20) + 1.0))
+    staging.load(path, codec.fingerprint)
+    n = 0
+    for ns, tokens, blob in staging.items():
+        if cache.adopt_snapshot(tokens, codec.decode(blob), ns=ns):
+            n += 1
+    return n

@@ -1,0 +1,304 @@
+"""Versioned wire format for decode-state snapshots (the fleet codec).
+
+Disaggregated serving connects workers only through serialized artifacts:
+a prefill replica publishes the decode state at a prompt boundary, and a
+decode replica (possibly on a different mesh, possibly in a different
+process days later) restores it.  The snapshots themselves are the
+host-side numpy pytrees ``StateStore.snapshot_rows`` produces — already
+topology-portable — so the codec's job is purely representational:
+
+  * **self-describing** — a JSON header carries the pytree *skeleton*
+    (dict/list structure with leaves replaced by payload indices) plus a
+    per-leaf table of dtype / shape / byte length / crc32 / append-only
+    flag, so a blob can be decoded (and inspected: ``python -m
+    repro.serve.fleet.inspect``) with no model code in scope;
+  * **versioned** — ``CODEC_VERSION`` in the header; decoding a blob from
+    a different schema raises :class:`SchemaError`, never mis-restores;
+  * **fingerprinted** — snapshots are only shape-valid for one
+    (cfg, max_len, dtype) combination, so the header pins
+    :func:`config_fingerprint` and decode rejects mismatches
+    (:class:`FingerprintError`) before touching a single payload byte;
+  * **strict** — header crc, per-leaf crc, dtype/shape/byte-length
+    consistency and total payload length are all validated on decode;
+    any tamper or truncation raises :class:`CorruptError`.
+
+Only stdlib + numpy: no pickle (a snapshot from an untrusted peer must
+not execute code), no jax (the inspect tool and cache-tier persistence
+run without an accelerator runtime in scope).
+
+Layout (all integers little-endian u32)::
+
+    b"RMSN" | header_len | crc32(header) | header JSON | leaf payloads
+
+with leaf ``i``'s payload occupying ``nbytes[i]`` C-contiguous bytes at
+offset ``sum(nbytes[:i])`` past the header.  :func:`pack_message` wraps
+the same framing (magic ``b"RMMS"``) around a JSON meta dict + opaque
+blob for the fleet's request/admit/result messages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SNAPSHOT_MAGIC = b"RMSN"
+MESSAGE_MAGIC = b"RMMS"
+CACHE_MAGIC = b"RMCT"
+CODEC_VERSION = 1
+
+_U32 = struct.Struct("<I")
+
+
+class CodecError(ValueError):
+    """Base class: a blob this codec refuses to decode."""
+
+
+class SchemaError(CodecError):
+    """Wrong magic or schema version — a different (or future) format."""
+
+
+class FingerprintError(CodecError):
+    """Valid blob for a *different* (cfg, max_len, dtype) — restoring it
+    would be shape-valid garbage at worst; always rejected."""
+
+
+class CorruptError(CodecError):
+    """Truncated, tampered or internally inconsistent blob."""
+
+
+def config_fingerprint(cfg, max_len: int, dtype) -> str:
+    """Digest pinning the snapshot-compatibility domain: two engines share
+    snapshots iff their (cfg, max_len, dtype) fingerprints match.  The cfg
+    is canonicalized through ``dataclasses.asdict`` (frozen nested
+    dataclasses) with sorted keys; non-JSON scalars stringify."""
+    body = dataclasses.asdict(cfg) if dataclasses.is_dataclass(cfg) else cfg
+    doc = {"cfg": body, "max_len": int(max_len),
+           "dtype": np.dtype(dtype).str}
+    blob = json.dumps(doc, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _flatten(tree, path="") -> Tuple[Any, List[Tuple[str, np.ndarray]]]:
+    """(skeleton, [(path, leaf)]): the skeleton mirrors the pytree with
+    each leaf replaced by its index into the leaf list.  Only dict / list
+    / tuple containers and array-like leaves are representable — the
+    codec never needs more, and anything else is an error, not a guess."""
+    leaves: List[Tuple[str, np.ndarray]] = []
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            return {str(k): rec(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+        if isinstance(node, (np.ndarray, np.generic)):
+            leaves.append((path or "/", np.asarray(node)))
+            return len(leaves) - 1
+        raise CodecError(
+            f"unencodable leaf at {path or '/'}: {type(node).__name__} "
+            "(snapshots are dict/list pytrees of numpy arrays)")
+
+    return rec(tree, path), leaves
+
+
+def _unflatten(skel, leaves: List[np.ndarray]):
+    if isinstance(skel, dict):
+        return {k: _unflatten(v, leaves) for k, v in skel.items()}
+    if isinstance(skel, list):
+        return [_unflatten(v, leaves) for v in skel]
+    if isinstance(skel, int) and 0 <= skel < len(leaves):
+        return leaves[skel]
+    raise CorruptError(f"skeleton references invalid leaf index {skel!r}")
+
+
+def _frame(magic: bytes, header: Dict[str, Any],
+           payload: bytes = b"") -> bytes:
+    hdr = json.dumps(header, sort_keys=True).encode()
+    return b"".join([magic, _U32.pack(len(hdr)),
+                     _U32.pack(zlib.crc32(hdr)), hdr, payload])
+
+
+def _unframe(magic: bytes, blob: bytes,
+             what: str) -> Tuple[Dict[str, Any], bytes]:
+    if len(blob) < 12:
+        raise CorruptError(f"{what}: {len(blob)} bytes is shorter than "
+                           "the fixed framing")
+    if blob[:4] != magic:
+        raise SchemaError(f"{what}: bad magic {blob[:4]!r} "
+                          f"(expected {magic!r})")
+    (hdr_len,) = _U32.unpack_from(blob, 4)
+    (hdr_crc,) = _U32.unpack_from(blob, 8)
+    if len(blob) < 12 + hdr_len:
+        raise CorruptError(f"{what}: truncated header "
+                           f"({len(blob)} < {12 + hdr_len} bytes)")
+    hdr = blob[12:12 + hdr_len]
+    if zlib.crc32(hdr) != hdr_crc:
+        raise CorruptError(f"{what}: header crc mismatch")
+    try:
+        header = json.loads(hdr.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise CorruptError(f"{what}: unparseable header ({e})") from None
+    if not isinstance(header, dict):
+        raise CorruptError(f"{what}: header is not an object")
+    return header, blob[12 + hdr_len:]
+
+
+def read_header(blob: bytes) -> Dict[str, Any]:
+    """Parse and validate a snapshot blob's header (no payload checks) —
+    the inspect tool's entry point."""
+    header, _ = _unframe(SNAPSHOT_MAGIC, blob, "snapshot")
+    if header.get("version") != CODEC_VERSION:
+        raise SchemaError(f"snapshot schema version "
+                          f"{header.get('version')!r} != {CODEC_VERSION}")
+    if not isinstance(header.get("leaves"), list):
+        raise CorruptError("snapshot header has no leaf table")
+    return header
+
+
+class SnapshotCodec:
+    """Encoder/decoder bound to one engine configuration.
+
+    fingerprint: the :func:`config_fingerprint` of the (cfg, max_len,
+        dtype) whose snapshots this codec handles; stamped on encode,
+        enforced on decode.
+    flags: optional bool pytree (``StateStore.append_only``) matching the
+        snapshot structure — each leaf's append-only flag travels in the
+        header (decode replicas may treat append-only leaves differently;
+        today it is validated metadata + inspect-tool signal).
+    """
+
+    def __init__(self, fingerprint: str, flags: Any = None):
+        self.fingerprint = fingerprint
+        self._flags: Optional[Dict[str, bool]] = None
+        if flags is not None:
+            _, flag_leaves = _flatten(
+                _map_bools(flags))
+            self._flags = {path: bool(leaf) for path, leaf in flag_leaves}
+
+    @classmethod
+    def for_store(cls, store) -> "SnapshotCodec":
+        """Codec for a :class:`~repro.serve.state.StateStore`'s snapshots
+        (fingerprint + append-only flags derived from the store)."""
+        return cls(config_fingerprint(store.cfg, store.max_len, store.dtype),
+                   flags=store.append_only)
+
+    # ------------------------------------------------------------- encode
+
+    def encode(self, snap) -> bytes:
+        """Serialize one host-side snapshot pytree."""
+        skel, leaves = _flatten(snap)
+        table, payloads = [], []
+        for path, leaf in leaves:
+            raw = np.ascontiguousarray(leaf).tobytes()
+            table.append({
+                "path": path,
+                "dtype": leaf.dtype.str,
+                "shape": list(leaf.shape),
+                "nbytes": len(raw),
+                "crc32": zlib.crc32(raw),
+                "append_only": bool(self._flags.get(path, False)
+                                    if self._flags else False),
+            })
+            payloads.append(raw)
+        header = {"version": CODEC_VERSION, "fingerprint": self.fingerprint,
+                  "skeleton": skel, "leaves": table}
+        return _frame(SNAPSHOT_MAGIC, header, b"".join(payloads))
+
+    # ------------------------------------------------------------- decode
+
+    def decode(self, blob: bytes):
+        """Strictly validate and deserialize a snapshot blob.  Raises
+        :class:`SchemaError` / :class:`FingerprintError` /
+        :class:`CorruptError`; on success returns the snapshot pytree
+        bit-identical to the one encoded."""
+        header, payload = _unframe(SNAPSHOT_MAGIC, blob, "snapshot")
+        if header.get("version") != CODEC_VERSION:
+            raise SchemaError(
+                f"snapshot schema version {header.get('version')!r} "
+                f"!= supported {CODEC_VERSION}")
+        if header.get("fingerprint") != self.fingerprint:
+            raise FingerprintError(
+                f"snapshot fingerprint {header.get('fingerprint')!r} does "
+                f"not match this engine's {self.fingerprint!r} "
+                "(different cfg / max_len / dtype)")
+        table = header.get("leaves")
+        if not isinstance(table, list):
+            raise CorruptError("snapshot header has no leaf table")
+        total = sum(int(e.get("nbytes", -1)) for e in table)
+        if total != len(payload) or any(
+                int(e.get("nbytes", -1)) < 0 for e in table):
+            raise CorruptError(
+                f"payload length {len(payload)} != leaf table total {total}")
+        leaves, off = [], 0
+        for e in table:
+            n = int(e["nbytes"])
+            raw = payload[off:off + n]
+            off += n
+            if zlib.crc32(raw) != e.get("crc32"):
+                raise CorruptError(f"leaf {e.get('path')!r}: payload crc "
+                                   "mismatch")
+            try:
+                dt = np.dtype(e["dtype"])
+                shape = tuple(int(s) for s in e["shape"])
+            except (TypeError, ValueError, KeyError):
+                raise CorruptError(
+                    f"leaf {e.get('path')!r}: invalid dtype/shape "
+                    "metadata") from None
+            expect = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+            if expect != n:
+                raise CorruptError(
+                    f"leaf {e.get('path')!r}: {n} payload bytes but "
+                    f"dtype/shape implies {expect}")
+            if self._flags is not None:
+                want = self._flags.get(e.get("path"))
+                if want is None or want != bool(e.get("append_only")):
+                    raise CorruptError(
+                        f"leaf {e.get('path')!r}: append-only flag "
+                        "disagrees with this engine's StateSpec")
+            leaves.append(np.frombuffer(raw, dtype=dt).reshape(shape))
+        return _unflatten(header.get("skeleton"), leaves)
+
+
+def _map_bools(tree):
+    """Normalize a bool pytree (append-only mask) to 0-d numpy leaves so
+    it flattens with the same paths as the snapshot it describes."""
+    if isinstance(tree, dict):
+        return {k: _map_bools(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_map_bools(v) for v in tree]
+    return np.asarray(bool(tree))
+
+
+# ---------------------------------------------------------------------------
+# message framing: JSON meta + opaque blob (requests, admits, results)
+# ---------------------------------------------------------------------------
+
+def pack_message(meta: Dict[str, Any], blob: bytes = b"") -> bytes:
+    """One fleet wire message: a JSON-serializable ``meta`` dict plus an
+    opaque payload (usually an encoded snapshot; empty for control and
+    result messages)."""
+    header = {"version": CODEC_VERSION, "meta": meta, "blob_len": len(blob),
+              "blob_crc32": zlib.crc32(blob)}
+    return _frame(MESSAGE_MAGIC, header, blob)
+
+
+def unpack_message(data: bytes) -> Tuple[Dict[str, Any], bytes]:
+    """Validate and split a :func:`pack_message` frame -> (meta, blob)."""
+    header, payload = _unframe(MESSAGE_MAGIC, data, "message")
+    if header.get("version") != CODEC_VERSION:
+        raise SchemaError(f"message schema version "
+                          f"{header.get('version')!r} != {CODEC_VERSION}")
+    n = header.get("blob_len")
+    if not isinstance(n, int) or n != len(payload):
+        raise CorruptError(f"message payload length {len(payload)} != "
+                           f"declared {n!r}")
+    if zlib.crc32(payload) != header.get("blob_crc32"):
+        raise CorruptError("message payload crc mismatch")
+    meta = header.get("meta")
+    if not isinstance(meta, dict):
+        raise CorruptError("message meta is not an object")
+    return meta, payload

@@ -1,0 +1,116 @@
+"""Inspect fleet wire artifacts: ``python -m repro.serve.fleet.inspect
+<file>`` prints the header, leaf table and byte breakdown of a snapshot
+blob (``RMSN``), a fleet message (``RMMS``) or a saved cache-tier file
+(``RMCT``) — the debugging aid for the disaggregated wire format.
+
+Deliberately free of jax/model imports: it must work on any artifact a
+fleet wrote, anywhere, with nothing but the repo on PYTHONPATH."""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.serve.fleet.codec import (CACHE_MAGIC, MESSAGE_MAGIC,
+                                     SNAPSHOT_MAGIC, _unframe, read_header,
+                                     unpack_message)
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n} B"
+        n /= 1024
+    return f"{n} B"
+
+
+def _table(rows: List[List[str]], headers: List[str]) -> str:
+    rows = [headers] + rows
+    widths = [max(len(r[i]) for r in rows) for i in range(len(headers))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def describe_snapshot(blob: bytes, out=None) -> None:
+    out = sys.stdout if out is None else out
+    header = read_header(blob)
+    leaves = header["leaves"]
+    total = sum(int(e["nbytes"]) for e in leaves)
+    print(f"snapshot  codec v{header['version']}  "
+          f"fingerprint {header['fingerprint']}", file=out)
+    print(f"  {len(leaves)} leaves, {_fmt_bytes(total)} payload, "
+          f"{_fmt_bytes(len(blob))} framed", file=out)
+    rows = [[e["path"], e["dtype"], "x".join(map(str, e["shape"])),
+             _fmt_bytes(int(e["nbytes"])),
+             "append-only" if e.get("append_only") else ""]
+            for e in sorted(leaves, key=lambda e: -int(e["nbytes"]))]
+    print(_table(rows, ["leaf", "dtype", "shape", "bytes", "flags"]),
+          file=out)
+
+
+def describe_message(data: bytes, out=None) -> None:
+    out = sys.stdout if out is None else out
+    meta, blob = unpack_message(data)
+    kind = meta.get("kind", "?")
+    print(f"message  kind={kind}  meta keys {sorted(meta)}  "
+          f"blob {_fmt_bytes(len(blob))}", file=out)
+    req = meta.get("request")
+    if isinstance(req, dict):
+        print(f"  request id={req.get('id')} "
+              f"prompt_len={len(req.get('prompt', []))} "
+              f"expert_set={req.get('expert_set')!r}", file=out)
+    if blob[:4] == SNAPSHOT_MAGIC:
+        describe_snapshot(blob, out=out)
+
+
+def describe_cache_file(data: bytes, out=None) -> None:
+    out = sys.stdout if out is None else out
+    header, payload = _unframe(CACHE_MAGIC, data, "cache file")
+    entries = header.get("entries", [])
+    print(f"cache tier  codec v{header.get('version')}  "
+          f"fingerprint {header.get('fingerprint')}", file=out)
+    print(f"  {len(entries)} entries, {_fmt_bytes(len(payload))} payload",
+          file=out)
+    per_ns = {}
+    rows = []
+    for e in entries:
+        ns = e.get("ns") or "default"
+        per_ns.setdefault(ns, [0, 0])
+        per_ns[ns][0] += 1
+        per_ns[ns][1] += int(e["nbytes"])
+        rows.append([ns, str(len(e.get("tokens", []))),
+                     _fmt_bytes(int(e["nbytes"]))])
+    print(_table(rows, ["namespace", "prefix_len", "bytes"]), file=out)
+    print("per-namespace:", file=out)
+    for ns, (n, b) in sorted(per_ns.items()):
+        print(f"  {ns}: {n} entries, {_fmt_bytes(b)}", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.fleet.inspect",
+        description="print the header / leaf table / byte breakdown of a "
+                    "fleet snapshot, message or cache-tier file")
+    ap.add_argument("path", help="artifact to inspect")
+    args = ap.parse_args(argv)
+    with open(args.path, "rb") as f:
+        data = f.read()
+    magic = data[:4]
+    if magic == SNAPSHOT_MAGIC:
+        describe_snapshot(data)
+    elif magic == MESSAGE_MAGIC:
+        describe_message(data)
+    elif magic == CACHE_MAGIC:
+        describe_cache_file(data)
+    else:
+        print(f"unrecognized magic {magic!r} (expected "
+              f"{SNAPSHOT_MAGIC!r}, {MESSAGE_MAGIC!r} or {CACHE_MAGIC!r})",
+              file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

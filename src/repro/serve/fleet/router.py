@@ -1,0 +1,259 @@
+"""FleetRouter: request routing over prefill and decode worker pools.
+
+The router is the only component that sees the whole fleet.  It owns the
+request queue and two policies:
+
+  * **prefill assignment** — maximize the cached-prefix length the
+    serving worker can skip (each worker reports ``cached_len``, which
+    includes any shared tier it is attached to), tie-broken by least
+    work served; this is what makes a shared cache tier pay off at the
+    fleet level;
+  * **decode assignment** — expert-set affinity first (a replica whose
+    engine already binds the request's set avoids a hot swap), then
+    least live decode lanes.
+
+Failure handling: a worker that raises (``WorkerDrained``, or anything
+else — a failure is a failure) costs the request one retry; the router
+requeues it to the next-best peer, up to ``max_retries`` per request,
+then surfaces the last error.  An admission that is merely *refused*
+(``try_admit`` -> False: no free slot yet) is not a failure — the
+message stays queued while the router keeps stepping decode workers so
+lanes retire and capacity reappears.
+
+Two drive modes: :meth:`run` is cooperative (deterministic
+single-threaded interleaving — the CI mode) and :meth:`run` with
+``threaded=True`` runs every worker on its own thread over
+``queue.Queue`` channels (the honest concurrent rehearsal; results are
+identical because workers only ever exchange codec bytes).  All
+cross-worker traffic in both modes is serialized messages.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.engine import Request, RequestResult
+from repro.serve.fleet.codec import unpack_message
+from repro.serve.fleet.worker import (DecodeWorker, PrefillWorker,
+                                      decode_result, encode_request)
+from repro.serve.telemetry import FleetInstruments, Telemetry
+
+
+class FleetRouter:
+    """Routes requests through prefill replicas into decode replicas."""
+
+    def __init__(self, prefill_workers: Sequence[PrefillWorker],
+                 decode_workers: Sequence[DecodeWorker],
+                 telemetry: Optional[Telemetry] = None,
+                 max_retries: int = 2):
+        if not prefill_workers or not decode_workers:
+            raise ValueError("a fleet needs at least one prefill and one "
+                             "decode worker")
+        self.prefill_workers = list(prefill_workers)
+        self.decode_workers = list(decode_workers)
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._m = FleetInstruments(self.telemetry.registry)
+        self._tracer = self.telemetry.tracer
+        self.max_retries = max_retries
+        # (request message bytes, retries) — requests awaiting prefill
+        self._queue: collections.deque = collections.deque()
+        self._m.prefill_workers.set(len(self.prefill_workers))
+        self._m.decode_workers.set(len(self.decode_workers))
+
+    # ----------------------------------------------------------- submit
+
+    def submit(self, req: Request) -> None:
+        """Accept one request: serialized at this boundary — past this
+        call the fleet only ever sees the wire form."""
+        self._queue.append((encode_request(req), 0))
+        self._m.queue_depth.set(len(self._queue))
+
+    # ----------------------------------------------------- assignment
+
+    @staticmethod
+    def _peek(msg: bytes) -> Dict[str, Any]:
+        meta, _ = unpack_message(msg)
+        return meta
+
+    def _pick_prefill(self, req_meta: Dict[str, Any]) -> List[PrefillWorker]:
+        """Candidate prefill workers, best first: longest cached prefix,
+        then least served."""
+        prompt = req_meta["prompt"]
+        ns = req_meta.get("expert_set")
+        live = [w for w in self.prefill_workers if not w.drained]
+        return sorted(live or self.prefill_workers,
+                      key=lambda w: (-w.cached_len(prompt, ns=ns), w.load))
+
+    def _pick_decode(self, req_meta: Dict[str, Any]) -> List[DecodeWorker]:
+        """Candidate decode workers, best first: expert-set affinity,
+        then least live lanes."""
+        wanted = req_meta.get("expert_set")
+        live = [w for w in self.decode_workers if not w.drained]
+
+        def key(w: DecodeWorker) -> Tuple[int, int]:
+            affine = wanted is not None and wanted in w.bound_sets()
+            return (0 if affine else 1, w.load)
+
+        return sorted(live or self.decode_workers, key=key)
+
+    # ----------------------------------------------------------- drive
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            threaded: bool = False) -> List[RequestResult]:
+        """Drive the fleet until every submitted request finishes."""
+        for r in (requests or ()):
+            self.submit(r)
+        results = (self._run_threaded() if threaded
+                   else self._run_cooperative())
+        self._m.queue_depth.set(len(self._queue))
+        return results
+
+    def _prefill_one(self, msg: bytes, tries: int) -> Tuple[bytes, int]:
+        """Route one request message through a prefill worker, retrying
+        across peers on worker failure.  Returns (admit message, tries)."""
+        meta = self._peek(msg)
+        t_sub = meta.get("t_submit")
+        last_err: Optional[BaseException] = None
+        for worker in self._pick_prefill(meta["request"]):
+            if tries > self.max_retries:
+                break
+            try:
+                admit = worker.process(msg)
+            except Exception as e:          # drained or failed: retry peer
+                self._m.failures.inc()
+                self._m.requeues.inc()
+                tries += 1
+                last_err = e
+                continue
+            if t_sub is not None:
+                self._m.queue_s.observe(time.perf_counter() - t_sub)
+            return admit, tries
+        raise RuntimeError(
+            f"request {meta['request']['id']}: no prefill worker could "
+            f"serve it after {tries} attempt(s)") from last_err
+
+    def _run_cooperative(self) -> List[RequestResult]:
+        results: List[RequestResult] = []
+        # (admit message, retries) — snapshots awaiting a decode slot
+        admits: collections.deque = collections.deque()
+        while (self._queue or admits
+               or any(w.busy() for w in self.decode_workers)):
+            while self._queue:
+                msg, tries = self._queue.popleft()
+                self._m.queue_depth.set(len(self._queue))
+                admits.append(self._prefill_one(msg, tries))
+            for _ in range(len(admits)):
+                msg, tries = admits.popleft()
+                meta = self._peek(msg)
+                admitted, failed = False, False
+                for worker in self._pick_decode(meta["request"]):
+                    if tries > self.max_retries:
+                        break
+                    try:
+                        admitted = worker.try_admit(msg)
+                    except Exception:
+                        self._m.failures.inc()
+                        self._m.requeues.inc()
+                        tries += 1
+                        failed = True
+                        continue
+                    if admitted:
+                        break
+                    # refused = fleet at capacity, not a failure: stop
+                    # probing peers (they are sorted busiest-last anyway)
+                    break
+                if not admitted:
+                    if failed and tries > self.max_retries:
+                        raise RuntimeError(
+                            f"request {meta['request']['id']}: no decode "
+                            f"worker admitted it after {tries} attempt(s)")
+                    admits.append((msg, tries))
+            stepped = False
+            for worker in self.decode_workers:
+                for res_msg in worker.step():
+                    results.append(decode_result(res_msg))
+                    stepped = True
+                stepped = stepped or worker.busy()
+            if admits and not stepped and not self._queue:
+                raise RuntimeError(
+                    f"{len(admits)} admit message(s) stuck with every "
+                    "decode worker idle — fleet misconfigured "
+                    "(all drained, or zero free slots at rest)")
+        return results
+
+    # ------------------------------------------------------- threaded
+
+    def _run_threaded(self) -> List[RequestResult]:
+        """Every worker on its own thread; channels carry only message
+        bytes.  The router thread does assignment exactly like the
+        cooperative mode; worker errors propagate after join."""
+        admit_q: "queue.Queue[Tuple[bytes, int]]" = queue.Queue()
+        result_q: "queue.Queue[bytes]" = queue.Queue()
+        errors: List[BaseException] = []
+        n_requests = len(self._queue)
+
+        def prefill_loop(msg: bytes, tries: int) -> None:
+            try:
+                admit_q.put(self._prefill_one(msg, tries))
+            except BaseException as e:
+                errors.append(e)
+                admit_q.put((b"", -1))              # unblock the router
+
+        decode_chans: Dict[str, "queue.Queue[Optional[bytes]]"] = {
+            w.name: queue.Queue() for w in self.decode_workers}
+
+        def decode_loop(worker: DecodeWorker) -> None:
+            chan = decode_chans[worker.name]
+            pending: collections.deque = collections.deque()
+            closing = False
+            try:
+                while True:
+                    try:
+                        item = chan.get(timeout=0.001)
+                        if item is None:
+                            closing = True
+                        else:
+                            pending.append(item)
+                    except queue.Empty:
+                        pass
+                    while pending and worker.try_admit(pending[0]):
+                        pending.popleft()
+                    for res_msg in worker.step():
+                        result_q.put(res_msg)
+                    if closing and not pending and not worker.busy():
+                        return
+            except BaseException as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=decode_loop, args=(w,),
+                                    daemon=True)
+                   for w in self.decode_workers]
+        while self._queue:
+            msg, tries = self._queue.popleft()
+            threads.append(threading.Thread(target=prefill_loop,
+                                            args=(msg, tries), daemon=True))
+        self._m.queue_depth.set(0)
+        for t in threads:
+            t.start()
+        results: List[RequestResult] = []
+        served = 0
+        while served < n_requests and not errors:
+            msg, tries = admit_q.get()
+            if tries < 0:
+                break
+            meta = self._peek(msg)
+            worker = self._pick_decode(meta["request"])[0]
+            decode_chans[worker.name].put(msg)
+            served += 1
+        for chan in decode_chans.values():
+            chan.put(None)                           # close every channel
+        for t in threads:
+            t.join(timeout=600)
+        if errors:
+            raise errors[0]
+        while not result_q.empty():
+            results.append(decode_result(result_q.get()))
+        return results

@@ -1,0 +1,210 @@
+"""Fleet workers: the prefill and decode halves of disaggregated serving.
+
+A :class:`PrefillWorker` wraps a full :class:`~repro.serve.engine.
+ServeEngine` but only ever runs its ``prefill_to_snapshot`` path: it
+consumes **request messages**, prefills the prompt (cache-assisted, so a
+shared tier keeps fleets warm), and publishes an **admit message** — the
+request meta + first token + the codec-encoded terminal snapshot.  A
+:class:`DecodeWorker` wraps another engine (typically on a *different*
+ParallelPlan) and admits purely by snapshot transfer
+(``admit_from_snapshot``) — it never runs prefill, so its decode lanes
+never stall on a prompt.
+
+Everything crossing a worker boundary is ``bytes`` produced by
+``fleet/codec.py`` (:func:`~repro.serve.fleet.codec.pack_message`
+frames): no live Python object is ever shared between workers, which is
+what makes the in-process CI topology an honest rehearsal of the
+multi-host one — swapping the transport for sockets changes no worker
+code.
+
+Message kinds (the ``meta["kind"]`` field):
+
+  ``request``  router -> prefill: ``{"kind", "request", "t_submit"}``
+  ``admit``    prefill -> decode: ``{"kind", "request", "first_token",
+               "pos", "t_submit"}`` + encoded snapshot blob
+  ``result``   decode -> router: ``{"kind", "result"}``
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.serve.engine import Request, RequestResult
+from repro.serve.fleet.codec import (SnapshotCodec, pack_message,
+                                     unpack_message)
+from repro.serve.sampling import SamplingParams
+from repro.serve.telemetry import FleetInstruments, MetricsRegistry
+
+
+class WorkerDrained(RuntimeError):
+    """The worker is draining (rolling restart / scale-down) and accepts
+    no new work; the router requeues to a peer."""
+
+
+def request_meta(req: Request) -> Dict[str, Any]:
+    """JSON-serializable wire form of a :class:`Request`."""
+    return {
+        "id": int(req.id),
+        "prompt": [int(t) for t in req.prompt],
+        "max_new_tokens": int(req.max_new_tokens),
+        "sampling": {"temperature": float(req.sampling.temperature),
+                     "top_k": int(req.sampling.top_k),
+                     "top_p": float(req.sampling.top_p)},
+        "eos_id": None if req.eos_id is None else int(req.eos_id),
+        "expert_set": req.expert_set,
+    }
+
+
+def request_from_meta(meta: Dict[str, Any]) -> Request:
+    sp = meta.get("sampling") or {}
+    return Request(
+        id=int(meta["id"]), prompt=list(meta["prompt"]),
+        max_new_tokens=int(meta.get("max_new_tokens", 16)),
+        sampling=SamplingParams(
+            temperature=float(sp.get("temperature", 0.0)),
+            top_k=int(sp.get("top_k", 0)),
+            top_p=float(sp.get("top_p", 1.0))),
+        eos_id=meta.get("eos_id"),
+        expert_set=meta.get("expert_set"))
+
+
+def encode_request(req: Request,
+                   t_submit: Optional[float] = None) -> bytes:
+    """The router->prefill wire message for one request."""
+    return pack_message({"kind": "request", "request": request_meta(req),
+                         "t_submit": (time.perf_counter()
+                                      if t_submit is None else t_submit)})
+
+
+def encode_result(res: RequestResult) -> bytes:
+    return pack_message({"kind": "result",
+                         "result": dataclasses.asdict(res)})
+
+
+def decode_result(msg: bytes) -> RequestResult:
+    meta, _ = unpack_message(msg)
+    body = dict(meta["result"])
+    body["tokens"] = [int(t) for t in body["tokens"]]
+    return RequestResult(**body)
+
+
+class PrefillWorker:
+    """One prefill replica: request message in, admit message out."""
+
+    def __init__(self, name: str, engine, codec: SnapshotCodec,
+                 registry: Optional[MetricsRegistry] = None):
+        self.name = name
+        self.engine = engine
+        self.codec = codec
+        self.drained = False
+        self._m = FleetInstruments(registry if registry is not None
+                                   else engine.telemetry.registry)
+        self._served = 0
+        # threaded fleets may route two requests to one replica
+        # concurrently; the engine is not reentrant, the worker is
+        self._lock = threading.Lock()
+
+    def drain(self) -> None:
+        """Stop accepting work (the engine stays intact — a drained
+        worker can be undrained after a topology change)."""
+        self.drained = True
+
+    def cached_len(self, prompt, ns=None) -> int:
+        """Router affinity signal: how much of this prompt the worker's
+        cache (incl. an attached shared tier) can skip."""
+        cache = self.engine.cache
+        return cache.peek_len(prompt, ns=ns) if cache is not None else 0
+
+    @property
+    def load(self) -> int:
+        return self._served
+
+    def process(self, request_msg: bytes) -> bytes:
+        """Prefill one request message into an admit message."""
+        if self.drained:
+            raise WorkerDrained(f"prefill worker {self.name} is draining")
+        meta, _ = unpack_message(request_msg)
+        req = request_from_meta(meta["request"])
+        with self._lock:
+            first_tok, snap = self.engine.prefill_to_snapshot(req)
+        blob = self.codec.encode(snap)
+        self._served += 1
+        self._m.prefills.inc()
+        self._m.snapshots_out.inc()
+        out = pack_message({"kind": "admit", "request": meta["request"],
+                            "first_token": int(first_tok),
+                            "pos": len(req.prompt),
+                            "t_submit": meta.get("t_submit")}, blob)
+        self._m.snapshot_bytes.inc(len(out))
+        return out
+
+
+class DecodeWorker:
+    """One decode replica: admit messages in, result messages out.
+
+    Admission is strictly a snapshot transfer; the wrapped engine's
+    prefill path is never exercised (the engine still *has* one — a
+    decode worker is an ordinary engine playing a role, which is what
+    lets a fleet degrade to monolithic serving by re-roling replicas)."""
+
+    def __init__(self, name: str, engine, codec: SnapshotCodec,
+                 registry: Optional[MetricsRegistry] = None):
+        self.name = name
+        self.engine = engine
+        self.codec = codec
+        self.drained = False
+        self._m = FleetInstruments(registry if registry is not None
+                                   else engine.telemetry.registry)
+
+    def drain(self) -> None:
+        self.drained = True
+
+    @property
+    def load(self) -> int:
+        """Live decode lanes (the router's least-loaded signal)."""
+        return sum(1 for l in self.engine._lanes if l is not None)
+
+    def bound_sets(self) -> List[str]:
+        """Expert sets currently bound on this replica's engine (router
+        affinity: admitting a request to a replica already serving its
+        set avoids an expert swap)."""
+        lib = self.engine.library
+        return list(self.engine._bound) if lib is not None else []
+
+    def try_admit(self, admit_msg: bytes) -> bool:
+        """Decode + restore one admit message; False when the engine has
+        no capacity right now (the router requeues and keeps stepping
+        this worker until lanes retire)."""
+        if self.drained:
+            raise WorkerDrained(f"decode worker {self.name} is draining")
+        t0 = time.perf_counter()
+        meta, blob = unpack_message(admit_msg)
+        snap = self.codec.decode(blob)
+        req = request_from_meta(meta["request"])
+        ok = self.engine.admit_from_snapshot(
+            req, snap, int(meta["first_token"]),
+            t_submit=meta.get("t_submit"))
+        if ok:
+            self._m.admits.inc()
+            self._m.snapshot_bytes.inc(len(admit_msg))
+            self._m.transfer_s.observe(time.perf_counter() - t0)
+        else:
+            self._m.admit_rejects.inc()
+        return ok
+
+    def busy(self) -> bool:
+        return self.engine.busy()
+
+    def step(self) -> List[bytes]:
+        """One engine tick; finished requests come back as serialized
+        result messages (the router never touches a RequestResult this
+        worker created — results cross the boundary as bytes too)."""
+        if not self.engine.busy():
+            return []
+        out = []
+        for res in self.engine.tick():
+            self._m.results.inc()
+            out.append(encode_result(res))
+        return out

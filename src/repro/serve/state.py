@@ -305,3 +305,21 @@ class StateStore:
         """Write a host snapshot into ``rows`` of a state with this
         store's structure; returns the updated state."""
         return restore_slots(state, snap, self.axes, rows)
+
+    # ---------------------------------------------------- snapshot export
+    # (fleet serving: one slot in/out as a host pytree — the unit the
+    # snapshot codec serializes and disaggregated admission transfers)
+
+    def snapshot_slot(self, slot):
+        """Host-side snapshot of one canonical slot's decode state (a
+        1-slot pytree; topology-portable like every host snapshot)."""
+        return self.snapshot_rows(self.state, [slot])
+
+    def restore_slot(self, slot, snap):
+        """Install a 1-slot host snapshot into canonical ``slot``.
+
+        Routed through a ``fresh(1)`` side state + the jitted ``adopt``
+        (which carries ``out_shardings``), so on a ParallelPlan the
+        canonical state never drifts off its committed placement."""
+        side = self.restore_rows(self.fresh(1), snap, [0])
+        self.adopt(side, [0], [slot])

@@ -633,3 +633,43 @@ class EngineInstruments:
         ``reset_stats()`` stores as the subtraction baseline."""
         return {key: self.registry.value(name)
                 for key, (name, _) in self.STAT_COUNTERS.items()}
+
+
+class FleetInstruments:
+    """Every instrument the disaggregated fleet drives (``serve/fleet/``:
+    router, prefill workers, decode workers), created against one shared
+    registry so a fleet exports next to its engines' and caches'
+    instruments.  The ``fleet_tier_*`` family lives on
+    :class:`~repro.serve.fleet.cache_tier.SharedCacheTier` — this class
+    covers the request path."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        c, g, h = registry.counter, registry.gauge, registry.histogram
+        self.prefills = c("fleet_prefills_total",
+                          "prompts prefilled by prefill workers")
+        self.snapshots_out = c("fleet_snapshots_published_total",
+                               "boundary snapshots shipped prefill->decode")
+        self.snapshot_bytes = c("fleet_snapshot_bytes_total",
+                                "encoded admit-message bytes transferred")
+        self.admits = c("fleet_admits_total",
+                        "decode admissions served from snapshots")
+        self.admit_rejects = c("fleet_admit_rejects_total",
+                               "snapshot admissions refused (no slot / "
+                               "no binding row / drained)")
+        self.requeues = c("fleet_requeues_total",
+                          "requests requeued to another worker")
+        self.failures = c("fleet_worker_failures_total",
+                          "worker errors the router retried around")
+        self.results = c("fleet_results_total",
+                         "finished results returned through the router")
+        self.queue_depth = g("fleet_queue_depth",
+                             "requests waiting for a prefill assignment")
+        self.prefill_workers = g("fleet_prefill_workers",
+                                 "prefill replicas attached to the router")
+        self.decode_workers = g("fleet_decode_workers",
+                                "decode replicas attached to the router")
+        self.queue_s = h("fleet_router_queue_seconds",
+                         "submit -> prefill assignment, per request")
+        self.transfer_s = h("fleet_transfer_seconds",
+                            "encode + admit transfer latency, per request")

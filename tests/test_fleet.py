@@ -1,0 +1,713 @@
+"""Disaggregated fleet serving (serve/fleet/): codec, tier, workers, router.
+
+Fast tests (model-free, no jax dispatch): the snapshot codec's strict
+round-trip/rejection contract, fleet message framing, the SharedCacheTier
+probe/LRU/persistence behavior, the PrefixCache tier fall-through, and
+the inspect CLI.
+
+Engine-level tests (single device, small configs): prefill-to-snapshot /
+admit-from-snapshot identity against the monolithic engine, the full
+router fleet — cooperative and threaded — bit-identical per mixer
+pattern (incl. rom_mamba and multi-tenant expert-set routing), retry /
+requeue on drained workers, and cache persistence round-trips with
+bit-identical continuations.
+
+Cross-mesh parity (slow, subprocess with a forced 8-device host): a
+prefill replica on ``data=2`` feeding a single-device decode replica
+through codec bytes, and a cache file saved on one mesh serving hits on
+another — CI runs these in the 8-virtual-device job.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve.fleet import inspect as fleet_inspect
+from repro.serve.fleet.cache_tier import (SharedCacheTier, load_prefix_cache,
+                                          save_prefix_cache)
+from repro.serve.fleet.codec import (CODEC_VERSION, CorruptError,
+                                     FingerprintError, SchemaError,
+                                     SnapshotCodec, config_fingerprint,
+                                     pack_message, read_header,
+                                     unpack_message)
+
+# ---------------------------------------------------------------------------
+# codec: round-trip and strict rejection (model-free)
+# ---------------------------------------------------------------------------
+
+
+def _demo_snap():
+    rng = np.random.default_rng(0)
+    return {
+        "segments": [
+            {"conv": rng.standard_normal((1, 4, 8)).astype(np.float32),
+             "ssm": rng.standard_normal((1, 2, 4)).astype(np.float16)},
+            {"kv": rng.integers(-5, 5, (1, 3, 2)).astype(np.int8)},
+        ],
+        "pos": np.asarray([7], np.int32),
+    }
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_tree_equal(a[k], b[k]) for k in a))
+    if isinstance(a, list):
+        return (isinstance(b, list) and len(a) == len(b)
+                and all(_tree_equal(x, y) for x, y in zip(a, b)))
+    return (a.dtype == b.dtype and a.shape == b.shape
+            and bool(np.array_equal(a, b)))
+
+
+def test_codec_round_trip_bit_exact():
+    codec = SnapshotCodec("f" * 16)
+    snap = _demo_snap()
+    blob = codec.encode(snap)
+    assert blob[:4] == b"RMSN"
+    out = codec.decode(blob)
+    assert _tree_equal(snap, out)
+    # encode is deterministic: same snapshot -> same bytes
+    assert codec.encode(snap) == blob
+
+
+def test_codec_header_is_self_describing():
+    codec = SnapshotCodec("a" * 16)
+    hdr = read_header(codec.encode(_demo_snap()))
+    assert hdr["version"] == CODEC_VERSION
+    assert hdr["fingerprint"] == "a" * 16
+    paths = {e["path"] for e in hdr["leaves"]}
+    assert "/segments/0/conv" in paths and "/pos" in paths
+    by_path = {e["path"]: e for e in hdr["leaves"]}
+    assert by_path["/segments/0/ssm"]["dtype"] == np.dtype(np.float16).str
+    assert by_path["/segments/1/kv"]["shape"] == [1, 3, 2]
+
+
+def test_codec_rejects_wrong_fingerprint():
+    blob = SnapshotCodec("a" * 16).encode(_demo_snap())
+    with pytest.raises(FingerprintError):
+        SnapshotCodec("b" * 16).decode(blob)
+
+
+def test_codec_rejects_wrong_magic_and_version():
+    codec = SnapshotCodec("a" * 16)
+    blob = codec.encode(_demo_snap())
+    with pytest.raises(SchemaError):
+        codec.decode(b"XXXX" + blob[4:])
+    with pytest.raises(SchemaError):        # a message is not a snapshot
+        codec.decode(pack_message({"kind": "request"}))
+
+
+def test_codec_rejects_truncation_and_tamper():
+    codec = SnapshotCodec("a" * 16)
+    blob = codec.encode(_demo_snap())
+    for cut in (0, 3, 11, len(blob) // 2, len(blob) - 1):
+        with pytest.raises(CorruptError):
+            codec.decode(blob[:cut])
+    # flip one payload byte -> leaf crc catches it
+    tampered = bytearray(blob)
+    tampered[-1] ^= 0xFF
+    with pytest.raises(CorruptError):
+        codec.decode(bytes(tampered))
+    # flip one header byte -> header crc catches it
+    tampered = bytearray(blob)
+    tampered[14] ^= 0xFF
+    with pytest.raises(CorruptError):
+        codec.decode(bytes(tampered))
+
+
+def test_codec_rejects_unencodable_leaves():
+    from repro.serve.fleet.codec import CodecError
+    codec = SnapshotCodec("a" * 16)
+    with pytest.raises(CorruptError):
+        codec.decode(b"")
+    with pytest.raises(CodecError):
+        codec.encode({"bad": object()})
+
+
+def test_codec_append_only_flags_travel_and_are_enforced():
+    snap = {"conv": np.zeros((2, 3), np.float32),
+            "kv": np.zeros((4,), np.float32)}
+    flags = {"conv": False, "kv": True}
+    codec = SnapshotCodec("a" * 16, flags=flags)
+    blob = codec.encode(snap)
+    by_path = {e["path"]: e for e in read_header(blob)["leaves"]}
+    assert by_path["/kv"]["append_only"] is True
+    assert by_path["/conv"]["append_only"] is False
+    assert _tree_equal(codec.decode(blob), snap)
+    # an engine whose StateSpec disagrees on the flag refuses the blob
+    other = SnapshotCodec("a" * 16, flags={"conv": True, "kv": True})
+    with pytest.raises(CorruptError):
+        other.decode(blob)
+
+
+def test_config_fingerprint_sensitivity():
+    from identity import small_cfg
+    cfg = small_cfg()
+    fp = config_fingerprint(cfg, 32, "float32")
+    assert fp == config_fingerprint(cfg, 32, "float32")
+    assert fp != config_fingerprint(cfg, 64, "float32")
+    assert fp != config_fingerprint(cfg, 32, "float16")
+    assert fp != config_fingerprint(small_cfg(d_model=64), 32, "float32")
+
+
+def test_message_framing_round_trip_and_rejection():
+    meta = {"kind": "admit", "first_token": 7, "request": {"id": 3}}
+    data = pack_message(meta, b"payload-bytes")
+    got_meta, got_blob = unpack_message(data)
+    assert got_meta == meta and got_blob == b"payload-bytes"
+    with pytest.raises(CorruptError):
+        unpack_message(data[:-1])
+    tam = bytearray(data)
+    tam[-1] ^= 1
+    with pytest.raises(CorruptError):
+        unpack_message(bytes(tam))
+    with pytest.raises(SchemaError):
+        unpack_message(SnapshotCodec("a" * 16).encode(_demo_snap()))
+
+
+# ---------------------------------------------------------------------------
+# SharedCacheTier (model-free)
+# ---------------------------------------------------------------------------
+
+
+def test_tier_longest_prefix_probe_and_cap():
+    tier = SharedCacheTier(budget_mb=1.0)
+    assert tier.put((1, 2, 3), b"abc")
+    assert tier.put((1, 2, 3, 4, 5), b"abcde")
+    # full prompt never restorable: cap = len - 1
+    assert tier.longest_prefix([1, 2, 3]) == (0, None) or \
+        tier.longest_prefix([1, 2, 3])[0] < 3
+    n, blob = tier.longest_prefix([1, 2, 3, 9])
+    assert (n, blob) == (3, b"abc")
+    n, blob = tier.longest_prefix([1, 2, 3, 4, 5, 6])
+    assert (n, blob) == (5, b"abcde")
+    assert tier.peek_len([1, 2, 3, 4, 5, 6]) == 5
+    assert tier.longest_prefix([7, 8]) == (0, None)
+    # namespaces are isolated
+    assert tier.peek_len([1, 2, 3, 9], ns="a") == 0
+    assert tier.put((1, 2), b"xy", ns="a")
+    assert tier.peek_len([1, 2, 9], ns="a") == 2
+
+
+def test_tier_dedup_lru_eviction_and_oversize():
+    budget = 3 * 100 / (1 << 20)
+    tier = SharedCacheTier(budget_mb=budget)
+    assert tier.put((1,), b"a" * 100)
+    assert not tier.put((1,), b"a" * 100)          # dedup, no overwrite
+    assert tier.put((2,), b"b" * 100)
+    assert tier.put((3,), b"c" * 100)
+    assert tier.get([1]) is not None               # touch (1): now MRU
+    assert tier.put((4,), b"d" * 100)              # evicts LRU = (2)
+    assert tier.get([2]) is None
+    assert tier.get([1]) is not None
+    assert not tier.put((5,), b"x" * 400)          # oversize refused
+    s = tier.summary()
+    assert s["entries"] == len(tier) == 3
+    assert s["evictions"] == 1 and s["bytes_used"] == tier.bytes_used
+
+
+def test_tier_save_load_round_trip(tmp_path):
+    tier = SharedCacheTier(budget_mb=1.0)
+    tier.put((1, 2), b"ab")
+    tier.put((1, 2, 3), b"abc", ns="tenant0")
+    path = str(tmp_path / "tier.rmct")
+    assert tier.save(path, "f" * 16) == 2
+    fresh = SharedCacheTier(budget_mb=1.0)
+    assert fresh.load(path, "f" * 16) == 2
+    assert fresh.get([1, 2]) == b"ab"
+    assert fresh.get([1, 2, 3], ns="tenant0") == b"abc"
+    # loading again dedups, not duplicates
+    assert fresh.load(path, "f" * 16) == 0
+    with pytest.raises(FingerprintError):
+        SharedCacheTier(budget_mb=1.0).load(path, "0" * 16)
+    with open(path, "r+b") as f:                   # corrupt one byte
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\xff")
+    with pytest.raises(CorruptError):
+        SharedCacheTier(budget_mb=1.0).load(path, "f" * 16)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache <-> tier fall-through and per-namespace summary (model-free)
+# ---------------------------------------------------------------------------
+
+
+def _snap_of(nbytes):
+    return {"h": np.zeros((nbytes,), np.uint8)}
+
+
+def _make_cached_pair(budget_mb=1.0):
+    from repro.serve.cache import PrefixCache
+    cache = PrefixCache(budget_mb=budget_mb)
+    tier = SharedCacheTier(budget_mb=budget_mb)
+    codec = SnapshotCodec("f" * 16)
+    cache.attach_tier(tier, codec)
+    return cache, tier, codec
+
+
+def test_cache_publishes_inserts_to_tier():
+    cache, tier, codec = _make_cached_pair()
+    assert cache.insert((1, 2, 3), lambda: _snap_of(64))
+    assert tier.peek_len([1, 2, 3, 9]) == 3
+    assert _tree_equal(codec.decode(tier.get([1, 2, 3])), _snap_of(64))
+
+
+def test_cache_falls_through_to_tier_and_promotes():
+    cache, tier, codec = _make_cached_pair()
+    tier.put((5, 6, 7), codec.encode(_snap_of(32)))
+    assert len(cache) == 0
+    assert cache.peek_len([5, 6, 7, 8]) == 3       # peek sees the tier
+    depth, snap = cache.lookup([5, 6, 7, 8])
+    assert depth == 3 and _tree_equal(snap, _snap_of(32))
+    assert cache.stats["hits"] == 1
+    # promoted: now a local radix hit, tier probe no longer needed
+    assert cache.contains([5, 6, 7])
+    local_depth, _ = cache.lookup([5, 6, 7, 8])
+    assert local_depth == 3
+
+
+def test_cache_prefers_longer_tier_prefix_over_local():
+    cache, tier, codec = _make_cached_pair()
+    cache.insert((1, 2), lambda: _snap_of(16))
+    tier.put((1, 2, 3, 4), codec.encode(_snap_of(16)))
+    depth, _ = cache.lookup([1, 2, 3, 4, 5])
+    assert depth == 4                              # tier wins: longer
+    depth, _ = cache.lookup([1, 2, 9])
+    assert depth == 2                              # local wins: tier misses
+
+
+def test_cache_per_namespace_summary_and_gauges():
+    from repro.serve.cache import PrefixCache
+    from repro.serve.telemetry import MetricsRegistry
+    reg = MetricsRegistry()
+    cache = PrefixCache(budget_mb=1.0, registry=reg)
+    cache.insert((1, 2), lambda: _snap_of(64))
+    cache.insert((1, 2, 3), lambda: _snap_of(64))
+    cache.insert((9, 9), lambda: _snap_of(128), ns="tenant0")
+    per = cache.summary()["per_namespace"]
+    assert per["default"]["snapshots"] == 2
+    assert per["default"]["bytes_used"] == 2 * 64
+    assert per["tenant0"]["snapshots"] == 1
+    assert per["tenant0"]["bytes_used"] == 128
+    assert per["default"]["nodes"] >= 2
+    assert reg.value("cache_ns_snapshots_default") == 2
+    assert reg.value("cache_ns_bytes_used_tenant0") == 128
+
+
+def test_cache_adopt_snapshot_respects_budget():
+    from repro.serve.cache import PrefixCache
+    cache = PrefixCache(budget_mb=100 / (1 << 20))
+    assert cache.adopt_snapshot((1, 2), _snap_of(64))
+    assert not cache.adopt_snapshot((1, 2), _snap_of(64))   # dedup
+    assert not cache.adopt_snapshot((3,), _snap_of(400))    # oversize
+    assert cache.adopt_snapshot((4, 5), _snap_of(64))       # evicts (1,2)
+    assert cache.contains([4, 5]) and not cache.contains([1, 2])
+
+
+def test_prefix_cache_save_load_round_trip(tmp_path):
+    from repro.serve.cache import PrefixCache
+    codec = SnapshotCodec("f" * 16)
+    src = PrefixCache(budget_mb=1.0)
+    src.insert((1, 2), lambda: _snap_of(64))
+    src.insert((1, 2, 3, 4), lambda: _snap_of(64))
+    src.insert((7,), lambda: _snap_of(32), ns="tenant0")
+    path = str(tmp_path / "cache.rmct")
+    assert save_prefix_cache(src, codec, path) == 3
+    dst = PrefixCache(budget_mb=1.0)
+    assert load_prefix_cache(dst, codec, path) == 3
+    assert dst.snapshot_prefixes() == src.snapshot_prefixes()
+    assert dst.snapshot_prefixes(ns="tenant0") == \
+        src.snapshot_prefixes(ns="tenant0")
+    depth, snap = dst.lookup([1, 2, 3, 4, 5])
+    assert depth == 4 and _tree_equal(snap, _snap_of(64))
+    with pytest.raises(FingerprintError):
+        load_prefix_cache(PrefixCache(budget_mb=1.0),
+                          SnapshotCodec("0" * 16), path)
+
+
+# ---------------------------------------------------------------------------
+# inspect CLI (model-free)
+# ---------------------------------------------------------------------------
+
+
+def test_inspect_snapshot_message_and_cache_file(tmp_path, capsys):
+    codec = SnapshotCodec("a" * 16)
+    blob = codec.encode(_demo_snap())
+    snap_path = str(tmp_path / "s.rmsn")
+    with open(snap_path, "wb") as f:
+        f.write(blob)
+    assert fleet_inspect.main([snap_path]) == 0
+    out = capsys.readouterr().out
+    assert "codec v1" in out and "/segments/0/conv" in out
+
+    msg_path = str(tmp_path / "m.rmms")
+    with open(msg_path, "wb") as f:
+        f.write(pack_message({"kind": "admit", "first_token": 5,
+                              "request": {"id": 3, "prompt": [1, 2]}}, blob))
+    assert fleet_inspect.main([msg_path]) == 0
+    out = capsys.readouterr().out
+    assert "kind=admit" in out and "id=3" in out and "codec v1" in out
+
+    tier = SharedCacheTier(budget_mb=1.0)
+    tier.put((1, 2), blob)
+    tier.put((3,), blob, ns="tenant0")
+    tier_path = str(tmp_path / "c.rmct")
+    tier.save(tier_path, "a" * 16)
+    assert fleet_inspect.main([tier_path]) == 0
+    out = capsys.readouterr().out
+    assert "2 entries" in out and "tenant0" in out
+
+    bad = str(tmp_path / "bad.bin")
+    with open(bad, "wb") as f:
+        f.write(b"not a fleet artifact")
+    assert fleet_inspect.main([bad]) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine-level: snapshot admission and fleet identity (single device)
+# ---------------------------------------------------------------------------
+
+
+def _fleet_run(cfg, params, reqs, n_decode=2, threaded=False,
+               tier_mb=None, library=None, prefill_slots=2,
+               decode_slots=2, max_len=32):
+    """Build a 1-prefill + n-decode fleet over fresh engines and run."""
+    from repro.serve import (EngineConfig, PrefixCache, ServeEngine,
+                             Telemetry)
+    from repro.serve.fleet import (DecodeWorker, FleetRouter, PrefillWorker,
+                                   SnapshotCodec)
+    telem = Telemetry()
+    ec = EngineConfig(max_slots=prefill_slots, max_len=max_len, seed=0,
+                      max_prefill_chunk=8)
+    peng = ServeEngine(cfg, params, engine=ec,
+                       prefix_cache=PrefixCache(budget_mb=16.0,
+                                                registry=telem.registry),
+                       expert_library=library, telemetry=telem)
+    codec = SnapshotCodec.for_store(peng.store)
+    if tier_mb:
+        tier = SharedCacheTier(budget_mb=tier_mb, registry=telem.registry)
+        peng.cache.attach_tier(tier, codec)
+    dec = EngineConfig(max_slots=decode_slots, max_len=max_len, seed=0)
+    dws = []
+    for i in range(n_decode):
+        deng = ServeEngine(cfg, params, engine=dec, expert_library=library,
+                           telemetry=telem)
+        dws.append(DecodeWorker(f"d{i}", deng, codec,
+                                registry=telem.registry))
+    pw = PrefillWorker("p0", peng, codec, registry=telem.registry)
+    router = FleetRouter([pw], dws, telemetry=telem)
+    results = router.run(reqs, threaded=threaded)
+    return {r.id: r.tokens for r in results}, telem, router
+
+
+@pytest.mark.parametrize("threaded", [False, True],
+                         ids=["cooperative", "threaded"])
+def test_fleet_greedy_identical_small(threaded):
+    """1 prefill + 2 decode replicas == one monolithic engine, greedy
+    tokens bit-identical, in both drive modes."""
+    import jax
+    from identity import random_prompts, run_tokens, small_cfg
+    from repro.models import lm
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = small_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = random_prompts(cfg, [5, 11, 3, 7, 4, 6])
+    reqs = [Request(id=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    mono = ServeEngine(cfg, params,
+                       engine=EngineConfig(max_slots=4, max_len=32, seed=0))
+    ref = run_tokens(mono, reqs)
+    got, telem, _ = _fleet_run(cfg, params, reqs, threaded=threaded,
+                               tier_mb=16.0)
+    assert got == ref
+    v = telem.registry.value
+    assert v("fleet_admits_total") == len(reqs)
+    assert v("fleet_results_total") == len(reqs)
+    assert v("fleet_snapshot_bytes_total") > 0
+
+
+@pytest.mark.parametrize("pattern", [("mamba2",), ("gdn",), ("rglru",),
+                                     ("mlstm",), ("slstm",),
+                                     ("rom_mamba", "mlp")],
+                         ids=lambda p: "+".join(p))
+def test_fleet_greedy_identical_patterns(pattern):
+    """Per mixer family: the fleet reproduces the monolithic greedy tokens
+    bit-exactly (the disaggregation hard invariant)."""
+    import jax
+    from identity import full_cfg, random_prompts, run_tokens
+    from repro.models import lm
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = full_cfg(((pattern, 1),))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = random_prompts(cfg, [5, 9, 3, 7])
+    reqs = [Request(id=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    mono = ServeEngine(cfg, params,
+                       engine=EngineConfig(max_slots=4, max_len=32, seed=0))
+    ref = run_tokens(mono, reqs)
+    got, _, _ = _fleet_run(cfg, params, reqs)
+    assert got == ref, pattern
+
+
+def test_fleet_multi_tenant_expert_routing_identical():
+    """Multi-tenant fleet: requests routed by expert set through a shared
+    ExpertLibrary on every replica match per-tenant dedicated engines."""
+    import jax
+    from identity import (dedicated_params, full_cfg, random_prompts,
+                          run_tokens)
+    from repro.models import lm
+    from repro.serve import (EngineConfig, ExpertLibrary, Request,
+                             ServeEngine)
+
+    cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+    base = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tenants = {f"tenant{i}": lm.init_params(jax.random.PRNGKey(100 + i), cfg)
+               for i in range(2)}
+
+    def make_library():
+        lib = ExpertLibrary(cfg, base, max_bound=2)
+        for name, p in tenants.items():
+            lib.add(name, p)
+        return lib
+
+    prompts = random_prompts(cfg, [5, 8, 4, 6])
+    names = [None, "tenant0", "tenant1", "tenant0"]
+    reqs = [Request(id=i, prompt=p, max_new_tokens=5, expert_set=names[i])
+            for i, p in enumerate(prompts)]
+    got, _, _ = _fleet_run(cfg, base, reqs, library=make_library())
+    # per-tenant references on dedicated single-set engines
+    for i, req in enumerate(reqs):
+        p = base if names[i] is None else dedicated_params(
+            cfg, base, tenants[names[i]])
+        ded = ServeEngine(cfg, p, engine=EngineConfig(
+            max_slots=2, max_len=32, seed=0))
+        ref = run_tokens(ded, [Request(id=0, prompt=req.prompt,
+                                       max_new_tokens=5)])
+        assert got[i] == ref[0], names[i]
+
+
+def test_admit_from_snapshot_capacity_refusal_and_validation():
+    import jax
+    from identity import random_prompts, small_cfg
+    from repro.models import lm
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = small_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    pre = ServeEngine(cfg, params,
+                      engine=EngineConfig(max_slots=1, max_len=32, seed=0))
+    dec = ServeEngine(cfg, params,
+                      engine=EngineConfig(max_slots=1, max_len=32, seed=0))
+    prompts = random_prompts(cfg, [5, 6])
+    r0, r1 = (Request(id=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts))
+    tok0, snap0 = pre.prefill_to_snapshot(r0)
+    tok1, snap1 = pre.prefill_to_snapshot(r1)
+    assert dec.admit_from_snapshot(r0, snap0, tok0)
+    assert not dec.admit_from_snapshot(r1, snap1, tok1)    # 1 slot: full
+    while dec.busy():
+        dec.tick()
+    assert dec.admit_from_snapshot(r1, snap1, tok1)        # slot retired
+    with pytest.raises(KeyError):                          # unknown tenant
+        dec.admit_from_snapshot(
+            Request(id=9, prompt=prompts[0], max_new_tokens=2,
+                    expert_set="nope"), snap0, tok0)
+    with pytest.raises(ValueError):                        # prompt too long
+        pre.prefill_to_snapshot(Request(id=8, prompt=[1] * 40,
+                                        max_new_tokens=2))
+
+
+def test_fleet_drained_workers_requeue_and_exhaust():
+    import jax
+    from identity import random_prompts, run_tokens, small_cfg
+    from repro.models import lm
+    from repro.serve import (EngineConfig, PrefixCache, Request, ServeEngine,
+                             Telemetry)
+    from repro.serve.fleet import (DecodeWorker, FleetRouter, PrefillWorker,
+                                   SnapshotCodec)
+
+    cfg = small_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = [Request(id=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(random_prompts(cfg, [5, 7]))]
+    mono = ServeEngine(cfg, params,
+                       engine=EngineConfig(max_slots=2, max_len=32, seed=0))
+    ref = run_tokens(mono, reqs)
+
+    def build(n_prefill=2, n_decode=2):
+        telem = Telemetry()
+        ec = EngineConfig(max_slots=2, max_len=32, seed=0)
+        pws, dws, codec = [], [], None
+        for i in range(n_prefill):
+            eng = ServeEngine(cfg, params, engine=ec,
+                              prefix_cache=PrefixCache(budget_mb=4.0),
+                              telemetry=telem)
+            codec = SnapshotCodec.for_store(eng.store)
+            pws.append(PrefillWorker(f"p{i}", eng, codec,
+                                     registry=telem.registry))
+        for i in range(n_decode):
+            eng = ServeEngine(cfg, params, engine=ec, telemetry=telem)
+            dws.append(DecodeWorker(f"d{i}", eng, codec,
+                                    registry=telem.registry))
+        return pws, dws, telem
+
+    # one prefill peer drained -> work lands on the live one, identical
+    pws, dws, telem = build()
+    pws[0].drain()
+    router = FleetRouter(pws, dws, telemetry=telem)
+    got = {r.id: r.tokens for r in router.run(reqs)}
+    assert got == ref
+    assert pws[1].load == len(reqs) and pws[0].load == 0
+
+    # every decode worker drained -> retries exhaust, clear error
+    pws, dws, telem = build()
+    for w in dws:
+        w.drain()
+    with pytest.raises(RuntimeError):
+        FleetRouter(pws, dws, telemetry=telem).run(reqs)
+    assert telem.registry.value("fleet_worker_failures_total") > 0
+
+
+def test_fleet_shared_tier_serves_cross_worker_hits():
+    """Two requests sharing a prefix: the second prefill restores the
+    boundary the first published through the shared tier."""
+    import jax
+    from identity import random_prompts, run_tokens, small_cfg
+    from repro.models import lm
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = small_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    shared = list(range(4, 12))                    # 8-token shared prefix
+    tails = random_prompts(cfg, [3, 4], seed=5)
+    reqs = [Request(id=i, prompt=shared + t, max_new_tokens=4)
+            for i, t in enumerate(tails)]
+    mono = ServeEngine(cfg, params,
+                       engine=EngineConfig(max_slots=2, max_len=32, seed=0))
+    ref = run_tokens(mono, reqs)
+    got, telem, _ = _fleet_run(cfg, params, reqs, tier_mb=8.0)
+    assert got == ref
+    assert telem.registry.value("fleet_tier_inserts_total") > 0
+    assert telem.registry.value(
+        "serve_cache_hit_tokens_total") >= len(shared)
+
+
+def test_cache_persistence_bit_identical_continuation(tmp_path):
+    """Cold engine vs an engine warmed from a saved cache file: same
+    greedy tokens, and the warm run actually skipped prefill work."""
+    import jax
+    from identity import random_prompts, run_tokens, small_cfg
+    from repro.models import lm
+    from repro.serve import EngineConfig, PrefixCache, Request, ServeEngine
+    from repro.serve.fleet import SnapshotCodec
+
+    cfg = small_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    shared = list(range(4, 16))                    # spans a chunk boundary
+    tails = random_prompts(cfg, [3, 5], seed=9)
+    reqs = [Request(id=i, prompt=shared + t, max_new_tokens=5)
+            for i, t in enumerate(tails)]
+    ec = EngineConfig(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8)
+
+    warm_cache = PrefixCache(budget_mb=8.0)
+    first = ServeEngine(cfg, params, engine=ec, prefix_cache=warm_cache)
+    codec = SnapshotCodec.for_store(first.store)
+    ref = run_tokens(first, reqs)
+    path = str(tmp_path / "cache.rmct")
+    assert save_prefix_cache(warm_cache, codec, path) > 0
+
+    loaded_cache = PrefixCache(budget_mb=8.0)
+    assert load_prefix_cache(loaded_cache, codec, path) > 0
+    second = ServeEngine(cfg, params, engine=ec, prefix_cache=loaded_cache)
+    got = run_tokens(second, reqs)
+    assert got == ref
+    assert second.stats["cache_hit_tokens"] >= len(shared)
+
+
+# ---------------------------------------------------------------------------
+# cross-mesh parity (slow, 8 virtual devices in a subprocess)
+# ---------------------------------------------------------------------------
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+_FLEET_COMMON = f"""
+import sys
+sys.path.insert(0, {_TESTS_DIR!r})
+""" + """
+import jax, numpy as np
+from identity import full_cfg, random_prompts, run_tokens
+from repro.distributed.plan import ParallelPlan
+from repro.models import lm
+from repro.serve import (EngineConfig, PrefixCache, Request, ServeEngine,
+                         Telemetry)
+from repro.serve import fleet
+
+cfg = full_cfg(((("rom_mamba", "mlp"), 1),))
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+reqs = [Request(id=i, prompt=p, max_new_tokens=5)
+        for i, p in enumerate(random_prompts(cfg, [5, 9, 3, 7]))]
+mono = ServeEngine(cfg, params,
+                   engine=EngineConfig(max_slots=4, max_len=32, seed=0))
+ref = run_tokens(mono, reqs)
+"""
+
+
+@pytest.mark.slow
+def test_fleet_cross_mesh_prefill_data2_decode_single(subproc, repo_src):
+    """Prefill replica on a data=2 mesh, decode replica single-device,
+    connected only by codec bytes — greedy tokens bit-identical to the
+    monolithic single-device engine."""
+    subproc(_FLEET_COMMON + """
+ec = EngineConfig(max_slots=2, max_len=32, seed=0, max_prefill_chunk=8)
+peng = ServeEngine(cfg, params, plan=ParallelPlan.host(data=2), engine=ec,
+                   prefix_cache=PrefixCache(budget_mb=8.0))
+codec = fleet.SnapshotCodec.for_store(peng.store)
+deng = ServeEngine(cfg, params, plan=ParallelPlan.single_device(), engine=ec)
+pw = fleet.PrefillWorker("p0", peng, codec)
+dw = fleet.DecodeWorker("d0", deng, codec)
+router = fleet.FleetRouter([pw], [dw])
+got = {r.id: r.tokens for r in router.run(reqs)}
+assert got == ref, (got, ref)
+print("cross-mesh fleet parity OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_fleet_cache_file_crosses_meshes(subproc, tmp_path):
+    """A cache saved from a data=2 engine warms a single-device engine
+    (and vice versa): continuations stay bit-identical and the warm run
+    serves hits — the snapshots inside the file are topology-portable."""
+    path = str(tmp_path / "xmesh.rmct")
+    subproc(_FLEET_COMMON + f"""
+path = {path!r}
+shared = list(range(4, 16))
+tails = random_prompts(cfg, [3, 5], seed=9)
+sreqs = [Request(id=i, prompt=shared + t, max_new_tokens=5)
+         for i, t in enumerate(tails)]
+ec = EngineConfig(max_slots=2, max_len=48, seed=0, max_prefill_chunk=8)
+mref = run_tokens(ServeEngine(cfg, params, engine=ec), sreqs)
+
+src_cache = PrefixCache(budget_mb=8.0)
+src = ServeEngine(cfg, params, plan=ParallelPlan.host(data=2), engine=ec,
+                  prefix_cache=src_cache)
+codec = fleet.SnapshotCodec.for_store(src.store)
+assert run_tokens(src, sreqs) == mref
+assert fleet.save_prefix_cache(src_cache, codec, path) > 0
+
+dst_cache = PrefixCache(budget_mb=8.0)
+assert fleet.load_prefix_cache(dst_cache, codec, path) > 0
+dst = ServeEngine(cfg, params, plan=ParallelPlan.single_device(), engine=ec,
+                  prefix_cache=dst_cache)
+assert run_tokens(dst, sreqs) == mref
+assert dst.stats["cache_hit_tokens"] >= len(shared)
+
+back_cache = PrefixCache(budget_mb=8.0)
+assert fleet.load_prefix_cache(back_cache, codec, path) > 0
+back = ServeEngine(cfg, params, plan=ParallelPlan.host(data=2), engine=ec,
+                   prefix_cache=back_cache)
+assert run_tokens(back, sreqs) == mref
+assert back.stats["cache_hit_tokens"] >= len(shared)
+print("cross-mesh cache persistence OK")
+""", n_devices=8)

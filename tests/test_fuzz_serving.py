@@ -1,6 +1,6 @@
 """Fuzz-hardening for the serving data structures (model-free: no jax).
 
-Three subjects, each checked against an executable reference model:
+Five subjects, each checked against an executable reference model:
 
 * :class:`~repro.serve.cache.PrefixCache` vs a naive dict-of-prefixes —
   same hits/misses/dedup/eviction order/stats after every operation, with
@@ -11,6 +11,14 @@ Three subjects, each checked against an executable reference model:
 * The telemetry registry/tracer vs naive dict accumulation — snapshot/
   delta algebra, Prometheus parse-back, quantile bounds, and span
   lifecycle invariants under random operation sequences.
+* The fleet snapshot codec (``serve/fleet/codec.py``) — bit-exact
+  round-trips over arbitrary pytrees, and the never-mis-restore property:
+  ANY single-byte flip or truncation of a blob raises, and a mismatched
+  fingerprint is rejected before payload bytes are touched.
+* :class:`~repro.serve.fleet.cache_tier.SharedCacheTier` equivalence —
+  a small PrefixCache backed by a big shared tier answers every lookup /
+  peek with the same prefix depth as one big local cache, under random
+  insert/lookup interleavings (local evictions recover through the tier).
 
 Every property runs twice: through ``hypothesis`` when it is installed
 (the CI path — ``requirements-dev.txt`` pins it, ``conftest.py`` loads a
@@ -612,3 +620,223 @@ if HAVE_HYPOTHESIS:
                 assert d[name]["count"] == s["count"] - (
                     p["count"] if p else 0)
                 assert sum(d[name]["counts"]) == d[name]["count"]
+
+
+# ---------------------------------------------------------------------------
+# fleet codec: bit-exact round-trip and the never-mis-restore property
+# ---------------------------------------------------------------------------
+
+_DTYPES = [np.float32, np.float16, np.int32, np.int8, np.uint8, np.bool_]
+
+
+def _random_pytree(rng: random.Random, depth=0):
+    """Arbitrary nested dict/list pytree of small numpy leaves, the full
+    shape space StateStore snapshots live in (incl. 0-d and empty axes)."""
+    if depth >= 2 or rng.random() < 0.4:
+        dt = rng.choice(_DTYPES)
+        shape = tuple(rng.randint(0, 3)
+                      for _ in range(rng.randint(0, 3)))
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        flat = np.arange(n) % 13 - 5 + rng.randint(0, 7)
+        return flat.reshape(shape).astype(dt)
+    if rng.random() < 0.5:
+        return {f"k{i}": _random_pytree(rng, depth + 1)
+                for i in range(rng.randint(1, 3))}
+    return [_random_pytree(rng, depth + 1)
+            for _ in range(rng.randint(1, 3))]
+
+
+def _trees_equal(a, b):
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_trees_equal(a[k], b[k]) for k in a))
+    if isinstance(a, list):
+        return (isinstance(b, list) and len(a) == len(b)
+                and all(_trees_equal(x, y) for x, y in zip(a, b)))
+    return (a.dtype == b.dtype and a.shape == b.shape
+            and bool(np.array_equal(a, b)))
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(10))
+def test_codec_fuzz_round_trip_bit_exact(seed):
+    from repro.serve.fleet.codec import SnapshotCodec
+    rng = random.Random(seed)
+    codec = SnapshotCodec("f" * 16)
+    for _ in range(10):
+        snap = _random_pytree(rng)
+        blob = codec.encode(snap)
+        assert _trees_equal(codec.decode(blob), snap)
+        assert codec.encode(snap) == blob          # deterministic bytes
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(10))
+def test_codec_fuzz_never_mis_restores(seed):
+    """Exhaustive over small blobs, sampled over large ones: every
+    single-byte corruption and every strict-prefix truncation raises a
+    CodecError — a tampered blob NEVER decodes (to anything, right or
+    wrong); a valid blob with the wrong fingerprint is always rejected."""
+    from repro.serve.fleet.codec import (CodecError, FingerprintError,
+                                         SnapshotCodec)
+    rng = random.Random(1000 + seed)
+    codec = SnapshotCodec("f" * 16)
+    snap = _random_pytree(rng)
+    blob = codec.encode(snap)
+
+    positions = (range(len(blob)) if len(blob) <= 300
+                 else sorted(rng.sample(range(len(blob)), 120)))
+    for i in positions:
+        tampered = bytearray(blob)
+        tampered[i] ^= (1 << rng.randint(0, 7))
+        with pytest.raises(CodecError):
+            codec.decode(bytes(tampered))
+    cuts = (range(len(blob)) if len(blob) <= 300
+            else sorted(rng.sample(range(len(blob)), 60)))
+    for i in cuts:
+        with pytest.raises(CodecError):
+            codec.decode(blob[:i])
+    with pytest.raises(FingerprintError):
+        SnapshotCodec("0" * 16).decode(blob)
+    assert _trees_equal(codec.decode(blob), snap)  # the original still does
+
+
+if HAVE_HYPOTHESIS:
+    _leaf_st = st.builds(
+        lambda dt, shape, fill: np.full(shape, fill % 7, dtype=dt),
+        st.sampled_from(_DTYPES),
+        st.lists(st.integers(0, 3), max_size=3).map(tuple),
+        st.integers(0, 100))
+    _pytree_st = st.recursive(
+        _leaf_st,
+        lambda kids: st.one_of(
+            st.lists(kids, min_size=1, max_size=3),
+            st.dictionaries(st.sampled_from(["a", "b", "c"]), kids,
+                            min_size=1, max_size=3)),
+        max_leaves=8)
+
+    @pytest.mark.fuzz
+    @given(snap=_pytree_st, flip=st.integers(0, 10 ** 9),
+           cut_frac=st.floats(0.0, 1.0))
+    def test_codec_fuzz_hypothesis(snap, flip, cut_frac):
+        from repro.serve.fleet.codec import CodecError, SnapshotCodec
+        codec = SnapshotCodec("f" * 16)
+        blob = codec.encode(snap)
+        assert _trees_equal(codec.decode(blob), snap)
+        tampered = bytearray(blob)
+        tampered[flip % len(blob)] ^= 1 << (flip % 8 or 1)
+        with pytest.raises(CodecError):
+            codec.decode(bytes(tampered))
+        cut = int(cut_frac * (len(blob) - 1))
+        with pytest.raises(CodecError):
+            codec.decode(blob[:cut])
+
+
+# ---------------------------------------------------------------------------
+# SharedCacheTier: tiered small cache == one big local cache (lookup depths)
+# ---------------------------------------------------------------------------
+
+
+def run_tier_equivalence_ops(ops, local_budget=2048, big_budget=1 << 20):
+    """Drive (small local PrefixCache + big SharedCacheTier) and a big
+    local-only PrefixCache through the same ops; every lookup / peek must
+    return the same prefix depth — local evictions on the small cache are
+    recovered through the tier, so the pair behaves like one big cache.
+    Blob sizes stay <= local_budget (a local-oversize insert skips the
+    tier publish by design, which genuinely diverges).  Insert *return
+    values* are not compared: re-inserting a locally-evicted prefix is a
+    fresh store on the small cache but a dedup skip on the big one —
+    only the serving surface (lookup / peek depths) must agree."""
+    from repro.serve.fleet.cache_tier import SharedCacheTier
+    from repro.serve.fleet.codec import SnapshotCodec
+    codec = SnapshotCodec("f" * 16)
+    tiered = PrefixCache(budget_mb=local_budget / (1 << 20))
+    tiered.attach_tier(SharedCacheTier(budget_mb=big_budget / (1 << 20)),
+                       codec)
+    ref = PrefixCache(budget_mb=big_budget / (1 << 20))
+    for op in ops:
+        if op[0] == "insert":
+            _, tokens, nbytes, ns = op
+            tiered.insert(tokens, lambda n=nbytes: _snap_of(n), ns=ns)
+            ref.insert(tokens, lambda n=nbytes: _snap_of(n), ns=ns)
+        elif op[0] == "lookup":
+            _, tokens, ns = op
+            got_len, got_snap = tiered.lookup(tokens, ns=ns)
+            want_len, want_snap = ref.lookup(tokens, ns=ns)
+            assert got_len == want_len, op
+            if want_snap is not None:
+                assert got_snap["h"].shape == want_snap["h"].shape, op
+        else:
+            _, tokens, ns = op
+            assert tiered.peek_len(tokens, ns=ns) == \
+                ref.peek_len(tokens, ns=ns), op
+
+
+def _random_tier_ops(rng: random.Random, n_ops=80):
+    ops = []
+    prompts: List[Tuple[int, ...]] = []
+    for _ in range(n_ops):
+        ns = rng.choice([None, "a"])
+        if prompts and rng.random() < 0.6:
+            base = list(rng.choice(prompts))
+            cut = rng.randint(0, len(base))
+            tokens = tuple(base[:cut]) + tuple(
+                rng.randrange(4) for _ in range(rng.randint(0, 5)))
+        else:
+            tokens = tuple(rng.randrange(4)
+                           for _ in range(rng.randint(1, 9)))
+        if not tokens:
+            tokens = (1,)
+        prompts.append(tokens)
+        kind = rng.choice(["insert", "insert", "lookup", "peek"])
+        if kind == "insert":
+            ops.append(("insert", tokens, rng.choice([64, 256, 512]), ns))
+        else:
+            ops.append((kind, tokens, ns))
+    return ops
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(8))
+def test_tier_equivalence_fuzz_stdlib(seed):
+    rng = random.Random(50 + seed)
+    run_tier_equivalence_ops(_random_tier_ops(rng),
+                             local_budget=rng.choice([600, 1024, 2048]))
+
+
+def test_tier_equivalence_fuzz_exercises_eviction():
+    """The corpus genuinely forces local evictions (so the equivalence is
+    carried by tier fall-through, not by the local tree alone)."""
+    from repro.serve.fleet.cache_tier import SharedCacheTier
+    from repro.serve.fleet.codec import SnapshotCodec
+    evictions = tier_hits = 0
+    for seed in range(8):
+        rng = random.Random(50 + seed)
+        ops = _random_tier_ops(rng)
+        local = rng.choice([600, 1024, 2048])
+        cache = PrefixCache(budget_mb=local / (1 << 20))
+        tier = SharedCacheTier(budget_mb=1.0)
+        cache.attach_tier(tier, SnapshotCodec("f" * 16))
+        for op in ops:
+            if op[0] == "insert":
+                cache.insert(op[1], lambda n=op[2]: _snap_of(n), ns=op[3])
+            elif op[0] == "lookup":
+                cache.lookup(op[1], ns=op[2])
+        evictions += cache.stats["evictions"]
+        tier_hits += tier.summary()["hits"]
+    assert evictions > 0 and tier_hits > 0
+
+
+if HAVE_HYPOTHESIS:
+    _tier_op_st = st.one_of(
+        st.tuples(st.just("insert"), _tokens_st,
+                  st.sampled_from([64, 256, 512]), _ns_st),
+        st.tuples(st.just("lookup"), _tokens_st, _ns_st),
+        st.tuples(st.just("peek"), _tokens_st, _ns_st),
+    )
+
+    @pytest.mark.fuzz
+    @given(ops=st.lists(_tier_op_st, max_size=50),
+           local_budget=st.sampled_from([600, 1024, 4096]))
+    def test_tier_equivalence_fuzz_hypothesis(ops, local_budget):
+        run_tier_equivalence_ops(ops, local_budget=local_budget)
